@@ -1,0 +1,50 @@
+//! Bench for Figure 3a: NPB-DT class C placement + simulation per policy.
+//!
+//! Reports (a) the paper's metric — simulated execution time per policy —
+//! and (b) wall-clock cost of producing each placement.
+
+use tofa::apps::npb_dt::NpbDt;
+use tofa::mapping::{place, PlacementPolicy};
+use tofa::profiler::profile_app;
+use tofa::report::bench::{bench, section};
+use tofa::rng::Rng;
+use tofa::sim::executor::Simulator;
+use tofa::topology::{Platform, TorusDims};
+
+fn main() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = NpbDt::class_c();
+    let comm = profile_app(&app).volume;
+    let dist = platform.hop_matrix();
+
+    section("Figure 3a: placement wall-clock (85 ranks on 512 nodes)");
+    for policy in [
+        PlacementPolicy::DefaultSlurm,
+        PlacementPolicy::Random,
+        PlacementPolicy::Greedy,
+        PlacementPolicy::Scotch,
+    ] {
+        bench(&format!("place/{policy}"), 10, || {
+            let mut rng = Rng::new(1);
+            place(policy, &comm, &dist, &mut rng).unwrap()
+        });
+    }
+
+    section("Figure 3a: simulated NPB-DT execution time (the paper's bars)");
+    for policy in [
+        PlacementPolicy::DefaultSlurm,
+        PlacementPolicy::Random,
+        PlacementPolicy::Greedy,
+        PlacementPolicy::Scotch,
+    ] {
+        let mut rng = Rng::new(1);
+        let p = place(policy, &comm, &dist, &mut rng).unwrap();
+        let mut sim = Simulator::new(&app, &platform);
+        let secs = sim.metric_value(&p.assignment);
+        println!("{:<44} simulated {:>10.3} s", format!("npb-dt-c/{policy}"), secs);
+        bench(&format!("simulate/{policy}"), 5, || {
+            let mut s = Simulator::new(&app, &platform);
+            s.success_time(&p.assignment)
+        });
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench for Figure 3b: LAMMPS timesteps/s across rank counts & policies.
+
+use tofa::apps::{lammps_proxy::LammpsProxy, MpiApp};
+use tofa::mapping::{place, PlacementPolicy};
+use tofa::profiler::profile_app;
+use tofa::report::bench::{bench, section};
+use tofa::rng::Rng;
+use tofa::sim::executor::Simulator;
+use tofa::topology::{Platform, TorusDims};
+
+fn main() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    section("Figure 3b: LAMMPS timesteps/s (simulated) + pipeline wall-clock");
+    for ranks in [32usize, 64, 128, 256] {
+        let app = LammpsProxy::rhodopsin(ranks);
+        let comm = profile_app(&app).volume;
+        let dist = platform.hop_matrix();
+        for policy in [
+            PlacementPolicy::DefaultSlurm,
+            PlacementPolicy::Random,
+            PlacementPolicy::Greedy,
+            PlacementPolicy::Scotch,
+        ] {
+            let mut rng = Rng::new(1);
+            let p = place(policy, &comm, &dist, &mut rng).unwrap();
+            let mut sim = Simulator::new(&app, &platform);
+            let v = sim.metric_value(&p.assignment);
+            println!(
+                "{:<44} {:>10.1} timesteps/s",
+                format!("lammps-{ranks}/{policy}"),
+                v
+            );
+        }
+        // wall-clock of the full profile->place->simulate pipeline
+        bench(&format!("pipeline/lammps-{ranks}/scotch"), 3, || {
+            let comm = profile_app(&app).volume;
+            let mut rng = Rng::new(1);
+            let p = place(PlacementPolicy::Scotch, &comm, &dist, &mut rng).unwrap();
+            let mut sim = Simulator::new(&app, &platform);
+            sim.metric_value(&p.assignment)
+        });
+    }
+}

@@ -1,0 +1,65 @@
+//! Bench for Figures 4 / 5a / 5b: the batch resilience experiments.
+//!
+//! Reports both the paper's metrics (batch completion time, abort ratio)
+//! and the wall-clock cost of a full 100-instance batch per policy —
+//! demonstrating the JobProfile fast path (EXPERIMENTS.md §Perf).
+
+use tofa::apps::npb_dt::NpbDt;
+use tofa::apps::{lammps_proxy::LammpsProxy, MpiApp};
+use tofa::batch::{BatchConfig, BatchRunner};
+use tofa::mapping::PlacementPolicy;
+use tofa::report::bench::{bench, section};
+use tofa::rng::Rng;
+use tofa::sim::failure::FaultScenario;
+use tofa::topology::{Platform, TorusDims};
+
+fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let mut runner = BatchRunner::new(app, &platform);
+    let config = BatchConfig {
+        instances: 100,
+        n_faulty,
+        p_f: 0.02,
+        ..Default::default()
+    };
+    section(title);
+    let mut master = Rng::new(42);
+    let mut scen_rng = master.fork(1);
+    let scenario = FaultScenario::random(512, n_faulty, 0.02, &mut scen_rng);
+    for policy in [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa] {
+        let mut rng = scen_rng.fork(7);
+        let res = runner
+            .run_batch(policy, &scenario, &config, &mut rng)
+            .unwrap();
+        println!(
+            "{:<44} completion {:>10.1} s  abort ratio {:>5.1}%",
+            format!("batch/{policy}"),
+            res.completion_s,
+            100.0 * res.abort_ratio()
+        );
+        bench(&format!("batch-wallclock/{policy}"), 5, || {
+            let mut rng = scen_rng.fork(8);
+            runner
+                .run_batch(policy, &scenario, &config, &mut rng)
+                .unwrap()
+        });
+    }
+}
+
+fn main() {
+    run_case(
+        "Figure 4: NPB-DT class C, 16 faulty @ 2%, 100-instance batch",
+        &NpbDt::class_c(),
+        16,
+    );
+    run_case(
+        "Figure 5a: LAMMPS 64p, 8 faulty @ 2%",
+        &LammpsProxy::rhodopsin(64),
+        8,
+    );
+    run_case(
+        "Figure 5b: LAMMPS 64p, 16 faulty @ 2%",
+        &LammpsProxy::rhodopsin(64),
+        16,
+    );
+}

@@ -1,0 +1,67 @@
+//! Microbenchmarks of the mapping substrate: bisection, recursive mapping,
+//! Eq. 1 re-weighting, window search, compact-subset growth.
+
+use tofa::apps::{lammps_proxy::LammpsProxy, MpiApp};
+use tofa::mapping::recmap::{compact_subset, RecursiveMapper};
+use tofa::mapping::{bisect::bisect, cost::hop_bytes_cost};
+use tofa::profiler::profile_app;
+use tofa::report::bench::{bench, section};
+use tofa::rng::Rng;
+use tofa::tofa::{eq1::fault_aware_distance, window::find_route_clean_window};
+use tofa::topology::{DistanceMatrix, Platform, Torus, TorusDims};
+
+fn main() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let torus = platform.torus();
+    let dist = platform.hop_matrix();
+
+    section("mapper microbenches (512-node torus)");
+    bench("hop-matrix/512", 5, || DistanceMatrix::from_torus_hops(torus));
+
+    for ranks in [64usize, 85, 128, 256] {
+        let app = LammpsProxy::rhodopsin(ranks);
+        let comm = profile_app(&app).volume;
+        let verts: Vec<usize> = (0..ranks).collect();
+        bench(&format!("bisect/{ranks}"), 10, || {
+            bisect(&comm, &verts, ranks / 2)
+        });
+        bench(&format!("recmap/{ranks}-on-512"), 5, || {
+            RecursiveMapper::default().map(&comm, &dist).unwrap()
+        });
+        let _ = app.num_ranks();
+    }
+
+    section("fault machinery");
+    let mut rng = Rng::new(3);
+    let mut outage = vec![0.0; 512];
+    for f in rng.sample_distinct(512, 16) {
+        outage[f] = 0.02;
+    }
+    bench("eq1/fault-aware-distance/512", 5, || {
+        fault_aware_distance(torus, &outage)
+    });
+    bench("window/route-clean-64", 10, || {
+        find_route_clean_window(&outage, 64, torus)
+    });
+    bench("compact-subset/85-of-512", 10, || {
+        compact_subset(&dist, &(0..512).collect::<Vec<_>>(), 85)
+    });
+
+    section("mapping quality (hop-bytes, lower is better)");
+    let app = LammpsProxy::rhodopsin(64);
+    let comm = profile_app(&app).volume;
+    let p = RecursiveMapper::default().map(&comm, &dist).unwrap();
+    println!(
+        "{:<44} {:>14.1} MB*hop",
+        "quality/recmap-64",
+        hop_bytes_cost(&comm, &dist, &p.assignment) / 1e6
+    );
+    let block: Vec<usize> = (0..64).collect();
+    println!(
+        "{:<44} {:>14.1} MB*hop",
+        "quality/block-64",
+        hop_bytes_cost(&comm, &dist, &block) / 1e6
+    );
+
+    let _ = Torus::new(TorusDims::new(2, 2, 2));
+}

@@ -1,0 +1,60 @@
+//! PJRT runtime bench: the L1/L2 artifact's batched mapping-cost evaluator
+//! vs the scalar Rust reference, across job sizes.
+//!
+//! The artifact computes at padded (N_PAD=256, M_PAD=512, K=32) shapes, so
+//! its throughput is flat in N while the Rust loop is O(K * N^2); the
+//! crossover (see EXPERIMENTS.md §Perf) is around N ~ 200.
+
+use tofa::commgraph::CommMatrix;
+use tofa::mapping::cost::hop_bytes_cost;
+use tofa::report::bench::{bench, section};
+use tofa::rng::Rng;
+use tofa::runtime::{default_artifacts_dir, CostEvaluator};
+use tofa::topology::{DistanceMatrix, Torus, TorusDims};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("model.manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let mut eval = CostEvaluator::load(&dir).expect("load artifacts");
+    println!("platform: {}  shapes: {:?}", eval.platform_name(), eval.shapes());
+    let torus = Torus::new(TorusDims::new(8, 8, 8));
+    let dist = DistanceMatrix::from_torus_hops(&torus);
+
+    for n in [64usize, 128, 256] {
+        section(&format!("batched mapping cost, N={n}, K=32"));
+        let mut rng = Rng::new(5);
+        let mut comm = CommMatrix::new(n);
+        for _ in 0..n * 4 {
+            let i = rng.below_usize(n);
+            let j = rng.below_usize(n);
+            if i != j {
+                comm.add_sym(i, j, (rng.below(1_000_000) + 1) as f64);
+            }
+        }
+        let candidates: Vec<Vec<usize>> =
+            (0..32).map(|_| rng.sample_distinct(512, n)).collect();
+
+        // cross-check once
+        let pjrt = eval.batch_costs(&comm, &dist, &candidates).unwrap();
+        for (k, cand) in candidates.iter().enumerate() {
+            let want = hop_bytes_cost(&comm, &dist, cand);
+            assert!(
+                (pjrt[k] - want).abs() / want.max(1.0) < 1e-4,
+                "mismatch at N={n} k={k}"
+            );
+        }
+
+        bench(&format!("pjrt/batch32-n{n}"), 10, || {
+            eval.batch_costs(&comm, &dist, &candidates).unwrap()
+        });
+        bench(&format!("rust-scalar/batch32-n{n}"), 10, || {
+            candidates
+                .iter()
+                .map(|c| hop_bytes_cost(&comm, &dist, c))
+                .collect::<Vec<f64>>()
+        });
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench for Table 1: LAMMPS 256p across torus arrangements.
+
+use tofa::apps::lammps_proxy::LammpsProxy;
+use tofa::mapping::{place, PlacementPolicy};
+use tofa::profiler::profile_app;
+use tofa::report::bench::{bench, section};
+use tofa::rng::Rng;
+use tofa::sim::executor::Simulator;
+use tofa::topology::{Platform, TorusDims};
+
+fn main() {
+    let app = LammpsProxy::rhodopsin(256);
+    let comm = profile_app(&app).volume;
+    section("Table 1: LAMMPS 256p timesteps/s per arrangement (simulated)");
+    for arr in ["8x8x8", "4x8x16", "8x4x16", "4x4x32", "4x32x4"] {
+        let dims = TorusDims::parse(arr).unwrap();
+        let platform = Platform::paper_default(dims);
+        let dist = platform.hop_matrix();
+        for policy in [PlacementPolicy::DefaultSlurm, PlacementPolicy::Scotch] {
+            let mut rng = Rng::new(1);
+            let p = place(policy, &comm, &dist, &mut rng).unwrap();
+            let mut sim = Simulator::new(&app, &platform);
+            let v = sim.metric_value(&p.assignment);
+            println!("{:<44} {:>10.1} timesteps/s", format!("{arr}/{policy}"), v);
+        }
+    }
+    section("Table 1: end-to-end wall-clock per arrangement (scotch)");
+    for arr in ["8x8x8", "4x32x4"] {
+        let dims = TorusDims::parse(arr).unwrap();
+        let platform = Platform::paper_default(dims);
+        let dist = platform.hop_matrix();
+        bench(&format!("table1/{arr}/scotch-pipeline"), 3, || {
+            let mut rng = Rng::new(1);
+            let p = place(PlacementPolicy::Scotch, &comm, &dist, &mut rng).unwrap();
+            let mut sim = Simulator::new(&app, &platform);
+            sim.metric_value(&p.assignment)
+        });
+    }
+}

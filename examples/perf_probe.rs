@@ -1,0 +1,49 @@
+//! Perf probe: measures the simulator's cache effectiveness and the
+//! slow-path vs JobProfile fast-path instance resolution costs cited in
+//! EXPERIMENTS.md §Perf.
+//!
+//! ```sh
+//! cargo run --release --example perf_probe
+//! ```
+use tofa::apps::{lammps_proxy::LammpsProxy, npb_dt::NpbDt, MpiApp};
+use tofa::mapping::baselines::block_placement;
+use tofa::rng::Rng;
+use tofa::sim::executor::Simulator;
+use tofa::sim::failure::{sample_down_nodes, FaultScenario};
+use tofa::topology::{Platform, TorusDims};
+
+fn main() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    // cache stats for LAMMPS-64
+    let app = LammpsProxy::rhodopsin(64);
+    let p = block_placement(64, 512).unwrap();
+    let mut sim = Simulator::new(&app, &platform);
+    sim.success_time(&p.assignment);
+    let s = sim.stats();
+    println!("lammps-64: comm phases {} solves {} hit-rate {:.1}%",
+        s.comm_phases, s.solves, 100.0 * s.cache_hits as f64 / s.comm_phases as f64);
+
+    // slow-path baseline: 100 NPB-DT instances via full Simulator::run
+    let dt = NpbDt::class_c();
+    let pd = block_placement(85, 512).unwrap();
+    let mut sim2 = Simulator::new(&dt, &platform);
+    let mut rng = Rng::new(1);
+    let scenario = FaultScenario::random(512, 16, 0.02, &mut rng);
+    sim2.success_time(&pd.assignment); // warm cache like a batch would
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        let down = sample_down_nodes(&scenario, &mut rng);
+        std::hint::black_box(sim2.run(&pd.assignment, &down));
+    }
+    let el = t0.elapsed();
+    println!("npb-dt slow path: 100 instances in {:?} ({:?}/instance)", el, el / 100);
+
+    // fast path for comparison
+    let profile = sim2.prepare(&pd.assignment);
+    let t1 = std::time::Instant::now();
+    for _ in 0..100 {
+        let down = sample_down_nodes(&scenario, &mut rng);
+        std::hint::black_box(profile.outcome(&down));
+    }
+    println!("npb-dt fast path: 100 instances in {:?}", t1.elapsed());
+}

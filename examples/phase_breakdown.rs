@@ -1,0 +1,42 @@
+//! Calibration aid: per-phase-type time attribution for the LAMMPS proxy
+//! under different placements (compute vs halo vs FFT vs allreduce).
+//!
+//! ```sh
+//! cargo run --release --example phase_breakdown
+//! ```
+use tofa::apps::{lammps_proxy::LammpsProxy, MpiApp, MpiOp};
+use tofa::mapping::{place, PlacementPolicy};
+use tofa::profiler::profile_app;
+use tofa::rng::Rng;
+use tofa::sim::executor::Simulator;
+use tofa::topology::{Platform, TorusDims};
+
+fn main() {
+    for ranks in [64usize, 256] {
+        let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+        let base = LammpsProxy::rhodopsin(ranks);
+        let comm = profile_app(&base).volume;
+        let dist = platform.hop_matrix();
+        println!("=== ranks {ranks} ===");
+        for policy in [PlacementPolicy::DefaultSlurm, PlacementPolicy::Scotch] {
+            let mut rng = Rng::new(1);
+            let p = place(policy, &comm, &dist, &mut rng).unwrap();
+            // full
+            let mut sim = Simulator::new(&base, &platform);
+            let full = sim.success_time(&p.assignment);
+            // no fft
+            let mut nofft = base.clone();
+            nofft.fft_block_bytes = 0.0;
+            let mut sim2 = Simulator::new(&nofft, &platform);
+            let t_nofft = sim2.success_time(&p.assignment);
+            // no fft, no halo (compute+allreduce only)
+            let mut bare = nofft.clone();
+            bare.bytes_per_ghost = 0.0;
+            let mut sim3 = Simulator::new(&bare, &platform);
+            let t_bare = sim3.success_time(&p.assignment);
+            println!("{policy:>14}: full {:.4}s  fft {:.4}s  halo {:.4}s  compute+ar {:.4}s",
+                full, full - t_nofft, t_nofft - t_bare, t_bare);
+        }
+        let _ = MpiOp::Compute { flops: 0.0 };
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: profile an app, place it three ways, simulate, compare.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use tofa::prelude::*;
+
+fn main() -> tofa::error::Result<()> {
+    // 1. The platform: the paper's 8x8x8 torus (512 nodes, 6 Gflops,
+    //    10 Gbps links, 1 us latency).
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+
+    // 2. The application: a LAMMPS-like MD proxy with 64 ranks.
+    let app = LammpsProxy::rhodopsin(64);
+
+    // 3. Profile it: intercept its MPI ops and build the communication
+    //    graph G_v (this is what the paper's profiling tool produces).
+    let profile = profile_app(&app);
+    println!(
+        "profiled {}: {} ranks, {:.1} MB total traffic",
+        app.name(),
+        profile.num_ranks(),
+        profile.volume.total() / 2.0 / 1e6
+    );
+
+    // 4. Place it three ways.
+    let dist = platform.hop_matrix();
+    let mut rng = Rng::new(42);
+    let block = block_placement(app.num_ranks(), platform.num_nodes())?;
+    let random = random_placement(app.num_ranks(), platform.num_nodes(), &mut rng)?;
+    let mapped = RecursiveMapper::default().map(&profile.volume, &dist)?;
+
+    // 5. Simulate each placement and report.
+    println!("\n{:<16} {:>14} {:>16}", "placement", "hop-bytes (MB)", "timesteps/s");
+    for (name, placement) in [
+        ("default-slurm", &block),
+        ("random", &random),
+        ("scotch-style", &mapped),
+    ] {
+        let cost = hop_bytes_cost(&profile.volume, &dist, &placement.assignment) / 1e6;
+        let outcome = simulate_job(&app, &platform, &placement.assignment, &[]);
+        let secs = outcome.seconds().expect("fault-free run completes");
+        println!(
+            "{:<16} {:>14.1} {:>16.1}",
+            name,
+            cost,
+            app.timesteps() as f64 / secs
+        );
+    }
+
+    // 6. Fault-aware placement: tell TOFA node 0 is flaky and watch it
+    //    avoid the whole region.
+    let mut outage = vec![0.0; platform.num_nodes()];
+    outage[0] = 0.02;
+    let tofa = TofaPlacer::new(TofaConfig::default()).place(&profile.volume, &platform, &outage)?;
+    println!(
+        "\nTOFA path with flaky node 0: {:?}; placement avoids it: {}",
+        tofa.path,
+        !tofa.assignment.contains(&0)
+    );
+    Ok(())
+}

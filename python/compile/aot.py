@@ -1,0 +1,66 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (NOT lowered.compiler_ir("hlo").as_hlo_module().serialize()) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the `xla` 0.1.6 crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out ../artifacts/model.hlo.txt
+(the --out path names the primary artifact; sibling artifacts land next to
+it as <stem>.<kind>.hlo.txt — plus a manifest the Rust side sanity-checks).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    stem = os.path.splitext(os.path.splitext(os.path.basename(args.out))[0])[0]
+
+    manifest = {
+        "n_pad": model.N_PAD,
+        "m_pad": model.M_PAD,
+        "k_batch": model.K_BATCH,
+        "artifacts": {},
+    }
+    for kind in model.ARTIFACTS:
+        fn, spec = model.example_args(kind)
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        name = f"{stem}.{kind}.hlo.txt" if kind != "mapping_cost" else f"{stem}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][kind] = name
+        print(f"wrote {kind}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(out_dir, f"{stem}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest -> {out_dir}/{stem}.manifest.json")
+
+
+if __name__ == "__main__":
+    main()

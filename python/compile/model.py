@@ -1,0 +1,54 @@
+"""L2: the JAX compute graph lowered into the AOT artifacts.
+
+The TOFA coordinator's hot path scores candidate process->node assignments
+(refinement sweeps, multi-seed mapping restarts, placement benches). The
+graph below wraps the L1 Pallas kernels with the padding conventions the
+Rust side relies on:
+
+  * C is zero-padded from the job's N ranks up to N_PAD — padded rows/cols
+    contribute zero cost regardless of where padding entries of P point.
+  * D is zero-padded from the platform's M nodes up to M_PAD.
+  * P padding entries point at node 0; their C weights are zero.
+
+One artifact per entry point, fixed shapes (N_PAD, M_PAD, K):
+  mapping_cost : C[N,N] f32, D[M,M] f32, P[K,N] i32 -> cost[K] f32
+  vertex_cost  : C[N,N] f32, D[M,M] f32, p[N]  i32 -> contrib[N] f32
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import mapping_cost as mk
+
+# Shape bucket shared with rust/src/runtime/artifacts.rs — keep in sync.
+N_PAD = 256  # max ranks per job (paper evaluates up to 256)
+M_PAD = 512  # max platform nodes (8x8x8 torus)
+K_BATCH = 32  # candidate assignments scored per call
+
+
+def mapping_cost_model(c, d, p):
+    """Batched candidate scoring. Returns a 1-tuple for the HLO bridge."""
+    return (mk.batched_mapping_cost(c, d, p, tile=mk.DEFAULT_TILE),)
+
+
+def vertex_cost_model(c, d, p):
+    """Per-vertex contributions of one assignment (refinement gains)."""
+    return (mk.vertex_cost(c, d, p),)
+
+
+def example_args(kind: str):
+    """ShapeDtypeStructs for jit.lower of each entry point."""
+    c = jax.ShapeDtypeStruct((N_PAD, N_PAD), jnp.float32)
+    d = jax.ShapeDtypeStruct((M_PAD, M_PAD), jnp.float32)
+    if kind == "mapping_cost":
+        p = jax.ShapeDtypeStruct((K_BATCH, N_PAD), jnp.int32)
+        return mapping_cost_model, (c, d, p)
+    if kind == "vertex_cost":
+        p = jax.ShapeDtypeStruct((N_PAD,), jnp.int32)
+        return vertex_cost_model, (c, d, p)
+    raise ValueError(f"unknown artifact kind: {kind}")
+
+
+ARTIFACTS = ("mapping_cost", "vertex_cost")

@@ -1,0 +1,173 @@
+"""Kernel-vs-ref correctness: the CORE L1 signal.
+
+Covers fixed shapes, the artifact shape bucket, padding invariance (the
+convention the Rust runtime relies on), and hypothesis sweeps over shapes
+and tile sizes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import mapping_cost as mk
+from compile import model
+
+
+def _case(rng, n, m, k):
+    c = rng.random((n, n), dtype=np.float32)
+    c = c + c.T
+    np.fill_diagonal(c, 0.0)
+    d = rng.random((m, m), dtype=np.float32) * 100.0
+    p = rng.integers(0, m, (k, n)).astype(np.int32)
+    return jnp.array(c), jnp.array(d), jnp.array(p)
+
+
+@pytest.mark.parametrize("n,m,k", [(8, 8, 1), (16, 27, 4), (32, 64, 8), (85, 512, 2)])
+def test_flat_matches_ref(n, m, k):
+    c, d, p = _case(np.random.default_rng(n * m + k), n, m, k)
+    got = mk.batched_mapping_cost_flat(c, d, p)
+    want = ref.batched_mapping_cost_ref(c, d, p)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [4, 8, 16, 32])
+def test_tiled_matches_ref(tile):
+    c, d, p = _case(np.random.default_rng(tile), 32, 50, 4)
+    got = mk.batched_mapping_cost(c, d, p, tile=tile)
+    want = ref.batched_mapping_cost_ref(c, d, p)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_tile_not_dividing_falls_back():
+    c, d, p = _case(np.random.default_rng(7), 30, 40, 2)
+    got = mk.batched_mapping_cost(c, d, p, tile=7)  # 30 % 7 != 0 -> one tile
+    want = ref.batched_mapping_cost_ref(c, d, p)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_vertex_cost_matches_ref():
+    c, d, p = _case(np.random.default_rng(3), 24, 36, 1)
+    got = mk.vertex_cost(c, d, p[0])
+    want = ref.vertex_cost_ref(c, d, p[0])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    # total cost = half the contribution sum
+    np.testing.assert_allclose(
+        0.5 * np.sum(np.asarray(got)),
+        ref.mapping_cost_ref(c, d, p[0]),
+        rtol=1e-5,
+    )
+
+
+def test_single_cost_consistency():
+    """batched(K=1) == scalar ref."""
+    c, d, p = _case(np.random.default_rng(11), 20, 30, 1)
+    batched = mk.batched_mapping_cost_flat(c, d, p)[0]
+    scalar = ref.mapping_cost_ref(c, d, p[0])
+    np.testing.assert_allclose(batched, scalar, rtol=1e-5)
+
+
+def test_zero_comm_zero_cost():
+    n, m, k = 16, 16, 3
+    c = jnp.zeros((n, n), jnp.float32)
+    d = jnp.ones((m, m), jnp.float32)
+    p = jnp.zeros((k, n), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(mk.batched_mapping_cost_flat(c, d, p)), 0.0
+    )
+
+
+def test_identity_distance_counts_traffic():
+    """D = all-ones off-diagonal, distinct nodes -> cost = total traffic / 2."""
+    rng = np.random.default_rng(5)
+    n = m = 12
+    c = rng.random((n, n), dtype=np.float32)
+    c = c + c.T
+    np.fill_diagonal(c, 0.0)
+    d = np.ones((m, m), np.float32)
+    np.fill_diagonal(d, 0.0)
+    p = np.arange(n, dtype=np.int32)[None, :]
+    got = mk.batched_mapping_cost_flat(jnp.array(c), jnp.array(d), jnp.array(p))[0]
+    np.testing.assert_allclose(got, 0.5 * c.sum(), rtol=1e-5)
+
+
+def test_padding_invariance():
+    """Zero-padding C/D and pointing padded P entries at node 0 keeps cost."""
+    rng = np.random.default_rng(9)
+    n, m, k = 20, 30, 4
+    c, d, p = _case(rng, n, m, k)
+    want = ref.batched_mapping_cost_ref(c, d, p)
+
+    n_pad, m_pad = 32, 48
+    c_p = np.zeros((n_pad, n_pad), np.float32)
+    c_p[:n, :n] = np.asarray(c)
+    d_p = np.zeros((m_pad, m_pad), np.float32)
+    d_p[:m, :m] = np.asarray(d)
+    p_p = np.zeros((k, n_pad), np.int32)
+    p_p[:, :n] = np.asarray(p)
+    got = mk.batched_mapping_cost_flat(jnp.array(c_p), jnp.array(d_p), jnp.array(p_p))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_artifact_shape_bucket():
+    """The exact (N_PAD, M_PAD, K_BATCH) shapes the artifact is lowered at."""
+    rng = np.random.default_rng(42)
+    c, d, p = _case(rng, model.N_PAD, model.M_PAD, model.K_BATCH)
+    got = np.asarray(mk.batched_mapping_cost(c, d, p, tile=mk.DEFAULT_TILE))
+    want = np.asarray(ref.batched_mapping_cost_ref(c, d, p))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_model_entry_points():
+    rng = np.random.default_rng(1)
+    for kind in model.ARTIFACTS:
+        fn, specs = model.example_args(kind)
+        arrs = [
+            jnp.array(rng.random(s.shape, dtype=np.float32))
+            if s.dtype == np.float32
+            else jnp.array(rng.integers(0, model.M_PAD, s.shape).astype(np.int32))
+            for s in specs
+        ]
+        (out,) = fn(*arrs)
+        want = (model.K_BATCH,) if kind == "mapping_cost" else (model.N_PAD,)
+        assert out.shape == want
+        assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    m=st.integers(2, 64),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_flat(n, m, k, seed):
+    c, d, p = _case(np.random.default_rng(seed), n, m, k)
+    got = mk.batched_mapping_cost_flat(c, d, p)
+    want = ref.batched_mapping_cost_ref(c, d, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 24, 32]),
+    tile=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_tiled(n, tile, seed):
+    c, d, p = _case(np.random.default_rng(seed), n, n + 5, 3)
+    got = mk.batched_mapping_cost(c, d, p, tile=tile)
+    want = ref.batched_mapping_cost_ref(c, d, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 32), m=st.integers(2, 48), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_vertex(n, m, seed):
+    c, d, p = _case(np.random.default_rng(seed), n, m, 1)
+    got = mk.vertex_cost(c, d, p[0])
+    want = ref.vertex_cost_ref(c, d, p[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

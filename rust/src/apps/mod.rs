@@ -1,0 +1,130 @@
+//! MPI application models.
+//!
+//! The paper evaluates with LAMMPS (rhodopsin) and NPB-DT class C. We
+//! cannot run the real codes inside this repo, so each application is
+//! modelled as its *communication + computation schedule*: an ordered list
+//! of [`MpiOp`] phases. This is exactly the abstraction level SimGrid/SMPI
+//! relies on for timing (computation as flops, communication as message
+//! sets), and the profiler consumes the same stream, so `G_v`/`G_m` and the
+//! simulated timings are mutually consistent.
+//!
+//! The proxies reproduce the properties the paper's evaluation hinges on
+//! (Section 5.1): communication/computation ratio, point-to-point vs
+//! collective mix, and pattern regularity (Fig. 1a vs 1b).
+
+pub mod lammps_proxy;
+pub mod npb_dt;
+pub mod random_app;
+pub mod ring;
+pub mod stencil;
+
+use crate::profiler::{CollectiveKind, Communicator, Msg};
+
+/// One phase of an application schedule.
+///
+/// Phases are barrier-ordered: a phase starts when the previous one has
+/// completed on all ranks (the BSP structure of the proxied codes).
+#[derive(Debug, Clone)]
+pub enum MpiOp {
+    /// Local computation; `flops` per rank (uniform across ranks).
+    Compute { flops: f64 },
+    /// A set of concurrent point-to-point messages (world ranks).
+    PointToPoint { msgs: Vec<Msg> },
+    /// A collective over `comm`, emulated per algorithm (see
+    /// [`crate::profiler::collectives`]). `bytes` is the per-rank payload.
+    Collective {
+        comm: Communicator,
+        kind: CollectiveKind,
+        bytes: f64,
+    },
+}
+
+/// Which scalar the paper reports for an application.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Job completion time in seconds (NPB-DT).
+    CompletionTime,
+    /// Simulated timesteps per second (LAMMPS).
+    TimestepsPerSec,
+}
+
+/// A static-profile MPI application: its processes coexist for the whole
+/// execution and its schedule does not depend on data values.
+pub trait MpiApp {
+    /// Short identifier (used in reports and artifact names).
+    fn name(&self) -> &str;
+    /// World size.
+    fn num_ranks(&self) -> usize;
+    /// The full schedule, in order.
+    fn ops(&self) -> Vec<MpiOp>;
+    /// Reporting metric. Defaults to completion time.
+    fn metric(&self) -> Metric {
+        Metric::CompletionTime
+    }
+    /// Number of application timesteps (for [`Metric::TimestepsPerSec`]).
+    fn timesteps(&self) -> usize {
+        1
+    }
+}
+
+/// Factor `n` into a 3-D grid `(px, py, pz)` with `px*py*pz == n`,
+/// as close to cubic as possible (LAMMPS' processor-grid heuristic).
+pub fn factor3(n: usize) -> (usize, usize, usize) {
+    let mut best = (n, 1, 1);
+    let mut best_score = usize::MAX;
+    for px in 1..=n {
+        if n % px != 0 {
+            continue;
+        }
+        let rem = n / px;
+        for py in 1..=rem {
+            if rem % py != 0 {
+                continue;
+            }
+            let pz = rem / py;
+            // minimize surface ~ spread of dims; tie-break towards
+            // descending (px >= py >= pz), matching LAMMPS' convention of
+            // fastest-varying dimension first.
+            let score = px.max(py).max(pz) - px.min(py).min(pz);
+            if score < best_score || (score == best_score && (px, py) > (best.0, best.1))
+            {
+                best_score = score;
+                best = (px, py, pz);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor3_products() {
+        for n in [1usize, 8, 12, 64, 85, 128, 256] {
+            let (x, y, z) = factor3(n);
+            assert_eq!(x * y * z, n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn factor3_cubic_when_possible() {
+        assert_eq!(factor3(64), (4, 4, 4));
+        assert_eq!(factor3(8), (2, 2, 2));
+        let (x, y, z) = factor3(128);
+        let dims = {
+            let mut d = [x, y, z];
+            d.sort_unstable();
+            d
+        };
+        assert_eq!(dims, [4, 4, 8]);
+    }
+
+    #[test]
+    fn factor3_ties_break_descending() {
+        // 256 = 8*8*4 preferred over 4*8*8 so block placement on an
+        // 8x8x8 torus aligns the rank grid with node enumeration.
+        assert_eq!(factor3(256), (8, 8, 4));
+    }
+}

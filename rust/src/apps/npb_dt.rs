@@ -1,0 +1,295 @@
+//! NPB-DT (Data Traffic) benchmark.
+//!
+//! DT is the NAS Parallel Benchmark for "unstructured computation, parallel
+//! I/O and data movement": a task DAG where each node is an MPI rank and
+//! edges carry large feature-vector streams. The graph families are
+//! **BH** (black hole — 4-ary fan-in layers), **WH** (white hole — fan-out)
+//! and **SH** (shuffle). Class C of BH/WH uses 85 ranks: a quaternary tree
+//! with layers 64 -> 16 -> 4 -> 1 (64+16+4+1 = 85 = (4^4-1)/3).
+//!
+//! The communication pattern is pure point-to-point and — because layer
+//! membership, not rank adjacency, determines who talks to whom — lands
+//! far off the rank diagonal, reproducing the irregular heatmap of the
+//! paper's Fig. 1b.
+
+use super::{Metric, MpiApp, MpiOp};
+use crate::profiler::Msg;
+
+/// DT graph families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DtGraph {
+    /// Fan-in: wide source layer reducing 4:1 per layer to one sink.
+    BlackHole,
+    /// Fan-out: one source expanding 1:4 per layer.
+    WhiteHole,
+    /// Shuffle: equal-width layers with stride-shuffle edges.
+    Shuffle,
+}
+
+/// NPB problem classes (set layer widths and payload sizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DtClass {
+    S,
+    W,
+    A,
+    B,
+    C,
+}
+
+impl DtClass {
+    /// Number of quaternary-tree levels for BH/WH (width 4^(levels-1)).
+    fn levels(self) -> usize {
+        match self {
+            DtClass::S => 2,  // 4 + 1 = 5 ranks
+            DtClass::W => 3,  // 16 + 4 + 1 = 21
+            DtClass::A => 3,  // 21 ranks
+            DtClass::B => 4,  // 85? B uses 43 in real NPB; proxy keeps 4 levels
+            DtClass::C => 4,  // 64 + 16 + 4 + 1 = 85 ranks (paper's 85)
+        }
+    }
+
+    /// Bytes per graph edge per iteration (feature-vector stream chunk).
+    fn edge_bytes(self) -> f64 {
+        match self {
+            DtClass::S => 64.0 * 1024.0,
+            DtClass::W => 128.0 * 1024.0,
+            DtClass::A => 256.0 * 1024.0,
+            DtClass::B => 512.0 * 1024.0,
+            DtClass::C => 1_280.0 * 1024.0,
+        }
+    }
+}
+
+/// One directed DAG edge between world ranks.
+#[derive(Debug, Clone, Copy)]
+struct DagEdge {
+    src: usize,
+    dst: usize,
+}
+
+/// NPB-DT application model.
+#[derive(Debug, Clone)]
+pub struct NpbDt {
+    graph: DtGraph,
+    class: DtClass,
+    ranks: usize,
+    layers: Vec<Vec<usize>>,
+    edges: Vec<DagEdge>,
+    /// Stream iterations (cells pushed through the DAG).
+    pub iterations: usize,
+    /// Flops per task per received/produced cell.
+    pub flops_per_cell: f64,
+}
+
+impl NpbDt {
+    /// The paper's configuration: BH graph, class C, 85 ranks.
+    pub fn class_c() -> Self {
+        Self::new(DtGraph::BlackHole, DtClass::C, 20)
+    }
+
+    /// Build a DT instance.
+    pub fn new(graph: DtGraph, class: DtClass, iterations: usize) -> Self {
+        let levels = class.levels();
+        // Layer widths, wide end first: 4^(levels-1), ..., 4, 1.
+        let widths: Vec<usize> = (0..levels).map(|l| 4usize.pow((levels - 1 - l) as u32)).collect();
+        let (layers, edges) = match graph {
+            DtGraph::BlackHole => Self::tree_layers(&widths, false),
+            DtGraph::WhiteHole => {
+                let mut w = widths.clone();
+                w.reverse(); // 1, 4, ..., 4^(levels-1)
+                Self::tree_layers(&w, true)
+            }
+            DtGraph::Shuffle => Self::shuffle_layers(4usize.pow((levels - 1) as u32), levels),
+        };
+        let ranks = layers.iter().map(|l| l.len()).sum();
+        NpbDt {
+            graph,
+            class,
+            ranks,
+            layers,
+            edges,
+            iterations,
+            flops_per_cell: 2.0e7,
+        }
+    }
+
+    /// Rank ids assigned layer-by-layer; edges connect consecutive layers
+    /// 4:1 (fan-in) or 1:4 (fan-out).
+    fn tree_layers(widths: &[usize], fan_out: bool) -> (Vec<Vec<usize>>, Vec<DagEdge>) {
+        let mut layers = Vec::with_capacity(widths.len());
+        let mut next_id = 0usize;
+        for &w in widths {
+            layers.push((next_id..next_id + w).collect::<Vec<_>>());
+            next_id += w;
+        }
+        let mut edges = Vec::new();
+        for l in 0..layers.len() - 1 {
+            let (a, b) = (&layers[l], &layers[l + 1]);
+            if !fan_out {
+                // fan-in: 4 members of layer l feed 1 member of layer l+1
+                for (i, &src) in a.iter().enumerate() {
+                    edges.push(DagEdge {
+                        src,
+                        dst: b[i / 4],
+                    });
+                }
+            } else {
+                // fan-out: 1 member of layer l feeds 4 of layer l+1
+                for (i, &dst) in b.iter().enumerate() {
+                    edges.push(DagEdge {
+                        src: a[i / 4],
+                        dst,
+                    });
+                }
+            }
+        }
+        (layers, edges)
+    }
+
+    /// Shuffle graph: `levels` equal-width layers, perfect-shuffle stride
+    /// edges between consecutive layers.
+    fn shuffle_layers(width: usize, levels: usize) -> (Vec<Vec<usize>>, Vec<DagEdge>) {
+        let mut layers = Vec::with_capacity(levels);
+        for l in 0..levels {
+            layers.push((l * width..(l + 1) * width).collect::<Vec<_>>());
+        }
+        let mut edges = Vec::new();
+        for l in 0..levels - 1 {
+            for i in 0..width {
+                let peer = (i * 4 + i / (width / 4).max(1)) % width;
+                edges.push(DagEdge {
+                    src: layers[l][i],
+                    dst: layers[l + 1][peer],
+                });
+            }
+        }
+        (layers, edges)
+    }
+
+    /// Graph family.
+    pub fn graph(&self) -> DtGraph {
+        self.graph
+    }
+
+    /// Problem class.
+    pub fn class(&self) -> DtClass {
+        self.class
+    }
+
+    /// Number of DAG layers.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+impl MpiApp for NpbDt {
+    fn name(&self) -> &str {
+        match self.graph {
+            DtGraph::BlackHole => "npb-dt-bh",
+            DtGraph::WhiteHole => "npb-dt-wh",
+            DtGraph::Shuffle => "npb-dt-sh",
+        }
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn metric(&self) -> Metric {
+        Metric::CompletionTime
+    }
+
+    fn ops(&self) -> Vec<MpiOp> {
+        let bytes = self.class.edge_bytes();
+        let mut ops = Vec::new();
+        for _ in 0..self.iterations {
+            // layer-by-layer: compute at layer l, then stream to layer l+1
+            for l in 0..self.layers.len() {
+                ops.push(MpiOp::Compute {
+                    flops: self.flops_per_cell,
+                });
+                if l + 1 < self.layers.len() {
+                    let lset: std::collections::HashSet<usize> =
+                        self.layers[l].iter().copied().collect();
+                    let msgs: Vec<Msg> = self
+                        .edges
+                        .iter()
+                        .filter(|e| lset.contains(&e.src))
+                        .map(|e| Msg {
+                            src: e.src,
+                            dst: e.dst,
+                            bytes,
+                        })
+                        .collect();
+                    if !msgs.is_empty() {
+                        ops.push(MpiOp::PointToPoint { msgs });
+                    }
+                }
+            }
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::profile_app;
+
+    #[test]
+    fn class_c_bh_has_85_ranks() {
+        let dt = NpbDt::class_c();
+        assert_eq!(dt.num_ranks(), 85);
+        assert_eq!(dt.num_layers(), 4);
+    }
+
+    #[test]
+    fn wh_mirrors_bh_rank_count() {
+        let wh = NpbDt::new(DtGraph::WhiteHole, DtClass::C, 1);
+        assert_eq!(wh.num_ranks(), 85);
+    }
+
+    #[test]
+    fn bh_edges_are_4_to_1() {
+        let dt = NpbDt::new(DtGraph::BlackHole, DtClass::W, 1);
+        // 16 + 4 + 1 = 21 ranks; 16 + 4 = 20 edges
+        assert_eq!(dt.num_ranks(), 21);
+        assert_eq!(dt.edges.len(), 20);
+        // sink (rank 20) receives exactly 4 edges
+        assert_eq!(dt.edges.iter().filter(|e| e.dst == 20).count(), 4);
+    }
+
+    #[test]
+    fn pattern_is_irregular_off_diagonal() {
+        // The paper's Fig. 1b property: little mass near the diagonal.
+        let dt = NpbDt::class_c();
+        let p = profile_app(&dt);
+        let mass = p.volume.diagonal_mass(4);
+        assert!(mass < 0.3, "diagonal mass too high for DT: {mass}");
+        assert!(p.volume.total() > 0.0);
+    }
+
+    #[test]
+    fn pure_point_to_point() {
+        let dt = NpbDt::class_c();
+        assert!(dt
+            .ops()
+            .iter()
+            .all(|op| !matches!(op, MpiOp::Collective { .. })));
+    }
+
+    #[test]
+    fn shuffle_graph_constructs() {
+        let sh = NpbDt::new(DtGraph::Shuffle, DtClass::W, 1);
+        assert_eq!(sh.num_ranks(), 16 * 3);
+        let p = profile_app(&sh);
+        assert!(p.volume.total() > 0.0);
+    }
+
+    #[test]
+    fn volume_scales_with_iterations() {
+        let a = profile_app(&NpbDt::new(DtGraph::BlackHole, DtClass::S, 1));
+        let b = profile_app(&NpbDt::new(DtGraph::BlackHole, DtClass::S, 3));
+        assert!((b.volume.total() - 3.0 * a.volume.total()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,105 @@
+//! Random-sparse communication proxy: the adversarial pattern.
+//!
+//! Each rank talks to `degree` uniformly random peers. No placement can
+//! exploit locality structure, which makes this the stress case for the
+//! mapper's balance handling and a control in the ablation benches.
+
+use super::{Metric, MpiApp, MpiOp};
+use crate::profiler::Msg;
+use crate::rng::Rng;
+
+/// Random sparse-pattern app (deterministic given the seed).
+#[derive(Debug, Clone)]
+pub struct RandomApp {
+    ranks: usize,
+    peers: Vec<Vec<usize>>,
+    /// Bytes per edge per iteration.
+    pub bytes: f64,
+    /// Iterations.
+    pub iters: usize,
+    /// Flops per rank per iteration.
+    pub flops: f64,
+}
+
+impl RandomApp {
+    /// Build with `degree` random peers per rank.
+    pub fn new(ranks: usize, degree: usize, seed: u64, iters: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let peers = (0..ranks)
+            .map(|i| {
+                let mut ps = Vec::with_capacity(degree);
+                while ps.len() < degree.min(ranks - 1) {
+                    let p = rng.below_usize(ranks);
+                    if p != i && !ps.contains(&p) {
+                        ps.push(p);
+                    }
+                }
+                ps
+            })
+            .collect();
+        RandomApp {
+            ranks,
+            peers,
+            bytes: 64.0 * 1024.0,
+            iters,
+            flops: 5e6,
+        }
+    }
+}
+
+impl MpiApp for RandomApp {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn metric(&self) -> Metric {
+        Metric::CompletionTime
+    }
+
+    fn ops(&self) -> Vec<MpiOp> {
+        let mut ops = Vec::new();
+        for _ in 0..self.iters {
+            ops.push(MpiOp::Compute { flops: self.flops });
+            ops.push(MpiOp::PointToPoint {
+                msgs: self
+                    .peers
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(i, ps)| {
+                        ps.iter().map(move |&p| Msg {
+                            src: i,
+                            dst: p,
+                            bytes: self.bytes,
+                        })
+                    })
+                    .collect(),
+            });
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::profile_app;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = profile_app(&RandomApp::new(16, 3, 7, 2));
+        let b = profile_app(&RandomApp::new(16, 3, 7, 2));
+        assert_eq!(a.volume, b.volume);
+    }
+
+    #[test]
+    fn degree_respected() {
+        let app = RandomApp::new(20, 4, 1, 1);
+        for ps in &app.peers {
+            assert_eq!(ps.len(), 4);
+        }
+    }
+}

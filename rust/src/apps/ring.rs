@@ -1,0 +1,77 @@
+//! Ring-pipeline proxy app: nearest-neighbour token passing.
+//!
+//! The simplest regular pattern; used in tests and the quickstart to show
+//! that block placement is already near-optimal for it.
+
+use super::{Metric, MpiApp, MpiOp};
+use crate::profiler::Msg;
+
+/// Unidirectional ring with fixed message size.
+#[derive(Debug, Clone)]
+pub struct RingApp {
+    ranks: usize,
+    /// Bytes per hop per iteration.
+    pub bytes: f64,
+    /// Iterations.
+    pub iters: usize,
+    /// Flops per rank per iteration.
+    pub flops: f64,
+}
+
+impl RingApp {
+    /// Build a ring app.
+    pub fn new(ranks: usize, bytes: f64, iters: usize) -> Self {
+        RingApp {
+            ranks,
+            bytes,
+            iters,
+            flops: 1e6,
+        }
+    }
+}
+
+impl MpiApp for RingApp {
+    fn name(&self) -> &str {
+        "ring"
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn metric(&self) -> Metric {
+        Metric::CompletionTime
+    }
+
+    fn ops(&self) -> Vec<MpiOp> {
+        let mut ops = Vec::new();
+        for _ in 0..self.iters {
+            ops.push(MpiOp::Compute { flops: self.flops });
+            ops.push(MpiOp::PointToPoint {
+                msgs: (0..self.ranks)
+                    .map(|i| Msg {
+                        src: i,
+                        dst: (i + 1) % self.ranks,
+                        bytes: self.bytes,
+                    })
+                    .collect(),
+            });
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::profile_app;
+
+    #[test]
+    fn ring_profile_is_circulant() {
+        let p = profile_app(&RingApp::new(8, 1000.0, 2));
+        for i in 0..8 {
+            assert_eq!(p.volume.get(i, (i + 1) % 8), 2000.0);
+        }
+        assert_eq!(p.volume.total(), 8.0 * 2.0 * 2000.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! 2-D 5-point stencil proxy (extra workload beyond the paper's pair).
+//!
+//! Jacobi-style halo exchange on a 2-D process grid with a convergence
+//! allreduce — the canonical "regular, neighbour-dominated" pattern used
+//! in the quickstart example and ablation benches.
+
+use super::{Metric, MpiApp, MpiOp};
+use crate::profiler::{CollectiveKind, Communicator, Msg};
+
+/// 2-D stencil application.
+#[derive(Debug, Clone)]
+pub struct Stencil2D {
+    px: usize,
+    py: usize,
+    /// Grid points per rank per side.
+    pub local_side: usize,
+    /// Sweeps to run.
+    pub iters: usize,
+    /// Flops per grid point per sweep.
+    pub flops_per_point: f64,
+}
+
+impl Stencil2D {
+    /// Build over a `px x py` process grid.
+    pub fn new(px: usize, py: usize, local_side: usize, iters: usize) -> Self {
+        Stencil2D {
+            px,
+            py,
+            local_side,
+            iters,
+            flops_per_point: 8.0,
+        }
+    }
+
+    fn rank(&self, x: usize, y: usize) -> usize {
+        x + self.px * y
+    }
+}
+
+impl MpiApp for Stencil2D {
+    fn name(&self) -> &str {
+        "stencil2d"
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.px * self.py
+    }
+
+    fn metric(&self) -> Metric {
+        Metric::TimestepsPerSec
+    }
+
+    fn timesteps(&self) -> usize {
+        self.iters
+    }
+
+    fn ops(&self) -> Vec<MpiOp> {
+        let world = Communicator::world(self.num_ranks());
+        let halo_bytes = self.local_side as f64 * 8.0;
+        let flops = (self.local_side * self.local_side) as f64 * self.flops_per_point;
+        let mut ops = Vec::new();
+        for it in 0..self.iters {
+            let mut msgs = Vec::new();
+            for y in 0..self.py {
+                for x in 0..self.px {
+                    let me = self.rank(x, y);
+                    if self.px > 1 {
+                        msgs.push(Msg {
+                            src: me,
+                            dst: self.rank((x + 1) % self.px, y),
+                            bytes: halo_bytes,
+                        });
+                        msgs.push(Msg {
+                            src: me,
+                            dst: self.rank((x + self.px - 1) % self.px, y),
+                            bytes: halo_bytes,
+                        });
+                    }
+                    if self.py > 1 {
+                        msgs.push(Msg {
+                            src: me,
+                            dst: self.rank(x, (y + 1) % self.py),
+                            bytes: halo_bytes,
+                        });
+                        msgs.push(Msg {
+                            src: me,
+                            dst: self.rank(x, (y + self.py - 1) % self.py),
+                            bytes: halo_bytes,
+                        });
+                    }
+                }
+            }
+            if !msgs.is_empty() {
+                ops.push(MpiOp::PointToPoint { msgs });
+            }
+            ops.push(MpiOp::Compute { flops });
+            if it % 10 == 9 {
+                // convergence check
+                ops.push(MpiOp::Collective {
+                    comm: world.clone(),
+                    kind: CollectiveKind::Allreduce,
+                    bytes: 8.0,
+                });
+            }
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::profile_app;
+
+    #[test]
+    fn neighbor_traffic_only() {
+        let s = Stencil2D::new(4, 4, 64, 3);
+        let p = profile_app(&s);
+        for i in 0..16 {
+            for j in 0..16 {
+                if p.volume.get(i, j) > 0.0 {
+                    let (xi, yi) = (i % 4, i / 4);
+                    let (xj, yj) = (j % 4, j / 4);
+                    let dx = (xi as i64 - xj as i64).rem_euclid(4).min((xj as i64 - xi as i64).rem_euclid(4));
+                    let dy = (yi as i64 - yj as i64).rem_euclid(4).min((yj as i64 - yi as i64).rem_euclid(4));
+                    assert!(dx + dy <= 1, "non-neighbour traffic ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ranks_and_metric() {
+        let s = Stencil2D::new(8, 4, 32, 10);
+        assert_eq!(s.num_ranks(), 32);
+        assert_eq!(s.metric(), Metric::TimestepsPerSec);
+        assert_eq!(s.timesteps(), 10);
+    }
+}

@@ -1,0 +1,288 @@
+//! Batch experiments (Section 5.2 of the paper).
+//!
+//! A *batch* is 100 instances of the same MPI application submitted as a
+//! queue. Per batch, `n_f` faulty nodes are drawn and keep the same outage
+//! probability `p_f` for all instances; per instance, each faulty node is
+//! independently emulated as down. An aborted instance is restarted from
+//! scratch and the batch completion time is augmented by one
+//! successful-run interval per abort (the paper's exact accounting).
+
+use crate::apps::MpiApp;
+use crate::commgraph::CommMatrix;
+use crate::error::Result;
+use crate::mapping::PlacementPolicy;
+use crate::profiler::profile_app;
+use crate::rng::Rng;
+use crate::sim::executor::{JobOutcome, Simulator};
+use crate::sim::failure::{sample_down_nodes, FaultScenario};
+use crate::slurm::plugins::fans::FansPlugin;
+use crate::topology::Platform;
+
+/// Batch experiment configuration.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Instances per batch (paper: 100).
+    pub instances: usize,
+    /// Number of faulty nodes `n_f`.
+    pub n_faulty: usize,
+    /// Outage probability `p_f`.
+    pub p_f: f64,
+    /// Heartbeat rounds used to estimate outage (0 = oracle estimates).
+    pub heartbeat_rounds: usize,
+    /// Give up on an instance after this many consecutive aborts
+    /// (safety net; effectively unreachable at the paper's p_f).
+    pub max_restarts: u32,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            instances: 100,
+            n_faulty: 16,
+            p_f: 0.02,
+            heartbeat_rounds: 0,
+            max_restarts: 1000,
+        }
+    }
+}
+
+/// Result of one batch run.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Total simulated completion time of the queue.
+    pub completion_s: f64,
+    /// Instances that aborted at least once.
+    pub aborted_instances: usize,
+    /// Total aborts (restarts).
+    pub total_aborts: usize,
+    /// Instances in the batch.
+    pub instances: usize,
+    /// Fault-free single-run duration under this placement.
+    pub success_run_s: f64,
+}
+
+impl BatchResult {
+    /// Fraction of instances that aborted at least once.
+    pub fn abort_ratio(&self) -> f64 {
+        self.aborted_instances as f64 / self.instances as f64
+    }
+}
+
+/// Runs batches of one application on one platform.
+pub struct BatchRunner {
+    platform: Platform,
+    comm: CommMatrix,
+    sim: Simulator,
+    fans: FansPlugin,
+}
+
+impl BatchRunner {
+    /// Profile the app and prepare the simulator.
+    pub fn new(app: &dyn MpiApp, platform: &Platform) -> Self {
+        let comm = profile_app(app).volume;
+        BatchRunner {
+            platform: platform.clone(),
+            comm,
+            sim: Simulator::new(app, platform),
+            fans: FansPlugin::default(),
+        }
+    }
+
+    /// The profiled communication graph.
+    pub fn comm(&self) -> &CommMatrix {
+        &self.comm
+    }
+
+    /// Estimate outage probabilities the way the controller would: either
+    /// the oracle values (heartbeat_rounds == 0) or `rounds` Bernoulli
+    /// probes per node.
+    fn estimate_outage(
+        &self,
+        scenario: &FaultScenario,
+        rounds: usize,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        let truth = scenario.true_outage();
+        if rounds == 0 {
+            return truth;
+        }
+        truth
+            .iter()
+            .map(|&p| {
+                if p <= 0.0 {
+                    0.0
+                } else {
+                    let misses = (0..rounds).filter(|_| rng.bernoulli(p)).count();
+                    misses as f64 / rounds as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Run one batch under `policy` with the batch-level fault `scenario`.
+    ///
+    /// The placement is computed **once per batch** (the paper re-derives
+    /// it per job, but within a batch the inputs — comm graph and outage
+    /// estimates — are identical, so the mapping is too).
+    pub fn run_batch(
+        &mut self,
+        policy: PlacementPolicy,
+        scenario: &FaultScenario,
+        config: &BatchConfig,
+        rng: &mut Rng,
+    ) -> Result<BatchResult> {
+        let outage = self.estimate_outage(scenario, config.heartbeat_rounds, rng);
+        let placement =
+            self.fans
+                .select(policy, &self.comm, &self.platform, &outage, rng)?;
+        let assignment = placement.assignment;
+        // one fault-free simulation + touched-node sweep; every instance
+        // then resolves with an intersection test (see JobProfile).
+        let profile = self.sim.prepare(&assignment);
+        let success_run_s = profile.success_s;
+
+        let mut completion = 0.0f64;
+        let mut aborted_instances = 0usize;
+        let mut total_aborts = 0usize;
+        for _ in 0..config.instances {
+            let mut aborted_this = false;
+            let mut restarts = 0u32;
+            loop {
+                let down = sample_down_nodes(scenario, rng);
+                match profile.outcome(&down) {
+                    JobOutcome::Completed { seconds } => {
+                        completion += seconds;
+                        break;
+                    }
+                    JobOutcome::Aborted { .. } => {
+                        // paper accounting: each abort costs one
+                        // successful-run interval, then restart
+                        completion += success_run_s;
+                        total_aborts += 1;
+                        aborted_this = true;
+                        restarts += 1;
+                        if restarts >= config.max_restarts {
+                            break;
+                        }
+                    }
+                }
+            }
+            if aborted_this {
+                aborted_instances += 1;
+            }
+        }
+        Ok(BatchResult {
+            completion_s: completion,
+            aborted_instances,
+            total_aborts,
+            instances: config.instances,
+            success_run_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::lammps_proxy::LammpsProxy;
+    use crate::topology::TorusDims;
+
+    fn runner(ranks: usize) -> (BatchRunner, Platform) {
+        let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+        let app = LammpsProxy::tiny(ranks, 3);
+        (BatchRunner::new(&app, &plat), plat)
+    }
+
+    #[test]
+    fn fault_free_batch_has_no_aborts() {
+        let (mut r, plat) = runner(16);
+        let scenario = FaultScenario::none(plat.num_nodes());
+        let cfg = BatchConfig {
+            instances: 5,
+            n_faulty: 0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1);
+        let res = r
+            .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+            .unwrap();
+        assert_eq!(res.aborted_instances, 0);
+        assert!((res.completion_s - 5.0 * res.success_run_s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tofa_beats_default_with_faults_in_front() {
+        // faulty nodes right where block placement lands
+        let (mut r, plat) = runner(16);
+        let scenario = FaultScenario {
+            faulty_nodes: (0..8).collect(),
+            p_f: 0.3,
+            num_nodes: plat.num_nodes(),
+        };
+        let cfg = BatchConfig {
+            instances: 10,
+            n_faulty: 8,
+            p_f: 0.3,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(2);
+        let d = r
+            .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+            .unwrap();
+        let mut rng = Rng::new(2);
+        let t = r
+            .run_batch(PlacementPolicy::Tofa, &scenario, &cfg, &mut rng)
+            .unwrap();
+        assert_eq!(t.aborted_instances, 0, "TOFA should dodge all faults");
+        assert!(d.aborted_instances > 0, "default should hit faults");
+        assert!(t.completion_s < d.completion_s);
+    }
+
+    #[test]
+    fn abort_accounting_adds_success_intervals() {
+        let (mut r, plat) = runner(8);
+        let scenario = FaultScenario {
+            faulty_nodes: vec![0],
+            p_f: 1.0, // node 0 always down
+            num_nodes: plat.num_nodes(),
+        };
+        let cfg = BatchConfig {
+            instances: 2,
+            n_faulty: 1,
+            p_f: 1.0,
+            max_restarts: 3,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        // block placement uses node 0 -> aborts forever until max_restarts
+        let res = r
+            .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+            .unwrap();
+        assert_eq!(res.aborted_instances, 2);
+        assert_eq!(res.total_aborts, 6);
+        assert!((res.completion_s - 6.0 * res.success_run_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heartbeat_estimation_still_avoids_faults() {
+        let (mut r, plat) = runner(16);
+        let scenario = FaultScenario {
+            faulty_nodes: (0..8).collect(),
+            p_f: 0.5,
+            num_nodes: plat.num_nodes(),
+        };
+        let cfg = BatchConfig {
+            instances: 5,
+            n_faulty: 8,
+            p_f: 0.5,
+            heartbeat_rounds: 50,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(4);
+        let t = r
+            .run_batch(PlacementPolicy::Tofa, &scenario, &cfg, &mut rng)
+            .unwrap();
+        // with 50 rounds at p=0.5 every faulty node is detected w.h.p.
+        assert_eq!(t.aborted_instances, 0);
+    }
+}

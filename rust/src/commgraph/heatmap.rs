@@ -1,0 +1,110 @@
+//! Traffic heatmap rendering (the paper's Figure 1).
+//!
+//! The profiling tool's heatmap "allows for visual inspection of the
+//! application's communication pattern". We render to (a) an ASCII/ANSI
+//! grid for terminals and (b) a PGM image for files — both driven from the
+//! `repro fig1` subcommand and the `heatmaps` example.
+
+use super::matrix::CommMatrix;
+
+/// Greyscale ramp, light -> dark (paper: "the darker, the more traffic").
+const RAMP: &[u8] = b" .:-=+*#%@";
+
+/// Render an ASCII heatmap, downsampling to at most `max_cells` per side.
+pub fn ascii(m: &CommMatrix, max_cells: usize) -> String {
+    let n = m.len();
+    let cells = n.min(max_cells).max(1);
+    let mut grid = vec![0.0f64; cells * cells];
+    let scale = n as f64 / cells as f64;
+    for i in 0..n {
+        for j in 0..n {
+            let ci = ((i as f64 / scale) as usize).min(cells - 1);
+            let cj = ((j as f64 / scale) as usize).min(cells - 1);
+            grid[ci * cells + cj] += m.get(i, j);
+        }
+    }
+    let max = grid.iter().cloned().fold(0.0, f64::max);
+    let mut out = String::with_capacity(cells * (cells + 1));
+    for ci in 0..cells {
+        for cj in 0..cells {
+            let v = grid[ci * cells + cj];
+            let idx = if max > 0.0 {
+                // log scale: traffic spans orders of magnitude
+                let t = (1.0 + v).ln() / (1.0 + max).ln();
+                ((t * (RAMP.len() - 1) as f64).round() as usize).min(RAMP.len() - 1)
+            } else {
+                0
+            };
+            out.push(RAMP[idx] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a binary PGM (P5) image, one pixel per rank pair, dark = heavy.
+pub fn pgm(m: &CommMatrix) -> Vec<u8> {
+    let n = m.len();
+    let max = m.max();
+    let mut out = format!("P5\n{n} {n}\n255\n").into_bytes();
+    for i in 0..n {
+        for j in 0..n {
+            let v = m.get(i, j);
+            let t = if max > 0.0 {
+                (1.0 + v).ln() / (1.0 + max).ln()
+            } else {
+                0.0
+            };
+            out.push(255 - (t * 255.0).round() as u8);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn banded(n: usize) -> CommMatrix {
+        let mut m = CommMatrix::new(n);
+        for i in 0..n - 1 {
+            m.add_sym(i, i + 1, 1000.0);
+        }
+        m
+    }
+
+    #[test]
+    fn ascii_dimensions() {
+        let m = banded(32);
+        let s = ascii(&m, 16);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 16);
+        assert!(lines.iter().all(|l| l.chars().count() == 16));
+    }
+
+    #[test]
+    fn ascii_diagonal_darker_than_corners() {
+        let m = banded(32);
+        let s = ascii(&m, 32);
+        let lines: Vec<&str> = s.lines().collect();
+        let diag = lines[1].as_bytes()[2]; // near-diagonal cell
+        let corner = lines[0].as_bytes()[31];
+        let rank = |c: u8| RAMP.iter().position(|&r| r == c).unwrap();
+        assert!(rank(diag) > rank(corner));
+    }
+
+    #[test]
+    fn pgm_header_and_size() {
+        let m = banded(8);
+        let img = pgm(&m);
+        assert!(img.starts_with(b"P5\n8 8\n255\n"));
+        assert_eq!(img.len(), b"P5\n8 8\n255\n".len() + 64);
+    }
+
+    #[test]
+    fn empty_matrix_renders_blank() {
+        let m = CommMatrix::new(4);
+        let s = ascii(&m, 4);
+        assert!(s.chars().all(|c| c == ' ' || c == '\n'));
+    }
+}

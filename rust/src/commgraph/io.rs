@@ -1,0 +1,102 @@
+//! Load/store communication graphs.
+//!
+//! The paper's LoadMatrix SPANK plugin ships the communication graph from
+//! a compute node to slurmctld as a file; this module defines that wire
+//! format: a simple self-describing text format (one header line, then one
+//! row per line), plus JSON for interop with the Python tooling.
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use super::matrix::CommMatrix;
+use crate::error::{Error, Result};
+
+/// Serialize in the srun `--load-matrix` text format:
+/// line 1: `tofa-commgraph v1 <n>`; lines 2..n+1: row-major f64 values.
+pub fn write_text<W: Write>(m: &CommMatrix, w: &mut W) -> Result<()> {
+    writeln!(w, "tofa-commgraph v1 {}", m.len())?;
+    for i in 0..m.len() {
+        let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", row.join(" "))?;
+    }
+    Ok(())
+}
+
+/// Parse the text format written by [`write_text`].
+pub fn read_text<R: Read>(r: R) -> Result<CommMatrix> {
+    let mut lines = BufReader::new(r).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Io(std::io::Error::other("empty comm graph file")))??;
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    if parts.len() != 3 || parts[0] != "tofa-commgraph" || parts[1] != "v1" {
+        return Err(Error::Slurm(format!("bad comm graph header: {header}")));
+    }
+    let n: usize = parts[2]
+        .parse()
+        .map_err(|_| Error::Slurm(format!("bad comm graph size: {header}")))?;
+    let mut m = CommMatrix::new(n);
+    for i in 0..n {
+        let line = lines
+            .next()
+            .ok_or_else(|| Error::Slurm(format!("comm graph truncated at row {i}")))??;
+        let vals: Vec<&str> = line.split_whitespace().collect();
+        if vals.len() != n {
+            return Err(Error::Slurm(format!(
+                "row {i} has {} values, expected {n}",
+                vals.len()
+            )));
+        }
+        for (j, v) in vals.iter().enumerate() {
+            let w: f64 = v
+                .parse()
+                .map_err(|_| Error::Slurm(format!("bad value at ({i},{j}): {v}")))?;
+            m.set(i, j, w);
+        }
+    }
+    Ok(m)
+}
+
+/// Save to a file path.
+pub fn save(m: &CommMatrix, path: &std::path::Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    write_text(m, &mut f)
+}
+
+/// Load from a file path.
+pub fn load(path: &std::path::Path) -> Result<CommMatrix> {
+    read_text(std::fs::File::open(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = CommMatrix::new(5);
+        m.add_sym(0, 4, 123.5);
+        m.add_sym(1, 2, 7.0);
+        let mut buf = Vec::new();
+        write_text(&m, &mut buf).unwrap();
+        let back = read_text(&buf[..]).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(read_text(&b"nonsense\n"[..]).is_err());
+        assert!(read_text(&b"tofa-commgraph v2 4\n"[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let input = b"tofa-commgraph v1 2\n0 1\n";
+        assert!(read_text(&input[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let input = b"tofa-commgraph v1 2\n0 1\n0\n";
+        assert!(read_text(&input[..]).is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! Communication graphs (`G_v` bytes, `G_m` messages) and tooling.
+//!
+//! These are the outputs of the paper's MPI profiling tool: `N x N`
+//! matrices where entry `(i, j)` is the total bytes (resp. messages)
+//! exchanged between world ranks `i` and `j` in either direction.
+
+pub mod heatmap;
+pub mod io;
+pub mod matrix;
+
+pub use matrix::CommMatrix;
+
+/// The pair of graphs the profiling tool emits.
+#[derive(Debug, Clone)]
+pub struct CommProfile {
+    /// `G_v`: bytes exchanged per pair (symmetric).
+    pub volume: CommMatrix,
+    /// `G_m`: message count per pair (symmetric).
+    pub messages: CommMatrix,
+}
+
+impl CommProfile {
+    /// Empty profile for `n` ranks.
+    pub fn new(n: usize) -> Self {
+        CommProfile {
+            volume: CommMatrix::new(n),
+            messages: CommMatrix::new(n),
+        }
+    }
+
+    /// Record one point-to-point message of `bytes` from `src` to `dst`
+    /// (world ranks). Updates both graphs symmetrically, as the paper's
+    /// tool does (`G_v(i,j)` = bytes i->j plus bytes j->i).
+    pub fn record(&mut self, src: usize, dst: usize, bytes: f64) {
+        if src == dst {
+            return; // self-messages do not cross the interconnect
+        }
+        self.volume.add_sym(src, dst, bytes);
+        self.messages.add_sym(src, dst, 1.0);
+    }
+
+    /// Rank count.
+    pub fn num_ranks(&self) -> usize {
+        self.volume.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_updates_both_graphs_symmetrically() {
+        let mut p = CommProfile::new(4);
+        p.record(0, 2, 100.0);
+        p.record(2, 0, 50.0);
+        assert_eq!(p.volume.get(0, 2), 150.0);
+        assert_eq!(p.volume.get(2, 0), 150.0);
+        assert_eq!(p.messages.get(0, 2), 2.0);
+    }
+
+    #[test]
+    fn self_message_ignored() {
+        let mut p = CommProfile::new(2);
+        p.record(1, 1, 1e9);
+        assert_eq!(p.volume.total(), 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the TOFA library.
+#[derive(Debug)]
+pub enum Error {
+    /// A placement request cannot be satisfied (e.g. more ranks than nodes).
+    Placement(String),
+    /// Topology construction / routing errors.
+    Topology(String),
+    /// Simulation invariant violations.
+    Simulation(String),
+    /// PJRT runtime / artifact errors.
+    Runtime(String),
+    /// Slurm-lite protocol errors.
+    Slurm(String),
+    /// I/O or parse errors.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Placement(m) => write!(f, "placement error: {m}"),
+            Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::Simulation(m) => write!(f, "simulation error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Slurm(m) => write!(f, "slurm error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,380 @@
+//! Experiment drivers behind the `repro` CLI: one function per paper
+//! artifact (Figures 1, 3a, 3b, 4, 5a/5b and Table 1) plus utilities.
+//!
+//! Every driver prints the table the paper reports and saves a CSV under
+//! the results directory. Seeds make all of them bit-reproducible.
+
+use std::path::Path;
+
+use tofa::apps::npb_dt::NpbDt;
+use tofa::apps::{lammps_proxy::LammpsProxy, ring::RingApp, stencil::Stencil2D, MpiApp};
+use tofa::batch::{BatchConfig, BatchRunner};
+use tofa::commgraph::heatmap;
+use tofa::error::Error;
+use tofa::mapping::{cost, place as place_policy, PlacementPolicy};
+use tofa::profiler::profile_app;
+use tofa::report::{fmt_secs, improvement_pct, Table};
+use tofa::rng::Rng;
+use tofa::sim::executor::Simulator;
+use tofa::sim::failure::FaultScenario;
+use tofa::topology::{Platform, TorusDims};
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Parse an app spec: `lammps:<ranks>` | `npb-dt` | `stencil:<px>x<py>` |
+/// `ring:<ranks>`.
+pub fn parse_app(spec: &str) -> Result<Box<dyn MpiApp>> {
+    let mk_err = || Error::Placement(format!("unknown app spec: {spec}"));
+    if let Some(r) = spec.strip_prefix("lammps:") {
+        let ranks: usize = r.parse().map_err(|_| mk_err())?;
+        return Ok(Box::new(LammpsProxy::rhodopsin(ranks)));
+    }
+    if spec == "npb-dt" {
+        return Ok(Box::new(NpbDt::class_c()));
+    }
+    if let Some(r) = spec.strip_prefix("stencil:") {
+        let (px, py) = r.split_once('x').ok_or_else(mk_err)?;
+        return Ok(Box::new(Stencil2D::new(
+            px.parse().map_err(|_| mk_err())?,
+            py.parse().map_err(|_| mk_err())?,
+            128,
+            50,
+        )));
+    }
+    if let Some(r) = spec.strip_prefix("ring:") {
+        let ranks: usize = r.parse().map_err(|_| mk_err())?;
+        return Ok(Box::new(RingApp::new(ranks, 64.0 * 1024.0, 50)));
+    }
+    Err(mk_err())
+}
+
+/// Figure 1: traffic heatmaps for LAMMPS (128p) and NPB-DT class C (85p).
+pub fn fig1(results: &Path) -> Result<()> {
+    for (label, app) in [
+        ("fig1a_lammps_128", Box::new(LammpsProxy::rhodopsin(128)) as Box<dyn MpiApp>),
+        ("fig1b_npb_dt_85", Box::new(NpbDt::class_c())),
+    ] {
+        let profile = profile_app(app.as_ref());
+        println!(
+            "== Figure 1 ({label}): {} ranks, total {:.1} MB, diagonal mass(k=8) {:.2} ==",
+            profile.num_ranks(),
+            profile.volume.total() / 2.0 / 1e6,
+            profile.volume.diagonal_mass(8)
+        );
+        println!("{}", heatmap::ascii(&profile.volume, 64));
+        let pgm = heatmap::pgm(&profile.volume);
+        std::fs::create_dir_all(results)?;
+        std::fs::write(results.join(format!("{label}.pgm")), pgm)?;
+    }
+    println!("heatmaps written under {}", results.display());
+    Ok(())
+}
+
+/// Simulate the report metric for one app under each policy.
+fn metric_per_policy(
+    app: &dyn MpiApp,
+    platform: &Platform,
+    policies: &[PlacementPolicy],
+    seed: u64,
+) -> Result<Vec<(PlacementPolicy, f64)>> {
+    let comm = profile_app(app).volume;
+    let dist = platform.hop_matrix();
+    let mut sim = Simulator::new(app, platform);
+    let mut out = Vec::new();
+    for &policy in policies {
+        let mut rng = Rng::new(seed);
+        let placement = place_policy(policy, &comm, &dist, &mut rng)?;
+        out.push((policy, sim.metric_value(&placement.assignment)));
+    }
+    Ok(out)
+}
+
+/// Figure 3a: NPB-DT execution time under scotch / default / greedy /
+/// random on the 8x8x8 torus (no faults).
+pub fn fig3a(results: &Path, seed: u64) -> Result<()> {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = NpbDt::class_c();
+    let policies = [
+        PlacementPolicy::DefaultSlurm,
+        PlacementPolicy::Random,
+        PlacementPolicy::Greedy,
+        PlacementPolicy::Scotch,
+    ];
+    let rows = metric_per_policy(&app, &platform, &policies, seed)?;
+    let scotch = rows
+        .iter()
+        .find(|(p, _)| *p == PlacementPolicy::Scotch)
+        .unwrap()
+        .1;
+    let mut t = Table::new(
+        "Figure 3a: NPB-DT class C (85p) execution time",
+        &["policy", "exec time (s)", "scotch improvement (%)"],
+    );
+    for (p, secs) in &rows {
+        t.row(vec![
+            p.to_string(),
+            fmt_secs(*secs),
+            format!("{:.1}", improvement_pct(*secs, scotch)),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv(results)?;
+    Ok(())
+}
+
+/// Figure 3b: LAMMPS timesteps/s for 32..256 processes per policy.
+pub fn fig3b(results: &Path, seed: u64) -> Result<()> {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let policies = [
+        PlacementPolicy::DefaultSlurm,
+        PlacementPolicy::Random,
+        PlacementPolicy::Greedy,
+        PlacementPolicy::Scotch,
+    ];
+    let mut t = Table::new(
+        "Figure 3b: LAMMPS timesteps/s",
+        &["ranks", "default-slurm", "random", "greedy", "scotch"],
+    );
+    for ranks in [32usize, 64, 128, 256] {
+        let app = LammpsProxy::rhodopsin(ranks);
+        let rows = metric_per_policy(&app, &platform, &policies, seed)?;
+        let mut cells = vec![ranks.to_string()];
+        cells.extend(rows.iter().map(|(_, v)| format!("{v:.1}")));
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    t.save_csv(results)?;
+    Ok(())
+}
+
+/// Table 1: LAMMPS 256p timesteps/s across torus arrangements,
+/// Default-Slurm vs TOFA (fault-free, so TOFA = Scotch path).
+pub fn table1(results: &Path, seed: u64) -> Result<()> {
+    let arrangements = ["8x8x8", "4x8x16", "8x4x16", "4x4x32", "4x32x4"];
+    let mut t = Table::new(
+        "Table 1: LAMMPS 256p timesteps/s by torus arrangement",
+        &["arrangement", "default-slurm", "tofa"],
+    );
+    let app = LammpsProxy::rhodopsin(256);
+    for arr in arrangements {
+        let dims = TorusDims::parse(arr)?;
+        let platform = Platform::paper_default(dims);
+        let rows = metric_per_policy(
+            &app,
+            &platform,
+            &[PlacementPolicy::DefaultSlurm, PlacementPolicy::Scotch],
+            seed,
+        )?;
+        t.row(vec![
+            arr.to_string(),
+            format!("{:.1}", rows[0].1),
+            format!("{:.1}", rows[1].1),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv(results)?;
+    Ok(())
+}
+
+/// Shared driver for the batch experiments (Figures 4, 5a, 5b).
+fn batch_experiment(
+    results: &Path,
+    title: &str,
+    app: &dyn MpiApp,
+    n_faulty: usize,
+    p_f: f64,
+    batches: usize,
+    instances: usize,
+    seed: u64,
+) -> Result<()> {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let mut runner = BatchRunner::new(app, &platform);
+    let config = BatchConfig {
+        instances,
+        n_faulty,
+        p_f,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        title,
+        &[
+            "batch",
+            "default (s)",
+            "tofa (s)",
+            "improvement (%)",
+            "default aborts",
+            "tofa aborts",
+        ],
+    );
+    let mut master = Rng::new(seed);
+    let (mut sum_d, mut sum_t) = (0.0, 0.0);
+    let (mut ab_d, mut ab_t) = (0usize, 0usize);
+    for b in 0..batches {
+        let mut scenario_rng = master.fork(b as u64 + 1);
+        let scenario =
+            FaultScenario::random(platform.num_nodes(), n_faulty, p_f, &mut scenario_rng);
+        // identical instance randomness per policy: fork per policy from
+        // the same batch stream
+        let mut rng_d = scenario_rng.fork(101);
+        let mut rng_t = scenario_rng.fork(202);
+        let d = runner.run_batch(PlacementPolicy::DefaultSlurm, &scenario, &config, &mut rng_d)?;
+        let tt = runner.run_batch(PlacementPolicy::Tofa, &scenario, &config, &mut rng_t)?;
+        sum_d += d.completion_s;
+        sum_t += tt.completion_s;
+        ab_d += d.aborted_instances;
+        ab_t += tt.aborted_instances;
+        t.row(vec![
+            b.to_string(),
+            fmt_secs(d.completion_s),
+            fmt_secs(tt.completion_s),
+            format!("{:.1}", improvement_pct(d.completion_s, tt.completion_s)),
+            d.aborted_instances.to_string(),
+            tt.aborted_instances.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let total = (batches * instances) as f64;
+    println!(
+        "avg improvement: {:.1}%   abort ratio: default {:.1}% vs tofa {:.1}%\n",
+        improvement_pct(sum_d, sum_t),
+        100.0 * ab_d as f64 / total,
+        100.0 * ab_t as f64 / total,
+    );
+    t.save_csv(results)?;
+    Ok(())
+}
+
+/// Figure 4: NPB-DT batches with 16 faulty nodes @ 2%.
+pub fn fig4(results: &Path, seed: u64, batches: usize, instances: usize) -> Result<()> {
+    let app = NpbDt::class_c();
+    batch_experiment(
+        results,
+        "Figure 4: NPB-DT batch completion (16 faulty @ 2%)",
+        &app,
+        16,
+        0.02,
+        batches,
+        instances,
+        seed,
+    )
+}
+
+/// Figures 5a / 5b: LAMMPS 64p batches with 8 or 16 faulty nodes @ 2%.
+pub fn fig5(
+    results: &Path,
+    seed: u64,
+    n_faulty: usize,
+    batches: usize,
+    instances: usize,
+    tag: &str,
+) -> Result<()> {
+    let app = LammpsProxy::rhodopsin(64);
+    batch_experiment(
+        results,
+        &format!("Figure {tag}: LAMMPS 64p batch completion ({n_faulty} faulty @ 2%)"),
+        &app,
+        n_faulty,
+        0.02,
+        batches,
+        instances,
+        seed,
+    )
+}
+
+/// `repro profile`: communication-graph stats and heatmap for an app.
+pub fn profile(app_spec: &str) -> Result<()> {
+    let app = parse_app(app_spec)?;
+    let p = profile_app(app.as_ref());
+    println!(
+        "app {} ranks {}  G_v total {:.2} MB  G_m msgs {}  diag-mass(8) {:.2}",
+        app.name(),
+        p.num_ranks(),
+        p.volume.total() / 2.0 / 1e6,
+        p.messages.total() as u64 / 2,
+        p.volume.diagonal_mass(8),
+    );
+    println!("{}", heatmap::ascii(&p.volume, 48));
+    Ok(())
+}
+
+/// `repro place`: mapping-quality comparison across policies.
+pub fn place(app_spec: &str, torus: &str, seed: u64) -> Result<()> {
+    let app = parse_app(app_spec)?;
+    let dims = TorusDims::parse(torus)?;
+    let platform = Platform::paper_default(dims);
+    let comm = profile_app(app.as_ref()).volume;
+    let dist = platform.hop_matrix();
+    let mut sim = Simulator::new(app.as_ref(), &platform);
+    let mut t = Table::new(
+        &format!("Placement quality: {} on {}", app.name(), torus),
+        &["policy", "hop-bytes (MB*hop)", "avg dilation", "max congestion (MB)", "metric"],
+    );
+    for policy in [
+        PlacementPolicy::DefaultSlurm,
+        PlacementPolicy::Random,
+        PlacementPolicy::Greedy,
+        PlacementPolicy::Scotch,
+    ] {
+        let mut rng = Rng::new(seed);
+        let pl = place_policy(policy, &comm, &dist, &mut rng)?;
+        let hb = cost::hop_bytes_cost(&comm, &dist, &pl.assignment);
+        let (avg_dil, _) = cost::dilation(&comm, &dist, &pl.assignment);
+        let (max_cong, _) = cost::congestion(&comm, platform.torus(), &pl.assignment);
+        let metric = sim.metric_value(&pl.assignment);
+        t.row(vec![
+            policy.to_string(),
+            format!("{:.1}", hb / 1e6),
+            format!("{avg_dil:.2}"),
+            format!("{:.1}", max_cong / 1e6),
+            format!("{metric:.2}"),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// `repro runtime`: PJRT artifact smoke check + cross-validation.
+pub fn runtime_check() -> Result<()> {
+    use tofa::runtime::{default_artifacts_dir, CostEvaluator};
+    let dir = default_artifacts_dir();
+    let mut eval = CostEvaluator::load(&dir)?;
+    println!(
+        "PJRT platform: {}  shapes: {:?}",
+        eval.platform_name(),
+        eval.shapes()
+    );
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let dist = platform.hop_matrix();
+    let app = LammpsProxy::tiny(64, 2);
+    let comm = profile_app(&app).volume;
+    let mut rng = Rng::new(7);
+    let candidates: Vec<Vec<usize>> = (0..eval.shapes().k_batch)
+        .map(|_| rng.sample_distinct(512, 64))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let pjrt = eval.batch_costs(&comm, &dist, &candidates)?;
+    let t_pjrt = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let rust: Vec<f64> = candidates
+        .iter()
+        .map(|c| cost::hop_bytes_cost(&comm, &dist, c))
+        .collect();
+    let t_rust = t1.elapsed();
+    let max_rel = pjrt
+        .iter()
+        .zip(&rust)
+        .map(|(a, b)| (a - b).abs() / b.max(1.0))
+        .fold(0.0, f64::max);
+    println!(
+        "{} candidates: pjrt {:?} rust {:?} max rel err {:.2e}",
+        candidates.len(),
+        t_pjrt,
+        t_rust,
+        max_rel
+    );
+    assert!(max_rel < 1e-4, "PJRT/rust mismatch");
+    println!("runtime check OK");
+    Ok(())
+}
+
+

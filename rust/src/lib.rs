@@ -1,0 +1,79 @@
+//! # TOFA — Topology and Fault-Aware process placement
+//!
+//! Production-grade reproduction of *"Improving the Performance and
+//! Resilience of MPI Parallel Jobs with Topology and Fault-Aware Process
+//! Placement"* (Vardas, Ploumidis, Marazakis; ICS-FORTH 2020).
+//!
+//! The crate is the L3 (Rust) layer of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution and every
+//!   substrate it depends on: a Slurm-lite resource manager with the
+//!   paper's five plugins ([`slurm`]), a Scotch-lite dual-recursive-
+//!   bipartitioning graph mapper ([`mapping`]), the TOFA placement policy
+//!   ([`tofa`]), a SimGrid-lite flow-level discrete-event simulator
+//!   ([`sim`]), MPI application proxies ([`apps`]), and the MPI profiling
+//!   tool ([`profiler`]).
+//! * **L2 (JAX, build-time)** — a batched mapping-cost model lowered to
+//!   HLO text artifacts (`python/compile/model.py`).
+//! * **L1 (Pallas, build-time)** — the gather-MAC mapping-cost kernel
+//!   (`python/compile/kernels/mapping_cost.py`), validated vs a pure-jnp
+//!   oracle; loaded and executed from Rust via PJRT ([`runtime`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use tofa::prelude::*;
+//!
+//! // 8x8x8 torus platform, paper parameters (6 Gflops, 10 Gbps, 1 us).
+//! let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+//! // A LAMMPS-like proxy app with 64 ranks.
+//! let app = LammpsProxy::rhodopsin(64);
+//! // Profile it -> communication graph G_v.
+//! let profile = profile_app(&app);
+//! // Place with TOFA (no faults known) and simulate.
+//! let fault = FaultModel::none(platform.num_nodes());
+//! let placement = TofaPlacer::new(Default::default())
+//!     .place(&profile.volume, &platform, &fault.outage_estimates())
+//!     .unwrap();
+//! let outcome = simulate_job(&app, &platform, &placement.assignment, &[]);
+//! println!("completion: {:?}", outcome);
+//! ```
+
+pub mod apps;
+pub mod batch;
+pub mod commgraph;
+pub mod error;
+pub mod mapping;
+pub mod profiler;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod slurm;
+pub mod tofa;
+pub mod topology;
+
+/// Convenient re-exports of the most used types.
+pub mod prelude {
+    pub use crate::apps::{
+        lammps_proxy::LammpsProxy, npb_dt::NpbDt, MpiApp, MpiOp,
+    };
+    pub use crate::batch::{BatchConfig, BatchRunner};
+    pub use crate::commgraph::CommMatrix;
+    pub use crate::error::{Error, Result};
+    pub use crate::mapping::{
+        baselines::{block_placement, greedy_placement, random_placement},
+        cost::hop_bytes_cost,
+        recmap::RecursiveMapper,
+        Placement, PlacementPolicy,
+    };
+    pub use crate::profiler::profile_app;
+    pub use crate::rng::Rng;
+    pub use crate::sim::{simulate_job, JobOutcome};
+    pub use crate::slurm::{controller::Controller, FaultModel};
+    pub use crate::tofa::placer::{TofaConfig, TofaPlacer};
+    pub use crate::topology::{
+        platform::Platform,
+        torus::{Torus, TorusDims},
+    };
+}

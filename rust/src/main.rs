@@ -1,0 +1,120 @@
+//! `repro` — the TOFA reproduction CLI.
+//!
+//! Subcommands regenerate every table and figure of the paper plus utility
+//! operations (profiling, placement, single-job simulation). See
+//! `repro help` and EXPERIMENTS.md.
+
+use std::path::PathBuf;
+
+mod experiments;
+
+const USAGE: &str = "\
+repro — TOFA: topology & fault-aware MPI process placement (paper reproduction)
+
+USAGE: repro <command> [options]
+
+COMMANDS:
+  fig1                 Figure 1: traffic heatmaps (LAMMPS 128p, NPB-DT 85p)
+  fig3a                Figure 3a: NPB-DT exec time across placement policies
+  fig3b                Figure 3b: LAMMPS timesteps/s for 32..256 processes
+  table1               Table 1: LAMMPS 256p across torus arrangements
+  fig4                 Figure 4: NPB-DT batches, 16 faulty nodes @ 2%
+  fig5a                Figure 5a: LAMMPS batches, 8 faulty nodes @ 2%
+  fig5b                Figure 5b: LAMMPS batches, 16 faulty nodes @ 2%
+  all                  run every experiment in sequence
+  profile              print an app's comm-graph stats + heatmap
+  place                compare mapping quality across policies
+  runtime              PJRT artifact smoke check + cross-validation
+  help                 this text
+
+OPTIONS:
+  --results=<dir>      CSV output directory        (default: results)
+  --seed=<u64>         base RNG seed               (default: 42)
+  --batches=<n>        batches for fig4/fig5       (default: 10)
+  --instances=<n>      instances per batch         (default: 100)
+  --app=<spec>         app for profile/place: lammps:<ranks> | npb-dt |
+                       stencil:<px>x<py> | ring:<ranks>   (default: lammps:64)
+  --torus=<XxYxZ>      torus dims for place        (default: 8x8x8)
+";
+
+struct Opts {
+    results: PathBuf,
+    seed: u64,
+    batches: usize,
+    instances: usize,
+    app: String,
+    torus: String,
+}
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    let mut o = Opts {
+        results: PathBuf::from("results"),
+        seed: 42,
+        batches: 10,
+        instances: 100,
+        app: "lammps:64".to_string(),
+        torus: "8x8x8".to_string(),
+    };
+    for a in args {
+        if let Some(v) = a.strip_prefix("--results=") {
+            o.results = PathBuf::from(v);
+        } else if let Some(v) = a.strip_prefix("--seed=") {
+            o.seed = v.parse().map_err(|_| format!("bad --seed: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--batches=") {
+            o.batches = v.parse().map_err(|_| format!("bad --batches: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--instances=") {
+            o.instances = v.parse().map_err(|_| format!("bad --instances: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--app=") {
+            o.app = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--torus=") {
+            o.torus = v.to_string();
+        } else {
+            return Err(format!("unknown option: {a}"));
+        }
+    }
+    Ok(o)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let opts = match parse_opts(&args[1..]) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    std::fs::create_dir_all(&opts.results).ok();
+    let r = &opts.results;
+    match cmd {
+        "fig1" => experiments::fig1(r)?,
+        "fig3a" => experiments::fig3a(r, opts.seed)?,
+        "fig3b" => experiments::fig3b(r, opts.seed)?,
+        "table1" => experiments::table1(r, opts.seed)?,
+        "fig4" => experiments::fig4(r, opts.seed, opts.batches, opts.instances)?,
+        "fig5a" => experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a")?,
+        "fig5b" => experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b")?,
+        "all" => {
+            experiments::fig1(r)?;
+            experiments::fig3a(r, opts.seed)?;
+            experiments::fig3b(r, opts.seed)?;
+            experiments::table1(r, opts.seed)?;
+            experiments::fig4(r, opts.seed, opts.batches, opts.instances)?;
+            experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a")?;
+            experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b")?;
+        }
+        "profile" => experiments::profile(&opts.app)?,
+        "place" => experiments::place(&opts.app, &opts.torus, opts.seed)?,
+        "runtime" => experiments::runtime_check()?,
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command: {other}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

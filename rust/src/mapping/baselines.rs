@@ -1,0 +1,169 @@
+//! The paper's comparison placement policies (Section 5.1).
+
+use super::Placement;
+use crate::commgraph::CommMatrix;
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::topology::DistanceMatrix;
+
+/// Slurm's default policy: iterate over available nodes sequentially and
+/// assign ranks in order — rank `i` lands on the `i`-th available node.
+pub fn block_placement(n_ranks: usize, n_nodes: usize) -> Result<Placement> {
+    if n_ranks > n_nodes {
+        return Err(Error::Placement(format!(
+            "{n_ranks} ranks > {n_nodes} nodes"
+        )));
+    }
+    Ok(Placement::new((0..n_ranks).collect()))
+}
+
+/// Block placement over an explicit available-node list (Slurm skips nodes
+/// marked DOWN but is otherwise sequential).
+pub fn block_placement_avail(n_ranks: usize, avail: &[usize]) -> Result<Placement> {
+    if n_ranks > avail.len() {
+        return Err(Error::Placement(format!(
+            "{n_ranks} ranks > {} available nodes",
+            avail.len()
+        )));
+    }
+    Ok(Placement::new(avail[..n_ranks].to_vec()))
+}
+
+/// Uniformly random distinct nodes.
+pub fn random_placement(n_ranks: usize, n_nodes: usize, rng: &mut Rng) -> Result<Placement> {
+    if n_ranks > n_nodes {
+        return Err(Error::Placement(format!(
+            "{n_ranks} ranks > {n_nodes} nodes"
+        )));
+    }
+    Ok(Placement::new(rng.sample_distinct(n_nodes, n_ranks)))
+}
+
+/// The paper's greedy heuristic: sort process pairs by traffic descending;
+/// iterate, placing each pair's endpoints as close as possible (starting
+/// from one hop).
+pub fn greedy_placement(comm: &CommMatrix, dist: &DistanceMatrix) -> Result<Placement> {
+    let n = comm.len();
+    let m = dist.len();
+    if n > m {
+        return Err(Error::Placement(format!("{n} ranks > {m} nodes")));
+    }
+    let mut pairs = comm.edges();
+    pairs.sort_by(|a, b| b.2.total_cmp(&a.2));
+
+    let mut assign = vec![usize::MAX; n];
+    let mut node_used = vec![false; m];
+
+    let mut nearest_free = |anchor: usize, node_used: &[bool]| -> usize {
+        (0..m)
+            .filter(|&v| !node_used[v])
+            .min_by(|&a, &b| {
+                dist.get(anchor, a)
+                    .total_cmp(&dist.get(anchor, b))
+                    .then(a.cmp(&b))
+            })
+            .expect("free node available by capacity check")
+    };
+
+    for (i, j, _) in pairs {
+        match (assign[i] == usize::MAX, assign[j] == usize::MAX) {
+            (false, false) => {}
+            (true, true) => {
+                // place i on the first free node, j as close as possible
+                let a = (0..m).find(|&v| !node_used[v]).unwrap();
+                node_used[a] = true;
+                assign[i] = a;
+                let b = nearest_free(a, &node_used);
+                node_used[b] = true;
+                assign[j] = b;
+            }
+            (true, false) => {
+                let b = nearest_free(assign[j], &node_used);
+                node_used[b] = true;
+                assign[i] = b;
+            }
+            (false, true) => {
+                let b = nearest_free(assign[i], &node_used);
+                node_used[b] = true;
+                assign[j] = b;
+            }
+        }
+    }
+    // isolated ranks (no traffic): fill sequentially
+    for a in assign.iter_mut() {
+        if *a == usize::MAX {
+            let v = (0..m).find(|&v| !node_used[v]).unwrap();
+            node_used[v] = true;
+            *a = v;
+        }
+    }
+    Ok(Placement::new(assign))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::cost::hop_bytes_cost;
+    use crate::topology::{Torus, TorusDims};
+
+    #[test]
+    fn block_is_sequential() {
+        let p = block_placement(5, 10).unwrap();
+        assert_eq!(p.assignment, vec![0, 1, 2, 3, 4]);
+        assert!(block_placement(11, 10).is_err());
+    }
+
+    #[test]
+    fn block_avail_skips_down_nodes() {
+        let avail = vec![0, 2, 3, 7, 9];
+        let p = block_placement_avail(3, &avail).unwrap();
+        assert_eq!(p.assignment, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn random_is_valid_and_seed_deterministic() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = random_placement(20, 64, &mut r1).unwrap();
+        let b = random_placement(20, 64, &mut r2).unwrap();
+        assert_eq!(a, b);
+        a.validate(64).unwrap();
+    }
+
+    #[test]
+    fn greedy_places_heavy_pair_adjacent() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let d = crate::topology::DistanceMatrix::from_torus_hops(&t);
+        let mut c = CommMatrix::new(4);
+        c.add_sym(0, 3, 1000.0); // heaviest
+        c.add_sym(1, 2, 10.0);
+        let p = greedy_placement(&c, &d).unwrap();
+        p.validate(64).unwrap();
+        assert_eq!(d.get(p.assignment[0], p.assignment[3]), 1.0);
+    }
+
+    #[test]
+    fn greedy_beats_random_on_clustered() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let d = crate::topology::DistanceMatrix::from_torus_hops(&t);
+        let mut c = CommMatrix::new(16);
+        for k in 0..8 {
+            c.add_sym(2 * k, 2 * k + 1, 500.0);
+        }
+        let g = greedy_placement(&c, &d).unwrap();
+        let mut rng = Rng::new(3);
+        let r = random_placement(16, 64, &mut rng).unwrap();
+        assert!(
+            hop_bytes_cost(&c, &d, &g.assignment) < hop_bytes_cost(&c, &d, &r.assignment)
+        );
+    }
+
+    #[test]
+    fn greedy_handles_zero_traffic() {
+        let t = Torus::new(TorusDims::new(2, 2, 2));
+        let d = crate::topology::DistanceMatrix::from_torus_hops(&t);
+        let c = CommMatrix::new(4);
+        let p = greedy_placement(&c, &d).unwrap();
+        p.validate(8).unwrap();
+    }
+}

@@ -1,0 +1,139 @@
+//! Mapping quality metrics: hop-bytes cost, dilation, congestion.
+//!
+//! `hop_bytes_cost` is the objective both the mapper and the PJRT-offloaded
+//! L1 kernel compute; the Rust implementation here is the scalar reference
+//! the runtime tests cross-check against.
+
+use crate::commgraph::CommMatrix;
+use crate::topology::{DistanceMatrix, Torus};
+
+/// Hop-bytes objective: `1/2 * sum_{i,j} C[i,j] * D[a_i, a_j]`.
+pub fn hop_bytes_cost(comm: &CommMatrix, dist: &DistanceMatrix, assign: &[usize]) -> f64 {
+    debug_assert_eq!(comm.len(), assign.len());
+    let n = comm.len();
+    let mut total = 0.0;
+    for i in 0..n {
+        let row = comm.row(i);
+        let di = dist.row(assign[i]);
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += row[j] * di[assign[j]] as f64;
+        }
+        total += acc;
+    }
+    0.5 * total
+}
+
+/// Per-vertex contributions `contrib[i] = sum_j C[i,j] * D[a_i, a_j]`
+/// (total cost = contrib.sum() / 2). Mirrors the L1 `vertex_cost` kernel.
+pub fn vertex_contributions(
+    comm: &CommMatrix,
+    dist: &DistanceMatrix,
+    assign: &[usize],
+) -> Vec<f64> {
+    let n = comm.len();
+    (0..n)
+        .map(|i| {
+            let row = comm.row(i);
+            let di = dist.row(assign[i]);
+            (0..n).map(|j| row[j] * di[assign[j]] as f64).sum()
+        })
+        .collect()
+}
+
+/// Dilation statistics: average and maximum hop distance over communicating
+/// pairs, weighted (avg) by traffic.
+pub fn dilation(comm: &CommMatrix, dist: &DistanceMatrix, assign: &[usize]) -> (f64, f64) {
+    let mut weighted = 0.0;
+    let mut weight = 0.0;
+    let mut max_d = 0.0f64;
+    for (i, j, w) in comm.edges() {
+        let d = dist.get(assign[i], assign[j]) as f64;
+        weighted += w * d;
+        weight += w;
+        max_d = max_d.max(d);
+    }
+    if weight == 0.0 {
+        (0.0, 0.0)
+    } else {
+        (weighted / weight, max_d)
+    }
+}
+
+/// Maximum per-link traffic (congestion) when every pair's traffic follows
+/// the torus DOR route. Returns (max link bytes, mean link bytes over used
+/// links).
+pub fn congestion(comm: &CommMatrix, torus: &Torus, assign: &[usize]) -> (f64, f64) {
+    let (index, num_links) = torus.link_index();
+    let n_nodes = torus.num_nodes();
+    let mut load = vec![0.0f64; num_links];
+    let mut route = Vec::new();
+    for (i, j, w) in comm.edges() {
+        torus.route_into(assign[i], assign[j], &mut route);
+        for l in &route {
+            load[index[l.src * n_nodes + l.dst] as usize] += w;
+        }
+    }
+    let max = load.iter().cloned().fold(0.0, f64::max);
+    let used: Vec<f64> = load.iter().cloned().filter(|&x| x > 0.0).collect();
+    let mean = if used.is_empty() {
+        0.0
+    } else {
+        used.iter().sum::<f64>() / used.len() as f64
+    };
+    (max, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TorusDims;
+
+    fn tiny() -> (CommMatrix, DistanceMatrix) {
+        let mut c = CommMatrix::new(3);
+        c.add_sym(0, 1, 10.0);
+        c.add_sym(1, 2, 5.0);
+        let t = Torus::new(TorusDims::new(4, 1, 1));
+        (c, DistanceMatrix::from_torus_hops(&t))
+    }
+
+    #[test]
+    fn hop_bytes_hand_computed() {
+        let (c, d) = tiny();
+        // nodes 0,1,2 in a 4-ring: d(0,1)=1, d(1,2)=1, d(0,2)=2
+        let cost = hop_bytes_cost(&c, &d, &[0, 1, 2]);
+        assert_eq!(cost, 10.0 + 5.0);
+        // spread out: 0 -> 0, 1 -> 2, 2 -> 1
+        let cost2 = hop_bytes_cost(&c, &d, &[0, 2, 1]);
+        assert_eq!(cost2, 10.0 * 2.0 + 5.0);
+    }
+
+    #[test]
+    fn contributions_sum_to_twice_cost() {
+        let (c, d) = tiny();
+        let a = vec![0, 1, 3];
+        let contribs = vertex_contributions(&c, &d, &a);
+        let sum: f64 = contribs.iter().sum();
+        assert!((sum / 2.0 - hop_bytes_cost(&c, &d, &a)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dilation_stats() {
+        let (c, d) = tiny();
+        let (avg, max) = dilation(&c, &d, &[0, 1, 3]);
+        // d(0,1)=1 w=10; d(1,3)=2 w=5
+        assert!((avg - (10.0 + 10.0) / 15.0).abs() < 1e-9);
+        assert_eq!(max, 2.0);
+    }
+
+    #[test]
+    fn congestion_counts_route_overlap() {
+        let torus = Torus::new(TorusDims::new(4, 1, 1));
+        let mut c = CommMatrix::new(2);
+        c.add_sym(0, 1, 100.0);
+        // ranks on nodes 0 and 2: route 0->1->2 loads two links
+        let (max, mean) = congestion(&c, &torus, &[0, 2]);
+        assert_eq!(max, 100.0);
+        assert!(mean > 0.0);
+    }
+}

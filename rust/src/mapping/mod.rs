@@ -1,0 +1,163 @@
+//! Graph mapping: assigning guest (process) graphs onto host (platform)
+//! graphs.
+//!
+//! This is the Scotch-substitute substrate (the paper delegates the actual
+//! mapping problem to the Scotch library's dual recursive bipartitioning).
+//! [`recmap::RecursiveMapper`] implements the same algorithm family:
+//! simultaneous recursive bisection of the guest communication graph and
+//! the host architecture, followed by a Kernighan–Lin-style refinement
+//! sweep ([`kl`]). [`baselines`] provides the paper's comparison policies
+//! (default-slurm block placement, random, greedy).
+
+pub mod baselines;
+pub mod bisect;
+pub mod cost;
+pub mod kl;
+pub mod recmap;
+
+use crate::commgraph::CommMatrix;
+use crate::error::Result;
+use crate::rng::Rng;
+use crate::topology::DistanceMatrix;
+
+/// A process -> node assignment. `assignment[rank] = node id`.
+///
+/// One process per node (the paper's setting); the invariant that all
+/// assigned nodes are distinct is checked by [`Placement::validate`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// `assignment[rank]` is the platform node hosting `rank`.
+    pub assignment: Vec<usize>,
+}
+
+impl Placement {
+    /// Wrap an assignment vector.
+    pub fn new(assignment: Vec<usize>) -> Self {
+        Placement { assignment }
+    }
+
+    /// Ranks placed.
+    pub fn num_ranks(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Check the one-process-per-node invariant and node-id bounds.
+    pub fn validate(&self, num_nodes: usize) -> Result<()> {
+        use crate::error::Error;
+        let mut seen = vec![false; num_nodes];
+        for (rank, &node) in self.assignment.iter().enumerate() {
+            if node >= num_nodes {
+                return Err(Error::Placement(format!(
+                    "rank {rank} assigned to node {node} >= {num_nodes}"
+                )));
+            }
+            if seen[node] {
+                return Err(Error::Placement(format!(
+                    "node {node} assigned to more than one rank"
+                )));
+            }
+            seen[node] = true;
+        }
+        Ok(())
+    }
+}
+
+/// The placement policies compared in the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Slurm's default sequential block placement.
+    DefaultSlurm,
+    /// Uniform random node choice.
+    Random,
+    /// Heaviest-pair-first greedy (Section 5.1).
+    Greedy,
+    /// Scotch-style recursive bipartitioning (topology-aware, not
+    /// fault-aware).
+    Scotch,
+    /// Full TOFA: topology + fault aware (Listing 1.1).
+    Tofa,
+}
+
+impl PlacementPolicy {
+    /// Parse a CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "default" | "default-slurm" | "slurm" | "block" => Some(Self::DefaultSlurm),
+            "random" => Some(Self::Random),
+            "greedy" => Some(Self::Greedy),
+            "scotch" => Some(Self::Scotch),
+            "tofa" => Some(Self::Tofa),
+            _ => None,
+        }
+    }
+
+    /// All policies, in the paper's Figure 3 order.
+    pub fn all() -> [PlacementPolicy; 5] {
+        [
+            Self::DefaultSlurm,
+            Self::Random,
+            Self::Greedy,
+            Self::Scotch,
+            Self::Tofa,
+        ]
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::DefaultSlurm => "default-slurm",
+            Self::Random => "random",
+            Self::Greedy => "greedy",
+            Self::Scotch => "scotch",
+            Self::Tofa => "tofa",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Place `comm` onto nodes with distance matrix `dist` using `policy`.
+/// Fault-unaware entry point (used by Section 5.1 experiments); TOFA
+/// placement lives in [`crate::tofa::placer`].
+pub fn place(
+    policy: PlacementPolicy,
+    comm: &CommMatrix,
+    dist: &DistanceMatrix,
+    rng: &mut Rng,
+) -> Result<Placement> {
+    let n = comm.len();
+    let m = dist.len();
+    match policy {
+        PlacementPolicy::DefaultSlurm => baselines::block_placement(n, m),
+        PlacementPolicy::Random => baselines::random_placement(n, m, rng),
+        PlacementPolicy::Greedy => baselines::greedy_placement(comm, dist),
+        PlacementPolicy::Scotch | PlacementPolicy::Tofa => {
+            recmap::RecursiveMapper::default().map(comm, dist)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_duplicates_and_bounds() {
+        assert!(Placement::new(vec![0, 1, 2]).validate(4).is_ok());
+        assert!(Placement::new(vec![0, 0]).validate(4).is_err());
+        assert!(Placement::new(vec![5]).validate(4).is_err());
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(
+            PlacementPolicy::parse("TOFA"),
+            Some(PlacementPolicy::Tofa)
+        );
+        assert_eq!(
+            PlacementPolicy::parse("default-slurm"),
+            Some(PlacementPolicy::DefaultSlurm)
+        );
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,305 @@
+//! Dual recursive bipartitioning mapper (the Scotch-substitute).
+//!
+//! Scotch maps a guest graph onto an architecture by recursively splitting
+//! both at once: the architecture is bisected, the guest graph is bisected
+//! with part sizes matching the two architecture halves' capacities, and
+//! each guest part recurses into its architecture half. We implement the
+//! same scheme over a dense host distance matrix (which is how the paper's
+//! fault-aware weights (Eq. 1) are expressed) and finish with a
+//! Kernighan–Lin refinement sweep over the complete mapping.
+
+use super::bisect::bisect;
+use super::kl::refine;
+use super::Placement;
+use crate::commgraph::CommMatrix;
+use crate::error::{Error, Result};
+use crate::topology::DistanceMatrix;
+
+/// Configurable recursive mapper.
+#[derive(Debug, Clone)]
+pub struct RecursiveMapper {
+    /// Run the final KL refinement sweep (on by default).
+    pub refine: bool,
+    /// Maximum KL refinement passes.
+    pub refine_passes: usize,
+}
+
+impl Default for RecursiveMapper {
+    fn default() -> Self {
+        RecursiveMapper {
+            refine: true,
+            refine_passes: 12,
+        }
+    }
+}
+
+impl RecursiveMapper {
+    /// Map all `comm.len()` guest vertices onto distinct hosts
+    /// `0..dist.len()` (requires `comm.len() <= dist.len()`).
+    pub fn map(&self, comm: &CommMatrix, dist: &DistanceMatrix) -> Result<Placement> {
+        let hosts: Vec<usize> = (0..dist.len()).collect();
+        self.map_onto(comm, dist, &hosts)
+    }
+
+    /// Map onto an explicit host subset (the `ScotchExtract` + `ScotchMap`
+    /// path of TOFA's Listing 1.1).
+    ///
+    /// When the job is smaller than the host set, a *compact allocation* of
+    /// exactly `n` hosts is carved out first by greedy region growing
+    /// (lowest total distance to the growing region). This mirrors what a
+    /// resource manager does before rank mapping, and — because the growth
+    /// criterion reads the (possibly Eq.-1-inflated) distance matrix —
+    /// flaky nodes are naturally excluded on the fault-weighted path.
+    pub fn map_onto(
+        &self,
+        comm: &CommMatrix,
+        dist: &DistanceMatrix,
+        hosts: &[usize],
+    ) -> Result<Placement> {
+        let n = comm.len();
+        if n > hosts.len() {
+            return Err(Error::Placement(format!(
+                "{n} ranks cannot fit {} hosts (one process per node)",
+                hosts.len()
+            )));
+        }
+        let region;
+        let hosts = if n < hosts.len() {
+            region = compact_subset(dist, hosts, n);
+            &region[..]
+        } else {
+            hosts
+        };
+        let mut assignment = vec![usize::MAX; n];
+        let verts: Vec<usize> = (0..n).collect();
+        self.recurse(comm, dist, &verts, hosts, &mut assignment);
+        debug_assert!(assignment.iter().all(|&a| a != usize::MAX));
+
+        if self.refine && n >= 2 {
+            refine(comm, dist, &mut assignment, hosts, self.refine_passes);
+        }
+        Ok(Placement::new(assignment))
+    }
+
+    fn recurse(
+        &self,
+        comm: &CommMatrix,
+        dist: &DistanceMatrix,
+        verts: &[usize],
+        hosts: &[usize],
+        assignment: &mut [usize],
+    ) {
+        match (verts.len(), hosts.len()) {
+            (0, _) => {}
+            (_, 0) => unreachable!("capacity invariant violated"),
+            (_, 1) => {
+                debug_assert_eq!(verts.len(), 1);
+                assignment[verts[0]] = hosts[0];
+            }
+            (1, _) => {
+                // single vertex: pick the host closest to the subset's
+                // "centre" (min total distance to the other hosts) so deep
+                // recursion tails stay compact.
+                let best = *hosts
+                    .iter()
+                    .min_by(|&&a, &&b| {
+                        let da: f32 = hosts.iter().map(|&h| dist.get(a, h)).sum();
+                        let db: f32 = hosts.iter().map(|&h| dist.get(b, h)).sum();
+                        da.total_cmp(&db)
+                    })
+                    .unwrap();
+                assignment[verts[0]] = best;
+            }
+            (nv, nh) => {
+                let (h0, h1) = split_hosts(dist, hosts);
+                // guest part sizes proportional to host capacities, clamped
+                // so each side fits its half.
+                let ideal = (nv as f64 * h0.len() as f64 / nh as f64).round() as usize;
+                let min0 = nv.saturating_sub(h1.len());
+                let t0 = ideal.clamp(min0, h0.len().min(nv));
+                let b = bisect(comm, verts, t0);
+                let g0: Vec<usize> = b.part0.iter().map(|&i| verts[i]).collect();
+                let g1: Vec<usize> = b.part1.iter().map(|&i| verts[i]).collect();
+                self.recurse(comm, dist, &g0, &h0, assignment);
+                self.recurse(comm, dist, &g1, &h1, assignment);
+            }
+        }
+    }
+}
+
+/// Greedily grow a compact region of `k` hosts: seed at the host with the
+/// lowest total distance to all hosts (the centre of the available set),
+/// then repeatedly absorb the free host with the lowest total distance to
+/// the region. O(k * |hosts|) with incremental totals.
+pub fn compact_subset(dist: &DistanceMatrix, hosts: &[usize], k: usize) -> Vec<usize> {
+    debug_assert!(k <= hosts.len());
+    if k == hosts.len() {
+        return hosts.to_vec();
+    }
+    let seed = *hosts
+        .iter()
+        .min_by(|&&a, &&b| {
+            let da: f32 = hosts.iter().map(|&h| dist.get(a, h)).sum();
+            let db: f32 = hosts.iter().map(|&h| dist.get(b, h)).sum();
+            da.total_cmp(&db).then(a.cmp(&b))
+        })
+        .unwrap();
+    let mut in_region: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    in_region.insert(seed);
+    let mut region = vec![seed];
+    // total distance from each free host to the region
+    let mut to_region: Vec<(usize, f32)> = hosts
+        .iter()
+        .filter(|&&h| h != seed)
+        .map(|&h| (h, dist.get(h, seed)))
+        .collect();
+    while region.len() < k {
+        let (idx, _) = to_region
+            .iter()
+            .enumerate()
+            .min_by(|(_, (ha, da)), (_, (hb, db))| da.total_cmp(db).then(ha.cmp(hb)))
+            .unwrap();
+        let (h, _) = to_region.swap_remove(idx);
+        in_region.insert(h);
+        for (f, d) in to_region.iter_mut() {
+            *d += dist.get(*f, h);
+        }
+        region.push(h);
+    }
+    region.sort_unstable();
+    region
+}
+
+/// Bisect a host subset by distance geometry: seed with the two mutually
+/// farthest hosts, then greedily assign each host to the seed it is closer
+/// to, balancing sizes (|h0| = ceil(h/2)).
+///
+/// On a fault-weighted matrix (Eq. 1) paths through flaky nodes look ~100x
+/// longer, so this split naturally quarantines flaky regions into one side.
+fn split_hosts(dist: &DistanceMatrix, hosts: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    let h = hosts.len();
+    debug_assert!(h >= 2);
+    // farthest pair (O(h^2), h <= 512)
+    let (mut sa, mut sb, mut best) = (hosts[0], hosts[1], -1.0f32);
+    for (i, &a) in hosts.iter().enumerate() {
+        for &b in &hosts[i + 1..] {
+            let d = dist.get(a, b);
+            if d > best {
+                best = d;
+                sa = a;
+                sb = b;
+            }
+        }
+    }
+    // order hosts by (d(x, sa) - d(x, sb)): most-sa-side first
+    let mut order: Vec<usize> = hosts.to_vec();
+    order.sort_by(|&x, &y| {
+        let kx = dist.get(x, sa) - dist.get(x, sb);
+        let ky = dist.get(y, sa) - dist.get(y, sb);
+        kx.total_cmp(&ky).then(x.cmp(&y))
+    });
+    let half = h.div_ceil(2);
+    let h0 = order[..half].to_vec();
+    let h1 = order[half..].to_vec();
+    (h0, h1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::cost::hop_bytes_cost;
+    use crate::topology::{Torus, TorusDims};
+
+    fn ring_comm(n: usize) -> CommMatrix {
+        let mut c = CommMatrix::new(n);
+        for i in 0..n {
+            c.add_sym(i, (i + 1) % n, 100.0);
+        }
+        c
+    }
+
+    #[test]
+    fn maps_are_valid_placements() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let d = DistanceMatrix::from_torus_hops(&t);
+        for n in [2usize, 7, 16, 31, 64] {
+            let c = ring_comm(n);
+            let p = RecursiveMapper::default().map(&c, &d).unwrap();
+            p.validate(64).unwrap();
+            assert_eq!(p.num_ranks(), n);
+        }
+    }
+
+    #[test]
+    fn beats_random_on_ring() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let c = ring_comm(32);
+        let p = RecursiveMapper::default().map(&c, &d).unwrap();
+        let mapped = hop_bytes_cost(&c, &d, &p.assignment);
+
+        let mut rng = crate::rng::Rng::new(1);
+        let mut rand_costs = Vec::new();
+        for _ in 0..20 {
+            let r = crate::mapping::baselines::random_placement(32, 64, &mut rng).unwrap();
+            rand_costs.push(hop_bytes_cost(&c, &d, &r.assignment));
+        }
+        let rand_avg: f64 = rand_costs.iter().sum::<f64>() / rand_costs.len() as f64;
+        assert!(
+            mapped < 0.7 * rand_avg,
+            "mapper {mapped} vs random avg {rand_avg}"
+        );
+    }
+
+    #[test]
+    fn clique_pairs_land_adjacent() {
+        // 4 heavy pairs: each pair should sit on adjacent nodes.
+        let mut c = CommMatrix::new(8);
+        for k in 0..4 {
+            c.add_sym(2 * k, 2 * k + 1, 1000.0);
+        }
+        let t = Torus::new(TorusDims::new(4, 4, 1));
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let p = RecursiveMapper::default().map(&c, &d).unwrap();
+        for k in 0..4 {
+            let dist = d.get(p.assignment[2 * k], p.assignment[2 * k + 1]);
+            assert!(dist <= 2.0, "pair {k} at distance {dist}");
+        }
+    }
+
+    #[test]
+    fn map_onto_subset_uses_only_subset() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let c = ring_comm(6);
+        let hosts: Vec<usize> = (10..26).collect();
+        let p = RecursiveMapper::default()
+            .map_onto(&c, &d, &hosts)
+            .unwrap();
+        for &a in &p.assignment {
+            assert!(hosts.contains(&a));
+        }
+    }
+
+    #[test]
+    fn too_many_ranks_errors() {
+        let t = Torus::new(TorusDims::new(2, 2, 1));
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let c = ring_comm(5);
+        assert!(RecursiveMapper::default().map(&c, &d).is_err());
+    }
+
+    #[test]
+    fn split_hosts_balanced() {
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let hosts: Vec<usize> = (0..32).collect();
+        let (h0, h1) = split_hosts(&d, &hosts);
+        assert_eq!(h0.len(), 16);
+        assert_eq!(h1.len(), 16);
+        // disjoint, covering
+        let mut all: Vec<usize> = h0.iter().chain(h1.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, hosts);
+    }
+}

@@ -1,0 +1,430 @@
+//! Collective-algorithm emulation.
+//!
+//! The paper's profiling tool "is tuned to emulate the appropriate
+//! algorithm for each collective [so] it is able to accurately capture the
+//! traffic exchanged between each pair of processes during each phase of
+//! that collective's schedule". This module implements those schedules —
+//! the classic MPICH algorithm choices — as explicit per-round message
+//! lists. Both the profiler (traffic accounting) and the SMPI-like
+//! simulator (timing) consume the same schedules, so profile and simulation
+//! are consistent by construction.
+//!
+//! All ranks are communicator-local `0..n`; `bytes` is the per-rank payload
+//! (see each constructor for its exact semantics).
+
+/// One point-to-point message within a schedule round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Msg {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+}
+
+/// One synchronization phase: all messages in a round are concurrent, and
+/// a round completes before the next starts.
+pub type Round = Vec<Msg>;
+
+/// Collective operations supported by the emulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// Binomial-tree broadcast from `root`.
+    Bcast { root: usize },
+    /// Binomial-tree reduction to `root`.
+    Reduce { root: usize },
+    /// Recursive-doubling allreduce (MPICH default for short/medium).
+    Allreduce,
+    /// Ring allgather; `bytes` = each rank's contribution.
+    Allgather,
+    /// Recursive-halving reduce-scatter; `bytes` = per-rank result block.
+    ReduceScatter,
+    /// Pairwise-exchange alltoall; `bytes` = per-pair block.
+    Alltoall,
+    /// Dissemination barrier (token messages).
+    Barrier,
+    /// Binomial-tree gather to `root`; `bytes` = per-rank contribution.
+    Gather { root: usize },
+    /// Binomial-tree scatter from `root`; `bytes` = per-rank block.
+    Scatter { root: usize },
+}
+
+/// Expand a collective into its round schedule for `n` ranks.
+pub fn expand(kind: CollectiveKind, n: usize, bytes: f64) -> Vec<Round> {
+    if n <= 1 {
+        return Vec::new();
+    }
+    match kind {
+        CollectiveKind::Bcast { root } => binomial_rounds(n, root, false, |_| bytes),
+        CollectiveKind::Reduce { root } => {
+            let mut r = binomial_rounds(n, root, true, |_| bytes);
+            r.reverse();
+            r
+        }
+        CollectiveKind::Allreduce => allreduce_recursive_doubling(n, bytes),
+        CollectiveKind::Allgather => allgather_ring(n, bytes),
+        CollectiveKind::ReduceScatter => reduce_scatter(n, bytes),
+        CollectiveKind::Alltoall => alltoall_pairwise(n, bytes),
+        CollectiveKind::Barrier => barrier_dissemination(n),
+        CollectiveKind::Gather { root } => binomial_rounds(n, root, true, |sub| bytes * sub as f64)
+            .into_iter()
+            .rev()
+            .collect(),
+        CollectiveKind::Scatter { root } => binomial_rounds(n, root, false, |sub| bytes * sub as f64),
+    }
+}
+
+/// Total bytes a schedule puts on the network (sum over all messages).
+pub fn schedule_bytes(rounds: &[Round]) -> f64 {
+    rounds
+        .iter()
+        .flat_map(|r| r.iter())
+        .map(|m| m.bytes)
+        .sum()
+}
+
+/// Binomial tree rounds relative to `root`.
+///
+/// In broadcast orientation (`reversed = false`), round `k` has messages
+/// `vrank-mask -> vrank` for `vrank in [mask, 2*mask)`; the payload of an
+/// edge is `sizer(subtree)` where `subtree` is the size of the subtree the
+/// edge transfers (1 for bcast, the receiver's subtree for scatter/gather).
+/// `reversed = true` flips message direction (gather/reduce orientation).
+fn binomial_rounds(
+    n: usize,
+    root: usize,
+    reversed: bool,
+    sizer: impl Fn(usize) -> f64,
+) -> Vec<Round> {
+    let mut rounds = Vec::new();
+    let mut mask = 1usize;
+    while mask < n {
+        let mut round = Vec::new();
+        for vrank in mask..(2 * mask).min(n) {
+            let parent_v = vrank - mask;
+            // subtree rooted at vrank under this schedule
+            let subtree = subtree_size(vrank, n);
+            let a = (parent_v + root) % n;
+            let b = (vrank + root) % n;
+            let (src, dst) = if reversed { (b, a) } else { (a, b) };
+            round.push(Msg {
+                src,
+                dst,
+                bytes: sizer(subtree),
+            });
+        }
+        rounds.push(round);
+        mask <<= 1;
+    }
+    rounds
+}
+
+/// Size of the binomial subtree rooted at virtual rank `v` among `n`.
+fn subtree_size(v: usize, n: usize) -> usize {
+    if v == 0 {
+        return n;
+    }
+    // lowest set bit of v bounds the subtree; clipped by n.
+    let span = v & v.wrapping_neg();
+    span.min(n - v)
+}
+
+/// MPICH recursive-doubling allreduce with the non-power-of-two preamble.
+fn allreduce_recursive_doubling(n: usize, bytes: f64) -> Vec<Round> {
+    let pof2 = n.next_power_of_two() >> if n.is_power_of_two() { 0 } else { 1 };
+    let rem = n - pof2;
+    let mut rounds = Vec::new();
+
+    // Preamble: first 2*rem ranks fold odd ranks into even ones.
+    if rem > 0 {
+        rounds.push(
+            (0..rem)
+                .map(|i| Msg {
+                    src: 2 * i + 1,
+                    dst: 2 * i,
+                    bytes,
+                })
+                .collect(),
+        );
+    }
+    // Participating rank for virtual id v among pof2 participants.
+    let real = |v: usize| if v < rem { 2 * v } else { v + rem };
+
+    let mut mask = 1usize;
+    while mask < pof2 {
+        let mut round = Vec::with_capacity(pof2);
+        for v in 0..pof2 {
+            let peer = v ^ mask;
+            round.push(Msg {
+                src: real(v),
+                dst: real(peer),
+                bytes,
+            });
+        }
+        rounds.push(round);
+        mask <<= 1;
+    }
+    // Postamble: results pushed back to the folded odd ranks.
+    if rem > 0 {
+        rounds.push(
+            (0..rem)
+                .map(|i| Msg {
+                    src: 2 * i,
+                    dst: 2 * i + 1,
+                    bytes,
+                })
+                .collect(),
+        );
+    }
+    rounds
+}
+
+/// Ring allgather: `n - 1` rounds, each rank forwards one block to its
+/// successor.
+fn allgather_ring(n: usize, bytes: f64) -> Vec<Round> {
+    (0..n - 1)
+        .map(|_| {
+            (0..n)
+                .map(|i| Msg {
+                    src: i,
+                    dst: (i + 1) % n,
+                    bytes,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Reduce-scatter: recursive halving for powers of two, ring otherwise.
+/// `bytes` is the per-rank result block, so the full vector is `n * bytes`.
+fn reduce_scatter(n: usize, bytes: f64) -> Vec<Round> {
+    if n.is_power_of_two() {
+        let mut rounds = Vec::new();
+        let mut mask = n >> 1;
+        let mut chunk = bytes * (n as f64) / 2.0;
+        while mask >= 1 {
+            let round = (0..n)
+                .map(|i| Msg {
+                    src: i,
+                    dst: i ^ mask,
+                    bytes: chunk,
+                })
+                .collect();
+            rounds.push(round);
+            mask >>= 1;
+            chunk /= 2.0;
+        }
+        rounds
+    } else {
+        // ring: n-1 rounds of per-rank blocks
+        (0..n - 1)
+            .map(|_| {
+                (0..n)
+                    .map(|i| Msg {
+                        src: i,
+                        dst: (i + n - 1) % n,
+                        bytes,
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Pairwise-exchange alltoall: round `k` pairs `i` with `i ^ k` (power of
+/// two) or shifts by `k` (otherwise).
+fn alltoall_pairwise(n: usize, bytes: f64) -> Vec<Round> {
+    (1..n)
+        .map(|k| {
+            (0..n)
+                .filter_map(|i| {
+                    let peer = if n.is_power_of_two() { i ^ k } else { (i + k) % n };
+                    (peer != i).then_some(Msg {
+                        src: i,
+                        dst: peer,
+                        bytes,
+                    })
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Dissemination barrier: ceil(log2 n) rounds of 4-byte tokens.
+fn barrier_dissemination(n: usize) -> Vec<Round> {
+    let mut rounds = Vec::new();
+    let mut k = 1usize;
+    while k < n {
+        rounds.push(
+            (0..n)
+                .map(|i| Msg {
+                    src: i,
+                    dst: (i + k) % n,
+                    bytes: 4.0,
+                })
+                .collect(),
+        );
+        k <<= 1;
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total(kind: CollectiveKind, n: usize, bytes: f64) -> f64 {
+        schedule_bytes(&expand(kind, n, bytes))
+    }
+
+    #[test]
+    fn bcast_binomial_message_count() {
+        // n-1 messages total, ceil(log2 n) rounds.
+        for n in [2usize, 3, 4, 7, 8, 16, 85] {
+            let rounds = expand(CollectiveKind::Bcast { root: 0 }, n, 1.0);
+            let msgs: usize = rounds.iter().map(|r| r.len()).sum();
+            assert_eq!(msgs, n - 1, "n={n}");
+            assert_eq!(rounds.len(), (n as f64).log2().ceil() as usize);
+        }
+    }
+
+    #[test]
+    fn bcast_every_rank_reached() {
+        for root in [0usize, 3, 7] {
+            let rounds = expand(CollectiveKind::Bcast { root }, 12, 8.0);
+            let mut have = vec![false; 12];
+            have[root] = true;
+            for r in &rounds {
+                for m in r {
+                    assert!(have[m.src], "sender {} before receiving", m.src);
+                    have[m.dst] = true;
+                }
+            }
+            assert!(have.iter().all(|&h| h));
+        }
+    }
+
+    #[test]
+    fn reduce_mirrors_bcast() {
+        let b = expand(CollectiveKind::Bcast { root: 2 }, 9, 5.0);
+        let r = expand(CollectiveKind::Reduce { root: 2 }, 9, 5.0);
+        let b_msgs: usize = b.iter().map(|x| x.len()).sum();
+        let r_msgs: usize = r.iter().map(|x| x.len()).sum();
+        assert_eq!(b_msgs, r_msgs);
+        // every reduce message flows *towards* the root's tree.
+        let all_dst: Vec<usize> = r.iter().flatten().map(|m| m.dst).collect();
+        assert!(all_dst.contains(&2));
+    }
+
+    #[test]
+    fn allreduce_pow2_rounds_and_symmetry() {
+        let rounds = expand(CollectiveKind::Allreduce, 8, 10.0);
+        assert_eq!(rounds.len(), 3);
+        for r in &rounds {
+            assert_eq!(r.len(), 8);
+            // pairwise exchange: src set == dst set
+            for m in r {
+                assert!(r.iter().any(|x| x.src == m.dst && x.dst == m.src));
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_non_pow2_has_pre_and_postamble() {
+        let rounds = expand(CollectiveKind::Allreduce, 6, 1.0);
+        // rem = 2: preamble + 2 doubling rounds + postamble
+        assert_eq!(rounds.len(), 4);
+        assert_eq!(rounds[0].len(), 2); // 2 fold messages
+        assert_eq!(rounds[3].len(), 2);
+        // all ranks touched
+        let mut touched = vec![false; 6];
+        for r in &rounds {
+            for m in r {
+                touched[m.src] = true;
+                touched[m.dst] = true;
+            }
+        }
+        assert!(touched.iter().all(|&t| t));
+    }
+
+    #[test]
+    fn allgather_ring_totals() {
+        // each rank sends (n-1) blocks
+        let n = 10;
+        assert_eq!(
+            total(CollectiveKind::Allgather, n, 100.0),
+            (n * (n - 1)) as f64 * 100.0
+        );
+        let rounds = expand(CollectiveKind::Allgather, n, 100.0);
+        assert_eq!(rounds.len(), n - 1);
+        // neighbour-only traffic
+        for r in &rounds {
+            for m in r {
+                assert_eq!(m.dst, (m.src + 1) % n);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_halving_volume() {
+        // total vector n*b halved each round: n*b/2 * n msgs... verify
+        // per-rank sent volume: b*(n-1) as in the lower bound.
+        let n = 8;
+        let b = 16.0;
+        let rounds = expand(CollectiveKind::ReduceScatter, n, b);
+        assert_eq!(rounds.len(), 3);
+        let per_rank: f64 = rounds.iter().map(|r| r[0].bytes).sum();
+        assert_eq!(per_rank, b * (n as f64 - 1.0)); // 64+32+16 = 112 = 16*7
+    }
+
+    #[test]
+    fn alltoall_covers_all_pairs() {
+        for n in [4usize, 6, 8] {
+            let rounds = expand(CollectiveKind::Alltoall, n, 1.0);
+            let mut seen = std::collections::HashSet::new();
+            for r in &rounds {
+                for m in r {
+                    assert!(seen.insert((m.src, m.dst)), "dup pair {:?}", (m.src, m.dst));
+                }
+            }
+            assert_eq!(seen.len(), n * (n - 1));
+        }
+    }
+
+    #[test]
+    fn barrier_rounds_logarithmic() {
+        assert_eq!(expand(CollectiveKind::Barrier, 8, 0.0).len(), 3);
+        assert_eq!(expand(CollectiveKind::Barrier, 9, 0.0).len(), 4);
+    }
+
+    #[test]
+    fn gather_volume_matches_subtree_sizes() {
+        // Each binomial edge carries the receiver-side subtree's blocks, so
+        // total traffic = sum of subtree sizes (>= the n-1 lower bound).
+        for n in [4usize, 7, 16] {
+            let want: f64 = (1..n).map(|v| subtree_size(v, n) as f64 * 10.0).sum();
+            let got = total(CollectiveKind::Gather { root: 0 }, n, 10.0);
+            assert_eq!(got, want, "n={n}");
+            assert!(got >= 10.0 * (n as f64 - 1.0));
+        }
+    }
+
+    #[test]
+    fn scatter_volume_equals_gather() {
+        for n in [4usize, 7, 16] {
+            assert_eq!(
+                total(CollectiveKind::Scatter { root: 0 }, n, 10.0),
+                total(CollectiveKind::Gather { root: 0 }, n, 10.0)
+            );
+        }
+    }
+
+    #[test]
+    fn single_rank_collectives_are_empty() {
+        for kind in [
+            CollectiveKind::Bcast { root: 0 },
+            CollectiveKind::Allreduce,
+            CollectiveKind::Alltoall,
+        ] {
+            assert!(expand(kind, 1, 10.0).is_empty());
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! MPI communicators and rank translation.
+//!
+//! The paper's profiling tool "records traffic through communicators other
+//! than the default one [by transforming] the rank of a process in a
+//! communicator other than MPI_COMM_WORLD to the rank in MPI_COMM_WORLD".
+//! This module is that translation layer.
+
+/// A communicator: an ordered subset of world ranks. Local rank `i` maps
+/// to `world_ranks[i]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Communicator {
+    world_ranks: Vec<usize>,
+}
+
+impl Communicator {
+    /// `MPI_COMM_WORLD` over `n` ranks.
+    pub fn world(n: usize) -> Self {
+        Communicator {
+            world_ranks: (0..n).collect(),
+        }
+    }
+
+    /// Sub-communicator from an explicit world-rank list.
+    pub fn from_ranks(world_ranks: Vec<usize>) -> Self {
+        debug_assert!(
+            {
+                let mut s = world_ranks.clone();
+                s.sort_unstable();
+                s.dedup();
+                s.len() == world_ranks.len()
+            },
+            "duplicate world ranks in communicator"
+        );
+        Communicator { world_ranks }
+    }
+
+    /// `MPI_Comm_split`-style: members of `world` whose `color(rank)`
+    /// matches, ordered by world rank (key = rank).
+    pub fn split(n_world: usize, color: impl Fn(usize) -> bool) -> Self {
+        Communicator {
+            world_ranks: (0..n_world).filter(|&r| color(r)).collect(),
+        }
+    }
+
+    /// Communicator size.
+    pub fn size(&self) -> usize {
+        self.world_ranks.len()
+    }
+
+    /// True if no members.
+    pub fn is_empty(&self) -> bool {
+        self.world_ranks.is_empty()
+    }
+
+    /// Translate a communicator-local rank to its world rank
+    /// (`R_comm_world` in the paper).
+    #[inline]
+    pub fn to_world(&self, local: usize) -> usize {
+        self.world_ranks[local]
+    }
+
+    /// Member world ranks.
+    pub fn ranks(&self) -> &[usize] {
+        &self.world_ranks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_identity() {
+        let c = Communicator::world(8);
+        for i in 0..8 {
+            assert_eq!(c.to_world(i), i);
+        }
+    }
+
+    #[test]
+    fn split_even_ranks() {
+        let c = Communicator::split(10, |r| r % 2 == 0);
+        assert_eq!(c.size(), 5);
+        assert_eq!(c.to_world(0), 0);
+        assert_eq!(c.to_world(4), 8);
+    }
+
+    #[test]
+    fn from_ranks_preserves_order() {
+        let c = Communicator::from_ranks(vec![7, 3, 5]);
+        assert_eq!(c.to_world(0), 7);
+        assert_eq!(c.to_world(1), 3);
+        assert_eq!(c.to_world(2), 5);
+    }
+}

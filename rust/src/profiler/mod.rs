@@ -1,0 +1,115 @@
+//! The MPI profiling tool (Section 3 of the paper).
+//!
+//! A library that "intercepts all calls to MPI primitives that initiate
+//! traffic — point-to-point, collective, and one-sided" and emits the
+//! `G_v` / `G_m` communication graphs plus a traffic heatmap. Our
+//! applications are simulated schedules ([`crate::apps::MpiApp`]), so the
+//! interposition point is the op stream rather than a PMPI shim; the
+//! accounting — collective algorithm emulation, sub-communicator rank
+//! translation, symmetric byte/message counting — is the same.
+
+pub mod collectives;
+pub mod communicator;
+
+pub use collectives::{expand, schedule_bytes, CollectiveKind, Msg, Round};
+pub use communicator::Communicator;
+
+use crate::apps::{MpiApp, MpiOp};
+use crate::commgraph::CommProfile;
+
+/// Run the profiler over an application's op stream, producing its
+/// communication profile (`G_v`, `G_m`).
+pub fn profile_app(app: &dyn MpiApp) -> CommProfile {
+    let mut profile = CommProfile::new(app.num_ranks());
+    for op in app.ops() {
+        record_op(&mut profile, &op);
+    }
+    profile
+}
+
+/// Account a single MPI operation into the profile.
+pub fn record_op(profile: &mut CommProfile, op: &MpiOp) {
+    match op {
+        MpiOp::Compute { .. } => {}
+        MpiOp::PointToPoint { msgs } => {
+            for m in msgs {
+                profile.record(m.src, m.dst, m.bytes);
+            }
+        }
+        MpiOp::Collective { comm, kind, bytes } => {
+            for round in expand(*kind, comm.size(), *bytes) {
+                for m in round {
+                    // translate communicator-local ranks to world ranks
+                    profile.record(comm.to_world(m.src), comm.to_world(m.dst), m.bytes);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{MpiApp, MpiOp};
+
+    struct TinyApp;
+    impl MpiApp for TinyApp {
+        fn name(&self) -> &str {
+            "tiny"
+        }
+        fn num_ranks(&self) -> usize {
+            4
+        }
+        fn ops(&self) -> Vec<MpiOp> {
+            vec![
+                MpiOp::PointToPoint {
+                    msgs: vec![Msg {
+                        src: 0,
+                        dst: 3,
+                        bytes: 100.0,
+                    }],
+                },
+                MpiOp::Collective {
+                    comm: Communicator::world(4),
+                    kind: CollectiveKind::Allreduce,
+                    bytes: 8.0,
+                },
+            ]
+        }
+    }
+
+    #[test]
+    fn profile_counts_p2p_and_collective() {
+        let p = profile_app(&TinyApp);
+        // recursive doubling on 4 ranks: rounds {0<->1, 2<->3} then
+        // {0<->2, 1<->3}; rank pair (0,3) never exchanges in RD.
+        assert_eq!(p.volume.get(0, 3), 100.0); // p2p only
+        assert!(p.volume.is_symmetric());
+        assert!(p.messages.is_symmetric());
+        assert_eq!(p.volume.get(0, 1), 16.0); // both directions of round 0
+        assert_eq!(p.volume.get(0, 2), 16.0); // both directions of round 1
+    }
+
+    #[test]
+    fn subcommunicator_traffic_lands_on_world_ranks() {
+        let mut profile = CommProfile::new(8);
+        let odd = Communicator::split(8, |r| r % 2 == 1); // world 1,3,5,7
+        record_op(
+            &mut profile,
+            &MpiOp::Collective {
+                comm: odd,
+                kind: CollectiveKind::Bcast { root: 0 },
+                bytes: 10.0,
+            },
+        );
+        // traffic only between odd world ranks
+        for i in 0..8 {
+            for j in 0..8 {
+                if profile.volume.get(i, j) > 0.0 {
+                    assert!(i % 2 == 1 && j % 2 == 1, "({i},{j})");
+                }
+            }
+        }
+        assert!(profile.volume.total() > 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! build environment; this provides the same warmup + multi-sample
+//! median/mean discipline with zero dependencies).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark id.
+    pub name: String,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Mean per-iteration time.
+    pub mean: Duration,
+    /// Min / max per-iteration time.
+    pub min: Duration,
+    /// Max sample.
+    pub max: Duration,
+    /// Samples collected.
+    pub samples: usize,
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} median {:>12?}  mean {:>12?}  min {:>12?}  max {:>12?}  ({} samples)",
+            self.name, self.median, self.mean, self.min, self.max, self.samples
+        )
+    }
+}
+
+/// Run `f` with warmup then timed samples; prints and returns the stats.
+///
+/// `samples` individual timings of one call each; use closures that do a
+/// meaningful unit of work. Results are printed immediately so a crashed
+/// bench still reports earlier rows.
+pub fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> Measurement {
+    // warmup: 2 calls or 200 ms, whichever first
+    let warm_start = Instant::now();
+    for _ in 0..2 {
+        std::hint::black_box(f());
+        if warm_start.elapsed() > Duration::from_millis(200) {
+            break;
+        }
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let m = Measurement {
+        name: name.to_string(),
+        median,
+        mean,
+        min: times[0],
+        max: *times.last().unwrap(),
+        samples: times.len(),
+    };
+    println!("{m}");
+    m
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let m = bench("noop", 5, || 1 + 1);
+        assert_eq!(m.samples, 5);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+}

@@ -1,0 +1,303 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the L2 mapping-cost model (which wraps the L1
+//! Pallas kernel) to HLO *text*; this module loads the text with the `xla`
+//! crate, compiles it once on the PJRT CPU client, and exposes a batched
+//! mapping-cost evaluator to the placement hot path. Python never runs at
+//! request time.
+
+use std::path::{Path, PathBuf};
+
+use crate::commgraph::CommMatrix;
+use crate::error::{Error, Result};
+use crate::topology::DistanceMatrix;
+
+/// Shape bucket the artifacts were lowered at (kept in sync with
+/// `python/compile/model.py`; validated against the manifest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactShapes {
+    /// Max ranks per job.
+    pub n_pad: usize,
+    /// Max platform nodes.
+    pub m_pad: usize,
+    /// Candidates scored per executable call.
+    pub k_batch: usize,
+}
+
+impl Default for ArtifactShapes {
+    fn default() -> Self {
+        ArtifactShapes {
+            n_pad: 256,
+            m_pad: 512,
+            k_batch: 32,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Manifest {
+    n_pad: usize,
+    m_pad: usize,
+    k_batch: usize,
+    mapping_cost: String,
+}
+
+/// Minimal parser for the fixed-schema manifest JSON emitted by
+/// `python/compile/aot.py` (avoids a serde dependency in the offline
+/// build environment). Tolerates whitespace and key order.
+fn parse_manifest(text: &str) -> Result<Manifest> {
+    fn grab_usize(text: &str, key: &str) -> Result<usize> {
+        let pat = format!("\"{key}\"");
+        let at = text
+            .find(&pat)
+            .ok_or_else(|| Error::Runtime(format!("manifest missing {key}")))?;
+        let rest = &text[at + pat.len()..];
+        let rest = rest.trim_start().strip_prefix(':').ok_or_else(|| {
+            Error::Runtime(format!("manifest: no value for {key}"))
+        })?;
+        let digits: String = rest
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        digits
+            .parse()
+            .map_err(|_| Error::Runtime(format!("manifest: bad value for {key}")))
+    }
+    fn grab_string(text: &str, key: &str) -> Result<String> {
+        let pat = format!("\"{key}\"");
+        let at = text
+            .find(&pat)
+            .ok_or_else(|| Error::Runtime(format!("manifest missing {key}")))?;
+        let rest = &text[at + pat.len()..];
+        let rest = rest.trim_start().strip_prefix(':').ok_or_else(|| {
+            Error::Runtime(format!("manifest: no value for {key}"))
+        })?;
+        let rest = rest.trim_start().strip_prefix('\"').ok_or_else(|| {
+            Error::Runtime(format!("manifest: {key} is not a string"))
+        })?;
+        let end = rest
+            .find('\"')
+            .ok_or_else(|| Error::Runtime(format!("manifest: unterminated {key}")))?;
+        Ok(rest[..end].to_string())
+    }
+    Ok(Manifest {
+        n_pad: grab_usize(text, "n_pad")?,
+        m_pad: grab_usize(text, "m_pad")?,
+        k_batch: grab_usize(text, "k_batch")?,
+        mapping_cost: grab_string(text, "mapping_cost")?,
+    })
+}
+
+fn xerr(e: impl std::fmt::Display) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// Batched mapping-cost evaluator backed by the PJRT CPU client.
+///
+/// Reuses padded staging buffers across calls; the only per-call
+/// allocations are inside the XLA runtime.
+pub struct CostEvaluator {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    shapes: ArtifactShapes,
+    // staging
+    c_buf: Vec<f32>,
+    d_buf: Vec<f32>,
+    p_buf: Vec<i32>,
+}
+
+impl CostEvaluator {
+    /// Load from an artifacts directory (expects `model.manifest.json`
+    /// and `model.hlo.txt` as produced by `make artifacts`).
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest_path = artifacts_dir.join("model.manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "missing {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = parse_manifest(&text)?;
+        let shapes = ArtifactShapes {
+            n_pad: manifest.n_pad,
+            m_pad: manifest.m_pad,
+            k_batch: manifest.k_batch,
+        };
+        Self::load_hlo(&artifacts_dir.join(&manifest.mapping_cost), shapes)
+    }
+
+    /// Load a specific HLO text file with explicit shapes.
+    pub fn load_hlo(hlo_path: &Path, shapes: ArtifactShapes) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(xerr)?;
+        Ok(CostEvaluator {
+            client,
+            exe,
+            shapes,
+            c_buf: vec![0.0; shapes.n_pad * shapes.n_pad],
+            d_buf: vec![0.0; shapes.m_pad * shapes.m_pad],
+            p_buf: vec![0; shapes.k_batch * shapes.n_pad],
+        })
+    }
+
+    /// The artifact's shape bucket.
+    pub fn shapes(&self) -> ArtifactShapes {
+        self.shapes
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Score a batch of candidate assignments:
+    /// `costs[k] = 1/2 sum_ij C[i,j] * D[cand_k[i], cand_k[j]]`.
+    ///
+    /// `comm` is NxN with N <= n_pad, `dist` MxM with M <= m_pad; any
+    /// number of candidates (chunked internally by `k_batch`).
+    pub fn batch_costs(
+        &mut self,
+        comm: &CommMatrix,
+        dist: &DistanceMatrix,
+        candidates: &[Vec<usize>],
+    ) -> Result<Vec<f64>> {
+        let n = comm.len();
+        let m = dist.len();
+        let sh = self.shapes;
+        if n > sh.n_pad {
+            return Err(Error::Runtime(format!(
+                "{n} ranks exceed artifact n_pad {}",
+                sh.n_pad
+            )));
+        }
+        if m > sh.m_pad {
+            return Err(Error::Runtime(format!(
+                "{m} nodes exceed artifact m_pad {}",
+                sh.m_pad
+            )));
+        }
+        // stage C (zero-pad)
+        self.c_buf.fill(0.0);
+        for i in 0..n {
+            let row = comm.row(i);
+            for j in 0..n {
+                self.c_buf[i * sh.n_pad + j] = row[j] as f32;
+            }
+        }
+        // stage D
+        self.d_buf.fill(0.0);
+        for u in 0..m {
+            let row = dist.row(u);
+            self.d_buf[u * sh.m_pad..u * sh.m_pad + m].copy_from_slice(row);
+        }
+        let c_lit = xla::Literal::vec1(&self.c_buf)
+            .reshape(&[sh.n_pad as i64, sh.n_pad as i64])
+            .map_err(xerr)?;
+        let d_lit = xla::Literal::vec1(&self.d_buf)
+            .reshape(&[sh.m_pad as i64, sh.m_pad as i64])
+            .map_err(xerr)?;
+
+        let mut out = Vec::with_capacity(candidates.len());
+        for chunk in candidates.chunks(sh.k_batch) {
+            self.p_buf.fill(0);
+            for (k, cand) in chunk.iter().enumerate() {
+                debug_assert_eq!(cand.len(), n);
+                for (i, &node) in cand.iter().enumerate() {
+                    self.p_buf[k * sh.n_pad + i] = node as i32;
+                }
+            }
+            let p_lit = xla::Literal::vec1(&self.p_buf)
+                .reshape(&[sh.k_batch as i64, sh.n_pad as i64])
+                .map_err(xerr)?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[c_lit.clone(), d_lit.clone(), p_lit])
+                .map_err(xerr)?[0][0]
+                .to_literal_sync()
+                .map_err(xerr)?;
+            let tuple = result.to_tuple1().map_err(xerr)?;
+            let costs: Vec<f32> = tuple.to_vec().map_err(xerr)?;
+            out.extend(costs[..chunk.len()].iter().map(|&c| c as f64));
+        }
+        Ok(out)
+    }
+}
+
+/// Locate the artifacts directory: `$TOFA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("TOFA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::cost::hop_bytes_cost;
+    use crate::rng::Rng;
+    use crate::topology::{Torus, TorusDims};
+
+    fn artifacts_available() -> Option<PathBuf> {
+        let dir = default_artifacts_dir();
+        dir.join("model.manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn pjrt_costs_match_rust_reference() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut eval = CostEvaluator::load(&dir).unwrap();
+        let torus = Torus::new(TorusDims::new(8, 8, 8));
+        let dist = DistanceMatrix::from_torus_hops(&torus);
+        let mut comm = CommMatrix::new(24);
+        let mut rng = Rng::new(7);
+        for _ in 0..60 {
+            let i = rng.below_usize(24);
+            let j = rng.below_usize(24);
+            if i != j {
+                comm.add_sym(i, j, (rng.below(1000) + 1) as f64);
+            }
+        }
+        let candidates: Vec<Vec<usize>> =
+            (0..5).map(|_| rng.sample_distinct(512, 24)).collect();
+        let got = eval.batch_costs(&comm, &dist, &candidates).unwrap();
+        for (k, cand) in candidates.iter().enumerate() {
+            let want = hop_bytes_cost(&comm, &dist, cand);
+            let rel = (got[k] - want).abs() / want.max(1.0);
+            assert!(rel < 1e-4, "cand {k}: pjrt {} vs rust {want}", got[k]);
+        }
+    }
+
+    #[test]
+    fn chunking_handles_more_than_k_batch() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut eval = CostEvaluator::load(&dir).unwrap();
+        let kb = eval.shapes().k_batch;
+        let torus = Torus::new(TorusDims::new(4, 4, 4));
+        let dist = DistanceMatrix::from_torus_hops(&torus);
+        let mut comm = CommMatrix::new(8);
+        comm.add_sym(0, 7, 100.0);
+        let mut rng = Rng::new(3);
+        let candidates: Vec<Vec<usize>> =
+            (0..kb + 3).map(|_| rng.sample_distinct(64, 8)).collect();
+        let got = eval.batch_costs(&comm, &dist, &candidates).unwrap();
+        assert_eq!(got.len(), kb + 3);
+        for (k, cand) in candidates.iter().enumerate() {
+            let want = hop_bytes_cost(&comm, &dist, cand);
+            assert!((got[k] - want).abs() / want.max(1.0) < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! Whole-job simulation with phase memoization.
+//!
+//! Phases in the proxied applications repeat across timesteps with
+//! identical flow sets, so the executor memoizes comm-phase durations by a
+//! content hash of `(node src, node dst, bytes)` triples. This turns the
+//! O(timesteps) simulation into O(distinct phases) network solves — the
+//! key performance lever for the 2000-instance batch experiments
+//! (EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+
+use crate::apps::{Metric, MpiApp, MpiOp};
+use crate::profiler::Msg;
+use crate::sim::network::NetSim;
+use crate::sim::smpi::{flows_for_phase, phases_of, Phase};
+use crate::topology::Platform;
+
+/// Result of simulating one job instance.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobOutcome {
+    /// The job ran to completion in `seconds` of simulated time.
+    Completed { seconds: f64 },
+    /// The job aborted at `at` seconds (a transmission crossed a down
+    /// node, or a rank was placed on one).
+    Aborted { at: f64 },
+}
+
+impl JobOutcome {
+    /// Completed duration, if any.
+    pub fn seconds(&self) -> Option<f64> {
+        match self {
+            JobOutcome::Completed { seconds } => Some(*seconds),
+            JobOutcome::Aborted { .. } => None,
+        }
+    }
+
+    /// True if aborted.
+    pub fn is_abort(&self) -> bool {
+        matches!(self, JobOutcome::Aborted { .. })
+    }
+}
+
+/// Simulation statistics (phase cache effectiveness, event counts).
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Comm phases encountered.
+    pub comm_phases: u64,
+    /// Comm phases served from the memo cache.
+    pub cache_hits: u64,
+    /// Network solves performed.
+    pub solves: u64,
+}
+
+/// Reusable simulator for (platform, app schedule) pairs.
+///
+/// Construct once per experiment and call [`Simulator::run`] per
+/// (placement, down-set) instance; the phase cache persists across runs
+/// keyed by node-level flow content, so identical placements replay in
+/// microseconds.
+pub struct Simulator {
+    platform: Platform,
+    phases: Vec<Phase>,
+    metric: Metric,
+    timesteps: usize,
+    net: NetSim,
+    cache: HashMap<u64, f64>,
+    stats: SimStats,
+    route_buf: Vec<crate::topology::Link>,
+}
+
+impl Simulator {
+    /// Build a simulator for an app on a platform.
+    pub fn new(app: &dyn MpiApp, platform: &Platform) -> Self {
+        let ops: Vec<MpiOp> = app.ops();
+        Simulator {
+            platform: platform.clone(),
+            phases: phases_of(&ops),
+            metric: app.metric(),
+            timesteps: app.timesteps(),
+            net: NetSim::new(platform.torus(), platform.bandwidth, platform.latency),
+            cache: HashMap::new(),
+            stats: SimStats::default(),
+            route_buf: Vec::new(),
+        }
+    }
+
+    /// Simulate the job under `assignment` with `down` node states.
+    pub fn run(&mut self, assignment: &[usize], down: &[bool]) -> JobOutcome {
+        // rank on a down node: immediate launch failure
+        if assignment.iter().any(|&n| down[n]) {
+            return JobOutcome::Aborted { at: 0.0 };
+        }
+        let mut t = 0.0f64;
+        for phase in &self.phases {
+            match phase {
+                Phase::Compute { flops } => {
+                    t += flops / self.platform.flops;
+                }
+                Phase::Comm { msgs } => {
+                    self.stats.comm_phases += 1;
+                    let key = phase_key(msgs, assignment, down);
+                    if let Some(&d) = self.cache.get(&key) {
+                        self.stats.cache_hits += 1;
+                        if d.is_nan() {
+                            return JobOutcome::Aborted { at: t };
+                        }
+                        t += d;
+                        continue;
+                    }
+                    let flows = flows_for_phase(
+                        self.platform.torus(),
+                        &self.net,
+                        assignment,
+                        down,
+                        msgs,
+                        &mut self.route_buf,
+                    );
+                    match flows {
+                        None => {
+                            self.cache.insert(key, f64::NAN);
+                            return JobOutcome::Aborted { at: t };
+                        }
+                        Some(flows) => {
+                            self.stats.solves += 1;
+                            let d = self.net.phase_duration(&flows);
+                            self.cache.insert(key, d);
+                            t += d;
+                        }
+                    }
+                }
+            }
+        }
+        JobOutcome::Completed { seconds: t }
+    }
+
+    /// Completion time with no failures (used for restart accounting).
+    pub fn success_time(&mut self, assignment: &[usize]) -> f64 {
+        let down = vec![false; self.platform.num_nodes()];
+        match self.run(assignment, &down) {
+            JobOutcome::Completed { seconds } => seconds,
+            JobOutcome::Aborted { .. } => unreachable!("no faults, no abort"),
+        }
+    }
+
+    /// The application's report metric for a fault-free run.
+    pub fn metric_value(&mut self, assignment: &[usize]) -> f64 {
+        let secs = self.success_time(assignment);
+        match self.metric {
+            Metric::CompletionTime => secs,
+            Metric::TimestepsPerSec => self.timesteps as f64 / secs,
+        }
+    }
+
+    /// Cache/solve statistics.
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+}
+
+/// Precomputed per-(app, placement) job profile: fault-free duration plus
+/// the set of nodes any transmission touches (endpoints and transit hops).
+///
+/// The key observation (matching the SimGrid fault model): a down node
+/// either *aborts* the job — iff it hosts a rank or lies on some flow's
+/// route — or has **no effect at all** on timing, because links keep their
+/// capacity and routes are static. So once `touched` is known, an instance
+/// is resolved with one intersection test instead of a full re-simulation.
+#[derive(Debug, Clone)]
+pub struct JobProfile {
+    /// Fault-free completion time.
+    pub success_s: f64,
+    /// `touched[node]` = some rank lives there or some route crosses it.
+    pub touched: Vec<bool>,
+}
+
+impl JobProfile {
+    /// Resolve one instance against a down-state vector.
+    pub fn outcome(&self, down: &[bool]) -> JobOutcome {
+        debug_assert_eq!(down.len(), self.touched.len());
+        for (n, (&d, &t)) in down.iter().zip(&self.touched).enumerate() {
+            if d && t {
+                let _ = n;
+                return JobOutcome::Aborted { at: 0.0 };
+            }
+        }
+        JobOutcome::Completed {
+            seconds: self.success_s,
+        }
+    }
+}
+
+impl Simulator {
+    /// Build the [`JobProfile`] for an assignment: one fault-free
+    /// simulation plus a sweep over every phase's routes to collect the
+    /// touched-node set.
+    pub fn prepare(&mut self, assignment: &[usize]) -> JobProfile {
+        let num_nodes = self.platform.num_nodes();
+        let mut touched = vec![false; num_nodes];
+        for &n in assignment {
+            touched[n] = true;
+        }
+        let torus = self.platform.torus().clone();
+        for phase in &self.phases {
+            if let Phase::Comm { msgs } = phase {
+                for m in msgs {
+                    let (u, v) = (assignment[m.src], assignment[m.dst]);
+                    if u == v {
+                        continue;
+                    }
+                    torus.route_into(u, v, &mut self.route_buf);
+                    for l in &self.route_buf {
+                        touched[l.src] = true;
+                        touched[l.dst] = true;
+                    }
+                }
+            }
+        }
+        JobProfile {
+            success_s: self.success_time(assignment),
+            touched,
+        }
+    }
+}
+
+/// FNV-1a hash over node-level flow content (placement + down set fully
+/// determine a comm phase's duration).
+fn phase_key(msgs: &[Msg], assignment: &[usize], down: &[bool]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut feed = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for m in msgs {
+        feed(assignment[m.src] as u64);
+        feed(assignment[m.dst] as u64);
+        feed(m.bytes.to_bits());
+    }
+    // down-state of involved nodes matters (transit nodes too, but those
+    // are a function of endpoints; hashing the full down set is cheap and
+    // safe)
+    for (i, &d) in down.iter().enumerate() {
+        if d {
+            feed(0x8000_0000_0000_0000 | i as u64);
+        }
+    }
+    h
+}
+
+/// One-shot convenience: simulate `app` on `platform` under `assignment`,
+/// with `down_nodes` (node ids) in the failed state.
+pub fn simulate_job(
+    app: &dyn MpiApp,
+    platform: &Platform,
+    assignment: &[usize],
+    down_nodes: &[usize],
+) -> JobOutcome {
+    let mut down = vec![false; platform.num_nodes()];
+    for &n in down_nodes {
+        down[n] = true;
+    }
+    Simulator::new(app, platform).run(assignment, &down)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::lammps_proxy::LammpsProxy;
+    use crate::apps::npb_dt::NpbDt;
+    use crate::apps::ring::RingApp;
+    use crate::mapping::baselines::block_placement;
+    use crate::topology::TorusDims;
+
+    #[test]
+    fn ring_completes_with_positive_time() {
+        let app = RingApp::new(8, 1e6, 5);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(8, 16).unwrap();
+        let out = simulate_job(&app, &plat, &p.assignment, &[]);
+        let secs = out.seconds().unwrap();
+        assert!(secs > 0.0 && secs.is_finite());
+    }
+
+    #[test]
+    fn compact_placement_beats_spread_on_ring() {
+        let app = RingApp::new(8, 1e7, 5);
+        let plat = Platform::paper_default(TorusDims::new(8, 8, 1));
+        let compact: Vec<usize> = (0..8).collect();
+        // stride-3 in x: successive ring neighbours are >= 3 hops apart
+        let spread: Vec<usize> = (0..8).map(|i| i * 3).collect();
+        let tc = simulate_job(&app, &plat, &compact, &[])
+            .seconds()
+            .unwrap();
+        let ts = simulate_job(&app, &plat, &spread, &[]).seconds().unwrap();
+        assert!(tc < ts, "compact {tc} vs spread {ts}");
+    }
+
+    #[test]
+    fn rank_on_down_node_aborts_immediately() {
+        let app = RingApp::new(4, 1e6, 2);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(4, 16).unwrap();
+        let out = simulate_job(&app, &plat, &p.assignment, &[2]);
+        assert_eq!(out, JobOutcome::Aborted { at: 0.0 });
+    }
+
+    #[test]
+    fn transit_down_node_aborts_later() {
+        let app = RingApp::new(2, 1e6, 1);
+        let plat = Platform::paper_default(TorusDims::new(8, 1, 1));
+        // ranks on nodes 0 and 2; node 1 down is transit
+        let out = simulate_job(&app, &plat, &[0, 2], &[1]);
+        assert!(out.is_abort());
+    }
+
+    #[test]
+    fn unrelated_down_node_harmless() {
+        let app = RingApp::new(4, 1e6, 2);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(4, 16).unwrap();
+        // node 15 is far from nodes 0..3 ring routes
+        let out = simulate_job(&app, &plat, &p.assignment, &[10]);
+        assert!(!out.is_abort());
+    }
+
+    #[test]
+    fn cache_hits_dominate_on_repeated_timesteps() {
+        let app = RingApp::new(8, 1e6, 50);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(8, 16).unwrap();
+        let mut sim = Simulator::new(&app, &plat);
+        let down = vec![false; 16];
+        sim.run(&p.assignment, &down);
+        let s = sim.stats();
+        assert!(s.cache_hits > s.solves, "hits {} solves {}", s.cache_hits, s.solves);
+    }
+
+    #[test]
+    fn lammps_timesteps_metric() {
+        let app = LammpsProxy::tiny(8, 4);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(8, 16).unwrap();
+        let mut sim = Simulator::new(&app, &plat);
+        let v = sim.metric_value(&p.assignment);
+        assert!(v > 0.0, "timesteps/s = {v}");
+    }
+
+    #[test]
+    fn npb_dt_small_completes() {
+        let app = NpbDt::new(
+            crate::apps::npb_dt::DtGraph::BlackHole,
+            crate::apps::npb_dt::DtClass::S,
+            2,
+        );
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(app.num_ranks(), 16).unwrap();
+        let out = simulate_job(&app, &plat, &p.assignment, &[]);
+        assert!(out.seconds().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_simulation() {
+        let app = LammpsProxy::tiny(8, 3);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(8, 16).unwrap();
+        let a = simulate_job(&app, &plat, &p.assignment, &[]);
+        let b = simulate_job(&app, &plat, &p.assignment, &[]);
+        assert_eq!(a, b);
+    }
+}

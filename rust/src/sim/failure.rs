@@ -1,0 +1,113 @@
+//! Failure scenario sampling (Section 5.2 of the paper).
+//!
+//! Per batch, a set `N_f` of nodes gets a fixed outage probability `p_f`;
+//! per job instance ("scenario"), each node of `N_f` is independently
+//! emulated as *down* with probability `p_f`. A down node cannot compute
+//! or forward traffic (its links get zero capacity in SimGrid terms).
+
+use crate::rng::Rng;
+
+/// The per-batch fault configuration.
+#[derive(Debug, Clone)]
+pub struct FaultScenario {
+    /// Node ids with non-zero outage probability (`N_f`).
+    pub faulty_nodes: Vec<usize>,
+    /// The shared outage probability (`p_f`).
+    pub p_f: f64,
+    /// Platform size.
+    pub num_nodes: usize,
+}
+
+impl FaultScenario {
+    /// No faults.
+    pub fn none(num_nodes: usize) -> Self {
+        FaultScenario {
+            faulty_nodes: Vec::new(),
+            p_f: 0.0,
+            num_nodes,
+        }
+    }
+
+    /// Randomly select `n_f` faulty nodes with probability `p_f` each.
+    pub fn random(num_nodes: usize, n_f: usize, p_f: f64, rng: &mut Rng) -> Self {
+        FaultScenario {
+            faulty_nodes: rng.sample_distinct(num_nodes, n_f),
+            p_f,
+            num_nodes,
+        }
+    }
+
+    /// The true per-node outage probability vector (what heartbeat
+    /// estimation tries to recover).
+    pub fn true_outage(&self) -> Vec<f64> {
+        let mut p = vec![0.0; self.num_nodes];
+        for &n in &self.faulty_nodes {
+            p[n] = self.p_f;
+        }
+        p
+    }
+}
+
+/// Sample the down-state for one job instance: each faulty node is down
+/// with probability `p_f`, independently.
+pub fn sample_down_nodes(scenario: &FaultScenario, rng: &mut Rng) -> Vec<bool> {
+    let mut down = vec![false; scenario.num_nodes];
+    for &n in &scenario.faulty_nodes {
+        if rng.bernoulli(scenario.p_f) {
+            down[n] = true;
+        }
+    }
+    down
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_has_no_down_nodes() {
+        let s = FaultScenario::none(16);
+        let mut rng = Rng::new(0);
+        assert!(sample_down_nodes(&s, &mut rng).iter().all(|&d| !d));
+    }
+
+    #[test]
+    fn down_rate_matches_p_f() {
+        let mut rng = Rng::new(1);
+        let s = FaultScenario::random(512, 16, 0.02, &mut rng);
+        assert_eq!(s.faulty_nodes.len(), 16);
+        let mut downs = 0usize;
+        let trials = 10_000;
+        for _ in 0..trials {
+            downs += sample_down_nodes(&s, &mut rng)
+                .iter()
+                .filter(|&&d| d)
+                .count();
+        }
+        let rate = downs as f64 / (trials * 16) as f64;
+        assert!((rate - 0.02).abs() < 0.005, "rate={rate}");
+    }
+
+    #[test]
+    fn only_faulty_nodes_go_down() {
+        let mut rng = Rng::new(2);
+        let s = FaultScenario::random(64, 4, 1.0, &mut rng);
+        let down = sample_down_nodes(&s, &mut rng);
+        for (n, &d) in down.iter().enumerate() {
+            assert_eq!(d, s.faulty_nodes.contains(&n));
+        }
+    }
+
+    #[test]
+    fn true_outage_vector() {
+        let s = FaultScenario {
+            faulty_nodes: vec![3, 7],
+            p_f: 0.02,
+            num_nodes: 10,
+        };
+        let p = s.true_outage();
+        assert_eq!(p[3], 0.02);
+        assert_eq!(p[7], 0.02);
+        assert_eq!(p.iter().filter(|&&x| x > 0.0).count(), 2);
+    }
+}

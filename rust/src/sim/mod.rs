@@ -1,0 +1,22 @@
+//! SimGrid-lite: flow-level discrete-event simulation of MPI jobs.
+//!
+//! The paper evaluates TOFA inside SimGrid/SMPI: computation is charged at
+//! a fixed node speed, communication is simulated at flow level over a
+//! platform with static routes, and a failed node is emulated by zeroing
+//! the capacity of its links (which makes any transmission crossing it
+//! fail, aborting the MPI job). This module implements that model:
+//!
+//! * [`network`] — max-min fair bandwidth sharing over directed torus
+//!   links, event-driven within a phase;
+//! * [`smpi`] — translation of [`crate::apps::MpiOp`] schedules into
+//!   network flow phases under a placement;
+//! * [`executor`] — whole-job simulation with phase memoization;
+//! * [`failure`] — down-state sampling per scenario.
+
+pub mod executor;
+pub mod failure;
+pub mod network;
+pub mod smpi;
+
+pub use executor::{simulate_job, JobOutcome, SimStats};
+pub use failure::sample_down_nodes;

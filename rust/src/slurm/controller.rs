@@ -1,0 +1,217 @@
+//! slurmctld-lite: the controller.
+//!
+//! Owns the job queue, the plugin set, and the node daemons. The flow for
+//! one job mirrors the paper's Fig. 2: srun submits a request (optionally
+//! carrying the LoadMatrix comm graph); FANS combines the comm graph, the
+//! FATT routing/topology info, and the Fault-Aware-Slurmctld outage
+//! estimates to produce the task layout `T`; the job then executes (here:
+//! in the SimGrid-lite simulator, driven by [`crate::batch`]).
+
+use super::jobs::{JobRecord, JobRequest, JobState};
+use super::noded::NodeHandle;
+use super::plugins::fans::FansPlugin;
+use super::plugins::fatt::FattPlugin;
+use super::plugins::fault_ctld::FaultCtldPlugin;
+use super::plugins::node_state::NodeStatePlugin;
+use super::queue::JobQueue;
+use crate::error::Result;
+use crate::mapping::Placement;
+use crate::rng::Rng;
+use crate::slurm::heartbeat::OutagePolicy;
+use crate::topology::Platform;
+
+/// The controller: queue + plugins + (optionally) live node daemons.
+pub struct Controller {
+    platform: Platform,
+    queue: JobQueue,
+    fans: FansPlugin,
+    fatt: FattPlugin,
+    fault_ctld: FaultCtldPlugin,
+    nodes: Vec<NodeHandle>,
+    rng: Rng,
+    /// Injected estimates (offline mode); overrides heartbeat-derived ones.
+    offline_estimates: Option<Vec<f64>>,
+}
+
+impl Controller {
+    /// Build a controller for a platform (no node daemons yet).
+    pub fn new(platform: Platform, seed: u64) -> Self {
+        let n = platform.num_nodes();
+        let dims = platform.torus().dims();
+        Controller {
+            platform,
+            queue: JobQueue::new(),
+            fans: FansPlugin::default(),
+            fatt: FattPlugin::new(dims),
+            fault_ctld: FaultCtldPlugin::new(n, OutagePolicy::Empirical),
+            nodes: Vec::new(),
+            rng: Rng::new(seed),
+            offline_estimates: None,
+        }
+    }
+
+    /// Spawn one node daemon per platform node. `outage_p[i] > 0` makes
+    /// node `i`'s NodeState plugin flaky (ground-truth emulation).
+    pub fn spawn_node_daemons(&mut self, outage_p: &[f64], seed: u64) {
+        assert_eq!(outage_p.len(), self.platform.num_nodes());
+        self.nodes = outage_p
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let st = if p > 0.0 {
+                    NodeStatePlugin::flaky(p, seed ^ (i as u64).wrapping_mul(0x9E37))
+                } else {
+                    NodeStatePlugin::healthy()
+                };
+                super::noded::spawn(i, st, None)
+            })
+            .collect();
+    }
+
+    /// Run `rounds` of heartbeat collection against the live daemons.
+    pub fn collect_heartbeats(&mut self, rounds: usize) {
+        self.fault_ctld.collect(&self.nodes, rounds);
+    }
+
+    /// Shut down all node daemons.
+    pub fn shutdown_node_daemons(&mut self) {
+        for h in self.nodes.drain(..) {
+            h.shutdown();
+        }
+    }
+
+    /// Inject outage estimates directly (offline mode, used by the batch
+    /// driver when daemons are not spawned).
+    pub fn set_outage_estimates(&mut self, estimates: &[f64]) {
+        self.offline_estimates = Some(estimates.to_vec());
+    }
+
+    /// Current outage estimates (heartbeat-derived, or injected).
+    pub fn outage_estimates(&self) -> Vec<f64> {
+        if let Some(e) = &self.offline_estimates {
+            e.clone()
+        } else {
+            self.fault_ctld.outage_estimates()
+        }
+    }
+
+    /// Submit a job.
+    pub fn submit(&mut self, request: JobRequest) -> u64 {
+        self.queue.submit(request)
+    }
+
+    /// Allocate nodes for the next pending job; returns the record with
+    /// its assignment filled in (state = Running).
+    pub fn schedule_next(&mut self) -> Option<Result<JobRecord>> {
+        let mut record = self.queue.next()?;
+        let outage = self.outage_estimates();
+        let comm = match &record.request.comm_graph {
+            Some(c) => c.clone(),
+            None => crate::commgraph::CommMatrix::new(record.request.ranks),
+        };
+        let placement: Result<Placement> = self.fans.select(
+            record.request.distribution,
+            &comm,
+            &self.platform,
+            &outage,
+            &mut self.rng,
+        );
+        Some(placement.map(|p| {
+            record.assignment = Some(p.assignment);
+            record.state = JobState::Running;
+            record
+        }))
+    }
+
+    /// Mark a job finished.
+    pub fn complete(&mut self, record: JobRecord, state: JobState) {
+        self.queue.finish(record, state);
+    }
+
+    /// Finished job records.
+    pub fn finished(&self) -> &[JobRecord] {
+        self.queue.finished()
+    }
+
+    /// The FATT plugin (routing oracle).
+    pub fn fatt(&self) -> &FattPlugin {
+        &self.fatt
+    }
+
+    /// The platform.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{lammps_proxy::LammpsProxy, MpiApp};
+    use crate::mapping::PlacementPolicy;
+    use crate::profiler::profile_app;
+    use crate::topology::TorusDims;
+
+    fn request(ranks: usize, dist: PlacementPolicy) -> JobRequest {
+        let app = LammpsProxy::tiny(ranks, 2);
+        JobRequest {
+            name: "lammps".into(),
+            ranks,
+            distribution: dist,
+            comm_graph: Some(profile_app(&app).volume),
+        }
+    }
+
+    #[test]
+    fn end_to_end_heartbeats_inform_tofa() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut ctl = Controller::new(plat, 1);
+        let mut truth = vec![0.0; 64];
+        truth[0] = 0.8; // very flaky first node
+        truth[1] = 0.8;
+        ctl.spawn_node_daemons(&truth, 99);
+        ctl.collect_heartbeats(40);
+        let est = ctl.outage_estimates();
+        assert!(est[0] > 0.3, "est[0]={}", est[0]);
+        assert_eq!(est[5], 0.0);
+
+        ctl.submit(request(8, PlacementPolicy::Tofa));
+        let rec = ctl.schedule_next().unwrap().unwrap();
+        let assign = rec.assignment.unwrap();
+        assert!(!assign.contains(&0), "TOFA used flaky node 0");
+        assert!(!assign.contains(&1), "TOFA used flaky node 1");
+        ctl.shutdown_node_daemons();
+    }
+
+    #[test]
+    fn offline_estimates_drive_selection() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut ctl = Controller::new(plat, 2);
+        let mut est = vec![0.0; 64];
+        est[3] = 0.5;
+        ctl.set_outage_estimates(&est);
+        ctl.submit(request(8, PlacementPolicy::Tofa));
+        let rec = ctl.schedule_next().unwrap().unwrap();
+        assert!(!rec.assignment.unwrap().contains(&3));
+    }
+
+    #[test]
+    fn default_distribution_is_block() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut ctl = Controller::new(plat, 3);
+        ctl.submit(request(6, PlacementPolicy::DefaultSlurm));
+        let rec = ctl.schedule_next().unwrap().unwrap();
+        assert_eq!(rec.assignment.unwrap(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn queue_drains_in_order() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut ctl = Controller::new(plat, 4);
+        let a = ctl.submit(request(4, PlacementPolicy::Random));
+        let b = ctl.submit(request(4, PlacementPolicy::Random));
+        assert_eq!(ctl.schedule_next().unwrap().unwrap().id, a);
+        assert_eq!(ctl.schedule_next().unwrap().unwrap().id, b);
+        assert!(ctl.schedule_next().is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! Heartbeat history and outage-probability estimation policies.
+//!
+//! The Fault-Aware Slurmctld plugin records, per node, the outcome of every
+//! heartbeat probe (`HB(i)` in the paper). "Node outage probability can be
+//! inferred by post-processing the history of each node's heartbeats";
+//! the paper suggests empirical frequency and (weighted) moving averages —
+//! all three are implemented here.
+
+/// Per-node heartbeat history (true = replied, false = missed).
+#[derive(Debug, Clone, Default)]
+pub struct HeartbeatHistory {
+    outcomes: Vec<bool>,
+}
+
+impl HeartbeatHistory {
+    /// Record one probe outcome.
+    pub fn record(&mut self, replied: bool) {
+        self.outcomes.push(replied);
+    }
+
+    /// Number of probes.
+    pub fn len(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// True if no probes recorded.
+    pub fn is_empty(&self) -> bool {
+        self.outcomes.is_empty()
+    }
+
+    /// Missed-probe count.
+    pub fn misses(&self) -> usize {
+        self.outcomes.iter().filter(|&&r| !r).count()
+    }
+
+    /// Raw outcomes, oldest first.
+    pub fn outcomes(&self) -> &[bool] {
+        &self.outcomes
+    }
+}
+
+/// Outage estimation policies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OutagePolicy {
+    /// misses / probes over the whole history.
+    Empirical,
+    /// misses / probes over the last `window` probes.
+    MovingAverage { window: usize },
+    /// Exponentially weighted: newer probes weigh more.
+    Ewma { alpha: f64 },
+}
+
+impl OutagePolicy {
+    /// Estimate a node's outage probability from its history.
+    pub fn estimate(&self, h: &HeartbeatHistory) -> f64 {
+        let o = h.outcomes();
+        if o.is_empty() {
+            return 0.0;
+        }
+        match *self {
+            OutagePolicy::Empirical => h.misses() as f64 / o.len() as f64,
+            OutagePolicy::MovingAverage { window } => {
+                let w = window.min(o.len()).max(1);
+                let tail = &o[o.len() - w..];
+                tail.iter().filter(|&&r| !r).count() as f64 / w as f64
+            }
+            OutagePolicy::Ewma { alpha } => {
+                let mut est = 0.0;
+                for &replied in o {
+                    let x = if replied { 0.0 } else { 1.0 };
+                    est = alpha * x + (1.0 - alpha) * est;
+                }
+                est
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(pattern: &[bool]) -> HeartbeatHistory {
+        let mut h = HeartbeatHistory::default();
+        for &p in pattern {
+            h.record(p);
+        }
+        h
+    }
+
+    #[test]
+    fn empirical_frequency() {
+        let h = hist(&[true, true, false, true]);
+        assert_eq!(OutagePolicy::Empirical.estimate(&h), 0.25);
+    }
+
+    #[test]
+    fn empty_history_is_zero() {
+        let h = HeartbeatHistory::default();
+        for p in [
+            OutagePolicy::Empirical,
+            OutagePolicy::MovingAverage { window: 4 },
+            OutagePolicy::Ewma { alpha: 0.2 },
+        ] {
+            assert_eq!(p.estimate(&h), 0.0);
+        }
+    }
+
+    #[test]
+    fn moving_average_forgets_old_misses() {
+        // old misses, recent clean
+        let mut o = vec![false; 5];
+        o.extend(vec![true; 20]);
+        let h = hist(&o);
+        assert_eq!(OutagePolicy::MovingAverage { window: 10 }.estimate(&h), 0.0);
+        assert!(OutagePolicy::Empirical.estimate(&h) > 0.0);
+    }
+
+    #[test]
+    fn ewma_tracks_recent() {
+        let mut o = vec![true; 50];
+        o.extend(vec![false; 10]);
+        let h = hist(&o);
+        let est = OutagePolicy::Ewma { alpha: 0.3 }.estimate(&h);
+        assert!(est > 0.9, "est={est}");
+    }
+
+    #[test]
+    fn perfect_node_estimates_zero() {
+        let h = hist(&[true; 100]);
+        assert_eq!(OutagePolicy::Empirical.estimate(&h), 0.0);
+        assert_eq!(OutagePolicy::Ewma { alpha: 0.1 }.estimate(&h), 0.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Job descriptions and records.
+
+use crate::commgraph::CommMatrix;
+use crate::mapping::PlacementPolicy;
+
+/// A job submission (what srun hands to the controller).
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// Job name (application id).
+    pub name: String,
+    /// Number of MPI processes.
+    pub ranks: usize,
+    /// srun `--distribution` value.
+    pub distribution: PlacementPolicy,
+    /// Communication graph, if supplied via `--load-matrix`.
+    pub comm_graph: Option<CommMatrix>,
+}
+
+/// Lifecycle state of a job in the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Aborted,
+}
+
+/// A job record tracked by the controller.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    /// Controller-assigned id.
+    pub id: u64,
+    /// The request.
+    pub request: JobRequest,
+    /// Current state.
+    pub state: JobState,
+    /// Node assignment once allocated (`T` in the paper).
+    pub assignment: Option<Vec<usize>>,
+    /// Simulated completion time, once finished.
+    pub completion_s: Option<f64>,
+    /// Abort count (restarts performed).
+    pub aborts: u32,
+}
+
+impl JobRecord {
+    /// New pending record.
+    pub fn new(id: u64, request: JobRequest) -> Self {
+        JobRecord {
+            id,
+            request,
+            state: JobState::Pending,
+            assignment: None,
+            completion_s: None,
+            aborts: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_lifecycle_defaults() {
+        let r = JobRecord::new(
+            1,
+            JobRequest {
+                name: "x".into(),
+                ranks: 4,
+                distribution: PlacementPolicy::Tofa,
+                comm_graph: None,
+            },
+        );
+        assert_eq!(r.state, JobState::Pending);
+        assert!(r.assignment.is_none());
+        assert_eq!(r.aborts, 0);
+    }
+}

@@ -1,0 +1,55 @@
+//! Slurm-lite: the resource-manager substrate TOFA integrates into.
+//!
+//! Mirrors the paper's Section 4 architecture (Fig. 2):
+//!
+//! * [`controller`] — `slurmctld`: resource allocation, job launch, and
+//!   the controller-side plugins.
+//! * [`noded`] — `slurmd`: the per-node daemon (one tokio task per node)
+//!   hosting the node-side SPANK plugins.
+//! * [`plugins`] — the five paper plugins: *Fault-Aware Slurmctld*
+//!   (heartbeats), *NodeState* (heartbeat replies), *LoadMatrix* (ships the
+//!   communication graph), *FATT* (torus topology + routing function), and
+//!   *FANS* (fault-aware node selection = TOFA).
+//! * [`srun`] — the user front-end (`--distribution=tofa --load-matrix=G`).
+//! * [`protocol`] / [`jobs`] / [`queue`] — messages, job records, FIFO.
+
+pub mod controller;
+pub mod heartbeat;
+pub mod jobs;
+pub mod noded;
+pub mod plugins;
+pub mod protocol;
+pub mod queue;
+pub mod srun;
+
+use crate::sim::failure::FaultScenario;
+
+/// Ground-truth fault model used to *emulate* node behaviour (the node
+/// side of the heartbeat protocol and the per-instance down sampling).
+/// The controller never reads this directly — it only sees heartbeat
+/// outcomes, from which it estimates outage probabilities.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    /// The batch-level fault scenario.
+    pub scenario: FaultScenario,
+}
+
+impl FaultModel {
+    /// Fault-free model.
+    pub fn none(num_nodes: usize) -> Self {
+        FaultModel {
+            scenario: FaultScenario::none(num_nodes),
+        }
+    }
+
+    /// Wrap a scenario.
+    pub fn new(scenario: FaultScenario) -> Self {
+        FaultModel { scenario }
+    }
+
+    /// The *true* outage probabilities (oracle; tests and upper-bound
+    /// experiments only — production code estimates via heartbeats).
+    pub fn outage_estimates(&self) -> Vec<f64> {
+        self.scenario.true_outage()
+    }
+}

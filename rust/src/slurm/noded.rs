@@ -1,0 +1,114 @@
+//! `slurmd`-lite: the per-node daemon.
+//!
+//! One OS thread per simulated compute node. Hosts the node-side SPANK
+//! plugins: **NodeState** (replies to controller heartbeats, suppressing
+//! the reply when the node is emulated as down at that poll — the paper's
+//! "when a node is in the failed state it is not able to respond to
+//! probes") and **LoadMatrix** (serves the stored communication graph of a
+//! pending job to the controller).
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use super::plugins::node_state::NodeStatePlugin;
+use super::protocol::{HeartbeatReply, ToNode};
+use crate::commgraph::CommMatrix;
+
+/// Handle to a spawned node daemon.
+#[derive(Debug)]
+pub struct NodeHandle {
+    /// Node id.
+    pub id: usize,
+    /// Command channel into the daemon.
+    pub tx: Sender<ToNode>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl NodeHandle {
+    /// Ask the daemon to stop and join its thread.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(ToNode::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ToNode::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn a node daemon thread.
+///
+/// `node_state` decides heartbeat behaviour; `load_matrix` is the comm
+/// graph staged on this node (if any).
+pub fn spawn(
+    id: usize,
+    mut node_state: NodeStatePlugin,
+    load_matrix: Option<CommMatrix>,
+) -> NodeHandle {
+    let (tx, rx) = channel::<ToNode>();
+    let join = std::thread::spawn(move || {
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                ToNode::Heartbeat { seq, reply } => {
+                    if node_state.responds() {
+                        // a gone controller just means the poll timed out
+                        let _ = reply.send(HeartbeatReply { seq, node: id });
+                    }
+                    // down: drop the reply sender — controller sees a miss
+                }
+                ToNode::FetchLoadMatrix { reply } => {
+                    let _ = reply.send(load_matrix.clone());
+                }
+                ToNode::Shutdown => break,
+            }
+        }
+    });
+    NodeHandle {
+        id,
+        tx,
+        join: Some(join),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn healthy_node_replies() {
+        let h = spawn(3, NodeStatePlugin::healthy(), None);
+        let (tx, rx) = channel();
+        h.tx.send(ToNode::Heartbeat { seq: 1, reply: tx }).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(r, HeartbeatReply { seq: 1, node: 3 });
+        h.shutdown();
+    }
+
+    #[test]
+    fn down_node_never_replies() {
+        let h = spawn(0, NodeStatePlugin::flaky(1.0, 7), None);
+        let (tx, rx) = channel();
+        h.tx.send(ToNode::Heartbeat { seq: 9, reply: tx }).unwrap();
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn load_matrix_served() {
+        let mut m = CommMatrix::new(2);
+        m.add_sym(0, 1, 5.0);
+        let h = spawn(1, NodeStatePlugin::healthy(), Some(m.clone()));
+        let (tx, rx) = channel();
+        h.tx.send(ToNode::FetchLoadMatrix { reply: tx }).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), Some(m));
+        h.shutdown();
+    }
+}

@@ -1,0 +1,100 @@
+//! Fault-Aware Node Selection (FANS) plugin.
+//!
+//! The resource-selection plugin that "performs the actual allocation of
+//! resources": it combines the communication graph (LoadMatrix), the
+//! routing/topology information (FATT) and the outage estimates
+//! (Fault-Aware Slurmctld), and invokes the graph mapper — TOFA's
+//! Listing 1.1 — to produce the process -> node table `T`.
+//!
+//! When the job does not request `--distribution=tofa`, FANS falls through
+//! to the standard policies so TOFA "does not interfere with the standard
+//! resource allocation path of Slurm".
+
+use crate::commgraph::CommMatrix;
+use crate::error::Result;
+use crate::mapping::{self, Placement, PlacementPolicy};
+use crate::rng::Rng;
+use crate::tofa::placer::{TofaPlacer, TofaPlacement};
+use crate::topology::Platform;
+
+/// The FANS plugin.
+#[derive(Debug, Default)]
+pub struct FansPlugin {
+    placer: TofaPlacer,
+}
+
+impl FansPlugin {
+    /// Build with a custom TOFA placer.
+    pub fn new(placer: TofaPlacer) -> Self {
+        FansPlugin { placer }
+    }
+
+    /// Allocate nodes for a job.
+    ///
+    /// * `policy` — the srun `--distribution` value.
+    /// * `comm` — communication graph (required for greedy/scotch/tofa).
+    /// * `outage` — per-node outage estimates from the heartbeat plugin.
+    pub fn select(
+        &self,
+        policy: PlacementPolicy,
+        comm: &CommMatrix,
+        platform: &Platform,
+        outage: &[f64],
+        rng: &mut Rng,
+    ) -> Result<Placement> {
+        match policy {
+            PlacementPolicy::Tofa => self.placer.placement(comm, platform, outage),
+            _ => {
+                let dist = platform.hop_matrix();
+                mapping::place(policy, comm, &dist, rng)
+            }
+        }
+    }
+
+    /// Full TOFA selection with path reporting.
+    pub fn select_tofa(
+        &self,
+        comm: &CommMatrix,
+        platform: &Platform,
+        outage: &[f64],
+    ) -> Result<TofaPlacement> {
+        self.placer.place(comm, platform, outage)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{lammps_proxy::LammpsProxy, MpiApp};
+    use crate::profiler::profile_app;
+    use crate::topology::TorusDims;
+
+    #[test]
+    fn all_policies_yield_valid_placements() {
+        let app = LammpsProxy::tiny(16, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let outage = vec![0.0; 64];
+        let fans = FansPlugin::default();
+        let mut rng = Rng::new(5);
+        for policy in PlacementPolicy::all() {
+            let p = fans
+                .select(policy, &comm, &plat, &outage, &mut rng)
+                .unwrap();
+            p.validate(64).unwrap();
+            assert_eq!(p.num_ranks(), 16, "{policy}");
+        }
+    }
+
+    #[test]
+    fn tofa_avoids_estimated_flaky_nodes() {
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut outage = vec![0.0; 64];
+        outage[0] = 0.5; // first node flaky: block would use it, TOFA won't
+        let fans = FansPlugin::default();
+        let p = fans.select_tofa(&comm, &plat, &outage).unwrap();
+        assert!(!p.assignment.contains(&0));
+    }
+}

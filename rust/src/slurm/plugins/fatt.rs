@@ -1,0 +1,139 @@
+//! Fault-Aware Torus Topology (FATT) plugin.
+//!
+//! Controller-side: reads a topology file (one entry per node: id plus
+//! x, y, z coordinates on the 3-D torus), builds the platform graph at
+//! slurmctld init, and exports the routing function `R(u, v)` — including
+//! intermediate transit nodes, which Slurm's stock torus plugin does not
+//! expose (the reason the paper had to write FATT).
+
+use std::io::{BufRead, BufReader, Read};
+
+use crate::error::{Error, Result};
+use crate::topology::{Torus, TorusDims};
+
+/// The FATT plugin: platform topology + routing oracle.
+#[derive(Debug, Clone)]
+pub struct FattPlugin {
+    torus: Torus,
+}
+
+impl FattPlugin {
+    /// Build directly from dimensions.
+    pub fn new(dims: TorusDims) -> Self {
+        FattPlugin {
+            torus: Torus::new(dims),
+        }
+    }
+
+    /// Parse the topology file format described in the paper: a header
+    /// `dims X Y Z` followed by one `id x y z` line per node. Validates
+    /// that every node appears exactly once with row-major-consistent
+    /// coordinates.
+    pub fn from_topology_file<R: Read>(r: R) -> Result<Self> {
+        let mut lines = BufReader::new(r).lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::Topology("empty topology file".into()))??;
+        let hp: Vec<&str> = header.split_whitespace().collect();
+        if hp.len() != 4 || hp[0] != "dims" {
+            return Err(Error::Topology(format!("bad topology header: {header}")));
+        }
+        let parse = |s: &str| {
+            s.parse::<usize>()
+                .map_err(|_| Error::Topology(format!("bad number: {s}")))
+        };
+        let dims = TorusDims::new(parse(hp[1])?, parse(hp[2])?, parse(hp[3])?);
+        let torus = Torus::new(dims);
+        let mut seen = vec![false; dims.nodes()];
+        for line in lines {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let p: Vec<&str> = line.split_whitespace().collect();
+            if p.len() != 4 {
+                return Err(Error::Topology(format!("bad topology entry: {line}")));
+            }
+            let (id, x, y, z) = (parse(p[0])?, parse(p[1])?, parse(p[2])?, parse(p[3])?);
+            if id >= dims.nodes() || x >= dims.x || y >= dims.y || z >= dims.z {
+                return Err(Error::Topology(format!("entry out of range: {line}")));
+            }
+            if torus.id(x, y, z) != id {
+                return Err(Error::Topology(format!(
+                    "entry {line}: coordinates disagree with row-major id"
+                )));
+            }
+            if seen[id] {
+                return Err(Error::Topology(format!("duplicate node id {id}")));
+            }
+            seen[id] = true;
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(Error::Topology("topology file missing nodes".into()));
+        }
+        Ok(FattPlugin { torus })
+    }
+
+    /// Emit the topology file for this platform (used by `repro topo`).
+    pub fn to_topology_file(&self) -> String {
+        let d = self.torus.dims();
+        let mut out = format!("dims {} {} {}\n", d.x, d.y, d.z);
+        for id in 0..self.torus.num_nodes() {
+            let (x, y, z) = self.torus.coords(id);
+            out.push_str(&format!("{id} {x} {y} {z}\n"));
+        }
+        out
+    }
+
+    /// The routing function `R(u, v)`.
+    pub fn route(&self, u: usize, v: usize) -> Vec<crate::topology::Link> {
+        self.torus.route(u, v)
+    }
+
+    /// Intermediate transit nodes for `u -> v` (the registry entry the
+    /// paper maintains: node -> paths it serves as intermediate hop).
+    pub fn intermediates(&self, u: usize, v: usize) -> Vec<usize> {
+        self.torus.intermediates(u, v)
+    }
+
+    /// Underlying torus.
+    pub fn torus(&self) -> &Torus {
+        &self.torus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_roundtrip() {
+        let f = FattPlugin::new(TorusDims::new(4, 2, 2));
+        let text = f.to_topology_file();
+        let back = FattPlugin::from_topology_file(text.as_bytes()).unwrap();
+        assert_eq!(back.torus().dims(), TorusDims::new(4, 2, 2));
+    }
+
+    #[test]
+    fn rejects_missing_and_duplicate_nodes() {
+        let mut text = String::from("dims 2 1 1\n0 0 0 0\n");
+        assert!(FattPlugin::from_topology_file(text.as_bytes()).is_err()); // missing 1
+        text.push_str("0 0 0 0\n");
+        assert!(FattPlugin::from_topology_file(text.as_bytes()).is_err()); // dup
+    }
+
+    #[test]
+    fn rejects_inconsistent_coords() {
+        let text = "dims 2 2 1\n0 0 0 0\n1 0 1 0\n2 1 0 0\n3 1 1 0\n";
+        // id 1 should be (1,0,0) row-major; (0,1,0) is id 2.
+        assert!(FattPlugin::from_topology_file(text.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn routing_exported() {
+        let f = FattPlugin::new(TorusDims::new(8, 8, 8));
+        let r = f.route(0, 2);
+        assert_eq!(r.len(), 2);
+        assert_eq!(f.intermediates(0, 2), vec![1]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Fault-Aware Slurmctld plugin: heartbeat collection + outage inference.
+//!
+//! "Responsible for periodic polling of each node through a heartbeat ...
+//! Absence of a reply to a heartbeat is translated as node outage.
+//! Slurmctld maintains a record of heartbeats for each node i, HB(i)."
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use crate::slurm::heartbeat::{HeartbeatHistory, OutagePolicy};
+use crate::slurm::noded::NodeHandle;
+use crate::slurm::protocol::ToNode;
+
+/// Controller-side heartbeat state.
+#[derive(Debug)]
+pub struct FaultCtldPlugin {
+    histories: Vec<HeartbeatHistory>,
+    policy: OutagePolicy,
+    seq: u64,
+    /// How long to wait for a reply before declaring a miss.
+    pub timeout: Duration,
+}
+
+impl FaultCtldPlugin {
+    /// New collector for `n` nodes.
+    pub fn new(n: usize, policy: OutagePolicy) -> Self {
+        FaultCtldPlugin {
+            histories: vec![HeartbeatHistory::default(); n],
+            policy,
+            seq: 0,
+            timeout: Duration::from_millis(200),
+        }
+    }
+
+    /// Probe every node once (fan out, then collect) and record outcomes.
+    pub fn poll_all(&mut self, nodes: &[NodeHandle]) {
+        self.seq += 1;
+        let seq = self.seq;
+        let mut pending = Vec::with_capacity(nodes.len());
+        for h in nodes {
+            let (tx, rx) = channel();
+            // a dead daemon is a miss
+            let sent = h.tx.send(ToNode::Heartbeat { seq, reply: tx }).is_ok();
+            pending.push((h.id, sent, rx));
+        }
+        for (id, sent, rx) in pending {
+            let replied = sent
+                && matches!(rx.recv_timeout(self.timeout), Ok(r) if r.seq == seq);
+            self.histories[id].record(replied);
+        }
+    }
+
+    /// Run `rounds` heartbeat cycles.
+    pub fn collect(&mut self, nodes: &[NodeHandle], rounds: usize) {
+        for _ in 0..rounds {
+            self.poll_all(nodes);
+        }
+    }
+
+    /// Current outage-probability estimates, one per node.
+    pub fn outage_estimates(&self) -> Vec<f64> {
+        self.histories
+            .iter()
+            .map(|h| self.policy.estimate(h))
+            .collect()
+    }
+
+    /// Heartbeat record for one node (`HB(i)`).
+    pub fn history(&self, node: usize) -> &HeartbeatHistory {
+        &self.histories[node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::noded::spawn;
+    use crate::slurm::plugins::node_state::NodeStatePlugin;
+
+    #[test]
+    fn estimates_track_ground_truth() {
+        // 4 healthy nodes, 2 flaky at 50% (high p so few rounds suffice)
+        let mut nodes = Vec::new();
+        for i in 0..4 {
+            nodes.push(spawn(i, NodeStatePlugin::healthy(), None));
+        }
+        nodes.push(spawn(4, NodeStatePlugin::flaky(0.5, 1), None));
+        nodes.push(spawn(5, NodeStatePlugin::flaky(0.5, 2), None));
+
+        let mut ctld = FaultCtldPlugin::new(6, OutagePolicy::Empirical);
+        ctld.collect(&nodes, 60);
+        let est = ctld.outage_estimates();
+        for e in &est[..4] {
+            assert_eq!(*e, 0.0);
+        }
+        for e in &est[4..] {
+            assert!((*e - 0.5).abs() < 0.25, "estimate {e}");
+        }
+        assert_eq!(ctld.history(0).len(), 60);
+    }
+
+    #[test]
+    fn dead_daemon_counts_as_miss() {
+        let h = spawn(0, NodeStatePlugin::healthy(), None);
+        h.tx.send(ToNode::Shutdown).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let mut ctld = FaultCtldPlugin::new(1, OutagePolicy::Empirical);
+        ctld.poll_all(std::slice::from_ref(&h));
+        assert_eq!(ctld.outage_estimates()[0], 1.0);
+    }
+}

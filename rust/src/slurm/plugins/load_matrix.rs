@@ -1,0 +1,70 @@
+//! LoadMatrix SPANK plugin.
+//!
+//! "Used to send the communication graph G from any compute node to the
+//! controller node ... enables srun to have an extra argument which can be
+//! used to provide the file containing a representation of G."
+//!
+//! Two paths are supported, matching how the real plugin can be fed:
+//! reading the graph from an srun-provided file, and fetching it from a
+//! node daemon over the protocol channel.
+
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use crate::commgraph::{io, CommMatrix};
+use crate::error::{Error, Result};
+use crate::slurm::noded::NodeHandle;
+use crate::slurm::protocol::ToNode;
+
+/// Load a communication graph from the file named on the srun command
+/// line (`--load-matrix=<path>`).
+pub fn from_file(path: &Path) -> Result<CommMatrix> {
+    io::load(path)
+}
+
+/// Fetch the staged communication graph from a compute node's daemon.
+pub fn from_node(node: &NodeHandle) -> Result<CommMatrix> {
+    let (tx, rx) = channel();
+    node.tx
+        .send(ToNode::FetchLoadMatrix { reply: tx })
+        .map_err(|_| Error::Slurm(format!("node {} daemon gone", node.id)))?;
+    rx.recv_timeout(Duration::from_secs(1))
+        .map_err(|_| Error::Slurm(format!("node {} dropped reply", node.id)))?
+        .ok_or_else(|| Error::Slurm(format!("node {} has no staged comm graph", node.id)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::noded;
+    use crate::slurm::plugins::node_state::NodeStatePlugin;
+
+    #[test]
+    fn fetch_roundtrip() {
+        let mut m = CommMatrix::new(3);
+        m.add_sym(0, 2, 9.0);
+        let h = noded::spawn(5, NodeStatePlugin::healthy(), Some(m.clone()));
+        let got = from_node(&h).unwrap();
+        assert_eq!(got, m);
+        h.shutdown();
+    }
+
+    #[test]
+    fn missing_matrix_errors() {
+        let h = noded::spawn(6, NodeStatePlugin::healthy(), None);
+        assert!(from_node(&h).is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("tofa-lm-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        let mut m = CommMatrix::new(2);
+        m.add_sym(0, 1, 3.0);
+        io::save(&m, &p).unwrap();
+        assert_eq!(from_file(&p).unwrap(), m);
+    }
+}

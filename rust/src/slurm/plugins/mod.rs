@@ -1,0 +1,15 @@
+//! The five plugins of the paper's Slurm integration (Fig. 2).
+//!
+//! | Paper plugin | Module | Runs on |
+//! |---|---|---|
+//! | Fault-Aware Slurmctld (heartbeats)   | [`fault_ctld`]  | controller |
+//! | NodeState (SPANK)                    | [`node_state`]  | every node |
+//! | LoadMatrix (SPANK)                   | [`load_matrix`] | every node |
+//! | Fault-Aware Torus Topology (FATT)    | [`fatt`]        | controller |
+//! | Fault-Aware Node Selection (FANS)    | [`fans`]        | controller |
+
+pub mod fans;
+pub mod fatt;
+pub mod fault_ctld;
+pub mod load_matrix;
+pub mod node_state;

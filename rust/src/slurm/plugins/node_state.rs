@@ -1,0 +1,58 @@
+//! NodeState SPANK plugin (node side).
+//!
+//! Runs once at slurmd init; its job is to answer the controller's
+//! heartbeats. In the simulated cluster it also *emulates* the node's
+//! ground-truth failure behaviour: a flaky node misses a probe with its
+//! outage probability.
+
+use crate::rng::Rng;
+
+/// Node-side heartbeat behaviour.
+#[derive(Debug)]
+pub struct NodeStatePlugin {
+    outage_p: f64,
+    rng: Rng,
+}
+
+impl NodeStatePlugin {
+    /// A node that always replies.
+    pub fn healthy() -> Self {
+        NodeStatePlugin {
+            outage_p: 0.0,
+            rng: Rng::new(0),
+        }
+    }
+
+    /// A node that misses probes with probability `p` (deterministic given
+    /// `seed`).
+    pub fn flaky(p: f64, seed: u64) -> Self {
+        NodeStatePlugin {
+            outage_p: p,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Whether this probe gets a reply.
+    pub fn responds(&mut self) -> bool {
+        self.outage_p <= 0.0 || !self.rng.bernoulli(self.outage_p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_always_responds() {
+        let mut n = NodeStatePlugin::healthy();
+        assert!((0..1000).all(|_| n.responds()));
+    }
+
+    #[test]
+    fn flaky_misses_at_rate() {
+        let mut n = NodeStatePlugin::flaky(0.3, 42);
+        let misses = (0..10_000).filter(|_| !n.responds()).count();
+        let rate = misses as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.03, "rate={rate}");
+    }
+}

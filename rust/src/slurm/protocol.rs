@@ -1,0 +1,36 @@
+//! Controller <-> node daemon messages.
+//!
+//! Transport is std mpsc channels: one command channel into each daemon
+//! thread, and per-request reply channels (the oneshot pattern).
+
+use std::sync::mpsc::Sender;
+
+use crate::commgraph::CommMatrix;
+
+/// Messages a node daemon accepts.
+#[derive(Debug)]
+pub enum ToNode {
+    /// Heartbeat probe `Hb(t, i)`; the daemon replies on `reply` unless the
+    /// node is emulated as down at this poll (it then drops the sender,
+    /// which the controller observes as a timeout/miss).
+    Heartbeat {
+        seq: u64,
+        reply: Sender<HeartbeatReply>,
+    },
+    /// Fetch the staged communication graph for a pending job (LoadMatrix
+    /// plugin path: compute node -> controller).
+    FetchLoadMatrix {
+        reply: Sender<Option<CommMatrix>>,
+    },
+    /// Shut the daemon down.
+    Shutdown,
+}
+
+/// A heartbeat reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeartbeatReply {
+    /// Echoed sequence number.
+    pub seq: u64,
+    /// Node id.
+    pub node: usize,
+}

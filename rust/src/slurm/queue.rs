@@ -1,0 +1,85 @@
+//! FIFO scheduling queue (the paper batches 100 instances per queue).
+
+use std::collections::VecDeque;
+
+use super::jobs::{JobRecord, JobRequest, JobState};
+
+/// FIFO job queue with id assignment (squeue-visible state).
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    next_id: u64,
+    pending: VecDeque<JobRecord>,
+    finished: Vec<JobRecord>,
+}
+
+impl JobQueue {
+    /// Create an empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a request; returns the assigned job id.
+    pub fn submit(&mut self, request: JobRequest) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push_back(JobRecord::new(id, request));
+        id
+    }
+
+    /// Pop the next pending job.
+    pub fn next(&mut self) -> Option<JobRecord> {
+        self.pending.pop_front()
+    }
+
+    /// Record a finished job.
+    pub fn finish(&mut self, mut record: JobRecord, state: JobState) {
+        record.state = state;
+        self.finished.push(record);
+    }
+
+    /// Pending count.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Finished records.
+    pub fn finished(&self) -> &[JobRecord] {
+        &self.finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::PlacementPolicy;
+
+    fn req() -> JobRequest {
+        JobRequest {
+            name: "j".into(),
+            ranks: 2,
+            distribution: PlacementPolicy::DefaultSlurm,
+            comm_graph: None,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut q = JobQueue::new();
+        let a = q.submit(req());
+        let b = q.submit(req());
+        assert!(a < b);
+        assert_eq!(q.next().unwrap().id, a);
+        assert_eq!(q.next().unwrap().id, b);
+        assert!(q.next().is_none());
+    }
+
+    #[test]
+    fn finished_records_kept() {
+        let mut q = JobQueue::new();
+        q.submit(req());
+        let r = q.next().unwrap();
+        q.finish(r, JobState::Completed);
+        assert_eq!(q.finished().len(), 1);
+        assert_eq!(q.finished()[0].state, JobState::Completed);
+    }
+}

@@ -1,0 +1,157 @@
+//! srun-lite: the user-facing job launcher.
+//!
+//! Supports the paper's extension: `--distribution=tofa` plus
+//! `--load-matrix=<file>` ("an srun command issued with distribution=TOFA
+//! and a file resembling the application's communication graph will enable
+//! Slurm to spawn each task on the node selected by our resource
+//! allocation approach").
+
+use std::path::PathBuf;
+
+use super::jobs::JobRequest;
+use crate::commgraph::io;
+use crate::error::{Error, Result};
+use crate::mapping::PlacementPolicy;
+
+/// Parsed srun arguments.
+#[derive(Debug, Clone)]
+pub struct SrunArgs {
+    /// `-n` / `--ntasks`.
+    pub ntasks: usize,
+    /// `--distribution`.
+    pub distribution: PlacementPolicy,
+    /// `--load-matrix` file.
+    pub load_matrix: Option<PathBuf>,
+    /// Job name.
+    pub name: String,
+}
+
+/// Parse an srun-style argument list (subset).
+pub fn parse_args(args: &[&str]) -> Result<SrunArgs> {
+    let mut ntasks = None;
+    let mut distribution = PlacementPolicy::DefaultSlurm;
+    let mut load_matrix = None;
+    let mut name = "job".to_string();
+    let mut it = args.iter().peekable();
+    while let Some(&a) = it.next() {
+        if let Some(v) = a.strip_prefix("--ntasks=") {
+            ntasks = Some(
+                v.parse()
+                    .map_err(|_| Error::Slurm(format!("bad --ntasks: {v}")))?,
+            );
+        } else if a == "-n" {
+            let v = it
+                .next()
+                .ok_or_else(|| Error::Slurm("-n needs a value".into()))?;
+            ntasks = Some(
+                v.parse()
+                    .map_err(|_| Error::Slurm(format!("bad -n: {v}")))?,
+            );
+        } else if let Some(v) = a.strip_prefix("--distribution=") {
+            distribution = PlacementPolicy::parse(v)
+                .ok_or_else(|| Error::Slurm(format!("unknown distribution: {v}")))?;
+        } else if let Some(v) = a.strip_prefix("--load-matrix=") {
+            load_matrix = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--job-name=") {
+            name = v.to_string();
+        } else {
+            return Err(Error::Slurm(format!("unknown srun argument: {a}")));
+        }
+    }
+    Ok(SrunArgs {
+        ntasks: ntasks.ok_or_else(|| Error::Slurm("missing --ntasks".into()))?,
+        distribution,
+        load_matrix,
+        name,
+    })
+}
+
+/// Turn parsed args into a job request (loads the comm graph file).
+pub fn build_request(args: &SrunArgs) -> Result<JobRequest> {
+    let comm_graph = match &args.load_matrix {
+        Some(p) => {
+            let m = io::load(p)?;
+            if m.len() != args.ntasks {
+                return Err(Error::Slurm(format!(
+                    "--load-matrix has {} ranks but --ntasks={}",
+                    m.len(),
+                    args.ntasks
+                )));
+            }
+            Some(m)
+        }
+        None => None,
+    };
+    if comm_graph.is_none()
+        && matches!(
+            args.distribution,
+            PlacementPolicy::Tofa | PlacementPolicy::Scotch | PlacementPolicy::Greedy
+        )
+    {
+        return Err(Error::Slurm(format!(
+            "--distribution={} requires --load-matrix",
+            args.distribution
+        )));
+    }
+    Ok(JobRequest {
+        name: args.name.clone(),
+        ranks: args.ntasks,
+        distribution: args.distribution,
+        comm_graph,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::commgraph::CommMatrix;
+
+    #[test]
+    fn parses_paper_invocation() {
+        let a = parse_args(&[
+            "--ntasks=85",
+            "--distribution=tofa",
+            "--load-matrix=/tmp/g.txt",
+            "--job-name=npb-dt",
+        ])
+        .unwrap();
+        assert_eq!(a.ntasks, 85);
+        assert_eq!(a.distribution, PlacementPolicy::Tofa);
+        assert!(a.load_matrix.is_some());
+    }
+
+    #[test]
+    fn rejects_unknown_args_and_missing_ntasks() {
+        assert!(parse_args(&["--bogus"]).is_err());
+        assert!(parse_args(&["--distribution=tofa"]).is_err());
+    }
+
+    #[test]
+    fn tofa_requires_load_matrix() {
+        let a = parse_args(&["--ntasks=4", "--distribution=tofa"]).unwrap();
+        assert!(build_request(&a).is_err());
+    }
+
+    #[test]
+    fn default_distribution_needs_no_matrix() {
+        let a = parse_args(&["-n", "4"]).unwrap();
+        let r = build_request(&a).unwrap();
+        assert_eq!(r.distribution, PlacementPolicy::DefaultSlurm);
+        assert_eq!(r.ranks, 4);
+    }
+
+    #[test]
+    fn matrix_rank_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("tofa-srun-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        io::save(&CommMatrix::new(3), &p).unwrap();
+        let a = parse_args(&[
+            "--ntasks=4",
+            "--distribution=tofa",
+            &format!("--load-matrix={}", p.display()),
+        ])
+        .unwrap();
+        assert!(build_request(&a).is_err());
+    }
+}

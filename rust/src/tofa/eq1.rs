@@ -1,0 +1,109 @@
+//! Equation 1: fault-aware topology edge weights.
+//!
+//! For each node pair `(u, v)` the routing function `R(u, v)` yields the
+//! links a message traverses. The weight of the topology edge `(u, v)` is
+//!
+//! ```text
+//! w(e_uv) = sum_{l in R(u,v)}  c  +  c * 100 * 1[p_f(l.src) > 0 or p_f(l.dst) > 0]
+//! ```
+//!
+//! with `c = 1` hop. A link with a flaky endpoint therefore costs 101
+//! instead of 1, making any failed path far costlier than the longest
+//! fault-free path on the platform (the paper found small increments gave
+//! only marginal abort-rate reductions — hence the x100).
+
+use crate::topology::{DistanceMatrix, Torus};
+
+/// The hop cost constant `c` of Equation 1.
+pub const HOP_COST: f32 = 1.0;
+/// The fault inflation factor of Equation 1.
+pub const FAULT_FACTOR: f32 = 100.0;
+
+/// Build the full fault-aware distance matrix: entry `(u, v)` is Eq. 1
+/// evaluated over `R(u, v)`. `outage[n] > 0` marks node `n` as flaky.
+pub fn fault_aware_distance(torus: &Torus, outage: &[f64]) -> DistanceMatrix {
+    let m = torus.num_nodes();
+    assert_eq!(outage.len(), m);
+    let flaky: Vec<bool> = outage.iter().map(|&p| p > 0.0).collect();
+    let mut dist = DistanceMatrix::zeros(m);
+    let mut route = Vec::new();
+    for u in 0..m {
+        for v in (u + 1)..m {
+            torus.route_into(u, v, &mut route);
+            let mut w = 0.0f32;
+            for l in &route {
+                w += HOP_COST;
+                if flaky[l.src] || flaky[l.dst] {
+                    w += HOP_COST * FAULT_FACTOR;
+                }
+            }
+            dist.set(u, v, w);
+            dist.set(v, u, w);
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TorusDims;
+
+    #[test]
+    fn no_faults_reduces_to_hops() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let d = fault_aware_distance(&t, &vec![0.0; 64]);
+        let hops = DistanceMatrix::from_torus_hops(&t);
+        for u in 0..64 {
+            for v in 0..64 {
+                assert_eq!(d.get(u, v), hops.get(u, v));
+            }
+        }
+    }
+
+    #[test]
+    fn flaky_endpoint_inflates_links() {
+        let t = Torus::new(TorusDims::new(8, 1, 1));
+        let mut outage = vec![0.0; 8];
+        outage[1] = 0.05;
+        let d = fault_aware_distance(&t, &outage);
+        // 0 -> 1: one link touching node 1 -> 1 + 100
+        assert_eq!(d.get(0, 1), 101.0);
+        // 0 -> 2 routes 0->1->2: both links touch node 1 -> 2 + 200
+        assert_eq!(d.get(0, 2), 202.0);
+        // 0 -> 7 wraps the other way, fault-free
+        assert_eq!(d.get(0, 7), 1.0);
+        // 4 -> 6: fault-free segment
+        assert_eq!(d.get(4, 6), 2.0);
+    }
+
+    #[test]
+    fn failed_path_costs_more_than_any_clean_path() {
+        // the paper's rationale: one flaky link (101) > diameter (12) of
+        // the 8x8x8 torus.
+        let t = Torus::new(TorusDims::new(8, 8, 8));
+        let mut outage = vec![0.0; 512];
+        outage[100] = 0.02;
+        let d = fault_aware_distance(&t, &outage);
+        let clean_max = DistanceMatrix::from_torus_hops(&t).max();
+        // any pair whose route touches node 100 costs > clean_max
+        let neighbors = t.neighbors(100);
+        for &nb in &neighbors {
+            assert!(d.get(nb, 100) > clean_max);
+        }
+    }
+
+    #[test]
+    fn symmetric() {
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let mut outage = vec![0.0; 32];
+        outage[5] = 0.1;
+        outage[20] = 0.3;
+        let d = fault_aware_distance(&t, &outage);
+        for u in 0..32 {
+            for v in 0..32 {
+                assert_eq!(d.get(u, v), d.get(v, u));
+            }
+        }
+    }
+}

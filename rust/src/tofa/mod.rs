@@ -1,0 +1,19 @@
+//! TOFA — the paper's TOpology and Fault-Aware placement approach.
+//!
+//! Three pieces, mirroring Section 3:
+//! * [`eq1`] — fault-aware edge re-weighting of the topology graph
+//!   (Equation 1): a path's cost counts 1 per hop, or 100 per hop for any
+//!   link touching a node with non-zero outage probability.
+//! * [`window`] — the search for `|V_G|` *consecutive* fault-free nodes
+//!   (step 10 of Listing 1.1).
+//! * [`placer`] — the TOFA procedure: extract the window sub-topology and
+//!   map into it, or fall back to mapping over the fault-weighted full
+//!   topology.
+
+pub mod eq1;
+pub mod placer;
+pub mod window;
+
+pub use eq1::fault_aware_distance;
+pub use placer::{TofaConfig, TofaPlacer};
+pub use window::find_fault_free_window;

@@ -1,0 +1,213 @@
+//! The TOFA placement procedure (Listing 1.1 of the paper).
+//!
+//! ```text
+//! procedure TOFA(G, H):
+//!   S = find |V_G| consecutive nodes s.t. p_f(n) = 0
+//!   if S == {}:  T = ScotchMap(G, H)          # fault-weighted full map
+//!   else:        H_s = ScotchExtract(H, S)
+//!                T = ScotchMap(G, H_s)         # map inside the window
+//! ```
+
+use super::eq1::fault_aware_distance;
+use super::window::{find_fault_free_window, find_route_clean_window};
+use crate::commgraph::CommMatrix;
+use crate::error::Result;
+use crate::mapping::recmap::RecursiveMapper;
+use crate::mapping::Placement;
+use crate::topology::{DistanceMatrix, Platform};
+
+/// Tunables of the TOFA pipeline.
+#[derive(Debug, Clone)]
+pub struct TofaConfig {
+    /// Underlying graph mapper configuration.
+    pub mapper: RecursiveMapper,
+}
+
+impl Default for TofaConfig {
+    fn default() -> Self {
+        TofaConfig {
+            mapper: RecursiveMapper::default(),
+        }
+    }
+}
+
+/// How a placement was derived — reported in experiment logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TofaPath {
+    /// A consecutive fault-free window was found; mapped inside it.
+    Window,
+    /// No window; mapped over the Eq. 1 fault-weighted full topology.
+    FaultWeighted,
+    /// No outage information at all (all zero): plain topology mapping.
+    FaultFree,
+}
+
+/// Result of a TOFA placement.
+#[derive(Debug, Clone)]
+pub struct TofaPlacement {
+    /// rank -> node assignment.
+    pub assignment: Vec<usize>,
+    /// Which path of Listing 1.1 produced it.
+    pub path: TofaPath,
+}
+
+/// The TOFA placer.
+#[derive(Debug, Clone, Default)]
+pub struct TofaPlacer {
+    config: TofaConfig,
+}
+
+impl TofaPlacer {
+    /// Build with a config.
+    pub fn new(config: TofaConfig) -> Self {
+        TofaPlacer { config }
+    }
+
+    /// Place `comm` on `platform` given per-node outage probability
+    /// estimates (from the Fault-Aware Slurmctld heartbeat history).
+    pub fn place(
+        &self,
+        comm: &CommMatrix,
+        platform: &Platform,
+        outage: &[f64],
+    ) -> Result<TofaPlacement> {
+        let n = comm.len();
+        let torus = platform.torus();
+
+        if outage.iter().all(|&p| p <= 0.0) {
+            // Nothing flaky: Listing 1.1 still finds S (trivially the
+            // first |V_G| node ids) and maps inside that window.
+            let window: Vec<usize> = (0..n).collect();
+            let full = platform.hop_matrix();
+            let sub = full.extract(&window);
+            let local = self.config.mapper.map(comm, &sub)?;
+            let assignment = local.assignment.iter().map(|&li| window[li]).collect();
+            return Ok(TofaPlacement {
+                assignment,
+                path: TofaPath::FaultFree,
+            });
+        }
+
+        // Prefer a window whose route closure is flaky-free (zero abort
+        // guarantee); fall back to any endpoint-clean window.
+        let window = find_route_clean_window(outage, n, torus)
+            .or_else(|| find_fault_free_window(outage, n));
+        if let Some(window) = window {
+            // ScotchExtract: sub-topology restricted to the window, with
+            // plain hop distances (window is fault-free by construction).
+            let full = platform.hop_matrix();
+            let sub: DistanceMatrix = full.extract(&window);
+            let local = self.config.mapper.map(comm, &sub)?;
+            let assignment = local
+                .assignment
+                .iter()
+                .map(|&li| window[li])
+                .collect::<Vec<_>>();
+            Ok(TofaPlacement {
+                assignment,
+                path: TofaPath::Window,
+            })
+        } else {
+            // no window: map over the Eq. 1 fault-weighted topology
+            let dist = fault_aware_distance(torus, outage);
+            let p = self.config.mapper.map(comm, &dist)?;
+            Ok(TofaPlacement {
+                assignment: p.assignment,
+                path: TofaPath::FaultWeighted,
+            })
+        }
+    }
+
+    /// Place and wrap as a [`Placement`].
+    pub fn placement(
+        &self,
+        comm: &CommMatrix,
+        platform: &Platform,
+        outage: &[f64],
+    ) -> Result<Placement> {
+        Ok(Placement::new(self.place(comm, platform, outage)?.assignment))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{lammps_proxy::LammpsProxy, MpiApp};
+    use crate::profiler::profile_app;
+    use crate::topology::TorusDims;
+
+    fn setup(n_ranks: usize) -> (CommMatrix, Platform) {
+        let app = LammpsProxy::tiny(n_ranks, 2);
+        let profile = profile_app(&app);
+        let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+        (profile.volume, platform)
+    }
+
+    #[test]
+    fn fault_free_path_when_no_outage() {
+        let (c, plat) = setup(32);
+        let p = TofaPlacer::default()
+            .place(&c, &plat, &vec![0.0; 512])
+            .unwrap();
+        assert_eq!(p.path, TofaPath::FaultFree);
+        Placement::new(p.assignment).validate(512).unwrap();
+    }
+
+    #[test]
+    fn window_path_avoids_flaky_nodes_entirely() {
+        let (c, plat) = setup(32);
+        let mut outage = vec![0.0; 512];
+        // 16 flaky nodes spread out but leaving a 32-window
+        for i in 0..16 {
+            outage[64 + i * 28] = 0.02;
+        }
+        let p = TofaPlacer::default().place(&c, &plat, &outage).unwrap();
+        assert_eq!(p.path, TofaPath::Window);
+        for &node in &p.assignment {
+            assert_eq!(outage[node], 0.0, "flaky node {node} used");
+        }
+        Placement::new(p.assignment).validate(512).unwrap();
+    }
+
+    #[test]
+    fn fault_weighted_path_when_no_window() {
+        let (c, plat) = setup(32);
+        // flaky node every 16 ids: no 32-run exists
+        let mut outage = vec![0.0; 512];
+        for i in (0..512).step_by(16) {
+            outage[i] = 0.02;
+        }
+        let p = TofaPlacer::default().place(&c, &plat, &outage).unwrap();
+        assert_eq!(p.path, TofaPath::FaultWeighted);
+        // fault weighting should still avoid most flaky nodes
+        let flaky_used = p
+            .assignment
+            .iter()
+            .filter(|&&n| outage[n] > 0.0)
+            .count();
+        assert!(
+            flaky_used <= 4,
+            "fault-weighted map used {flaky_used} flaky nodes"
+        );
+    }
+
+    #[test]
+    fn window_placement_is_compact() {
+        // a window map should not be worse than ~2x the unconstrained map
+        use crate::mapping::cost::hop_bytes_cost;
+        let (c, plat) = setup(64);
+        let hop = plat.hop_matrix();
+        let clean = TofaPlacer::default()
+            .place(&c, &plat, &vec![0.0; 512])
+            .unwrap();
+        let mut outage = vec![0.0; 512];
+        outage[300] = 0.02; // window exists at the front
+        let windowed = TofaPlacer::default().place(&c, &plat, &outage).unwrap();
+        let cost_clean = hop_bytes_cost(&c, &hop, &clean.assignment);
+        let cost_win = hop_bytes_cost(&c, &hop, &windowed.assignment);
+        assert!(
+            cost_win <= 2.0 * cost_clean,
+            "window map cost {cost_win} vs clean {cost_clean}"
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Consecutive fault-free node search (step 10 of Listing 1.1).
+//!
+//! TOFA first tries to find `|V_G|` nodes with **consecutive ids** all of
+//! which have zero (estimated) outage probability. Node ids enumerate the
+//! torus row-major, so a window is a contiguous run in Slurm's node list.
+
+/// Find the first run of `len` consecutive node ids whose outage
+/// probability is zero. Returns the node ids, or `None`.
+pub fn find_fault_free_window(outage: &[f64], len: usize) -> Option<Vec<usize>> {
+    if len == 0 || len > outage.len() {
+        return None;
+    }
+    let mut run_start = 0usize;
+    let mut run_len = 0usize;
+    for (i, &p) in outage.iter().enumerate() {
+        if p <= 0.0 {
+            if run_len == 0 {
+                run_start = i;
+            }
+            run_len += 1;
+            if run_len == len {
+                return Some((run_start..run_start + len).collect());
+            }
+        } else {
+            run_len = 0;
+        }
+    }
+    None
+}
+
+/// Find a fault-free window whose **route closure** is also fault-free:
+/// no DOR route between any two window nodes transits a node with
+/// `outage > 0`. This is the check the FANS plugin can make because FATT
+/// exports the intermediate nodes of `R(u, v)` (Section 4 of the paper) —
+/// a window passing it guarantees a zero abort ratio for jobs mapped
+/// inside. Falls back to `None` if no such window exists.
+pub fn find_route_clean_window(
+    outage: &[f64],
+    len: usize,
+    torus: &crate::topology::Torus,
+) -> Option<Vec<usize>> {
+    if len == 0 || len > outage.len() {
+        return None;
+    }
+    let flaky: Vec<bool> = outage.iter().map(|&p| p > 0.0).collect();
+    let mut route = Vec::new();
+    'starts: for start in 0..=(outage.len() - len) {
+        // endpoint check first (cheap)
+        if flaky[start..start + len].iter().any(|&f| f) {
+            continue;
+        }
+        // route-closure check against flaky transits
+        for u in start..start + len {
+            for v in (u + 1)..start + len {
+                torus.route_into(u, v, &mut route);
+                for l in &route {
+                    if flaky[l.src] || flaky[l.dst] {
+                        continue 'starts;
+                    }
+                }
+            }
+        }
+        return Some((start..start + len).collect());
+    }
+    None
+}
+
+/// All maximal fault-free runs as `(start, len)` — used by diagnostics and
+/// the ablation bench exploring window availability vs faulty-node count.
+pub fn fault_free_runs(outage: &[f64]) -> Vec<(usize, usize)> {
+    let mut runs = Vec::new();
+    let mut start = None;
+    for (i, &p) in outage.iter().enumerate() {
+        if p <= 0.0 {
+            if start.is_none() {
+                start = Some(i);
+            }
+        } else if let Some(s) = start.take() {
+            runs.push((s, i - s));
+        }
+    }
+    if let Some(s) = start {
+        runs.push((s, outage.len() - s));
+    }
+    runs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_first_window() {
+        let mut outage = vec![0.0; 20];
+        outage[3] = 0.1;
+        let w = find_fault_free_window(&outage, 5).unwrap();
+        assert_eq!(w, vec![4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn none_when_no_window() {
+        let mut outage = vec![0.0; 10];
+        outage[2] = 0.1;
+        outage[5] = 0.1;
+        outage[8] = 0.1;
+        assert!(find_fault_free_window(&outage, 4).is_none());
+        assert!(find_fault_free_window(&outage, 2).is_some());
+    }
+
+    #[test]
+    fn full_array_when_clean() {
+        let outage = vec![0.0; 8];
+        assert_eq!(
+            find_fault_free_window(&outage, 8).unwrap(),
+            (0..8).collect::<Vec<_>>()
+        );
+        assert!(find_fault_free_window(&outage, 9).is_none());
+        assert!(find_fault_free_window(&outage, 0).is_none());
+    }
+
+    #[test]
+    fn runs_enumeration() {
+        let outage = vec![0.0, 0.0, 0.5, 0.0, 0.0, 0.0, 0.5, 0.0];
+        assert_eq!(fault_free_runs(&outage), vec![(0, 2), (3, 3), (7, 1)]);
+    }
+
+    #[test]
+    fn probability_of_window_shrinks_with_faults() {
+        // statistical sanity for the paper's Fig. 5a observation: with 8
+        // faulty nodes out of 512 a 64-window almost always exists; with
+        // many more it often does not.
+        let mut rng = crate::rng::Rng::new(11);
+        let trials = 200;
+        let count_with = |n_faulty: usize, rng: &mut crate::rng::Rng| {
+            (0..trials)
+                .filter(|_| {
+                    let mut outage = vec![0.0; 512];
+                    for f in rng.sample_distinct(512, n_faulty) {
+                        outage[f] = 0.02;
+                    }
+                    find_fault_free_window(&outage, 64).is_some()
+                })
+                .count()
+        };
+        let with_8 = count_with(8, &mut rng);
+        let with_64 = count_with(64, &mut rng);
+        assert!(with_8 > trials * 7 / 10, "8 faulty: {with_8}/{trials}");
+        assert!(with_64 < with_8);
+    }
+}

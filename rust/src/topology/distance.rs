@@ -1,0 +1,131 @@
+//! Dense node-to-node distance matrices.
+//!
+//! The mapper consumes an `M x M` matrix of path costs between host nodes.
+//! For the fault-free case this is plain torus hop counts; [`crate::tofa`]
+//! produces the Eq. 1 fault-inflated variant.
+
+use super::torus::Torus;
+
+/// Dense symmetric matrix of inter-node path costs (f32 to match the
+/// PJRT artifact's dtype).
+#[derive(Debug, Clone)]
+pub struct DistanceMatrix {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl DistanceMatrix {
+    /// Zero matrix of size `n x n`.
+    pub fn zeros(n: usize) -> Self {
+        DistanceMatrix {
+            n,
+            data: vec![0.0; n * n],
+        }
+    }
+
+    /// Hop-count matrix of a torus.
+    pub fn from_torus_hops(t: &Torus) -> Self {
+        let n = t.num_nodes();
+        let mut m = DistanceMatrix::zeros(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                let h = t.hops(u, v) as f32;
+                m.set(u, v, h);
+                m.set(v, u, h);
+            }
+        }
+        m
+    }
+
+    /// Matrix restricted to a subset of nodes (the `ScotchExtract` step of
+    /// Listing 1.1). `subset[i]` is the original node id of new index `i`.
+    pub fn extract(&self, subset: &[usize]) -> DistanceMatrix {
+        let k = subset.len();
+        let mut m = DistanceMatrix::zeros(k);
+        for (i, &u) in subset.iter().enumerate() {
+            for (j, &v) in subset.iter().enumerate() {
+                m.set(i, j, self.get(u, v));
+            }
+        }
+        m
+    }
+
+    /// Dimension.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Read entry.
+    #[inline]
+    pub fn get(&self, u: usize, v: usize) -> f32 {
+        self.data[u * self.n + v]
+    }
+
+    /// Write entry.
+    #[inline]
+    pub fn set(&mut self, u: usize, v: usize, w: f32) {
+        self.data[u * self.n + v] = w;
+    }
+
+    /// Raw row-major data.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Row `u`.
+    #[inline]
+    pub fn row(&self, u: usize) -> &[f32] {
+        &self.data[u * self.n..(u + 1) * self.n]
+    }
+
+    /// Maximum entry (e.g. diameter for a hop matrix).
+    pub fn max(&self) -> f32 {
+        self.data.iter().cloned().fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::torus::TorusDims;
+
+    #[test]
+    fn torus_hop_matrix_diagonal_zero_symmetric() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let m = DistanceMatrix::from_torus_hops(&t);
+        for u in 0..m.len() {
+            assert_eq!(m.get(u, u), 0.0);
+            for v in 0..m.len() {
+                assert_eq!(m.get(u, v), m.get(v, u));
+                assert_eq!(m.get(u, v), t.hops(u, v) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn diameter_of_8x8x8() {
+        let t = Torus::new(TorusDims::new(8, 8, 8));
+        let m = DistanceMatrix::from_torus_hops(&t);
+        assert_eq!(m.max(), 12.0);
+    }
+
+    #[test]
+    fn extract_preserves_pairwise_costs() {
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let m = DistanceMatrix::from_torus_hops(&t);
+        let subset = vec![3, 7, 12, 30];
+        let s = m.extract(&subset);
+        assert_eq!(s.len(), 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(s.get(i, j), m.get(subset[i], subset[j]));
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Generic weighted architecture graph (adjacency list).
+//!
+//! Used where an explicit sparse graph is more natural than the dense
+//! [`super::DistanceMatrix`]: host-side recursive bisection and the FATT
+//! plugin's exported platform representation.
+
+/// Undirected weighted graph over `n` vertices.
+#[derive(Debug, Clone)]
+pub struct ArchGraph {
+    n: usize,
+    adj: Vec<Vec<(usize, f32)>>,
+}
+
+impl ArchGraph {
+    /// Empty graph with `n` vertices.
+    pub fn new(n: usize) -> Self {
+        ArchGraph {
+            n,
+            adj: vec![Vec::new(); n],
+        }
+    }
+
+    /// Build the physical-link graph of a torus (unit edge weights).
+    pub fn from_torus(t: &super::torus::Torus) -> Self {
+        let mut g = ArchGraph::new(t.num_nodes());
+        for u in 0..t.num_nodes() {
+            for v in t.neighbors(u) {
+                if u < v {
+                    g.add_edge(u, v, 1.0);
+                }
+            }
+        }
+        g
+    }
+
+    /// Add an undirected edge.
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f32) {
+        assert!(u < self.n && v < self.n && u != v);
+        self.adj[u].push((v, w));
+        self.adj[v].push((u, w));
+    }
+
+    /// Vertex count.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if no vertices.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Neighbours of `u` with weights.
+    pub fn neighbors(&self, u: usize) -> &[(usize, f32)] {
+        &self.adj[u]
+    }
+
+    /// Degree of `u`.
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    /// Unweighted BFS hop distances from `src` (usize::MAX = unreachable).
+    pub fn bfs_hops(&self, src: usize) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.n];
+        let mut queue = std::collections::VecDeque::new();
+        dist[src] = 0;
+        queue.push_back(src);
+        while let Some(u) = queue.pop_front() {
+            for &(v, _) in &self.adj[u] {
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// A pseudo-peripheral vertex: repeated BFS from the farthest vertex.
+    pub fn pseudo_peripheral(&self, start: usize) -> usize {
+        let mut cur = start;
+        let mut ecc = 0usize;
+        for _ in 0..4 {
+            let d = self.bfs_hops(cur);
+            let (far, far_d) = d
+                .iter()
+                .enumerate()
+                .filter(|(_, &x)| x != usize::MAX)
+                .max_by_key(|(_, &x)| x)
+                .map(|(i, &x)| (i, x))
+                .unwrap_or((cur, 0));
+            if far_d <= ecc {
+                break;
+            }
+            ecc = far_d;
+            cur = far;
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::torus::{Torus, TorusDims};
+
+    #[test]
+    fn torus_graph_degrees() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let g = ArchGraph::from_torus(&t);
+        for u in 0..g.len() {
+            assert_eq!(g.degree(u), 6);
+        }
+    }
+
+    #[test]
+    fn bfs_matches_torus_hops() {
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let g = ArchGraph::from_torus(&t);
+        let d = g.bfs_hops(0);
+        for v in 0..g.len() {
+            assert_eq!(d[v], t.hops(0, v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn pseudo_peripheral_is_far() {
+        let t = Torus::new(TorusDims::new(8, 8, 1));
+        let g = ArchGraph::from_torus(&t);
+        let p = g.pseudo_peripheral(0);
+        // Eccentricity of any vertex in an 8x8 torus is 8; the pseudo
+        // peripheral vertex must achieve it.
+        let d = g.bfs_hops(p);
+        assert_eq!(*d.iter().max().unwrap(), 8);
+    }
+}

@@ -1,0 +1,17 @@
+//! Platform topology: 3-D torus model, dimension-ordered routing, distance
+//! matrices, and SimGrid-style platform descriptions.
+//!
+//! This module is the substrate behind the paper's **FATT** (Fault-Aware
+//! Torus Topology) plugin: it provides the routing function `R(u, v)` (the
+//! exact list of links a message traverses) plus a graph representation of
+//! the platform, which [`crate::tofa`] re-weights per Eq. 1.
+
+pub mod distance;
+pub mod graph;
+pub mod platform;
+pub mod torus;
+
+pub use distance::DistanceMatrix;
+pub use graph::ArchGraph;
+pub use platform::Platform;
+pub use torus::{Link, Torus, TorusDims};

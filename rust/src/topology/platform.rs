@@ -1,0 +1,84 @@
+//! SimGrid-style platform description.
+//!
+//! Mirrors the components the paper feeds to SimGrid: nodes with a fixed
+//! compute capability, links with bandwidth + latency, and a static route
+//! for every node pair (provided by the torus DOR routing function). The
+//! paper's values: 6 Gflops per node, 10 Gbps and 1 us per link.
+
+use super::distance::DistanceMatrix;
+use super::torus::{Torus, TorusDims};
+
+/// Immutable platform description shared by the placement and simulation
+/// layers. Fault *state* (which nodes are down in a given scenario) is kept
+/// separate — see [`crate::slurm::FaultModel`] — so one platform can be
+/// reused across thousands of simulated instances.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    torus: Torus,
+    /// Node compute capability in FLOPS.
+    pub flops: f64,
+    /// Link bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Per-link latency in seconds.
+    pub latency: f64,
+}
+
+impl Platform {
+    /// Platform with the paper's simulation parameters:
+    /// 6 Gflops nodes, 10 Gbps links, 1 us latency.
+    pub fn paper_default(dims: TorusDims) -> Self {
+        Platform {
+            torus: Torus::new(dims),
+            flops: 6e9,
+            bandwidth: 10e9 / 8.0, // 10 Gbps in bytes/s
+            latency: 1e-6,
+        }
+    }
+
+    /// Custom parameters.
+    pub fn new(dims: TorusDims, flops: f64, bandwidth_bps: f64, latency_s: f64) -> Self {
+        Platform {
+            torus: Torus::new(dims),
+            flops,
+            bandwidth: bandwidth_bps / 8.0,
+            latency: latency_s,
+        }
+    }
+
+    /// Underlying torus (routing function provider).
+    pub fn torus(&self) -> &Torus {
+        &self.torus
+    }
+
+    /// Node count.
+    pub fn num_nodes(&self) -> usize {
+        self.torus.num_nodes()
+    }
+
+    /// Fault-free hop-count distance matrix.
+    pub fn hop_matrix(&self) -> DistanceMatrix {
+        DistanceMatrix::from_torus_hops(&self.torus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_parameters() {
+        let p = Platform::paper_default(TorusDims::new(8, 8, 8));
+        assert_eq!(p.num_nodes(), 512);
+        assert_eq!(p.flops, 6e9);
+        assert!((p.bandwidth - 1.25e9).abs() < 1.0);
+        assert_eq!(p.latency, 1e-6);
+    }
+
+    #[test]
+    fn hop_matrix_consistent_with_torus() {
+        let p = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let m = p.hop_matrix();
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.len(), 64);
+    }
+}

@@ -1,0 +1,393 @@
+//! 3-D torus topology with dimension-ordered routing (DOR).
+//!
+//! Node ids are row-major: `id = x + X*(y + Y*z)` so "consecutive node ids"
+//! (the window TOFA searches for) are lines along the X dimension, matching
+//! how Slurm enumerates nodes sequentially.
+
+use crate::error::{Error, Result};
+
+/// Dimensions of a 3-D torus (each >= 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TorusDims {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+}
+
+impl TorusDims {
+    /// New dimension triple.
+    pub const fn new(x: usize, y: usize, z: usize) -> Self {
+        TorusDims { x, y, z }
+    }
+
+    /// Total node count.
+    pub const fn nodes(&self) -> usize {
+        self.x * self.y * self.z
+    }
+
+    /// Parse `"8x8x8"` style strings.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<_> = s.split('x').collect();
+        if parts.len() != 3 {
+            return Err(Error::Topology(format!("bad torus dims: {s}")));
+        }
+        let mut v = [0usize; 3];
+        for (i, p) in parts.iter().enumerate() {
+            v[i] = p
+                .parse()
+                .map_err(|_| Error::Topology(format!("bad torus dims: {s}")))?;
+            if v[i] == 0 {
+                return Err(Error::Topology(format!("zero dimension in: {s}")));
+            }
+        }
+        Ok(TorusDims::new(v[0], v[1], v[2]))
+    }
+}
+
+impl std::fmt::Display for TorusDims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.x, self.y, self.z)
+    }
+}
+
+/// A directed physical link between two adjacent torus nodes.
+///
+/// The flow-level simulator treats each direction as an independent
+/// capacity (full-duplex links), matching SimGrid's default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Link {
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// 3-D torus with dimension-ordered (X then Y then Z), shortest-wrap
+/// routing — the fixed routing function `R(u, v)` of the paper's Section 3.
+#[derive(Debug, Clone)]
+pub struct Torus {
+    dims: TorusDims,
+}
+
+impl Torus {
+    /// Build a torus.
+    pub fn new(dims: TorusDims) -> Self {
+        Torus { dims }
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> TorusDims {
+        self.dims
+    }
+
+    /// Node count.
+    pub fn num_nodes(&self) -> usize {
+        self.dims.nodes()
+    }
+
+    /// Row-major id from coordinates.
+    #[inline]
+    pub fn id(&self, x: usize, y: usize, z: usize) -> usize {
+        debug_assert!(x < self.dims.x && y < self.dims.y && z < self.dims.z);
+        x + self.dims.x * (y + self.dims.y * z)
+    }
+
+    /// Coordinates from id.
+    #[inline]
+    pub fn coords(&self, id: usize) -> (usize, usize, usize) {
+        debug_assert!(id < self.num_nodes());
+        let x = id % self.dims.x;
+        let y = (id / self.dims.x) % self.dims.y;
+        let z = id / (self.dims.x * self.dims.y);
+        (x, y, z)
+    }
+
+    /// Signed shortest displacement from `a` to `b` along a ring of size
+    /// `n`: the per-step direction (+1/-1) and the hop count.
+    #[inline]
+    fn ring_step(a: usize, b: usize, n: usize) -> (i64, usize) {
+        if a == b {
+            return (0, 0);
+        }
+        let fwd = (b + n - a) % n; // hops going +1
+        let bwd = (a + n - b) % n; // hops going -1
+        if fwd <= bwd {
+            (1, fwd)
+        } else {
+            (-1, bwd)
+        }
+    }
+
+    /// Hop distance between two ring coordinates.
+    #[inline]
+    fn ring_dist(a: usize, b: usize, n: usize) -> usize {
+        let fwd = (b + n - a) % n;
+        let bwd = (a + n - b) % n;
+        fwd.min(bwd)
+    }
+
+    /// Number of hops of the DOR route from `u` to `v` (torus metric).
+    #[inline]
+    pub fn hops(&self, u: usize, v: usize) -> usize {
+        let (ux, uy, uz) = self.coords(u);
+        let (vx, vy, vz) = self.coords(v);
+        Self::ring_dist(ux, vx, self.dims.x)
+            + Self::ring_dist(uy, vy, self.dims.y)
+            + Self::ring_dist(uz, vz, self.dims.z)
+    }
+
+    /// The routing function `R(u, v)`: ordered list of directed links the
+    /// message traverses, correcting X, then Y, then Z, taking the shorter
+    /// wrap direction per dimension (fixed & deterministic).
+    pub fn route(&self, u: usize, v: usize) -> Vec<Link> {
+        let mut links = Vec::with_capacity(self.hops(u, v));
+        self.route_into(u, v, &mut links);
+        links
+    }
+
+    /// Allocation-free variant of [`Torus::route`] for hot loops.
+    pub fn route_into(&self, u: usize, v: usize, links: &mut Vec<Link>) {
+        links.clear();
+        if u == v {
+            return;
+        }
+        let (mut cx, mut cy, mut cz) = self.coords(u);
+        let (vx, vy, vz) = self.coords(v);
+        let mut cur = u;
+
+        let (dx, nx) = Self::ring_step(cx, vx, self.dims.x);
+        for _ in 0..nx {
+            cx = Self::step(cx, dx, self.dims.x);
+            let nxt = self.id(cx, cy, cz);
+            links.push(Link { src: cur, dst: nxt });
+            cur = nxt;
+        }
+        let (dy, ny) = Self::ring_step(cy, vy, self.dims.y);
+        for _ in 0..ny {
+            cy = Self::step(cy, dy, self.dims.y);
+            let nxt = self.id(cx, cy, cz);
+            links.push(Link { src: cur, dst: nxt });
+            cur = nxt;
+        }
+        let (dz, nz) = Self::ring_step(cz, vz, self.dims.z);
+        for _ in 0..nz {
+            cz = Self::step(cz, dz, self.dims.z);
+            let nxt = self.id(cx, cy, cz);
+            links.push(Link { src: cur, dst: nxt });
+            cur = nxt;
+        }
+        debug_assert_eq!(cur, v);
+    }
+
+    #[inline]
+    fn step(c: usize, dir: i64, n: usize) -> usize {
+        if dir > 0 {
+            (c + 1) % n
+        } else {
+            (c + n - 1) % n
+        }
+    }
+
+    /// Intermediate nodes (excluding endpoints) on the route `u -> v`.
+    /// This is the registry the FATT plugin exports: which nodes serve as
+    /// transit hops for a pair.
+    pub fn intermediates(&self, u: usize, v: usize) -> Vec<usize> {
+        let route = self.route(u, v);
+        route
+            .iter()
+            .map(|l| l.dst)
+            .filter(|&n| n != v)
+            .collect()
+    }
+
+    /// The 6 neighbours of a node (±x, ±y, ±z). For dimensions of size 1
+    /// or 2 duplicates are removed.
+    pub fn neighbors(&self, id: usize) -> Vec<usize> {
+        let (x, y, z) = self.coords(id);
+        let mut out = Vec::with_capacity(6);
+        let d = self.dims;
+        let candidates = [
+            self.id((x + 1) % d.x, y, z),
+            self.id((x + d.x - 1) % d.x, y, z),
+            self.id(x, (y + 1) % d.y, z),
+            self.id(x, (y + d.y - 1) % d.y, z),
+            self.id(x, y, (z + 1) % d.z),
+            self.id(x, y, (z + d.z - 1) % d.z),
+        ];
+        for c in candidates {
+            if c != id && !out.contains(&c) {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// All directed links in the torus.
+    pub fn all_links(&self) -> Vec<Link> {
+        let mut links = Vec::new();
+        for u in 0..self.num_nodes() {
+            for n in self.neighbors(u) {
+                links.push(Link { src: u, dst: n });
+            }
+        }
+        links
+    }
+
+    /// Dense per-node index of directed links, used by the simulator to
+    /// map a `Link` to a contiguous capacity slot. Returns (index map,
+    /// number of links) where slot = `index[src * num_nodes + dst]`.
+    pub fn link_index(&self) -> (Vec<u32>, usize) {
+        let n = self.num_nodes();
+        let mut index = vec![u32::MAX; n * n];
+        let mut count = 0u32;
+        for l in self.all_links() {
+            let slot = l.src * n + l.dst;
+            if index[slot] == u32::MAX {
+                index[slot] = count;
+                count += 1;
+            }
+        }
+        (index, count as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_dims() {
+        assert_eq!(TorusDims::parse("8x8x8").unwrap(), TorusDims::new(8, 8, 8));
+        assert_eq!(
+            TorusDims::parse("4x32x4").unwrap(),
+            TorusDims::new(4, 32, 4)
+        );
+        assert!(TorusDims::parse("8x8").is_err());
+        assert!(TorusDims::parse("0x8x8").is_err());
+        assert!(TorusDims::parse("axbxc").is_err());
+    }
+
+    #[test]
+    fn id_coords_roundtrip() {
+        let t = Torus::new(TorusDims::new(4, 8, 16));
+        for id in 0..t.num_nodes() {
+            let (x, y, z) = t.coords(id);
+            assert_eq!(t.id(x, y, z), id);
+        }
+    }
+
+    #[test]
+    fn consecutive_ids_are_x_lines() {
+        let t = Torus::new(TorusDims::new(8, 8, 8));
+        // ids 0..8 share y=0,z=0
+        for id in 0..8 {
+            let (x, y, z) = t.coords(id);
+            assert_eq!((x, y, z), (id, 0, 0));
+        }
+        assert_eq!(t.coords(8), (0, 1, 0));
+    }
+
+    #[test]
+    fn hops_symmetric_and_triangle() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let n = t.num_nodes();
+        for u in 0..n {
+            assert_eq!(t.hops(u, u), 0);
+            for v in 0..n {
+                assert_eq!(t.hops(u, v), t.hops(v, u));
+                for w in (0..n).step_by(7) {
+                    assert!(t.hops(u, v) <= t.hops(u, w) + t.hops(w, v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_hops_matches_torus_diameter() {
+        let t = Torus::new(TorusDims::new(8, 8, 8));
+        let max = (0..512)
+            .flat_map(|u| (0..512).map(move |v| (u, v)))
+            .map(|(u, v)| t.hops(u, v))
+            .max()
+            .unwrap();
+        assert_eq!(max, 12); // 3 * floor(8/2)
+    }
+
+    #[test]
+    fn route_length_equals_hops() {
+        let t = Torus::new(TorusDims::new(4, 8, 2));
+        for u in (0..t.num_nodes()).step_by(3) {
+            for v in (0..t.num_nodes()).step_by(5) {
+                let r = t.route(u, v);
+                assert_eq!(r.len(), t.hops(u, v), "u={u} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn route_is_connected_path() {
+        let t = Torus::new(TorusDims::new(8, 8, 8));
+        let r = t.route(0, 511);
+        assert_eq!(r.first().unwrap().src, 0);
+        assert_eq!(r.last().unwrap().dst, 511);
+        for w in r.windows(2) {
+            assert_eq!(w[0].dst, w[1].src);
+        }
+        // every step is between physical neighbours
+        for l in &r {
+            assert!(t.neighbors(l.src).contains(&l.dst));
+        }
+    }
+
+    #[test]
+    fn route_uses_wraparound() {
+        let t = Torus::new(TorusDims::new(8, 1, 1));
+        // 0 -> 7 should wrap backwards: 1 hop.
+        assert_eq!(t.hops(0, 7), 1);
+        let r = t.route(0, 7);
+        assert_eq!(r, vec![Link { src: 0, dst: 7 }]);
+    }
+
+    #[test]
+    fn intermediates_exclude_endpoints() {
+        let t = Torus::new(TorusDims::new(8, 8, 8));
+        let inter = t.intermediates(0, 3);
+        assert_eq!(inter, vec![1, 2]);
+        assert!(t.intermediates(0, 1).is_empty());
+        assert!(t.intermediates(5, 5).is_empty());
+    }
+
+    #[test]
+    fn neighbor_counts() {
+        let t = Torus::new(TorusDims::new(8, 8, 8));
+        for id in 0..t.num_nodes() {
+            assert_eq!(t.neighbors(id).len(), 6);
+        }
+        // size-2 dims collapse +/- into one neighbour
+        let t2 = Torus::new(TorusDims::new(2, 2, 2));
+        for id in 0..t2.num_nodes() {
+            assert_eq!(t2.neighbors(id).len(), 3);
+        }
+    }
+
+    #[test]
+    fn link_index_is_dense() {
+        let t = Torus::new(TorusDims::new(4, 4, 4));
+        let (index, count) = t.link_index();
+        let mut seen = vec![false; count];
+        for slot in index.iter().filter(|&&s| s != u32::MAX) {
+            seen[*slot as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(count, t.all_links().len());
+    }
+
+    #[test]
+    fn routes_stay_within_neighbors() {
+        // DOR on asymmetric dims
+        let t = Torus::new(TorusDims::new(4, 32, 4));
+        let r = t.route(3, 400);
+        for l in &r {
+            assert!(t.neighbors(l.src).contains(&l.dst));
+        }
+        assert_eq!(r.len(), t.hops(3, 400));
+    }
+}

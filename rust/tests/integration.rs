@@ -1,0 +1,262 @@
+//! Integration tests: cross-module pipelines, mirroring how the paper's
+//! system is actually wired (profiler -> FANS/TOFA -> simulator -> batch).
+
+use tofa::apps::npb_dt::{DtClass, DtGraph, NpbDt};
+use tofa::apps::{
+    lammps_proxy::LammpsProxy, random_app::RandomApp, ring::RingApp, stencil::Stencil2D,
+    MpiApp,
+};
+use tofa::batch::{BatchConfig, BatchRunner};
+use tofa::commgraph::io as cg_io;
+use tofa::mapping::{cost::hop_bytes_cost, place, Placement, PlacementPolicy};
+use tofa::profiler::profile_app;
+use tofa::rng::Rng;
+use tofa::sim::executor::{simulate_job, Simulator};
+use tofa::sim::failure::FaultScenario;
+use tofa::slurm::controller::Controller;
+use tofa::slurm::jobs::JobState;
+use tofa::slurm::srun;
+use tofa::tofa::placer::{TofaPath, TofaPlacer};
+use tofa::topology::{Platform, TorusDims};
+
+fn all_apps() -> Vec<Box<dyn MpiApp>> {
+    vec![
+        Box::new(LammpsProxy::tiny(27, 3)),
+        Box::new(NpbDt::new(DtGraph::BlackHole, DtClass::W, 2)),
+        Box::new(Stencil2D::new(4, 4, 64, 5)),
+        Box::new(RingApp::new(12, 32_768.0, 5)),
+        Box::new(RandomApp::new(16, 3, 9, 3)),
+    ]
+}
+
+#[test]
+fn every_app_places_and_simulates_under_every_policy() {
+    let platform = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let dist = platform.hop_matrix();
+    for app in all_apps() {
+        let comm = profile_app(app.as_ref()).volume;
+        for policy in PlacementPolicy::all() {
+            let mut rng = Rng::new(13);
+            let p = place(policy, &comm, &dist, &mut rng).unwrap();
+            p.validate(platform.num_nodes()).unwrap();
+            let out = simulate_job(app.as_ref(), &platform, &p.assignment, &[]);
+            let secs = out.seconds().unwrap_or_else(|| {
+                panic!("{} under {policy} aborted without faults", app.name())
+            });
+            assert!(secs > 0.0 && secs.is_finite(), "{} {policy}", app.name());
+        }
+    }
+}
+
+#[test]
+fn topology_aware_beats_random_on_structured_apps() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let dist = platform.hop_matrix();
+    for app in [
+        Box::new(LammpsProxy::tiny(64, 3)) as Box<dyn MpiApp>,
+        Box::new(Stencil2D::new(8, 8, 64, 5)),
+    ] {
+        let comm = profile_app(app.as_ref()).volume;
+        let mut rng = Rng::new(17);
+        let scotch = place(PlacementPolicy::Scotch, &comm, &dist, &mut rng).unwrap();
+        let random = place(PlacementPolicy::Random, &comm, &dist, &mut rng).unwrap();
+        let cs = hop_bytes_cost(&comm, &dist, &scotch.assignment);
+        let cr = hop_bytes_cost(&comm, &dist, &random.assignment);
+        assert!(cs < cr, "{}: scotch {cs} !< random {cr}", app.name());
+    }
+}
+
+#[test]
+fn tofa_zero_aborts_when_clean_window_exists() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = LammpsProxy::tiny(64, 3);
+    let comm = profile_app(&app).volume;
+    let mut master = Rng::new(5);
+    for trial in 0..5u64 {
+        let mut rng = master.fork(trial);
+        let scenario = FaultScenario::random(512, 8, 0.02, &mut rng);
+        let placement = TofaPlacer::default()
+            .place(&comm, &platform, &scenario.true_outage())
+            .unwrap();
+        if placement.path != TofaPath::Window {
+            continue; // no clean window this trial
+        }
+        // simulate with EVERY faulty node down at once: still no abort
+        let out = simulate_job(&app, &platform, &placement.assignment, &scenario.faulty_nodes);
+        assert!(
+            !out.is_abort(),
+            "trial {trial}: window placement aborted with faulty {:?}",
+            scenario.faulty_nodes
+        );
+    }
+}
+
+#[test]
+fn batch_results_internally_consistent() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = NpbDt::new(DtGraph::BlackHole, DtClass::W, 2);
+    let mut runner = BatchRunner::new(&app, &platform);
+    let mut rng = Rng::new(3);
+    let scenario = FaultScenario::random(512, 16, 0.05, &mut rng);
+    let config = BatchConfig {
+        instances: 50,
+        n_faulty: 16,
+        p_f: 0.05,
+        ..Default::default()
+    };
+    let res = runner
+        .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &config, &mut rng)
+        .unwrap();
+    // completion >= instances * success time; equality iff zero aborts
+    let floor = res.success_run_s * config.instances as f64;
+    assert!(res.completion_s >= floor - 1e-9);
+    assert_eq!(
+        res.completion_s > floor + 1e-9,
+        res.total_aborts > 0,
+        "completion {} vs floor {} with {} aborts",
+        res.completion_s,
+        floor,
+        res.total_aborts
+    );
+    assert!(res.aborted_instances <= res.total_aborts);
+    assert!(res.abort_ratio() <= 1.0);
+}
+
+#[test]
+fn batch_deterministic_given_seed() {
+    let platform = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let app = RingApp::new(8, 65_536.0, 5);
+    let mut runner = BatchRunner::new(&app, &platform);
+    let scenario = FaultScenario {
+        faulty_nodes: vec![1, 7, 20],
+        p_f: 0.2,
+        num_nodes: 64,
+    };
+    let config = BatchConfig {
+        instances: 30,
+        n_faulty: 3,
+        p_f: 0.2,
+        ..Default::default()
+    };
+    let run = |runner: &mut BatchRunner| {
+        let mut rng = Rng::new(77);
+        runner
+            .run_batch(PlacementPolicy::Tofa, &scenario, &config, &mut rng)
+            .unwrap()
+    };
+    let a = run(&mut runner);
+    let b = run(&mut runner);
+    assert_eq!(a.completion_s, b.completion_s);
+    assert_eq!(a.aborted_instances, b.aborted_instances);
+}
+
+#[test]
+fn srun_to_controller_to_simulation_pipeline() {
+    // the full Fig. 2 flow without daemons (offline estimates)
+    let platform = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let app = Stencil2D::new(4, 4, 64, 5);
+    let profile = profile_app(&app);
+
+    let dir = std::env::temp_dir().join("tofa-int-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let gpath = dir.join("g.txt");
+    cg_io::save(&profile.volume, &gpath).unwrap();
+
+    let args = srun::parse_args(&[
+        "--ntasks=16",
+        "--distribution=tofa",
+        &format!("--load-matrix={}", gpath.display()),
+    ])
+    .unwrap();
+    let request = srun::build_request(&args).unwrap();
+
+    let mut ctl = Controller::new(platform.clone(), 9);
+    let mut est = vec![0.0; 64];
+    est[0] = 0.5;
+    ctl.set_outage_estimates(&est);
+    ctl.submit(request);
+    let record = ctl.schedule_next().unwrap().unwrap();
+    let assignment = record.assignment.clone().unwrap();
+    assert!(!assignment.contains(&0), "TOFA used the flaky node");
+    Placement::new(assignment.clone()).validate(64).unwrap();
+
+    let out = simulate_job(&app, &platform, &assignment, &[0]);
+    assert!(!out.is_abort(), "job touched the flaky node");
+    ctl.complete(record, JobState::Completed);
+    assert_eq!(ctl.finished().len(), 1);
+}
+
+#[test]
+fn profile_and_simulation_use_same_collective_expansion() {
+    // total bytes accounted by the profiler == total bytes the simulator
+    // pushes through flows (for a collective-only app)
+    use tofa::apps::MpiOp;
+    use tofa::profiler::{CollectiveKind, Communicator};
+    struct CollApp;
+    impl MpiApp for CollApp {
+        fn name(&self) -> &str {
+            "coll"
+        }
+        fn num_ranks(&self) -> usize {
+            8
+        }
+        fn ops(&self) -> Vec<MpiOp> {
+            vec![MpiOp::Collective {
+                comm: Communicator::world(8),
+                kind: CollectiveKind::Allreduce,
+                bytes: 1000.0,
+            }]
+        }
+    }
+    let profile = profile_app(&CollApp);
+    // allreduce RD on 8 ranks: 3 rounds x 8 msgs x 1000 bytes = 24 kB,
+    // double-counted by symmetry in G_v
+    assert_eq!(profile.volume.total(), 2.0 * 24_000.0);
+
+    let platform = Platform::paper_default(TorusDims::new(4, 2, 1));
+    let p: Vec<usize> = (0..8).collect();
+    let out = simulate_job(&CollApp, &platform, &p, &[]);
+    assert!(out.seconds().unwrap() > 0.0);
+}
+
+#[test]
+fn simulator_profile_fast_path_agrees_with_full_run() {
+    let platform = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let app = LammpsProxy::tiny(16, 3);
+    let comm = profile_app(&app).volume;
+    let dist = platform.hop_matrix();
+    let mut rng = Rng::new(23);
+    let placement = place(PlacementPolicy::Scotch, &comm, &dist, &mut rng).unwrap();
+
+    let mut sim = Simulator::new(&app, &platform);
+    let profile = sim.prepare(&placement.assignment);
+    // agreement on many random down-sets
+    for trial in 0..50 {
+        let mut down = vec![false; 64];
+        for _ in 0..3 {
+            down[rng.below_usize(64)] = true;
+        }
+        let fast = profile.outcome(&down);
+        let slow = sim.run(&placement.assignment, &down);
+        assert_eq!(
+            fast.is_abort(),
+            slow.is_abort(),
+            "trial {trial}: fast {fast:?} vs slow {slow:?}"
+        );
+        if let (Some(a), Some(b)) = (fast.seconds(), slow.seconds()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn fig1_contrast_lammps_regular_dt_irregular() {
+    let lammps = profile_app(&LammpsProxy::rhodopsin(128));
+    let dt = profile_app(&NpbDt::class_c());
+    let lm = lammps.volume.diagonal_mass(8);
+    let dm = dt.volume.diagonal_mass(8);
+    assert!(
+        lm > 2.0 * dm,
+        "expected LAMMPS ({lm:.2}) much more banded than DT ({dm:.2})"
+    );
+}

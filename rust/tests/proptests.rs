@@ -1,0 +1,331 @@
+//! Property-based tests over randomized inputs (hand-rolled generator —
+//! proptest is unavailable in the offline environment, so each property is
+//! swept over a few hundred seeded random cases; failures print the seed).
+
+use tofa::commgraph::CommMatrix;
+use tofa::mapping::bisect::bisect;
+use tofa::mapping::cost::{hop_bytes_cost, vertex_contributions};
+use tofa::mapping::kl::{move_delta, swap_delta};
+use tofa::mapping::recmap::{compact_subset, RecursiveMapper};
+use tofa::profiler::{expand, schedule_bytes, CollectiveKind};
+use tofa::rng::Rng;
+use tofa::sim::network::{Flow, NetSim};
+use tofa::tofa::eq1::fault_aware_distance;
+use tofa::tofa::window::{find_fault_free_window, find_route_clean_window};
+use tofa::topology::{DistanceMatrix, Torus, TorusDims};
+
+fn random_comm(rng: &mut Rng, n: usize, edges: usize) -> CommMatrix {
+    let mut c = CommMatrix::new(n);
+    for _ in 0..edges {
+        let i = rng.below_usize(n);
+        let j = rng.below_usize(n);
+        if i != j {
+            c.add_sym(i, j, (rng.below(1_000_000) + 1) as f64);
+        }
+    }
+    c
+}
+
+fn random_dims(rng: &mut Rng) -> TorusDims {
+    let pick = |r: &mut Rng| [1usize, 2, 3, 4, 5, 8][r.below_usize(6)];
+    loop {
+        let d = TorusDims::new(pick(rng), pick(rng), pick(rng));
+        if d.nodes() >= 4 {
+            return d;
+        }
+    }
+}
+
+#[test]
+fn prop_route_length_equals_metric_everywhere() {
+    let mut rng = Rng::new(100);
+    for case in 0..60 {
+        let dims = random_dims(&mut rng);
+        let t = Torus::new(dims);
+        for _ in 0..40 {
+            let u = rng.below_usize(t.num_nodes());
+            let v = rng.below_usize(t.num_nodes());
+            let r = t.route(u, v);
+            assert_eq!(r.len(), t.hops(u, v), "case {case} dims {dims} {u}->{v}");
+            // path is connected and ends at v
+            if u != v {
+                assert_eq!(r.first().unwrap().src, u);
+                assert_eq!(r.last().unwrap().dst, v);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].dst, w[1].src);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eq1_reduces_to_hops_iff_no_faults_on_path() {
+    let mut rng = Rng::new(101);
+    for case in 0..20 {
+        let dims = random_dims(&mut rng);
+        let t = Torus::new(dims);
+        let m = t.num_nodes();
+        let mut outage = vec![0.0; m];
+        for _ in 0..(m / 8).max(1) {
+            outage[rng.below_usize(m)] = 0.02;
+        }
+        let d = fault_aware_distance(&t, &outage);
+        for _ in 0..30 {
+            let a = rng.below_usize(m);
+            let b = rng.below_usize(m);
+            // Eq. 1 assigns one weight per undirected pair, computed from
+            // the lower->higher route (wrap ties make DOR direction-
+            // dependent), so check with the same orientation.
+            let (u, v) = (a.min(b), a.max(b));
+            let clean = t
+                .route(u, v)
+                .iter()
+                .all(|l| outage[l.src] == 0.0 && outage[l.dst] == 0.0);
+            let hops = t.hops(u, v) as f32;
+            if clean {
+                assert_eq!(d.get(u, v), hops, "case {case} clean path inflated");
+            } else {
+                assert!(
+                    d.get(u, v) > hops + 99.0,
+                    "case {case}: dirty path {u}->{v} not inflated: {}",
+                    d.get(u, v)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bisect_exact_sizes_and_nonneg_cut() {
+    let mut rng = Rng::new(102);
+    for case in 0..80 {
+        let n = 2 + rng.below_usize(40);
+        let c = random_comm(&mut rng, n, n * 2);
+        let verts: Vec<usize> = (0..n).collect();
+        let t0 = rng.below_usize(n + 1);
+        let b = bisect(&c, &verts, t0);
+        assert_eq!(b.part0.len(), t0, "case {case}");
+        assert_eq!(b.part1.len(), n - t0);
+        assert!(b.cut >= 0.0);
+        // parts partition the index set
+        let mut all: Vec<usize> = b.part0.iter().chain(b.part1.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn prop_recmap_always_valid_and_no_worse_than_2x_random_mean() {
+    let mut rng = Rng::new(103);
+    for case in 0..25 {
+        let dims = random_dims(&mut rng);
+        let t = Torus::new(dims);
+        let m = t.num_nodes();
+        let n = 2 + rng.below_usize(m.min(40) - 1);
+        let c = random_comm(&mut rng, n, n * 3);
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let p = RecursiveMapper::default().map(&c, &d).unwrap();
+        p.validate(m).unwrap();
+        let mapped = hop_bytes_cost(&c, &d, &p.assignment);
+        // average of 5 random placements
+        let mut acc = 0.0;
+        for _ in 0..5 {
+            let r = rng.sample_distinct(m, n);
+            acc += hop_bytes_cost(&c, &d, &r);
+        }
+        let rand_mean = acc / 5.0;
+        assert!(
+            mapped <= rand_mean * 1.05 + 1e-6,
+            "case {case} dims {dims} n {n}: mapped {mapped} vs random mean {rand_mean}"
+        );
+    }
+}
+
+#[test]
+fn prop_deltas_match_full_recompute() {
+    let mut rng = Rng::new(104);
+    for case in 0..40 {
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let m = t.num_nodes();
+        let n = 3 + rng.below_usize(10);
+        let c = random_comm(&mut rng, n, n * 2);
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let assign = rng.sample_distinct(m, n);
+        let base = hop_bytes_cost(&c, &d, &assign);
+        // moves
+        for _ in 0..10 {
+            let i = rng.below_usize(n);
+            let new = rng.below_usize(m);
+            if assign.contains(&new) {
+                continue;
+            }
+            let mut moved = assign.clone();
+            moved[i] = new;
+            let want = hop_bytes_cost(&c, &d, &moved) - base;
+            let got = move_delta(&c, &d, &assign, i, new);
+            assert!((got - want).abs() < 1e-6, "case {case} move {i}->{new}");
+        }
+        // swaps
+        for _ in 0..10 {
+            let i = rng.below_usize(n);
+            let j = rng.below_usize(n);
+            if i == j {
+                continue;
+            }
+            let mut sw = assign.clone();
+            sw.swap(i, j);
+            let want = hop_bytes_cost(&c, &d, &sw) - base;
+            let got = swap_delta(&c, &d, &assign, i, j);
+            assert!((got - want).abs() < 1e-6, "case {case} swap {i}<->{j}");
+        }
+        // vertex contributions sum = 2 * cost
+        let contribs = vertex_contributions(&c, &d, &assign);
+        assert!((contribs.iter().sum::<f64>() / 2.0 - base).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn prop_collective_schedules_conserve_participants() {
+    let mut rng = Rng::new(105);
+    for case in 0..60 {
+        let n = 2 + rng.below_usize(30);
+        let bytes = (rng.below(10_000) + 1) as f64;
+        for kind in [
+            CollectiveKind::Bcast { root: rng.below_usize(n) },
+            CollectiveKind::Reduce { root: rng.below_usize(n) },
+            CollectiveKind::Allreduce,
+            CollectiveKind::Allgather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::Alltoall,
+            CollectiveKind::Gather { root: rng.below_usize(n) },
+            CollectiveKind::Scatter { root: rng.below_usize(n) },
+        ] {
+            let rounds = expand(kind, n, bytes);
+            assert!(!rounds.is_empty(), "case {case} {kind:?} n={n}");
+            for r in &rounds {
+                for m in r {
+                    assert!(m.src < n && m.dst < n && m.src != m.dst, "{kind:?}");
+                    assert!(m.bytes >= 0.0);
+                }
+            }
+            assert!(schedule_bytes(&rounds) > 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_maxmin_phase_duration_bounds() {
+    // duration >= max flow's solo time; <= serialized total on one link
+    let mut rng = Rng::new(106);
+    let t = Torus::new(TorusDims::new(8, 1, 1));
+    let bw = 1e9;
+    let mut sim = NetSim::new(&t, bw, 0.0);
+    for case in 0..60 {
+        let nf = 1 + rng.below_usize(12);
+        let mut flows = Vec::new();
+        for _ in 0..nf {
+            let u = rng.below_usize(8);
+            let hops = 1 + rng.below_usize(3);
+            let mut links = Vec::new();
+            let mut cur = u;
+            for _ in 0..hops {
+                let nxt = (cur + 1) % 8;
+                links.push(sim.slot(cur, nxt));
+                cur = nxt;
+            }
+            flows.push(Flow {
+                links,
+                bytes: (rng.below(1_000_000) + 1) as f64,
+            });
+        }
+        let d = sim.phase_duration(&flows);
+        let solo_max = flows
+            .iter()
+            .map(|f| f.bytes / bw)
+            .fold(0.0f64, f64::max);
+        let serial: f64 = flows.iter().map(|f| f.bytes / bw).sum();
+        assert!(d >= solo_max - 1e-9, "case {case}: {d} < solo {solo_max}");
+        assert!(d <= serial + 1e-9, "case {case}: {d} > serial {serial}");
+    }
+}
+
+#[test]
+fn prop_windows_are_clean_and_route_closed() {
+    let mut rng = Rng::new(107);
+    let t = Torus::new(TorusDims::new(8, 8, 8));
+    for case in 0..25 {
+        let mut outage = vec![0.0; 512];
+        let n_flaky = 8 + rng.below_usize(24);
+        for f in rng.sample_distinct(512, n_flaky) {
+            outage[f] = 0.02;
+        }
+        let n = 8 + rng.below_usize(100);
+        if let Some(w) = find_fault_free_window(&outage, n) {
+            assert_eq!(w.len(), n);
+            assert!(w.iter().all(|&x| outage[x] == 0.0), "case {case}");
+            // consecutive ids
+            for pair in w.windows(2) {
+                assert_eq!(pair[1], pair[0] + 1);
+            }
+        }
+        if let Some(w) = find_route_clean_window(&outage, n, &t) {
+            // closure property: no route between members crosses a flaky node
+            for (a, &u) in w.iter().enumerate() {
+                for &v in &w[a + 1..] {
+                    for l in t.route(u, v) {
+                        assert_eq!(outage[l.src], 0.0, "case {case}");
+                        assert_eq!(outage[l.dst], 0.0, "case {case}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_compact_subset_is_subset_with_exact_size() {
+    let mut rng = Rng::new(108);
+    for case in 0..30 {
+        let dims = random_dims(&mut rng);
+        let t = Torus::new(dims);
+        let m = t.num_nodes();
+        let d = DistanceMatrix::from_torus_hops(&t);
+        let hosts: Vec<usize> = (0..m).collect();
+        let k = 1 + rng.below_usize(m);
+        let s = compact_subset(&d, &hosts, k);
+        assert_eq!(s.len(), k, "case {case}");
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), k);
+        assert!(s.iter().all(|&h| h < m));
+    }
+}
+
+#[test]
+fn prop_compact_subset_is_compacter_than_random() {
+    let mut rng = Rng::new(109);
+    let t = Torus::new(TorusDims::new(8, 8, 8));
+    let d = DistanceMatrix::from_torus_hops(&t);
+    let hosts: Vec<usize> = (0..512).collect();
+    let pair_sum = |s: &[usize]| -> f64 {
+        let mut acc = 0.0;
+        for &a in s {
+            for &b in s {
+                acc += d.get(a, b) as f64;
+            }
+        }
+        acc
+    };
+    for k in [16usize, 64, 85] {
+        let s = compact_subset(&d, &hosts, k);
+        let r = rng.sample_distinct(512, k);
+        assert!(
+            pair_sum(&s) < 0.7 * pair_sum(&r),
+            "k={k}: compact {} vs random {}",
+            pair_sum(&s),
+            pair_sum(&r)
+        );
+    }
+}
