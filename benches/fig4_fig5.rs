@@ -1,12 +1,15 @@
 //! Bench for Figures 4 / 5a / 5b: the batch resilience experiments.
 //!
-//! Reports both the paper's metrics (batch completion time, abort ratio)
-//! and the wall-clock cost of a full 100-instance batch per policy —
-//! demonstrating the JobProfile fast path (EXPERIMENTS.md §Perf).
+//! Reports the paper's metrics (batch completion time, abort ratio), the
+//! wall-clock cost of a full 100-instance batch per policy — demonstrating
+//! the JobProfile fast path (EXPERIMENTS.md §Perf) — and the parallel
+//! engine's speedup on the full `(batch, policy)` sweep at 1/2/4 workers.
+
+use std::time::Instant;
 
 use tofa::apps::npb_dt::NpbDt;
 use tofa::apps::{lammps_proxy::LammpsProxy, MpiApp};
-use tofa::batch::{BatchConfig, BatchRunner};
+use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
 use tofa::mapping::PlacementPolicy;
 use tofa::report::bench::{bench, section};
 use tofa::rng::Rng;
@@ -46,6 +49,49 @@ fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) {
     }
 }
 
+/// The full Fig. 4-style sweep (batches x {default, tofa}) at several
+/// worker counts. Fresh runner (and thus fresh phase cache) per point so
+/// each measures cold-cache wall-clock; the checksum shows worker-count
+/// invariance of the results.
+fn sweep_speedup() {
+    section("parallel sweep: 10 batches x 2 policies, NPB-DT, 16 faulty @ 2%");
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = NpbDt::class_c();
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    let mut serial_wall = None;
+    for workers in [1usize, 2, 4] {
+        let runner = BatchRunner::new(&app, &platform);
+        let config = BatchConfig {
+            instances: 100,
+            n_faulty: 16,
+            p_f: 0.02,
+            parallelism: Parallelism::fixed(workers),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let grid = run_grid(&runner, &policies, &config, 10, 42).unwrap();
+        let wall = t0.elapsed();
+        let checksum: f64 = grid.cells.iter().map(|c| c.result.completion_s).sum();
+        let speedup = match serial_wall {
+            None => {
+                serial_wall = Some(wall);
+                1.0
+            }
+            Some(base) => base.as_secs_f64() / wall.as_secs_f64(),
+        };
+        println!(
+            "{:<44} {:>12?}  speedup {:>5.2}x  slowest shard {:>12?}  \
+             cache hit-rate {:>5.1}%  checksum {:.3}",
+            format!("sweep/{workers}-workers"),
+            wall,
+            speedup,
+            grid.telemetry.slowest_shard(),
+            100.0 * grid.telemetry.hit_rate(),
+            checksum,
+        );
+    }
+}
+
 fn main() {
     run_case(
         "Figure 4: NPB-DT class C, 16 faulty @ 2%, 100-instance batch",
@@ -62,4 +108,5 @@ fn main() {
         &LammpsProxy::rhodopsin(64),
         16,
     );
+    sweep_speedup();
 }

@@ -7,12 +7,20 @@
 //! scratch and the batch completion time is augmented by one
 //! successful-run interval per abort (the paper's exact accounting).
 
+pub mod parallel;
+
+pub use parallel::{run_grid, GridCell, GridRun, Parallelism};
+
+use std::sync::Arc;
+
 use crate::apps::MpiApp;
 use crate::commgraph::CommMatrix;
 use crate::error::Result;
 use crate::mapping::PlacementPolicy;
 use crate::profiler::profile_app;
+use crate::report::bench::ParallelReport;
 use crate::rng::Rng;
+use crate::sim::cache::PhaseCache;
 use crate::sim::executor::{JobOutcome, Simulator};
 use crate::sim::failure::{sample_down_nodes, FaultScenario};
 use crate::slurm::plugins::fans::FansPlugin;
@@ -32,6 +40,9 @@ pub struct BatchConfig {
     /// Give up on an instance after this many consecutive aborts
     /// (safety net; effectively unreachable at the paper's p_f).
     pub max_restarts: u32,
+    /// Worker-pool sizing for instance shards / grid cells. Changing it
+    /// never changes results (see [`parallel`]), only wall-clock.
+    pub parallelism: Parallelism,
 }
 
 impl Default for BatchConfig {
@@ -42,8 +53,19 @@ impl Default for BatchConfig {
             p_f: 0.02,
             heartbeat_rounds: 0,
             max_restarts: 1000,
+            parallelism: Parallelism::serial(),
         }
     }
+}
+
+/// How one batch instance resolved.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceOutcome {
+    /// Simulated time the instance contributed to the queue (its final
+    /// successful run plus one success-interval per abort).
+    pub completion_s: f64,
+    /// Aborts (restarts) the instance went through.
+    pub aborts: u32,
 }
 
 /// Result of one batch run.
@@ -59,6 +81,11 @@ pub struct BatchResult {
     pub instances: usize,
     /// Fault-free single-run duration under this placement.
     pub success_run_s: f64,
+    /// Per-instance outcomes, in instance order (identical for every
+    /// worker count — the determinism contract).
+    pub outcomes: Vec<InstanceOutcome>,
+    /// Per-shard wall-clock and phase-cache counters for this run.
+    pub telemetry: ParallelReport,
 }
 
 impl BatchResult {
@@ -69,6 +96,11 @@ impl BatchResult {
 }
 
 /// Runs batches of one application on one platform.
+///
+/// Cloning a runner is cheap relative to a batch and **shares the phase
+/// cache** — the grid engine ([`parallel::run_grid`]) clones one runner
+/// per worker so all cells reuse each other's network solves.
+#[derive(Clone)]
 pub struct BatchRunner {
     platform: Platform,
     comm: CommMatrix,
@@ -91,6 +123,16 @@ impl BatchRunner {
     /// The profiled communication graph.
     pub fn comm(&self) -> &CommMatrix {
         &self.comm
+    }
+
+    /// The platform the runner simulates on.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// The shared phase-duration cache (shared further by every clone).
+    pub fn cache(&self) -> Arc<PhaseCache> {
+        self.sim.cache()
     }
 
     /// Estimate outage probabilities the way the controller would: either
@@ -123,7 +165,11 @@ impl BatchRunner {
     ///
     /// The placement is computed **once per batch** (the paper re-derives
     /// it per job, but within a batch the inputs — comm graph and outage
-    /// estimates — are identical, so the mapping is too).
+    /// estimates — are identical, so the mapping is too). Instances then
+    /// execute on `config.parallelism` workers; each instance derives its
+    /// RNG stream from one base draw plus its index, and the per-instance
+    /// results are reduced in instance order, so the batch is
+    /// bit-identical for every worker count.
     pub fn run_batch(
         &mut self,
         policy: PlacementPolicy,
@@ -136,19 +182,23 @@ impl BatchRunner {
             self.fans
                 .select(policy, &self.comm, &self.platform, &outage, rng)?;
         let assignment = placement.assignment;
+        // simulator-local stats give *exact* per-run cache attribution
+        // even when other grid cells hammer the shared cache concurrently
+        let stats0 = self.sim.stats().clone();
         // one fault-free simulation + touched-node sweep; every instance
         // then resolves with an intersection test (see JobProfile).
         let profile = self.sim.prepare(&assignment);
         let success_run_s = profile.success_s;
 
-        let mut completion = 0.0f64;
-        let mut aborted_instances = 0usize;
-        let mut total_aborts = 0usize;
-        for _ in 0..config.instances {
-            let mut aborted_this = false;
-            let mut restarts = 0u32;
+        let stream_base = rng.next_u64();
+        let workers = config.parallelism.for_items(config.instances);
+        let profile = &profile;
+        let (outcomes, shards) = parallel::run_sharded(config.instances, workers, |i| {
+            let mut irng = Rng::stream(stream_base, i as u64);
+            let mut completion = 0.0f64;
+            let mut aborts = 0u32;
             loop {
-                let down = sample_down_nodes(scenario, rng);
+                let down = sample_down_nodes(scenario, &mut irng);
                 match profile.outcome(&down) {
                     JobOutcome::Completed { seconds } => {
                         completion += seconds;
@@ -158,25 +208,44 @@ impl BatchRunner {
                         // paper accounting: each abort costs one
                         // successful-run interval, then restart
                         completion += success_run_s;
-                        total_aborts += 1;
-                        aborted_this = true;
-                        restarts += 1;
-                        if restarts >= config.max_restarts {
+                        aborts += 1;
+                        if aborts >= config.max_restarts {
                             break;
                         }
                     }
                 }
             }
-            if aborted_this {
+            InstanceOutcome {
+                completion_s: completion,
+                aborts,
+            }
+        });
+
+        // reduce in instance order: the f64 sum is worker-count invariant
+        let mut completion = 0.0f64;
+        let mut aborted_instances = 0usize;
+        let mut total_aborts = 0usize;
+        for o in &outcomes {
+            completion += o.completion_s;
+            total_aborts += o.aborts as usize;
+            if o.aborts > 0 {
                 aborted_instances += 1;
             }
         }
+        let stats1 = self.sim.stats();
+        let telemetry = ParallelReport {
+            shards,
+            cache_lookups: stats1.comm_phases - stats0.comm_phases,
+            cache_hits: stats1.cache_hits - stats0.cache_hits,
+        };
         Ok(BatchResult {
             completion_s: completion,
             aborted_instances,
             total_aborts,
             instances: config.instances,
             success_run_s,
+            outcomes,
+            telemetry,
         })
     }
 }
@@ -261,6 +330,94 @@ mod tests {
         assert_eq!(res.aborted_instances, 2);
         assert_eq!(res.total_aborts, 6);
         assert!((res.completion_s - 6.0 * res.success_run_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let (_, plat) = runner(16);
+        let scenario = FaultScenario {
+            faulty_nodes: (0..12).collect(),
+            p_f: 0.3,
+            num_nodes: plat.num_nodes(),
+        };
+        let run = |workers: usize| {
+            let app = LammpsProxy::tiny(16, 3);
+            let mut r = BatchRunner::new(&app, &plat);
+            let cfg = BatchConfig {
+                instances: 40,
+                n_faulty: 12,
+                p_f: 0.3,
+                parallelism: Parallelism::fixed(workers),
+                ..Default::default()
+            };
+            let mut rng = Rng::new(9);
+            r.run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+                .unwrap()
+        };
+        let serial = run(1);
+        assert_eq!(serial.outcomes.len(), 40);
+        for workers in [2usize, 4, 7] {
+            let par = run(workers);
+            assert_eq!(par.outcomes, serial.outcomes, "{workers} workers");
+            assert_eq!(
+                par.completion_s.to_bits(),
+                serial.completion_s.to_bits(),
+                "{workers} workers"
+            );
+            assert_eq!(par.aborted_instances, serial.aborted_instances);
+            assert_eq!(par.total_aborts, serial.total_aborts);
+        }
+    }
+
+    #[test]
+    fn grid_results_independent_of_worker_count() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let app = LammpsProxy::tiny(16, 2);
+        let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+        let run = |workers: usize| {
+            let r = BatchRunner::new(&app, &plat);
+            let cfg = BatchConfig {
+                instances: 10,
+                n_faulty: 6,
+                p_f: 0.4,
+                parallelism: Parallelism::fixed(workers),
+                ..Default::default()
+            };
+            run_grid(&r, &policies, &cfg, 4, 11).unwrap().cells
+        };
+        let serial = run(1);
+        let par = run(4);
+        assert_eq!(serial.len(), 8);
+        assert_eq!(par.len(), 8);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.batch_index, b.batch_index);
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.result.outcomes, b.result.outcomes);
+            assert_eq!(
+                a.result.completion_s.to_bits(),
+                b.result.completion_s.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_telemetry_covers_all_instances() {
+        let (mut r, plat) = runner(16);
+        let scenario = FaultScenario::none(plat.num_nodes());
+        let cfg = BatchConfig {
+            instances: 12,
+            n_faulty: 0,
+            parallelism: Parallelism::fixed(3),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1);
+        let res = r
+            .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+            .unwrap();
+        assert_eq!(res.telemetry.total_items(), 12);
+        assert_eq!(res.telemetry.shards.len(), 3);
+        // prepare() ran phases through the shared cache
+        assert!(res.telemetry.cache_lookups > 0);
     }
 
     #[test]

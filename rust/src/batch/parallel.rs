@@ -1,0 +1,291 @@
+//! Sharded parallel execution for batch experiments.
+//!
+//! Two levels of parallelism, both deterministic:
+//!
+//! * **instances** — [`run_sharded`] splits a batch's instances into
+//!   contiguous shards executed on a scoped-thread worker pool; each
+//!   instance derives its RNG stream from `(base draw, instance index)`
+//!   via [`Rng::stream`], so results are bit-identical for any worker
+//!   count (including 1).
+//! * **scenario grid** — [`run_grid`] fans the `(batch, policy)` grid of
+//!   the Fig. 4/5 sweeps out over the pool. Every cell derives its fault
+//!   scenario and RNG from `(seed, batch index)`, clones the runner, and
+//!   shares one [`crate::sim::PhaseCache`], so all cells with the same
+//!   placement reuse each other's network solves across threads.
+//!
+//! The pool is hand-rolled on `std::thread::scope` — the offline build
+//! environment has no rayon — and shards report per-worker wall-clock
+//! through [`ShardTiming`] for the telemetry in [`super::BatchResult`].
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::mapping::PlacementPolicy;
+use crate::report::bench::{ParallelReport, ShardTiming};
+use crate::rng::Rng;
+use crate::sim::failure::FaultScenario;
+
+use super::{BatchConfig, BatchResult, BatchRunner};
+
+/// Worker-pool sizing for batch/grid execution.
+///
+/// `workers == 0` means "auto": use every core
+/// (`std::thread::available_parallelism`). The determinism contract holds
+/// for every value — changing `workers` never changes results, only
+/// wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Worker threads; 0 = one per available core.
+    pub workers: usize,
+}
+
+impl Parallelism {
+    /// Single-threaded execution (the default).
+    pub fn serial() -> Self {
+        Parallelism { workers: 1 }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Parallelism { workers: 0 }
+    }
+
+    /// Exactly `workers` threads (0 = auto).
+    pub fn fixed(workers: usize) -> Self {
+        Parallelism { workers }
+    }
+
+    /// The concrete worker count this configuration resolves to.
+    pub fn effective(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.workers
+        }
+    }
+
+    /// Workers to actually spawn for `items` work items.
+    pub fn for_items(&self, items: usize) -> usize {
+        if items == 0 {
+            1
+        } else {
+            self.effective().min(items)
+        }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+/// Map `f` over `0..items` on `workers` scoped threads.
+///
+/// Items are partitioned into *balanced* contiguous shards — the first
+/// `items % workers` shards take one extra item, so no worker ever sits
+/// idle (naive ceil-chunking would leave trailing shards empty). Results
+/// are returned **in item order**, with per-shard wall-clock reported
+/// alongside. Because `f` receives only the item index, results cannot
+/// depend on scheduling — callers keep determinism by deriving all
+/// randomness from the index.
+pub fn run_sharded<T, F>(items: usize, workers: usize, f: F) -> (Vec<T>, Vec<ShardTiming>)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, items.max(1));
+    if workers <= 1 {
+        let t0 = Instant::now();
+        let out: Vec<T> = (0..items).map(&f).collect();
+        let timing = ShardTiming {
+            shard: 0,
+            items,
+            wall: t0.elapsed(),
+        };
+        return (out, vec![timing]);
+    }
+    let base = items / workers;
+    let extra = items % workers;
+    let mut results: Vec<Option<T>> = (0..items).map(|_| None).collect();
+    let mut timings: Vec<ShardTiming> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let lo = w * base + w.min(extra);
+                let len = base + usize::from(w < extra);
+                scope.spawn(move || {
+                    let t0 = Instant::now();
+                    let vals: Vec<T> = (lo..lo + len).map(f).collect();
+                    (w, lo, vals, t0.elapsed())
+                })
+            })
+            .collect();
+        for handle in handles {
+            let (w, lo, vals, wall) = handle.join().expect("batch worker panicked");
+            timings.push(ShardTiming {
+                shard: w,
+                items: vals.len(),
+                wall,
+            });
+            for (k, v) in vals.into_iter().enumerate() {
+                results[lo + k] = Some(v);
+            }
+        }
+    });
+    let out = results
+        .into_iter()
+        .map(|r| r.expect("shard left a hole"))
+        .collect();
+    (out, timings)
+}
+
+/// One cell of a batch sweep: `(batch index, policy)` with its result.
+#[derive(Debug, Clone)]
+pub struct GridCell {
+    /// Batch index within the sweep.
+    pub batch_index: usize,
+    /// Placement policy the cell ran under.
+    pub policy: PlacementPolicy,
+    /// The batch result.
+    pub result: BatchResult,
+}
+
+/// A completed `batches x policies` sweep: the cells plus the sweep-level
+/// telemetry (per-shard wall-clock of the grid pool, and the phase-cache
+/// counters accumulated across the whole sweep — exact, since the sweep
+/// owns the cache for its duration).
+#[derive(Debug, Clone)]
+pub struct GridRun {
+    /// Batch-major cells: `cells[b * policies.len() + p]`.
+    pub cells: Vec<GridCell>,
+    /// Grid-pool shard timings + whole-sweep cache counters.
+    pub telemetry: ParallelReport,
+}
+
+/// Run a `batches x policies` sweep in parallel.
+///
+/// Cell layout is batch-major: `cells[b * policies.len() + p]`. Every
+/// policy within batch `b` sees the **same** fault scenario (derived from
+/// `(seed, b)`), matching the paper's paired comparison. Each cell clones
+/// `runner` — sharing its [`crate::sim::PhaseCache`] — so all cells reuse
+/// each other's network solves. The worker budget splits across levels:
+/// with at least as many cells as workers each cell runs its instances
+/// serially; with fewer cells the whole budget is distributed (remainder
+/// included) over instance-level shards inside the cells, so small grids
+/// still use the whole machine. Either way results are independent of
+/// the worker count.
+pub fn run_grid(
+    runner: &BatchRunner,
+    policies: &[PlacementPolicy],
+    config: &BatchConfig,
+    batches: usize,
+    seed: u64,
+) -> Result<GridRun> {
+    let npol = policies.len();
+    let cells = batches * npol;
+    if cells == 0 {
+        return Ok(GridRun {
+            cells: Vec::new(),
+            telemetry: Default::default(),
+        });
+    }
+    let workers = config.parallelism.for_items(cells);
+    // split the worker budget exactly: with fewer cells than cores, each
+    // cell gets floor(effective/cells) inner workers and the first
+    // (effective % cells) cells one extra, so the totals always sum to
+    // the machine (inner counts never change results, only wall-clock)
+    let effective = config.parallelism.effective();
+    let (inner_base, inner_extra) = if cells >= effective {
+        (1, 0)
+    } else {
+        (effective / cells, effective % cells)
+    };
+    let cache = runner.cache();
+    let (lookups0, hits0) = (cache.lookups(), cache.hits());
+    let (results, shards) = run_sharded(cells, workers, |c| {
+        let b = c / npol;
+        let p = c % npol;
+        let policy = policies[p];
+        // identical scenario for every policy of batch `b`
+        let mut scen_rng = Rng::stream(seed, b as u64);
+        let scenario = FaultScenario::random(
+            runner.platform().num_nodes(),
+            config.n_faulty,
+            config.p_f,
+            &mut scen_rng,
+        );
+        let mut cell_rng = scen_rng.fork(1 + p as u64);
+        let mut local = runner.clone();
+        let mut my_cfg = config.clone();
+        my_cfg.parallelism = Parallelism::fixed(inner_base + usize::from(c < inner_extra));
+        local
+            .run_batch(policy, &scenario, &my_cfg, &mut cell_rng)
+            .map(|result| GridCell {
+                batch_index: b,
+                policy,
+                result,
+            })
+    });
+    let cells = results.into_iter().collect::<Result<Vec<_>>>()?;
+    Ok(GridRun {
+        cells,
+        telemetry: ParallelReport {
+            shards,
+            cache_lookups: cache.lookups() - lookups0,
+            cache_hits: cache.hits() - hits0,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharded_results_are_in_item_order() {
+        for workers in [1usize, 2, 3, 8] {
+            let (out, timings) = run_sharded(17, workers, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+            assert_eq!(timings.iter().map(|t| t.items).sum::<usize>(), 17);
+        }
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        let (out, timings) = run_sharded(0, 4, |i| i);
+        assert!(out.is_empty());
+        assert_eq!(timings.len(), 1);
+    }
+
+    #[test]
+    fn more_workers_than_items_clamps() {
+        let (out, timings) = run_sharded(3, 64, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+        assert!(timings.len() <= 3);
+    }
+
+    #[test]
+    fn shards_are_balanced_with_no_idle_workers() {
+        let (out, timings) = run_sharded(10, 7, |i| i);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        assert_eq!(timings.len(), 7);
+        assert!(timings.iter().all(|t| t.items >= 1), "idle worker: {timings:?}");
+        let most = timings.iter().map(|t| t.items).max().unwrap();
+        let least = timings.iter().map(|t| t.items).min().unwrap();
+        assert!(most - least <= 1, "unbalanced: {most} vs {least}");
+    }
+
+    #[test]
+    fn parallelism_resolution() {
+        assert_eq!(Parallelism::serial().effective(), 1);
+        assert_eq!(Parallelism::fixed(6).effective(), 6);
+        assert!(Parallelism::auto().effective() >= 1);
+        assert_eq!(Parallelism::fixed(8).for_items(3), 3);
+        assert_eq!(Parallelism::fixed(2).for_items(0), 1);
+        assert_eq!(Parallelism::default(), Parallelism::serial());
+    }
+}

@@ -8,7 +8,7 @@ use std::path::Path;
 
 use tofa::apps::npb_dt::NpbDt;
 use tofa::apps::{lammps_proxy::LammpsProxy, ring::RingApp, stencil::Stencil2D, MpiApp};
-use tofa::batch::{BatchConfig, BatchRunner};
+use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
 use tofa::commgraph::heatmap;
 use tofa::error::Error;
 use tofa::mapping::{cost, place as place_policy, PlacementPolicy};
@@ -16,7 +16,6 @@ use tofa::profiler::profile_app;
 use tofa::report::{fmt_secs, improvement_pct, Table};
 use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
-use tofa::sim::failure::FaultScenario;
 use tofa::topology::{Platform, TorusDims};
 
 type Result<T> = std::result::Result<T, Error>;
@@ -177,6 +176,11 @@ pub fn table1(results: &Path, seed: u64) -> Result<()> {
 }
 
 /// Shared driver for the batch experiments (Figures 4, 5a, 5b).
+///
+/// Runs the `(batch, policy)` grid on the sharded parallel engine
+/// (`workers` threads; 0 = one per core) with one shared phase-solve
+/// cache. Results are independent of the worker count.
+#[allow(clippy::too_many_arguments)]
 fn batch_experiment(
     results: &Path,
     title: &str,
@@ -186,13 +190,15 @@ fn batch_experiment(
     batches: usize,
     instances: usize,
     seed: u64,
+    workers: usize,
 ) -> Result<()> {
     let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
-    let mut runner = BatchRunner::new(app, &platform);
+    let runner = BatchRunner::new(app, &platform);
     let config = BatchConfig {
         instances,
         n_faulty,
         p_f,
+        parallelism: Parallelism::fixed(workers),
         ..Default::default()
     };
     let mut t = Table::new(
@@ -206,25 +212,20 @@ fn batch_experiment(
             "tofa aborts",
         ],
     );
-    let mut master = Rng::new(seed);
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    let wall = std::time::Instant::now();
+    let grid = run_grid(&runner, &policies, &config, batches, seed)?;
+    let wall = wall.elapsed();
     let (mut sum_d, mut sum_t) = (0.0, 0.0);
     let (mut ab_d, mut ab_t) = (0usize, 0usize);
-    for b in 0..batches {
-        let mut scenario_rng = master.fork(b as u64 + 1);
-        let scenario =
-            FaultScenario::random(platform.num_nodes(), n_faulty, p_f, &mut scenario_rng);
-        // identical instance randomness per policy: fork per policy from
-        // the same batch stream
-        let mut rng_d = scenario_rng.fork(101);
-        let mut rng_t = scenario_rng.fork(202);
-        let d = runner.run_batch(PlacementPolicy::DefaultSlurm, &scenario, &config, &mut rng_d)?;
-        let tt = runner.run_batch(PlacementPolicy::Tofa, &scenario, &config, &mut rng_t)?;
+    for pair in grid.cells.chunks(2) {
+        let (d, tt) = (&pair[0].result, &pair[1].result);
         sum_d += d.completion_s;
         sum_t += tt.completion_s;
         ab_d += d.aborted_instances;
         ab_t += tt.aborted_instances;
         t.row(vec![
-            b.to_string(),
+            pair[0].batch_index.to_string(),
             fmt_secs(d.completion_s),
             fmt_secs(tt.completion_s),
             format!("{:.1}", improvement_pct(d.completion_s, tt.completion_s)),
@@ -235,17 +236,32 @@ fn batch_experiment(
     print!("{}", t.render());
     let total = (batches * instances) as f64;
     println!(
-        "avg improvement: {:.1}%   abort ratio: default {:.1}% vs tofa {:.1}%\n",
+        "avg improvement: {:.1}%   abort ratio: default {:.1}% vs tofa {:.1}%",
         improvement_pct(sum_d, sum_t),
         100.0 * ab_d as f64 / total,
         100.0 * ab_t as f64 / total,
+    );
+    println!(
+        "[parallel] {} grid workers, wall-clock {:.3} s (slowest shard {:.3} s), \
+         phase-cache {} entries, hit-rate {:.1}%\n",
+        grid.telemetry.shards.len(),
+        wall.as_secs_f64(),
+        grid.telemetry.slowest_shard().as_secs_f64(),
+        runner.cache().len(),
+        100.0 * grid.telemetry.hit_rate(),
     );
     t.save_csv(results)?;
     Ok(())
 }
 
 /// Figure 4: NPB-DT batches with 16 faulty nodes @ 2%.
-pub fn fig4(results: &Path, seed: u64, batches: usize, instances: usize) -> Result<()> {
+pub fn fig4(
+    results: &Path,
+    seed: u64,
+    batches: usize,
+    instances: usize,
+    workers: usize,
+) -> Result<()> {
     let app = NpbDt::class_c();
     batch_experiment(
         results,
@@ -256,10 +272,12 @@ pub fn fig4(results: &Path, seed: u64, batches: usize, instances: usize) -> Resu
         batches,
         instances,
         seed,
+        workers,
     )
 }
 
 /// Figures 5a / 5b: LAMMPS 64p batches with 8 or 16 faulty nodes @ 2%.
+#[allow(clippy::too_many_arguments)]
 pub fn fig5(
     results: &Path,
     seed: u64,
@@ -267,6 +285,7 @@ pub fn fig5(
     batches: usize,
     instances: usize,
     tag: &str,
+    workers: usize,
 ) -> Result<()> {
     let app = LammpsProxy::rhodopsin(64);
     batch_experiment(
@@ -278,6 +297,7 @@ pub fn fig5(
         batches,
         instances,
         seed,
+        workers,
     )
 }
 

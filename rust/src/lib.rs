@@ -38,6 +38,18 @@
 //! let outcome = simulate_job(&app, &platform, &placement.assignment, &[]);
 //! println!("completion: {:?}", outcome);
 //! ```
+//!
+//! ## Parallel batch engine
+//!
+//! The Section 5.2 batch experiments run on a sharded worker pool — see
+//! [`batch::parallel`] for the determinism contract (results are
+//! bit-identical for every worker count) and [`sim::PhaseCache`] for the
+//! shared phase-solve cache that lets concurrent instances reuse each
+//! other's network solves.
+
+// Index-heavy numerical kernels (max-min filling, FNV hashing) read more
+// clearly with explicit indices; keep clippy's style nit quiet crate-wide.
+#![allow(clippy::needless_range_loop)]
 
 pub mod apps;
 pub mod batch;
@@ -58,7 +70,7 @@ pub mod prelude {
     pub use crate::apps::{
         lammps_proxy::LammpsProxy, npb_dt::NpbDt, MpiApp, MpiOp,
     };
-    pub use crate::batch::{BatchConfig, BatchRunner};
+    pub use crate::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
     pub use crate::commgraph::CommMatrix;
     pub use crate::error::{Error, Result};
     pub use crate::mapping::{

@@ -32,6 +32,8 @@ OPTIONS:
   --seed=<u64>         base RNG seed               (default: 42)
   --batches=<n>        batches for fig4/fig5       (default: 10)
   --instances=<n>      instances per batch         (default: 100)
+  --workers=<n>        worker threads for batch sweeps; results are
+                       identical for any value     (default: 0 = all cores)
   --app=<spec>         app for profile/place: lammps:<ranks> | npb-dt |
                        stencil:<px>x<py> | ring:<ranks>   (default: lammps:64)
   --torus=<XxYxZ>      torus dims for place        (default: 8x8x8)
@@ -42,6 +44,7 @@ struct Opts {
     seed: u64,
     batches: usize,
     instances: usize,
+    workers: usize,
     app: String,
     torus: String,
 }
@@ -52,6 +55,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         seed: 42,
         batches: 10,
         instances: 100,
+        workers: 0,
         app: "lammps:64".to_string(),
         torus: "8x8x8".to_string(),
     };
@@ -64,6 +68,8 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             o.batches = v.parse().map_err(|_| format!("bad --batches: {v}"))?;
         } else if let Some(v) = a.strip_prefix("--instances=") {
             o.instances = v.parse().map_err(|_| format!("bad --instances: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--workers=") {
+            o.workers = v.parse().map_err(|_| format!("bad --workers: {v}"))?;
         } else if let Some(v) = a.strip_prefix("--app=") {
             o.app = v.to_string();
         } else if let Some(v) = a.strip_prefix("--torus=") {
@@ -75,7 +81,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
     Ok(o)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().map(|s| s.as_str()) else {
         eprint!("{USAGE}");
@@ -95,17 +101,21 @@ fn main() -> anyhow::Result<()> {
         "fig3a" => experiments::fig3a(r, opts.seed)?,
         "fig3b" => experiments::fig3b(r, opts.seed)?,
         "table1" => experiments::table1(r, opts.seed)?,
-        "fig4" => experiments::fig4(r, opts.seed, opts.batches, opts.instances)?,
-        "fig5a" => experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a")?,
-        "fig5b" => experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b")?,
+        "fig4" => experiments::fig4(r, opts.seed, opts.batches, opts.instances, opts.workers)?,
+        "fig5a" => {
+            experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a", opts.workers)?
+        }
+        "fig5b" => {
+            experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b", opts.workers)?
+        }
         "all" => {
             experiments::fig1(r)?;
             experiments::fig3a(r, opts.seed)?;
             experiments::fig3b(r, opts.seed)?;
             experiments::table1(r, opts.seed)?;
-            experiments::fig4(r, opts.seed, opts.batches, opts.instances)?;
-            experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a")?;
-            experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b")?;
+            experiments::fig4(r, opts.seed, opts.batches, opts.instances, opts.workers)?;
+            experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a", opts.workers)?;
+            experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b", opts.workers)?;
         }
         "profile" => experiments::profile(&opts.app)?,
         "place" => experiments::place(&opts.app, &opts.torus, opts.seed)?,

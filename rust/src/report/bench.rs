@@ -71,6 +71,68 @@ pub fn section(title: &str) {
     println!("\n### {title}");
 }
 
+/// Wall-clock of one worker shard of a parallel region
+/// (see [`crate::batch::parallel`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardTiming {
+    /// Shard (worker) index.
+    pub shard: usize,
+    /// Items the shard processed.
+    pub items: usize,
+    /// Wall-clock the shard spent on them.
+    pub wall: Duration,
+}
+
+/// Telemetry for one parallel region: per-shard timings plus phase-cache
+/// counters for the region. Batch-level reports attribute cache traffic
+/// exactly (from simulator-local stats); grid-level reports cover the
+/// whole sweep's shared cache.
+#[derive(Debug, Clone, Default)]
+pub struct ParallelReport {
+    /// One entry per worker shard, in shard order.
+    pub shards: Vec<ShardTiming>,
+    /// Phase-cache lookups attributed to this region.
+    pub cache_lookups: u64,
+    /// Lookups served from the cache.
+    pub cache_hits: u64,
+}
+
+impl ParallelReport {
+    /// Fraction of cache lookups that hit (0.0 when there were none).
+    pub fn hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.cache_lookups as f64
+        }
+    }
+
+    /// The critical-path shard time (parallel wall-clock lower bound).
+    pub fn slowest_shard(&self) -> Duration {
+        self.shards.iter().map(|s| s.wall).max().unwrap_or_default()
+    }
+
+    /// Items processed across all shards.
+    pub fn total_items(&self) -> usize {
+        self.shards.iter().map(|s| s.items).sum()
+    }
+}
+
+impl std::fmt::Display for ParallelReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for s in &self.shards {
+            writeln!(f, "shard {:>3}: {:>6} items in {:?}", s.shard, s.items, s.wall)?;
+        }
+        write!(
+            f,
+            "phase-cache: {} lookups, {} hits ({:.1}%)",
+            self.cache_lookups,
+            self.cache_hits,
+            100.0 * self.hit_rate()
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +142,39 @@ mod tests {
         let m = bench("noop", 5, || 1 + 1);
         assert_eq!(m.samples, 5);
         assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn parallel_report_aggregates() {
+        let r = ParallelReport {
+            shards: vec![
+                ShardTiming {
+                    shard: 0,
+                    items: 10,
+                    wall: Duration::from_millis(4),
+                },
+                ShardTiming {
+                    shard: 1,
+                    items: 12,
+                    wall: Duration::from_millis(9),
+                },
+            ],
+            cache_lookups: 40,
+            cache_hits: 30,
+        };
+        assert_eq!(r.total_items(), 22);
+        assert_eq!(r.slowest_shard(), Duration::from_millis(9));
+        assert!((r.hit_rate() - 0.75).abs() < 1e-12);
+        let text = r.to_string();
+        assert!(text.contains("shard"));
+        assert!(text.contains("75.0%"));
+    }
+
+    #[test]
+    fn empty_report_is_harmless() {
+        let r = ParallelReport::default();
+        assert_eq!(r.hit_rate(), 0.0);
+        assert_eq!(r.slowest_shard(), Duration::ZERO);
+        assert_eq!(r.total_items(), 0);
     }
 }

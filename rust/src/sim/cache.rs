@@ -1,0 +1,204 @@
+//! Shared, concurrency-safe phase-duration cache.
+//!
+//! The executor memoizes comm-phase durations by a content hash of the
+//! node-level flow set (see [`crate::sim::executor`]). Historically that
+//! memo was a private `HashMap` per [`crate::sim::executor::Simulator`],
+//! rebuilt from scratch for every batch instance. `PhaseCache` lifts it
+//! into a shared structure behind `Arc`, so every simulator running the
+//! same app/platform/placement — including simulators on different worker
+//! threads of the parallel batch engine — solves each distinct phase once.
+//!
+//! Concurrency model: the key space is split across `2^k` shards, each a
+//! `RwLock<HashMap>`, selected by high key bits; readers never contend
+//! with writers on other shards. Cached values are pure functions of the
+//! key (the flow-level solve is deterministic), so racing threads that
+//! both miss compute and insert the *same* value — sharing the cache can
+//! never change a simulation result, only its wall-clock cost. That
+//! value-determinism is what makes the parallel engine bit-reproducible.
+//!
+//! An aborted phase (a flow crossing a down node) is stored as `NaN`, the
+//! same sentinel the private memo used.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Sharded concurrent map from phase content-hash to phase duration.
+pub struct PhaseCache {
+    shards: Vec<RwLock<HashMap<u64, f64>>>,
+    mask: u64,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl PhaseCache {
+    /// Default shard count (16): enough to keep a handful of worker
+    /// threads off each other's locks without bloating tiny runs.
+    pub fn new() -> Self {
+        Self::with_shards(16)
+    }
+
+    /// Cache with `shards` shards (rounded up to a power of two).
+    pub fn with_shards(shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        PhaseCache {
+            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            mask: (n - 1) as u64,
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Shard holding `key`. High bits pick the shard so the map's own
+    /// bucketing (low bits) stays well distributed within each shard.
+    #[inline]
+    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, f64>> {
+        &self.shards[((key >> 48) & self.mask) as usize]
+    }
+
+    /// Cached duration for `key`, if any (`NaN` = memoized abort).
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<f64> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let got = self
+            .shard(key)
+            .read()
+            .expect("phase cache poisoned")
+            .get(&key)
+            .copied();
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Store the duration for `key`. Last writer wins; all writers of a
+    /// given key store the same value (see module docs).
+    #[inline]
+    pub fn insert(&self, key: u64, duration: f64) {
+        self.shard(key)
+            .write()
+            .expect("phase cache poisoned")
+            .insert(key, duration);
+    }
+
+    /// Distinct phases cached.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("phase cache poisoned").len())
+            .sum()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total lookups since construction (or the last [`Self::clear`]).
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.lookups();
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / lookups as f64
+        }
+    }
+
+    /// Drop all entries and reset the counters.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().expect("phase cache poisoned").clear();
+        }
+        self.lookups.store(0, Ordering::Relaxed);
+        self.hits.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for PhaseCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for PhaseCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PhaseCache")
+            .field("shards", &self.shards.len())
+            .field("entries", &self.len())
+            .field("lookups", &self.lookups())
+            .field("hits", &self.hits())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn get_insert_roundtrip() {
+        let c = PhaseCache::new();
+        assert_eq!(c.get(42), None);
+        c.insert(42, 1.5);
+        assert_eq!(c.get(42), Some(1.5));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.lookups(), 2);
+        assert_eq!(c.hits(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_sentinel_survives() {
+        let c = PhaseCache::new();
+        c.insert(7, f64::NAN);
+        assert!(c.get(7).unwrap().is_nan());
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        let c = PhaseCache::with_shards(5);
+        assert_eq!(c.shards.len(), 8);
+        let c = PhaseCache::with_shards(0);
+        assert_eq!(c.shards.len(), 1);
+    }
+
+    #[test]
+    fn clear_resets_entries_and_counters() {
+        let c = PhaseCache::new();
+        c.insert(1, 2.0);
+        let _ = c.get(1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.lookups(), 0);
+        assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn concurrent_inserts_all_visible() {
+        let c = Arc::new(PhaseCache::with_shards(4));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for i in 0..256u64 {
+                        let key = t * 1000 + i;
+                        c.insert(key.wrapping_mul(0x9E3779B97F4A7C15), key as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 4 * 256);
+    }
+}

@@ -6,11 +6,17 @@
 //! O(timesteps) simulation into O(distinct phases) network solves — the
 //! key performance lever for the 2000-instance batch experiments
 //! (EXPERIMENTS.md §Perf).
+//!
+//! The memo lives in a shared [`PhaseCache`] (keyed by phase content plus
+//! a platform salt), so simulators cloned across worker threads of the
+//! parallel batch engine reuse each other's network solves. Sharing never
+//! changes results — cached values are pure functions of the key.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::apps::{Metric, MpiApp, MpiOp};
 use crate::profiler::Msg;
+use crate::sim::cache::PhaseCache;
 use crate::sim::network::NetSim;
 use crate::sim::smpi::{flows_for_phase, phases_of, Phase};
 use crate::topology::Platform;
@@ -56,21 +62,31 @@ pub struct SimStats {
 /// Construct once per experiment and call [`Simulator::run`] per
 /// (placement, down-set) instance; the phase cache persists across runs
 /// keyed by node-level flow content, so identical placements replay in
-/// microseconds.
+/// microseconds. The cache sits behind `Arc`, so cloning a simulator (one
+/// clone per worker thread in the parallel batch engine) shares it;
+/// [`SimStats`] stay per-clone.
+#[derive(Clone)]
 pub struct Simulator {
     platform: Platform,
     phases: Vec<Phase>,
     metric: Metric,
     timesteps: usize,
     net: NetSim,
-    cache: HashMap<u64, f64>,
+    cache: Arc<PhaseCache>,
+    salt: u64,
     stats: SimStats,
     route_buf: Vec<crate::topology::Link>,
 }
 
 impl Simulator {
-    /// Build a simulator for an app on a platform.
+    /// Build a simulator for an app on a platform with a private cache.
     pub fn new(app: &dyn MpiApp, platform: &Platform) -> Self {
+        Self::with_cache(app, platform, Arc::new(PhaseCache::new()))
+    }
+
+    /// Build a simulator that reuses `cache` (shared across simulators
+    /// and threads; see [`PhaseCache`] for why that is always safe).
+    pub fn with_cache(app: &dyn MpiApp, platform: &Platform, cache: Arc<PhaseCache>) -> Self {
         let ops: Vec<MpiOp> = app.ops();
         Simulator {
             platform: platform.clone(),
@@ -78,10 +94,16 @@ impl Simulator {
             metric: app.metric(),
             timesteps: app.timesteps(),
             net: NetSim::new(platform.torus(), platform.bandwidth, platform.latency),
-            cache: HashMap::new(),
+            cache,
+            salt: platform_salt(platform),
             stats: SimStats::default(),
             route_buf: Vec::new(),
         }
+    }
+
+    /// The shared phase cache handle.
+    pub fn cache(&self) -> Arc<PhaseCache> {
+        Arc::clone(&self.cache)
     }
 
     /// Simulate the job under `assignment` with `down` node states.
@@ -98,8 +120,8 @@ impl Simulator {
                 }
                 Phase::Comm { msgs } => {
                     self.stats.comm_phases += 1;
-                    let key = phase_key(msgs, assignment, down);
-                    if let Some(&d) = self.cache.get(&key) {
+                    let key = phase_key(self.salt, msgs, assignment, down);
+                    if let Some(d) = self.cache.get(key) {
                         self.stats.cache_hits += 1;
                         if d.is_nan() {
                             return JobOutcome::Aborted { at: t };
@@ -222,10 +244,32 @@ impl Simulator {
     }
 }
 
-/// FNV-1a hash over node-level flow content (placement + down set fully
-/// determine a comm phase's duration).
-fn phase_key(msgs: &[Msg], assignment: &[usize], down: &[bool]) -> u64 {
+/// FNV-1a salt capturing the platform parameters that scale a phase's
+/// duration. Mixed into every phase key so one [`PhaseCache`] can be
+/// shared between simulators on *different* platforms without collisions
+/// (app identity is irrelevant: the key already encodes the node-level
+/// flow content).
+fn platform_salt(platform: &Platform) -> u64 {
+    let dims = platform.torus().dims();
     let mut h = 0xcbf29ce484222325u64;
+    for x in [
+        dims.x as u64,
+        dims.y as u64,
+        dims.z as u64,
+        platform.flops.to_bits(),
+        platform.bandwidth.to_bits(),
+        platform.latency.to_bits(),
+    ] {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a hash over node-level flow content (platform salt + placement +
+/// down set fully determine a comm phase's duration).
+fn phase_key(salt: u64, msgs: &[Msg], assignment: &[usize], down: &[bool]) -> u64 {
+    let mut h = salt;
     let mut feed = |x: u64| {
         h ^= x;
         h = h.wrapping_mul(0x100000001b3);
@@ -355,6 +399,25 @@ mod tests {
         let p = block_placement(app.num_ranks(), 16).unwrap();
         let out = simulate_job(&app, &plat, &p.assignment, &[]);
         assert!(out.seconds().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn shared_cache_matches_private_memo() {
+        let app = LammpsProxy::tiny(8, 4);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(8, 16).unwrap();
+        let down = vec![false; 16];
+        let mut private = Simulator::new(&app, &plat);
+        let want = private.run(&p.assignment, &down);
+
+        let shared = std::sync::Arc::new(crate::sim::cache::PhaseCache::new());
+        let mut warm = Simulator::with_cache(&app, &plat, Arc::clone(&shared));
+        assert_eq!(warm.run(&p.assignment, &down), want);
+        let mut reuse = Simulator::with_cache(&app, &plat, Arc::clone(&shared));
+        assert_eq!(reuse.run(&p.assignment, &down), want);
+        // the second simulator never solved the network itself
+        assert_eq!(reuse.stats().solves, 0);
+        assert!(reuse.stats().cache_hits > 0);
     }
 
     #[test]

@@ -11,12 +11,15 @@
 //! * [`smpi`] — translation of [`crate::apps::MpiOp`] schedules into
 //!   network flow phases under a placement;
 //! * [`executor`] — whole-job simulation with phase memoization;
+//! * [`cache`] — the shared, concurrency-safe phase-duration cache;
 //! * [`failure`] — down-state sampling per scenario.
 
+pub mod cache;
 pub mod executor;
 pub mod failure;
 pub mod network;
 pub mod smpi;
 
+pub use cache::PhaseCache;
 pub use executor::{simulate_job, JobOutcome, SimStats};
 pub use failure::sample_down_nodes;

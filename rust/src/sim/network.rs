@@ -20,7 +20,9 @@ pub struct Flow {
 /// Reusable flow-phase simulator for one platform.
 ///
 /// Holds the link index and scratch buffers so per-phase simulation does
-/// not allocate on the hot path.
+/// not allocate on the hot path. `Clone` gives each worker thread of the
+/// parallel batch engine its own scratch space.
+#[derive(Debug, Clone)]
 pub struct NetSim {
     num_links: usize,
     link_slot: Vec<u32>,

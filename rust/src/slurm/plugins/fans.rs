@@ -18,7 +18,7 @@ use crate::tofa::placer::{TofaPlacer, TofaPlacement};
 use crate::topology::Platform;
 
 /// The FANS plugin.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct FansPlugin {
     placer: TofaPlacer,
 }

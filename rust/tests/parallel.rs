@@ -1,0 +1,191 @@
+//! Parallel batch engine: determinism contract, shared-cache equivalence,
+//! and the Send/Sync audit for everything the worker pool moves across
+//! threads.
+
+use std::sync::Arc;
+
+use tofa::apps::lammps_proxy::LammpsProxy;
+use tofa::apps::ring::RingApp;
+use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
+use tofa::mapping::baselines::block_placement;
+use tofa::mapping::PlacementPolicy;
+use tofa::rng::Rng;
+use tofa::sim::cache::PhaseCache;
+use tofa::sim::executor::Simulator;
+use tofa::sim::failure::FaultScenario;
+use tofa::topology::{Platform, TorusDims};
+
+fn assert_send<T: Send>() {}
+fn assert_sync<T: Sync>() {}
+
+#[test]
+fn parallel_engine_types_are_send_sync() {
+    // moved into worker threads
+    assert_send::<Simulator>();
+    assert_send::<BatchRunner>();
+    // shared by reference across worker threads
+    assert_sync::<PhaseCache>();
+    assert_sync::<BatchRunner>();
+    assert_sync::<Platform>();
+    assert_sync::<FaultScenario>();
+    assert_sync::<BatchConfig>();
+    assert_send::<Arc<PhaseCache>>();
+}
+
+#[test]
+fn batch_is_bit_identical_across_worker_counts() {
+    let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let scenario = FaultScenario {
+        faulty_nodes: (0..10).collect(),
+        p_f: 0.25,
+        num_nodes: plat.num_nodes(),
+    };
+    let run = |workers: usize| {
+        let app = LammpsProxy::tiny(16, 3);
+        let mut runner = BatchRunner::new(&app, &plat);
+        let cfg = BatchConfig {
+            instances: 60,
+            n_faulty: 10,
+            p_f: 0.25,
+            parallelism: Parallelism::fixed(workers),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1234);
+        runner
+            .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+            .unwrap()
+    };
+    let serial = run(1);
+    for workers in [2usize, 3, 8, 16] {
+        let par = run(workers);
+        // identical JobOutcome sequence...
+        assert_eq!(par.outcomes, serial.outcomes, "{workers} workers");
+        // ...and identical batch completion time, to the bit
+        assert_eq!(
+            par.completion_s.to_bits(),
+            serial.completion_s.to_bits(),
+            "{workers} workers"
+        );
+        assert_eq!(par.total_aborts, serial.total_aborts);
+        assert_eq!(par.success_run_s.to_bits(), serial.success_run_s.to_bits());
+    }
+}
+
+#[test]
+fn auto_parallelism_matches_serial_results() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let app = RingApp::new(8, 65_536.0, 5);
+    let scenario = FaultScenario {
+        faulty_nodes: vec![1, 7, 20],
+        p_f: 0.2,
+        num_nodes: 64,
+    };
+    let run = |parallelism: Parallelism| {
+        let mut runner = BatchRunner::new(&app, &plat);
+        let cfg = BatchConfig {
+            instances: 30,
+            n_faulty: 3,
+            p_f: 0.2,
+            parallelism,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(77);
+        runner
+            .run_batch(PlacementPolicy::Tofa, &scenario, &cfg, &mut rng)
+            .unwrap()
+    };
+    let serial = run(Parallelism::serial());
+    let auto = run(Parallelism::auto());
+    assert_eq!(serial.outcomes, auto.outcomes);
+    assert_eq!(serial.completion_s.to_bits(), auto.completion_s.to_bits());
+}
+
+#[test]
+fn shared_cache_reproduces_private_memo_durations() {
+    let app = LammpsProxy::tiny(8, 4);
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+    let p = block_placement(8, 16).unwrap();
+    let down = vec![false; 16];
+
+    let mut private = Simulator::new(&app, &plat);
+    let want = private.run(&p.assignment, &down);
+
+    let shared = Arc::new(PhaseCache::new());
+    let mut warm = Simulator::with_cache(&app, &plat, Arc::clone(&shared));
+    assert_eq!(warm.run(&p.assignment, &down), want);
+
+    // a second simulator on the same shared cache replays without a
+    // single network solve of its own
+    let mut replay = Simulator::with_cache(&app, &plat, Arc::clone(&shared));
+    assert_eq!(replay.run(&p.assignment, &down), want);
+    assert_eq!(replay.stats().solves, 0);
+    assert!(replay.stats().cache_hits > 0);
+    assert!(shared.hit_rate() > 0.0);
+}
+
+#[test]
+fn concurrent_simulators_agree_with_serial_reference() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let app = LammpsProxy::tiny(16, 3);
+    let p = block_placement(16, 64).unwrap();
+    let down = vec![false; 64];
+
+    let mut reference = Simulator::new(&app, &plat);
+    let want = reference.run(&p.assignment, &down);
+
+    let shared = Arc::new(PhaseCache::new());
+    let proto = Simulator::with_cache(&app, &plat, Arc::clone(&shared));
+    let results: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let mut sim = proto.clone();
+                let assignment = &p.assignment;
+                let down = &down;
+                scope.spawn(move || sim.run(assignment, down))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in results {
+        assert_eq!(r, want);
+    }
+}
+
+#[test]
+fn grid_is_deterministic_and_batch_major() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let app = LammpsProxy::tiny(16, 2);
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    let run = |workers: usize| {
+        let runner = BatchRunner::new(&app, &plat);
+        let cfg = BatchConfig {
+            instances: 8,
+            n_faulty: 5,
+            p_f: 0.5,
+            parallelism: Parallelism::fixed(workers),
+            ..Default::default()
+        };
+        run_grid(&runner, &policies, &cfg, 3, 5).unwrap().cells
+    };
+    let a = run(1);
+    let b = run(6);
+    assert_eq!(a.len(), 6);
+    for (cell, (want_b, want_p)) in a.iter().zip([
+        (0, PlacementPolicy::DefaultSlurm),
+        (0, PlacementPolicy::Tofa),
+        (1, PlacementPolicy::DefaultSlurm),
+        (1, PlacementPolicy::Tofa),
+        (2, PlacementPolicy::DefaultSlurm),
+        (2, PlacementPolicy::Tofa),
+    ]) {
+        assert_eq!(cell.batch_index, want_b);
+        assert_eq!(cell.policy, want_p);
+    }
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.result.outcomes, y.result.outcomes);
+        assert_eq!(
+            x.result.completion_s.to_bits(),
+            y.result.completion_s.to_bits()
+        );
+    }
+}
