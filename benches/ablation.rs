@@ -15,7 +15,7 @@ use tofa::profiler::profile_app;
 use tofa::report::bench::section;
 use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
-use tofa::sim::failure::FaultScenario;
+use tofa::sim::fault::FaultScenario;
 use tofa::tofa::placer::{TofaConfig, TofaPlacer};
 use tofa::topology::{Platform, TorusDims};
 
@@ -68,8 +68,6 @@ fn main() {
         let scenario = FaultScenario::random(512, n_faulty, 0.02, &mut scen_rng);
         let config = BatchConfig {
             instances: 100,
-            n_faulty,
-            p_f: 0.02,
             ..Default::default()
         };
         let mut out = Vec::new();

@@ -13,7 +13,7 @@ use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
 use tofa::mapping::PlacementPolicy;
 use tofa::report::bench::{bench, section};
 use tofa::rng::Rng;
-use tofa::sim::failure::FaultScenario;
+use tofa::sim::fault::{FaultScenario, FaultSpec};
 use tofa::topology::{Platform, TorusDims};
 
 fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) {
@@ -21,8 +21,6 @@ fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) {
     let mut runner = BatchRunner::new(app, &platform);
     let config = BatchConfig {
         instances: 100,
-        n_faulty,
-        p_f: 0.02,
         ..Default::default()
     };
     section(title);
@@ -63,8 +61,10 @@ fn sweep_speedup() {
         let runner = BatchRunner::new(&app, &platform);
         let config = BatchConfig {
             instances: 100,
-            n_faulty: 16,
-            p_f: 0.02,
+            fault: FaultSpec::Iid {
+                n_faulty: 16,
+                p_f: 0.02,
+            },
             parallelism: Parallelism::fixed(workers),
             ..Default::default()
         };

@@ -9,7 +9,7 @@ use tofa::apps::{lammps_proxy::LammpsProxy, npb_dt::NpbDt, MpiApp};
 use tofa::mapping::baselines::block_placement;
 use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
-use tofa::sim::failure::{sample_down_nodes, FaultScenario};
+use tofa::sim::fault::{FaultCtx, FaultScenario};
 use tofa::topology::{Platform, TorusDims};
 
 fn main() {
@@ -31,8 +31,8 @@ fn main() {
     let scenario = FaultScenario::random(512, 16, 0.02, &mut rng);
     sim2.success_time(&pd.assignment); // warm cache like a batch would
     let t0 = std::time::Instant::now();
-    for _ in 0..100 {
-        let down = sample_down_nodes(&scenario, &mut rng);
+    for i in 0..100u64 {
+        let down = scenario.sample_down(&FaultCtx::new(i, 1.0), &mut rng);
         std::hint::black_box(sim2.run(&pd.assignment, &down));
     }
     let el = t0.elapsed();
@@ -41,8 +41,8 @@ fn main() {
     // fast path for comparison
     let profile = sim2.prepare(&pd.assignment);
     let t1 = std::time::Instant::now();
-    for _ in 0..100 {
-        let down = sample_down_nodes(&scenario, &mut rng);
+    for i in 0..100u64 {
+        let down = scenario.sample_down(&profile.fault_ctx(i), &mut rng);
         std::hint::black_box(profile.outcome(&down));
     }
     println!("npb-dt fast path: 100 instances in {:?}", t1.elapsed());

@@ -1,11 +1,14 @@
 //! Batch experiments (Section 5.2 of the paper).
 //!
 //! A *batch* is 100 instances of the same MPI application submitted as a
-//! queue. Per batch, `n_f` faulty nodes are drawn and keep the same outage
-//! probability `p_f` for all instances; per instance, each faulty node is
-//! independently emulated as down. An aborted instance is restarted from
-//! scratch and the batch completion time is augmented by one
-//! successful-run interval per abort (the paper's exact accounting).
+//! queue. Per batch, a [`FaultScenario`] is derived from the configured
+//! [`FaultSpec`] (the paper's regime — `n_f` faulty nodes at a shared
+//! outage probability `p_f` — is the default; correlated-domain, Weibull-
+//! lifetime, and trace-replay models plug in behind the same trait, see
+//! [`crate::sim::fault`]); per instance, the scenario samples a down-state
+//! vector. An aborted instance is restarted from scratch and the batch
+//! completion time is augmented by one successful-run interval per abort
+//! (the paper's exact accounting).
 
 pub mod parallel;
 
@@ -22,7 +25,8 @@ use crate::report::bench::ParallelReport;
 use crate::rng::Rng;
 use crate::sim::cache::PhaseCache;
 use crate::sim::executor::{JobOutcome, Simulator};
-use crate::sim::failure::{sample_down_nodes, FaultScenario};
+use crate::sim::fault::{FaultScenario, FaultSpec};
+use crate::slurm::heartbeat::{probe_histories, OutagePolicy};
 use crate::slurm::plugins::fans::FansPlugin;
 use crate::topology::Platform;
 
@@ -31,14 +35,14 @@ use crate::topology::Platform;
 pub struct BatchConfig {
     /// Instances per batch (paper: 100).
     pub instances: usize,
-    /// Number of faulty nodes `n_f`.
-    pub n_faulty: usize,
-    /// Outage probability `p_f`.
-    pub p_f: f64,
+    /// Fault-model recipe grid sweeps realize per batch (paper default:
+    /// 16 i.i.d. faulty nodes at 2%). Ignored by [`BatchRunner::run_batch`],
+    /// which takes an explicit scenario.
+    pub fault: FaultSpec,
     /// Heartbeat rounds used to estimate outage (0 = oracle estimates).
     pub heartbeat_rounds: usize,
     /// Give up on an instance after this many consecutive aborts
-    /// (safety net; effectively unreachable at the paper's p_f).
+    /// (safety net; effectively unreachable at the paper's parameters).
     pub max_restarts: u32,
     /// Worker-pool sizing for instance shards / grid cells. Changing it
     /// never changes results (see [`parallel`]), only wall-clock.
@@ -49,8 +53,10 @@ impl Default for BatchConfig {
     fn default() -> Self {
         BatchConfig {
             instances: 100,
-            n_faulty: 16,
-            p_f: 0.02,
+            fault: FaultSpec::Iid {
+                n_faulty: 16,
+                p_f: 0.02,
+            },
             heartbeat_rounds: 0,
             max_restarts: 1000,
             parallelism: Parallelism::serial(),
@@ -136,8 +142,10 @@ impl BatchRunner {
     }
 
     /// Estimate outage probabilities the way the controller would: either
-    /// the oracle values (heartbeat_rounds == 0) or `rounds` Bernoulli
-    /// probes per node.
+    /// the oracle values (heartbeat_rounds == 0) or empirical-frequency
+    /// estimates over `rounds` simulated probes against the scenario's
+    /// generalized per-node outage vector (any fault model, not just a
+    /// uniform `p_f` — see [`probe_histories`]).
     fn estimate_outage(
         &self,
         scenario: &FaultScenario,
@@ -148,17 +156,7 @@ impl BatchRunner {
         if rounds == 0 {
             return truth;
         }
-        truth
-            .iter()
-            .map(|&p| {
-                if p <= 0.0 {
-                    0.0
-                } else {
-                    let misses = (0..rounds).filter(|_| rng.bernoulli(p)).count();
-                    misses as f64 / rounds as f64
-                }
-            })
-            .collect()
+        OutagePolicy::Empirical.estimate_all(&probe_histories(&truth, rounds, rng))
     }
 
     /// Run one batch under `policy` with the batch-level fault `scenario`.
@@ -195,10 +193,14 @@ impl BatchRunner {
         let profile = &profile;
         let (outcomes, shards) = parallel::run_sharded(config.instances, workers, |i| {
             let mut irng = Rng::stream(stream_base, i as u64);
+            // temporal fault models condition on the fault-free makespan;
+            // each retry bumps `attempt` so trace replay re-runs the job
+            // in the next trace window (a real resubmission)
+            let mut ctx = profile.fault_ctx(i as u64);
             let mut completion = 0.0f64;
             let mut aborts = 0u32;
             loop {
-                let down = sample_down_nodes(scenario, &mut irng);
+                let down = scenario.sample_down(&ctx, &mut irng);
                 match profile.outcome(&down) {
                     JobOutcome::Completed { seconds } => {
                         completion += seconds;
@@ -209,6 +211,7 @@ impl BatchRunner {
                         // successful-run interval, then restart
                         completion += success_run_s;
                         aborts += 1;
+                        ctx.attempt = aborts;
                         if aborts >= config.max_restarts {
                             break;
                         }
@@ -268,7 +271,6 @@ mod tests {
         let scenario = FaultScenario::none(plat.num_nodes());
         let cfg = BatchConfig {
             instances: 5,
-            n_faulty: 0,
             ..Default::default()
         };
         let mut rng = Rng::new(1);
@@ -283,15 +285,9 @@ mod tests {
     fn tofa_beats_default_with_faults_in_front() {
         // faulty nodes right where block placement lands
         let (mut r, plat) = runner(16);
-        let scenario = FaultScenario {
-            faulty_nodes: (0..8).collect(),
-            p_f: 0.3,
-            num_nodes: plat.num_nodes(),
-        };
+        let scenario = FaultScenario::iid((0..8).collect(), 0.3, plat.num_nodes());
         let cfg = BatchConfig {
             instances: 10,
-            n_faulty: 8,
-            p_f: 0.3,
             ..Default::default()
         };
         let mut rng = Rng::new(2);
@@ -310,15 +306,10 @@ mod tests {
     #[test]
     fn abort_accounting_adds_success_intervals() {
         let (mut r, plat) = runner(8);
-        let scenario = FaultScenario {
-            faulty_nodes: vec![0],
-            p_f: 1.0, // node 0 always down
-            num_nodes: plat.num_nodes(),
-        };
+        // node 0 always down
+        let scenario = FaultScenario::iid(vec![0], 1.0, plat.num_nodes());
         let cfg = BatchConfig {
             instances: 2,
-            n_faulty: 1,
-            p_f: 1.0,
             max_restarts: 3,
             ..Default::default()
         };
@@ -335,18 +326,12 @@ mod tests {
     #[test]
     fn worker_count_does_not_change_results() {
         let (_, plat) = runner(16);
-        let scenario = FaultScenario {
-            faulty_nodes: (0..12).collect(),
-            p_f: 0.3,
-            num_nodes: plat.num_nodes(),
-        };
+        let scenario = FaultScenario::iid((0..12).collect(), 0.3, plat.num_nodes());
         let run = |workers: usize| {
             let app = LammpsProxy::tiny(16, 3);
             let mut r = BatchRunner::new(&app, &plat);
             let cfg = BatchConfig {
                 instances: 40,
-                n_faulty: 12,
-                p_f: 0.3,
                 parallelism: Parallelism::fixed(workers),
                 ..Default::default()
             };
@@ -378,8 +363,10 @@ mod tests {
             let r = BatchRunner::new(&app, &plat);
             let cfg = BatchConfig {
                 instances: 10,
-                n_faulty: 6,
-                p_f: 0.4,
+                fault: FaultSpec::Iid {
+                    n_faulty: 6,
+                    p_f: 0.4,
+                },
                 parallelism: Parallelism::fixed(workers),
                 ..Default::default()
             };
@@ -406,7 +393,6 @@ mod tests {
         let scenario = FaultScenario::none(plat.num_nodes());
         let cfg = BatchConfig {
             instances: 12,
-            n_faulty: 0,
             parallelism: Parallelism::fixed(3),
             ..Default::default()
         };
@@ -423,15 +409,9 @@ mod tests {
     #[test]
     fn heartbeat_estimation_still_avoids_faults() {
         let (mut r, plat) = runner(16);
-        let scenario = FaultScenario {
-            faulty_nodes: (0..8).collect(),
-            p_f: 0.5,
-            num_nodes: plat.num_nodes(),
-        };
+        let scenario = FaultScenario::iid((0..8).collect(), 0.5, plat.num_nodes());
         let cfg = BatchConfig {
             instances: 5,
-            n_faulty: 8,
-            p_f: 0.5,
             heartbeat_rounds: 50,
             ..Default::default()
         };

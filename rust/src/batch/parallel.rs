@@ -23,7 +23,6 @@ use crate::error::Result;
 use crate::mapping::PlacementPolicy;
 use crate::report::bench::{ParallelReport, ShardTiming};
 use crate::rng::Rng;
-use crate::sim::failure::FaultScenario;
 
 use super::{BatchConfig, BatchResult, BatchRunner};
 
@@ -169,8 +168,10 @@ pub struct GridRun {
 /// Run a `batches x policies` sweep in parallel.
 ///
 /// Cell layout is batch-major: `cells[b * policies.len() + p]`. Every
-/// policy within batch `b` sees the **same** fault scenario (derived from
-/// `(seed, b)`), matching the paper's paired comparison. Each cell clones
+/// policy within batch `b` sees the **same** fault scenario — realized
+/// from `config.fault` with the `(seed, b)` RNG stream, for any
+/// [`crate::sim::fault::FaultSpec`] — matching the paper's paired
+/// comparison. Each cell clones
 /// `runner` — sharing its [`crate::sim::PhaseCache`] — so all cells reuse
 /// each other's network solves. The worker budget splits across levels:
 /// with at least as many cells as workers each cell runs its instances
@@ -212,12 +213,7 @@ pub fn run_grid(
         let policy = policies[p];
         // identical scenario for every policy of batch `b`
         let mut scen_rng = Rng::stream(seed, b as u64);
-        let scenario = FaultScenario::random(
-            runner.platform().num_nodes(),
-            config.n_faulty,
-            config.p_f,
-            &mut scen_rng,
-        );
+        let scenario = config.fault.realize(runner.platform(), &mut scen_rng)?;
         let mut cell_rng = scen_rng.fork(1 + p as u64);
         let mut local = runner.clone();
         let mut my_cfg = config.clone();

@@ -11,6 +11,8 @@ pub enum Error {
     Topology(String),
     /// Simulation invariant violations.
     Simulation(String),
+    /// Fault-model configuration / trace parse errors.
+    Fault(String),
     /// PJRT runtime / artifact errors.
     Runtime(String),
     /// Slurm-lite protocol errors.
@@ -25,6 +27,7 @@ impl fmt::Display for Error {
             Error::Placement(m) => write!(f, "placement error: {m}"),
             Error::Topology(m) => write!(f, "topology error: {m}"),
             Error::Simulation(m) => write!(f, "simulation error: {m}"),
+            Error::Fault(m) => write!(f, "fault-model error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Slurm(m) => write!(f, "slurm error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),

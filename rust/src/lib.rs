@@ -31,9 +31,9 @@
 //! // Profile it -> communication graph G_v.
 //! let profile = profile_app(&app);
 //! // Place with TOFA (no faults known) and simulate.
-//! let fault = FaultModel::none(platform.num_nodes());
+//! let fault = FaultScenario::none(platform.num_nodes());
 //! let placement = TofaPlacer::new(Default::default())
-//!     .place(&profile.volume, &platform, &fault.outage_estimates())
+//!     .place(&profile.volume, &platform, &fault.true_outage())
 //!     .unwrap();
 //! let outcome = simulate_job(&app, &platform, &placement.assignment, &[]);
 //! println!("completion: {:?}", outcome);
@@ -46,6 +46,15 @@
 //! bit-identical for every worker count) and [`sim::PhaseCache`] for the
 //! shared phase-solve cache that lets concurrent instances reuse each
 //! other's network solves.
+//!
+//! ## Fault models
+//!
+//! Down-state generation is pluggable: [`sim::fault`] defines the
+//! [`sim::fault::FaultModel`] trait with four implementations — the
+//! paper's i.i.d. Bernoulli model (the default), correlated rack
+//! domains, Weibull per-node lifetimes coupled to the job makespan, and
+//! deterministic trace replay. `repro --fault-model=...` selects one for
+//! the Fig. 4/5 batch sweeps.
 
 // Index-heavy numerical kernels (max-min filling, FNV hashing) read more
 // clearly with explicit indices; keep clippy's style nit quiet crate-wide.
@@ -81,8 +90,12 @@ pub mod prelude {
     };
     pub use crate::profiler::profile_app;
     pub use crate::rng::Rng;
+    pub use crate::sim::fault::{
+        CorrelatedDomains, FaultCtx, FaultModel, FaultScenario, FaultSpec, FaultTrace,
+        IidBernoulli, TraceReplay, WeibullLifetime,
+    };
     pub use crate::sim::{simulate_job, JobOutcome};
-    pub use crate::slurm::{controller::Controller, FaultModel};
+    pub use crate::slurm::controller::Controller;
     pub use crate::tofa::placer::{TofaConfig, TofaPlacer};
     pub use crate::topology::{
         platform::Platform,

@@ -37,6 +37,18 @@ OPTIONS:
   --app=<spec>         app for profile/place: lammps:<ranks> | npb-dt |
                        stencil:<px>x<py> | ring:<ranks>   (default: lammps:64)
   --torus=<XxYxZ>      torus dims for place        (default: 8x8x8)
+
+FAULT MODEL (fig4/fig5a/fig5b/all):
+  --fault-model=<m>    iid | correlated | weibull | trace  (default: iid)
+  --p-f=<f>            per-node outage probability (iid) or probability at
+                       the horizon (weibull)       (default: 0.02)
+  --domains=<n>        faulty racks for correlated (default: n_f / 8)
+  --p-domain=<f>       whole-rack outage probability (default: 0.05)
+  --weibull-shape=<k>  Weibull shape               (default: 0.7)
+  --fault-horizon=<s>  Weibull planning horizon, simulated seconds
+                       (default: 1.0)
+  --fault-trace=<path> down-interval trace file, required for trace
+                       (format: header 'nodes N', then 'node start end')
 ";
 
 struct Opts {
@@ -47,6 +59,7 @@ struct Opts {
     workers: usize,
     app: String,
     torus: String,
+    fault: experiments::FaultCliOpts,
 }
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
@@ -58,6 +71,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         workers: 0,
         app: "lammps:64".to_string(),
         torus: "8x8x8".to_string(),
+        fault: experiments::FaultCliOpts::default(),
     };
     for a in args {
         if let Some(v) = a.strip_prefix("--results=") {
@@ -74,6 +88,20 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             o.app = v.to_string();
         } else if let Some(v) = a.strip_prefix("--torus=") {
             o.torus = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--fault-model=") {
+            o.fault.model = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--p-f=") {
+            o.fault.p_f = v.parse().map_err(|_| format!("bad --p-f: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--domains=") {
+            o.fault.domains = v.parse().map_err(|_| format!("bad --domains: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--p-domain=") {
+            o.fault.p_domain = v.parse().map_err(|_| format!("bad --p-domain: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--weibull-shape=") {
+            o.fault.weibull_shape = v.parse().map_err(|_| format!("bad --weibull-shape: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--fault-horizon=") {
+            o.fault.horizon_s = v.parse().map_err(|_| format!("bad --fault-horizon: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--fault-trace=") {
+            o.fault.trace_path = Some(PathBuf::from(v));
         } else {
             return Err(format!("unknown option: {a}"));
         }
@@ -101,21 +129,43 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "fig3a" => experiments::fig3a(r, opts.seed)?,
         "fig3b" => experiments::fig3b(r, opts.seed)?,
         "table1" => experiments::table1(r, opts.seed)?,
-        "fig4" => experiments::fig4(r, opts.seed, opts.batches, opts.instances, opts.workers)?,
-        "fig5a" => {
-            experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a", opts.workers)?
-        }
-        "fig5b" => {
-            experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b", opts.workers)?
-        }
+        "fig4" => experiments::fig4(
+            r,
+            opts.seed,
+            opts.batches,
+            opts.instances,
+            opts.workers,
+            &opts.fault,
+        )?,
+        "fig5a" => experiments::fig5(
+            r,
+            opts.seed,
+            8,
+            opts.batches,
+            opts.instances,
+            "5a",
+            opts.workers,
+            &opts.fault,
+        )?,
+        "fig5b" => experiments::fig5(
+            r,
+            opts.seed,
+            16,
+            opts.batches,
+            opts.instances,
+            "5b",
+            opts.workers,
+            &opts.fault,
+        )?,
         "all" => {
             experiments::fig1(r)?;
             experiments::fig3a(r, opts.seed)?;
             experiments::fig3b(r, opts.seed)?;
             experiments::table1(r, opts.seed)?;
-            experiments::fig4(r, opts.seed, opts.batches, opts.instances, opts.workers)?;
-            experiments::fig5(r, opts.seed, 8, opts.batches, opts.instances, "5a", opts.workers)?;
-            experiments::fig5(r, opts.seed, 16, opts.batches, opts.instances, "5b", opts.workers)?;
+            let (b, i, w, f) = (opts.batches, opts.instances, opts.workers, &opts.fault);
+            experiments::fig4(r, opts.seed, b, i, w, f)?;
+            experiments::fig5(r, opts.seed, 8, b, i, "5a", w, f)?;
+            experiments::fig5(r, opts.seed, 16, b, i, "5b", w, f)?;
         }
         "profile" => experiments::profile(&opts.app)?,
         "place" => experiments::place(&opts.app, &opts.torus, opts.seed)?,

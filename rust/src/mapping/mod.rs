@@ -112,7 +112,8 @@ impl std::fmt::Display for PlacementPolicy {
             Self::Scotch => "scotch",
             Self::Tofa => "tofa",
         };
-        write!(f, "{s}")
+        // f.pad honours width/alignment flags ({:<16} etc. in reports)
+        f.pad(s)
     }
 }
 

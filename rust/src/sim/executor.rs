@@ -196,6 +196,13 @@ pub struct JobProfile {
 }
 
 impl JobProfile {
+    /// The fault-sampling context for instance `i` of a batch under this
+    /// placement: temporal fault models ([`crate::sim::fault`]) condition
+    /// on the fault-free makespan, which is exactly `success_s`.
+    pub fn fault_ctx(&self, instance: u64) -> crate::sim::fault::FaultCtx {
+        crate::sim::fault::FaultCtx::new(instance, self.success_s)
+    }
+
     /// Resolve one instance against a down-state vector.
     pub fn outcome(&self, down: &[bool]) -> JobOutcome {
         debug_assert_eq!(down.len(), self.touched.len());

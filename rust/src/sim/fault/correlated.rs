@@ -1,0 +1,186 @@
+//! Correlated failure domains: a rack or switch group fails as a unit.
+//!
+//! Motivated by the topology-regime sensitivity in "Mapping Matters"
+//! (Korndörfer et al.) and the grid/torus failure-domain structure in
+//! Glantz et al.: real outages hit shared infrastructure (PDU, top-of-rack
+//! switch), taking every node of the domain down together — a regime the
+//! paper's i.i.d. model cannot express.
+
+use crate::rng::Rng;
+use crate::sim::fault::{FaultCtx, FaultModel};
+use crate::topology::Platform;
+
+/// One failure domain: a node group that goes down together.
+#[derive(Debug, Clone)]
+pub struct Domain {
+    /// Member node ids.
+    pub nodes: Vec<usize>,
+    /// Per-instance probability the whole domain is down.
+    pub p_d: f64,
+}
+
+/// Topology-aware correlated outages: each domain fails independently of
+/// the others, but its members fail *together*. Per-domain probabilities
+/// may differ, so the true outage vector is non-uniform in general.
+#[derive(Debug, Clone)]
+pub struct CorrelatedDomains {
+    domains: Vec<Domain>,
+    num_nodes: usize,
+}
+
+impl CorrelatedDomains {
+    /// Explicit domain list. Domains may overlap (a node in several
+    /// domains is down if any of them is).
+    pub fn new(domains: Vec<Domain>, num_nodes: usize) -> Self {
+        debug_assert!(domains.iter().all(|d| d.nodes.iter().all(|&n| n < num_nodes)));
+        debug_assert!(domains.iter().all(|d| (0.0..=1.0).contains(&d.p_d)));
+        CorrelatedDomains { domains, num_nodes }
+    }
+
+    /// One domain per listed rack of the platform (rack = X-line, see
+    /// [`Platform::rack_members`]), all with probability `p_d`.
+    pub fn racks(platform: &Platform, rack_ids: &[usize], p_d: f64) -> Self {
+        let domains = rack_ids
+            .iter()
+            .map(|&r| Domain {
+                nodes: platform.rack_members(r),
+                p_d,
+            })
+            .collect();
+        Self::new(domains, platform.num_nodes())
+    }
+
+    /// `n_domains` distinct racks drawn from `rng`, each failing with
+    /// probability `p_d`.
+    pub fn random_racks(platform: &Platform, n_domains: usize, p_d: f64, rng: &mut Rng) -> Self {
+        let racks = rng.sample_distinct(platform.num_racks(), n_domains);
+        Self::racks(platform, &racks, p_d)
+    }
+
+    /// The failure domains.
+    pub fn domains(&self) -> &[Domain] {
+        &self.domains
+    }
+}
+
+impl FaultModel for CorrelatedDomains {
+    fn name(&self) -> &'static str {
+        "correlated"
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    fn true_outage(&self) -> Vec<f64> {
+        // node down iff any covering domain is down:
+        // p = 1 - prod(1 - p_d) over the domains containing the node
+        let mut up = vec![1.0f64; self.num_nodes];
+        for d in &self.domains {
+            for &n in &d.nodes {
+                up[n] *= 1.0 - d.p_d;
+            }
+        }
+        up.into_iter().map(|u| 1.0 - u).collect()
+    }
+
+    fn sample(&self, _ctx: &FaultCtx, rng: &mut Rng) -> Vec<bool> {
+        // one Bernoulli draw per domain, in stored order
+        let mut down = vec![false; self.num_nodes];
+        for d in &self.domains {
+            if rng.bernoulli(d.p_d) {
+                for &n in &d.nodes {
+                    down[n] = true;
+                }
+            }
+        }
+        down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TorusDims;
+
+    #[test]
+    fn members_fail_together() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 2));
+        let m = CorrelatedDomains::racks(&plat, &[0, 5], 0.5);
+        let ctx = FaultCtx::new(0, 1.0);
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let down = m.sample(&ctx, &mut rng);
+            for d in m.domains() {
+                let states: Vec<bool> = d.nodes.iter().map(|&n| down[n]).collect();
+                assert!(states.iter().all(|&s| s == states[0]), "split: {states:?}");
+            }
+            // nodes outside every domain never fail
+            for (n, &dn) in down.iter().enumerate() {
+                if dn {
+                    assert!(m.domains().iter().any(|d| d.nodes.contains(&n)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn true_outage_is_non_uniform_across_domains() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let m = CorrelatedDomains::new(
+            vec![
+                Domain {
+                    nodes: plat.rack_members(0),
+                    p_d: 0.6,
+                },
+                Domain {
+                    nodes: plat.rack_members(2),
+                    p_d: 0.2,
+                },
+            ],
+            plat.num_nodes(),
+        );
+        let p = m.true_outage();
+        assert!((p[0] - 0.6).abs() < 1e-12);
+        assert!((p[8] - 0.2).abs() < 1e-12);
+        assert_eq!(p[4], 0.0); // rack 1 untouched
+    }
+
+    #[test]
+    fn overlapping_domains_compose_probabilities() {
+        let m = CorrelatedDomains::new(
+            vec![
+                Domain {
+                    nodes: vec![0, 1],
+                    p_d: 0.5,
+                },
+                Domain {
+                    nodes: vec![1, 2],
+                    p_d: 0.5,
+                },
+            ],
+            4,
+        );
+        let p = m.true_outage();
+        assert_eq!(p[0], 0.5);
+        assert!((p[1] - 0.75).abs() < 1e-12);
+        assert_eq!(p[3], 0.0);
+    }
+
+    #[test]
+    fn down_rate_matches_p_d() {
+        let plat = Platform::paper_default(TorusDims::new(8, 4, 2));
+        let m = CorrelatedDomains::racks(&plat, &[3], 0.3);
+        let ctx = FaultCtx::new(0, 1.0);
+        let mut rng = Rng::new(6);
+        let trials = 10_000;
+        let mut hits = 0usize;
+        for _ in 0..trials {
+            if m.sample(&ctx, &mut rng)[plat.rack_members(3)[0]] {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / trials as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+}

@@ -1,0 +1,123 @@
+//! The paper's failure model (Section 5.2): independent Bernoulli
+//! outages on a fixed faulty set.
+
+use crate::rng::Rng;
+use crate::sim::fault::{FaultCtx, FaultModel};
+
+/// A set `N_f` of nodes, each independently down with a shared
+/// probability `p_f` per job instance — exactly the seed repo's
+/// `FaultScenario`, draw-for-draw (the golden tests depend on this).
+#[derive(Debug, Clone)]
+pub struct IidBernoulli {
+    /// Node ids with non-zero outage probability (`N_f`), in the order
+    /// Bernoulli draws are consumed.
+    pub faulty_nodes: Vec<usize>,
+    /// The shared outage probability (`p_f`).
+    pub p_f: f64,
+    /// Platform size.
+    pub num_nodes: usize,
+}
+
+impl IidBernoulli {
+    /// Fixed faulty set.
+    pub fn new(faulty_nodes: Vec<usize>, p_f: f64, num_nodes: usize) -> Self {
+        debug_assert!((0.0..=1.0).contains(&p_f), "p_f out of range: {p_f}");
+        debug_assert!(faulty_nodes.iter().all(|&n| n < num_nodes));
+        IidBernoulli {
+            faulty_nodes,
+            p_f,
+            num_nodes,
+        }
+    }
+
+    /// Randomly select `n_f` faulty nodes with probability `p_f` each.
+    pub fn random(num_nodes: usize, n_f: usize, p_f: f64, rng: &mut Rng) -> Self {
+        Self::new(rng.sample_distinct(num_nodes, n_f), p_f, num_nodes)
+    }
+}
+
+impl FaultModel for IidBernoulli {
+    fn name(&self) -> &'static str {
+        "iid"
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    fn true_outage(&self) -> Vec<f64> {
+        let mut p = vec![0.0; self.num_nodes];
+        for &n in &self.faulty_nodes {
+            p[n] = self.p_f;
+        }
+        p
+    }
+
+    fn sample(&self, _ctx: &FaultCtx, rng: &mut Rng) -> Vec<bool> {
+        // one Bernoulli draw per faulty node, in stored order — the seed
+        // repo's sample_down_nodes, bit-for-bit
+        let mut down = vec![false; self.num_nodes];
+        for &n in &self.faulty_nodes {
+            if rng.bernoulli(self.p_f) {
+                down[n] = true;
+            }
+        }
+        down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn down_rate_matches_p_f() {
+        let mut rng = Rng::new(1);
+        let m = IidBernoulli::random(512, 16, 0.02, &mut rng);
+        assert_eq!(m.faulty_nodes.len(), 16);
+        let ctx = FaultCtx::new(0, 1.0);
+        let mut downs = 0usize;
+        let trials = 10_000;
+        for _ in 0..trials {
+            downs += m.sample(&ctx, &mut rng).iter().filter(|&&d| d).count();
+        }
+        let rate = downs as f64 / (trials * 16) as f64;
+        assert!((rate - 0.02).abs() < 0.005, "rate={rate}");
+    }
+
+    #[test]
+    fn only_faulty_nodes_go_down() {
+        let mut rng = Rng::new(2);
+        let m = IidBernoulli::random(64, 4, 1.0, &mut rng);
+        let down = m.sample(&FaultCtx::new(0, 1.0), &mut rng);
+        for (n, &d) in down.iter().enumerate() {
+            assert_eq!(d, m.faulty_nodes.contains(&n));
+        }
+    }
+
+    #[test]
+    fn true_outage_vector() {
+        let m = IidBernoulli::new(vec![3, 7], 0.02, 10);
+        let p = m.true_outage();
+        assert_eq!(p[3], 0.02);
+        assert_eq!(p[7], 0.02);
+        assert_eq!(p.iter().filter(|&&x| x > 0.0).count(), 2);
+    }
+
+    #[test]
+    fn sample_ignores_ctx() {
+        let m = IidBernoulli::new(vec![0, 5, 9], 0.5, 16);
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let x = m.sample(&FaultCtx::new(0, 1.0), &mut a);
+        let y = m.sample(
+            &FaultCtx {
+                instance: 7,
+                attempt: 3,
+                job_duration_s: 99.0,
+            },
+            &mut b,
+        );
+        assert_eq!(x, y);
+    }
+}

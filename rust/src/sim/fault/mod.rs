@@ -1,0 +1,396 @@
+//! Pluggable fault models (generalizing Section 5.2 of the paper).
+//!
+//! The paper's evaluation uses exactly one failure regime: a fixed set
+//! `N_f` of nodes, each independently down with a shared probability
+//! `p_f`. Real resilience studies need more — correlated rack/switch
+//! outages, temporal failure processes, and replay of recorded downtime
+//! traces — so down-state generation lives behind the [`FaultModel`]
+//! trait with four implementations:
+//!
+//! * [`IidBernoulli`] — the paper's model and the back-compat default;
+//! * [`CorrelatedDomains`] — topology-aware: a whole failure domain
+//!   (rack = X-line of the torus, see
+//!   [`crate::topology::Platform::rack_members`]) goes down together;
+//! * [`WeibullLifetime`] — per-node time-to-failure with shape/scale, so
+//!   a job with a longer makespan sees more failures (the sample is
+//!   coupled to [`crate::sim::executor::JobProfile::success_s`] through
+//!   [`FaultCtx::job_duration_s`]);
+//! * [`TraceReplay`] — deterministic replay of a LANL-style down-interval
+//!   trace ([`FaultTrace`]).
+//!
+//! ## Determinism contract
+//!
+//! Every model draws all of its randomness from the `&mut Rng` handed to
+//! [`FaultModel::sample`]. The batch engine passes a per-instance
+//! [`Rng::stream`], so results stay bit-identical for every worker count
+//! — the same contract `batch::parallel` establishes for the paper's
+//! model holds for all four (checked by `tests/parallel.rs`).
+
+pub mod correlated;
+pub mod iid;
+pub mod trace;
+pub mod weibull;
+
+pub use correlated::{CorrelatedDomains, Domain};
+pub use iid::IidBernoulli;
+pub use trace::{FaultTrace, TraceReplay};
+pub use weibull::WeibullLifetime;
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::topology::Platform;
+
+/// Per-instance context a model may condition on. Temporal models use the
+/// job duration (Weibull: longer jobs fail more; trace replay: the
+/// instance's window in trace time); memoryless models ignore it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultCtx {
+    /// Index of the instance within its batch.
+    pub instance: u64,
+    /// Restart attempt for this instance (0 = first run). Trace replay
+    /// advances its window by one job duration per attempt, modeling a
+    /// restart that happens later in wall-clock time.
+    pub attempt: u32,
+    /// Fault-free makespan of the job under the batch's placement, in
+    /// simulated seconds (see `Simulator::prepare`).
+    pub job_duration_s: f64,
+}
+
+impl FaultCtx {
+    /// Context for the first attempt of `instance`.
+    pub fn new(instance: u64, job_duration_s: f64) -> Self {
+        FaultCtx {
+            instance,
+            attempt: 0,
+            job_duration_s,
+        }
+    }
+}
+
+/// A generative model of per-instance node down-states.
+///
+/// Implementations must be pure functions of `(self, ctx, rng)`: no
+/// interior mutability, no global state — the parallel batch engine calls
+/// [`FaultModel::sample`] concurrently from many worker threads and
+/// requires bit-identical results for every worker count.
+pub trait FaultModel: std::fmt::Debug + Send + Sync {
+    /// Short model name (`"iid"`, `"correlated"`, `"weibull"`, `"trace"`).
+    fn name(&self) -> &'static str;
+
+    /// Platform size the model describes.
+    fn num_nodes(&self) -> usize;
+
+    /// The true per-node outage probability vector — what the heartbeat
+    /// estimation path tries to recover. For temporal models this is the
+    /// probability over the model's planning horizon; for trace replay,
+    /// each node's down-time fraction over the trace span.
+    fn true_outage(&self) -> Vec<f64>;
+
+    /// Sample the down-state for one job instance, drawing all randomness
+    /// from `rng` (a per-instance [`Rng::stream`] in batch runs).
+    fn sample(&self, ctx: &FaultCtx, rng: &mut Rng) -> Vec<bool>;
+}
+
+/// The per-batch fault configuration: a shared handle to the model that
+/// generates every instance's down-state. Cloning shares the model.
+#[derive(Debug, Clone)]
+pub struct FaultScenario {
+    model: Arc<dyn FaultModel>,
+}
+
+impl FaultScenario {
+    /// Wrap a concrete model.
+    pub fn new(model: impl FaultModel + 'static) -> Self {
+        FaultScenario {
+            model: Arc::new(model),
+        }
+    }
+
+    /// Wrap an already-shared model.
+    pub fn from_arc(model: Arc<dyn FaultModel>) -> Self {
+        FaultScenario { model }
+    }
+
+    /// No faults.
+    pub fn none(num_nodes: usize) -> Self {
+        Self::new(IidBernoulli::new(Vec::new(), 0.0, num_nodes))
+    }
+
+    /// The paper's model: `faulty_nodes` each independently down with
+    /// probability `p_f`.
+    pub fn iid(faulty_nodes: Vec<usize>, p_f: f64, num_nodes: usize) -> Self {
+        Self::new(IidBernoulli::new(faulty_nodes, p_f, num_nodes))
+    }
+
+    /// Randomly select `n_f` i.i.d. faulty nodes with probability `p_f`
+    /// each (the seed repo's `FaultScenario::random`, draw-for-draw).
+    pub fn random(num_nodes: usize, n_f: usize, p_f: f64, rng: &mut Rng) -> Self {
+        Self::new(IidBernoulli::random(num_nodes, n_f, p_f, rng))
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &dyn FaultModel {
+        self.model.as_ref()
+    }
+
+    /// Short model name.
+    pub fn model_name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    /// Platform size.
+    pub fn num_nodes(&self) -> usize {
+        self.model.num_nodes()
+    }
+
+    /// The true per-node outage probability vector (what heartbeat
+    /// estimation tries to recover).
+    pub fn true_outage(&self) -> Vec<f64> {
+        self.model.true_outage()
+    }
+
+    /// Node ids with non-zero outage probability.
+    pub fn suspect_nodes(&self) -> Vec<usize> {
+        self.true_outage()
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p > 0.0)
+            .map(|(n, _)| n)
+            .collect()
+    }
+
+    /// Sample the down-state for one job instance.
+    pub fn sample_down(&self, ctx: &FaultCtx, rng: &mut Rng) -> Vec<bool> {
+        self.model.sample(ctx, rng)
+    }
+}
+
+/// Cloneable recipe for deriving one [`FaultScenario`] per batch of a
+/// sweep. `run_grid` realizes the spec with a per-batch RNG stream, so
+/// every policy within a batch sees the same scenario (the paper's paired
+/// comparison) and results stay independent of the worker count.
+#[derive(Debug, Clone)]
+pub enum FaultSpec {
+    /// No faults.
+    None,
+    /// The paper's model: `n_faulty` random nodes at probability `p_f`.
+    Iid {
+        /// Faulty-node count `N_f`.
+        n_faulty: usize,
+        /// Shared outage probability `p_f`.
+        p_f: f64,
+    },
+    /// `domains` random racks (X-lines of the torus), each failing as a
+    /// unit with probability `p_domain`.
+    CorrelatedRacks {
+        /// Faulty-rack count.
+        domains: usize,
+        /// Per-instance whole-rack outage probability.
+        p_domain: f64,
+    },
+    /// `n_faulty` random nodes with Weibull time-to-failure, calibrated
+    /// so a job of `horizon_s` seconds aborts with probability
+    /// `p_horizon` per node.
+    Weibull {
+        /// Faulty-node count.
+        n_faulty: usize,
+        /// Weibull shape `k` (< 1 = infant mortality, 1 = exponential).
+        shape: f64,
+        /// Target per-node outage probability at the horizon.
+        p_horizon: f64,
+        /// Planning horizon in simulated seconds.
+        horizon_s: f64,
+    },
+    /// Deterministic replay of a recorded down-interval trace.
+    Trace {
+        /// The shared, parsed trace.
+        trace: Arc<FaultTrace>,
+    },
+}
+
+impl FaultSpec {
+    /// Short model name (matches `repro --fault-model=` values).
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            FaultSpec::None => "none",
+            FaultSpec::Iid { .. } => "iid",
+            FaultSpec::CorrelatedRacks { .. } => "correlated",
+            FaultSpec::Weibull { .. } => "weibull",
+            FaultSpec::Trace { .. } => "trace",
+        }
+    }
+
+    /// Human-readable parameter summary for report titles and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            FaultSpec::None => "no faults".to_string(),
+            FaultSpec::Iid { n_faulty, p_f } => {
+                format!("iid: {n_faulty} faulty @ p={p_f}")
+            }
+            FaultSpec::CorrelatedRacks { domains, p_domain } => {
+                format!("correlated: {domains} racks @ p={p_domain}")
+            }
+            FaultSpec::Weibull {
+                n_faulty,
+                shape,
+                p_horizon,
+                horizon_s,
+            } => {
+                format!("weibull: {n_faulty} faulty, k={shape}, p={p_horizon} @ {horizon_s}s")
+            }
+            FaultSpec::Trace { trace } => {
+                format!("trace replay over {} nodes", trace.num_nodes())
+            }
+        }
+    }
+
+    /// Derive the concrete scenario for one batch. All randomness comes
+    /// from `rng` (a per-batch [`Rng::stream`] in grid sweeps); for the
+    /// `Iid` spec the draws match the seed repo's scenario derivation
+    /// bit-for-bit (checked by `tests/golden.rs`).
+    pub fn realize(&self, platform: &Platform, rng: &mut Rng) -> Result<FaultScenario> {
+        let n = platform.num_nodes();
+        match self {
+            FaultSpec::None => Ok(FaultScenario::none(n)),
+            FaultSpec::Iid { n_faulty, p_f } => {
+                check_count(*n_faulty, n, "faulty nodes")?;
+                Ok(FaultScenario::random(n, *n_faulty, *p_f, rng))
+            }
+            FaultSpec::CorrelatedRacks { domains, p_domain } => {
+                check_count(*domains, platform.num_racks(), "faulty racks")?;
+                Ok(FaultScenario::new(CorrelatedDomains::random_racks(
+                    platform, *domains, *p_domain, rng,
+                )))
+            }
+            FaultSpec::Weibull {
+                n_faulty,
+                shape,
+                p_horizon,
+                horizon_s,
+            } => {
+                check_count(*n_faulty, n, "faulty nodes")?;
+                let nodes = rng.sample_distinct(n, *n_faulty);
+                Ok(FaultScenario::new(WeibullLifetime::from_target(
+                    nodes, *shape, *p_horizon, *horizon_s, n,
+                )?))
+            }
+            FaultSpec::Trace { trace } => {
+                if trace.num_nodes() != n {
+                    return Err(Error::Fault(format!(
+                        "trace covers {} nodes but the platform has {n}",
+                        trace.num_nodes()
+                    )));
+                }
+                Ok(FaultScenario::new(TraceReplay::new(Arc::clone(trace))))
+            }
+        }
+    }
+}
+
+fn check_count(k: usize, n: usize, what: &str) -> Result<()> {
+    if k > n {
+        return Err(Error::Fault(format!("{k} {what} requested but only {n} exist")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TorusDims;
+
+    #[test]
+    fn none_scenario_never_samples_down() {
+        let s = FaultScenario::none(16);
+        let mut rng = Rng::new(0);
+        let ctx = FaultCtx::new(0, 1.0);
+        assert!(s.sample_down(&ctx, &mut rng).iter().all(|&d| !d));
+        assert!(s.true_outage().iter().all(|&p| p == 0.0));
+        assert!(s.suspect_nodes().is_empty());
+    }
+
+    #[test]
+    fn scenario_clone_shares_model() {
+        let s = FaultScenario::iid(vec![1, 2], 0.5, 8);
+        let t = s.clone();
+        assert_eq!(s.true_outage(), t.true_outage());
+        assert_eq!(s.model_name(), "iid");
+        assert_eq!(s.num_nodes(), 8);
+        assert_eq!(s.suspect_nodes(), vec![1, 2]);
+    }
+
+    #[test]
+    fn specs_realize_on_platform() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let trace = Arc::new(FaultTrace::parse("nodes 64\n3 0.0 1.0\n".as_bytes()).unwrap());
+        let specs = [
+            FaultSpec::None,
+            FaultSpec::Iid {
+                n_faulty: 6,
+                p_f: 0.1,
+            },
+            FaultSpec::CorrelatedRacks {
+                domains: 2,
+                p_domain: 0.2,
+            },
+            FaultSpec::Weibull {
+                n_faulty: 6,
+                shape: 0.7,
+                p_horizon: 0.1,
+                horizon_s: 1.0,
+            },
+            FaultSpec::Trace { trace },
+        ];
+        for spec in specs {
+            let mut rng = Rng::new(3);
+            let s = spec.realize(&plat, &mut rng).unwrap();
+            assert_eq!(s.num_nodes(), 64, "{}", spec.model_name());
+            if !matches!(spec, FaultSpec::None) {
+                assert_eq!(s.model_name(), spec.model_name());
+            }
+            let p = s.true_outage();
+            assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn specs_reject_oversized_requests() {
+        let plat = Platform::paper_default(TorusDims::new(2, 2, 1));
+        let mut rng = Rng::new(0);
+        let iid = FaultSpec::Iid {
+            n_faulty: 5,
+            p_f: 0.1,
+        };
+        assert!(iid.realize(&plat, &mut rng).is_err());
+        let racks = FaultSpec::CorrelatedRacks {
+            domains: 3,
+            p_domain: 0.1,
+        };
+        assert!(racks.realize(&plat, &mut rng).is_err());
+        let trace = Arc::new(FaultTrace::parse("nodes 8\n".as_bytes()).unwrap());
+        assert!(FaultSpec::Trace { trace }.realize(&plat, &mut rng).is_err());
+    }
+
+    #[test]
+    fn iid_spec_realize_matches_seed_scenario_derivation() {
+        // the exact draw order of the seed repo: one sample_distinct call
+        let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+        let spec = FaultSpec::Iid {
+            n_faulty: 16,
+            p_f: 0.02,
+        };
+        let mut a = Rng::new(42);
+        let s = spec.realize(&plat, &mut a).unwrap();
+        let mut b = Rng::new(42);
+        let want = b.sample_distinct(512, 16);
+        assert_eq!(s.suspect_nodes(), {
+            let mut w = want.clone();
+            w.sort_unstable();
+            w
+        });
+        // both consumed the same number of draws
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}

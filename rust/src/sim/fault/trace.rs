@@ -1,0 +1,325 @@
+//! Deterministic replay of recorded node down-intervals.
+//!
+//! The trace format is a minimal LANL-failure-data-style text file:
+//!
+//! ```text
+//! # comments and blank lines are ignored
+//! nodes 512
+//! 17 0.0 2.5      # node 17 down during [0.0 s, 2.5 s)
+//! 17 10.0 11.0
+//! 203 4.0 6.25
+//! ```
+//!
+//! Header `nodes N`, then one `node start end` down-interval per line
+//! (seconds, `start < end`). Replay maps batch instance `i` (attempt `a`)
+//! to the trace window `[i*d + a*d, i*d + a*d + d)` where `d` is the
+//! job's fault-free makespan: instances run back-to-back in trace time,
+//! and a restart re-runs the job in the *next* window, exactly like a
+//! real resubmission. A node is down for an instance iff any of its
+//! recorded intervals overlaps the instance's window. No randomness is
+//! consumed — replay is fully deterministic.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::sim::fault::{FaultCtx, FaultModel};
+
+/// A parsed down-interval trace.
+#[derive(Debug, Clone)]
+pub struct FaultTrace {
+    /// Per-node down intervals `[start, end)`, sorted by start.
+    intervals: Vec<Vec<(f64, f64)>>,
+    /// Trace span: the largest interval end (0 for an empty trace).
+    span_s: f64,
+}
+
+impl FaultTrace {
+    /// Parse the text format described in the module docs.
+    pub fn parse<R: Read>(r: R) -> Result<Self> {
+        let mut lines = BufReader::new(r).lines();
+        let header = loop {
+            match lines.next() {
+                None => return Err(Error::Fault("empty fault trace".into())),
+                Some(line) => {
+                    let line = line?;
+                    let trimmed = strip_comment(&line);
+                    if !trimmed.is_empty() {
+                        break trimmed.to_string();
+                    }
+                }
+            }
+        };
+        let hp: Vec<&str> = header.split_whitespace().collect();
+        if hp.len() != 2 || hp[0] != "nodes" {
+            return Err(Error::Fault(format!("bad trace header: {header}")));
+        }
+        let num_nodes: usize = hp[1]
+            .parse()
+            .map_err(|_| Error::Fault(format!("bad node count: {}", hp[1])))?;
+        let mut intervals = vec![Vec::new(); num_nodes];
+        let mut span_s = 0.0f64;
+        for line in lines {
+            let line = line?;
+            let entry = strip_comment(&line);
+            if entry.is_empty() {
+                continue;
+            }
+            let p: Vec<&str> = entry.split_whitespace().collect();
+            if p.len() != 3 {
+                return Err(Error::Fault(format!("bad trace entry: {line}")));
+            }
+            let node: usize = p[0]
+                .parse()
+                .map_err(|_| Error::Fault(format!("bad node id: {line}")))?;
+            let parse_s = |s: &str| {
+                s.parse::<f64>()
+                    .map_err(|_| Error::Fault(format!("bad time: {line}")))
+            };
+            let (start, end) = (parse_s(p[1])?, parse_s(p[2])?);
+            if node >= num_nodes {
+                return Err(Error::Fault(format!(
+                    "node {node} out of range (trace has {num_nodes} nodes)"
+                )));
+            }
+            let valid = start.is_finite() && end.is_finite() && start >= 0.0 && end > start;
+            if !valid {
+                return Err(Error::Fault(format!("bad interval: {line}")));
+            }
+            intervals[node].push((start, end));
+            span_s = span_s.max(end);
+        }
+        for iv in &mut intervals {
+            iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        Ok(FaultTrace { intervals, span_s })
+    }
+
+    /// Parse a trace from a file on disk.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        Self::parse(std::fs::File::open(path)?)
+    }
+
+    /// Emit the trace back in its text format.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("nodes {}\n", self.num_nodes());
+        for (node, iv) in self.intervals.iter().enumerate() {
+            for (start, end) in iv {
+                out.push_str(&format!("{node} {start} {end}\n"));
+            }
+        }
+        out
+    }
+
+    /// Node count the trace covers.
+    pub fn num_nodes(&self) -> usize {
+        self.intervals.len()
+    }
+
+    /// The largest recorded interval end.
+    pub fn span_s(&self) -> f64 {
+        self.span_s
+    }
+
+    /// Down intervals of one node, sorted by start.
+    pub fn intervals(&self, node: usize) -> &[(f64, f64)] {
+        &self.intervals[node]
+    }
+
+    /// True iff `node` has a down interval overlapping `[t0, t1)`.
+    pub fn down_in(&self, node: usize, t0: f64, t1: f64) -> bool {
+        self.intervals[node].iter().any(|&(s, e)| s < t1 && e > t0)
+    }
+
+    /// Per-node down-time fraction over the trace span (the availability
+    /// statistic a heartbeat history would converge to).
+    pub fn down_fraction(&self) -> Vec<f64> {
+        if self.span_s <= 0.0 {
+            return vec![0.0; self.num_nodes()];
+        }
+        self.intervals
+            .iter()
+            .map(|iv| {
+                // intervals of one node may overlap; merge while summing
+                let mut total = 0.0;
+                let mut cur: Option<(f64, f64)> = None;
+                for &(s, e) in iv {
+                    match cur {
+                        Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+                        Some((cs, ce)) => {
+                            total += ce - cs;
+                            cur = Some((s, e));
+                        }
+                        None => cur = Some((s, e)),
+                    }
+                }
+                if let Some((cs, ce)) = cur {
+                    total += ce - cs;
+                }
+                (total / self.span_s).min(1.0)
+            })
+            .collect()
+    }
+}
+
+/// Deterministic trace replay (see the module docs for the instance →
+/// trace-window mapping).
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    trace: Arc<FaultTrace>,
+}
+
+impl TraceReplay {
+    /// Replay a shared trace.
+    pub fn new(trace: Arc<FaultTrace>) -> Self {
+        TraceReplay { trace }
+    }
+
+    /// The underlying trace.
+    pub fn trace(&self) -> &FaultTrace {
+        &self.trace
+    }
+
+    /// The trace window an instance/attempt occupies.
+    pub fn window(&self, ctx: &FaultCtx) -> (f64, f64) {
+        let d = ctx.job_duration_s;
+        let t0 = (ctx.instance as f64 + ctx.attempt as f64) * d;
+        (t0, t0 + d)
+    }
+}
+
+impl FaultModel for TraceReplay {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.trace.num_nodes()
+    }
+
+    fn true_outage(&self) -> Vec<f64> {
+        self.trace.down_fraction()
+    }
+
+    fn sample(&self, ctx: &FaultCtx, _rng: &mut Rng) -> Vec<bool> {
+        let (t0, t1) = self.window(ctx);
+        let n = self.trace.num_nodes();
+        if t1 <= t0 {
+            return vec![false; n];
+        }
+        (0..n).map(|i| self.trace.down_in(i, t0, t1)).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => line[..i].trim(),
+        None => line.trim(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TRACE: &str = "\
+# two flaky nodes on a 8-node platform
+nodes 8
+1 0.0 1.5
+1 4.0 5.0
+6 2.0 2.5   # trailing comment
+";
+
+    fn replay() -> TraceReplay {
+        TraceReplay::new(Arc::new(FaultTrace::parse(TRACE.as_bytes()).unwrap()))
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let t = FaultTrace::parse(TRACE.as_bytes()).unwrap();
+        assert_eq!(t.num_nodes(), 8);
+        assert_eq!(t.span_s(), 5.0);
+        assert_eq!(t.intervals(1), &[(0.0, 1.5), (4.0, 5.0)]);
+        let back = FaultTrace::parse(t.to_text().as_bytes()).unwrap();
+        assert_eq!(back.intervals(1), t.intervals(1));
+        assert_eq!(back.span_s(), t.span_s());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "",
+            "nodes\n",
+            "racks 8\n",
+            "nodes 8\n9 0.0 1.0\n",
+            "nodes 8\n1 2.0 1.0\n",
+            "nodes 8\n1 -1.0 1.0\n",
+            "nodes 8\n1 0.0\n",
+            "nodes 8\n1 0.0 x\n",
+        ] {
+            assert!(FaultTrace::parse(bad.as_bytes()).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic_and_consumes_no_rng() {
+        let m = replay();
+        let ctx = FaultCtx::new(0, 1.0);
+        let mut rng = Rng::new(3);
+        let before = rng.clone().next_u64();
+        let a = m.sample(&ctx, &mut rng);
+        let b = m.sample(&ctx, &mut rng);
+        assert_eq!(a, b);
+        assert_eq!(rng.next_u64(), before, "trace replay consumed RNG draws");
+    }
+
+    #[test]
+    fn windows_follow_instances_and_attempts() {
+        let m = replay();
+        let mut rng = Rng::new(0);
+        // instance 0, d=1: window [0,1) overlaps node 1's [0,1.5)
+        let d0 = m.sample(&FaultCtx::new(0, 1.0), &mut rng);
+        assert!(d0[1] && !d0[6]);
+        // instance 2, d=1: [2,3) overlaps node 6's [2,2.5)
+        let d2 = m.sample(&FaultCtx::new(2, 1.0), &mut rng);
+        assert!(!d2[1] && d2[6]);
+        // instance 0 retry (attempt 1): window moves to [1,2) — clean
+        let retry = m.sample(
+            &FaultCtx {
+                instance: 0,
+                attempt: 1,
+                job_duration_s: 1.0,
+            },
+            &mut rng,
+        );
+        assert!(retry.iter().all(|&x| !x));
+        // beyond the trace span: nothing is down
+        let far = m.sample(&FaultCtx::new(100, 1.0), &mut rng);
+        assert!(far.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn down_fraction_merges_overlaps() {
+        let text = "nodes 4\n0 0.0 2.0\n0 1.0 3.0\n1 0.0 4.0\n";
+        let t = FaultTrace::parse(text.as_bytes()).unwrap();
+        let f = t.down_fraction();
+        assert!((f[0] - 3.0 / 4.0).abs() < 1e-12);
+        assert!((f[1] - 1.0).abs() < 1e-12);
+        assert_eq!(f[2], 0.0);
+    }
+
+    #[test]
+    fn empty_trace_is_fault_free() {
+        let t = FaultTrace::parse("nodes 4\n".as_bytes()).unwrap();
+        assert_eq!(t.down_fraction(), vec![0.0; 4]);
+        let m = TraceReplay::new(Arc::new(t));
+        let mut rng = Rng::new(0);
+        assert!(m
+            .sample(&FaultCtx::new(0, 1.0), &mut rng)
+            .iter()
+            .all(|&x| !x));
+        assert!(m.true_outage().iter().all(|&p| p == 0.0));
+    }
+}

@@ -1,0 +1,181 @@
+//! Weibull per-node lifetimes: temporal failures coupled to job length.
+//!
+//! Each faulty node draws a time-to-failure `T ~ Weibull(shape, scale)`
+//! per instance; the node is down for the instance iff `T` falls inside
+//! the job's makespan. A job running longer therefore sees more failures
+//! — the coupling the paper's duration-blind Bernoulli model cannot
+//! express. Shape < 1 models infant mortality (failure-prone right after
+//! reboot, the empirically dominant HPC regime); shape = 1 is the
+//! memoryless exponential; shape > 1 models wear-out.
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::sim::fault::{FaultCtx, FaultModel};
+
+/// Per-node Weibull time-to-failure on a fixed faulty set.
+#[derive(Debug, Clone)]
+pub struct WeibullLifetime {
+    /// Nodes with a finite lifetime, in the order draws are consumed.
+    pub faulty_nodes: Vec<usize>,
+    /// Weibull shape parameter `k`.
+    pub shape: f64,
+    /// Weibull scale parameter (characteristic life) in simulated seconds.
+    pub scale_s: f64,
+    /// Planning horizon for [`FaultModel::true_outage`]: the job duration
+    /// the controller assumes when estimating outage probabilities before
+    /// a placement (and thus a real makespan) exists.
+    pub horizon_s: f64,
+    /// Platform size.
+    pub num_nodes: usize,
+}
+
+impl WeibullLifetime {
+    /// Explicit parameters.
+    pub fn new(
+        faulty_nodes: Vec<usize>,
+        shape: f64,
+        scale_s: f64,
+        horizon_s: f64,
+        num_nodes: usize,
+    ) -> Result<Self> {
+        let positive = |x: f64| x.is_finite() && x > 0.0;
+        if !positive(shape) || !positive(scale_s) || !positive(horizon_s) {
+            return Err(Error::Fault(format!(
+                "weibull parameters must be positive: shape {shape}, scale {scale_s}, \
+                 horizon {horizon_s}"
+            )));
+        }
+        debug_assert!(faulty_nodes.iter().all(|&n| n < num_nodes));
+        Ok(WeibullLifetime {
+            faulty_nodes,
+            shape,
+            scale_s,
+            horizon_s,
+            num_nodes,
+        })
+    }
+
+    /// Calibrate the scale so that a job of exactly `horizon_s` seconds
+    /// sees each faulty node down with probability `p_horizon` — the
+    /// Weibull counterpart of the paper's `p_f`.
+    pub fn from_target(
+        faulty_nodes: Vec<usize>,
+        shape: f64,
+        p_horizon: f64,
+        horizon_s: f64,
+        num_nodes: usize,
+    ) -> Result<Self> {
+        let in_open_unit = p_horizon > 0.0 && p_horizon < 1.0;
+        if !in_open_unit {
+            return Err(Error::Fault(format!(
+                "weibull target probability must be in (0, 1): {p_horizon}"
+            )));
+        }
+        // p(t) = 1 - exp(-(t/scale)^k)  =>  scale = t / (-ln(1-p))^(1/k)
+        let scale_s = horizon_s / (-(1.0 - p_horizon).ln()).powf(1.0 / shape);
+        Self::new(faulty_nodes, shape, scale_s, horizon_s, num_nodes)
+    }
+
+    /// Probability a faulty node is down for a job of `t` seconds:
+    /// the Weibull CDF `1 - exp(-(t/scale)^k)`.
+    pub fn p_down_at(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        1.0 - (-(t / self.scale_s).powf(self.shape)).exp()
+    }
+
+    /// Outage probability vector for a job of `t` seconds (the horizon-
+    /// free variant of [`FaultModel::true_outage`]).
+    pub fn outage_at(&self, t: f64) -> Vec<f64> {
+        let p = self.p_down_at(t);
+        let mut out = vec![0.0; self.num_nodes];
+        for &n in &self.faulty_nodes {
+            out[n] = p;
+        }
+        out
+    }
+}
+
+impl FaultModel for WeibullLifetime {
+    fn name(&self) -> &'static str {
+        "weibull"
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    fn true_outage(&self) -> Vec<f64> {
+        self.outage_at(self.horizon_s)
+    }
+
+    fn sample(&self, ctx: &FaultCtx, rng: &mut Rng) -> Vec<bool> {
+        // inverse-CDF lifetime draw per faulty node, in stored order:
+        // T = scale * (-ln(1-u))^(1/k); down iff T < job duration
+        let mut down = vec![false; self.num_nodes];
+        for &n in &self.faulty_nodes {
+            let u = rng.f64();
+            let lifetime = self.scale_s * (-(1.0 - u).ln()).powf(1.0 / self.shape);
+            if lifetime < ctx.job_duration_s {
+                down[n] = true;
+            }
+        }
+        down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longer_jobs_see_more_failures() {
+        let m = WeibullLifetime::from_target((0..32).collect(), 0.7, 0.1, 1.0, 64).unwrap();
+        let mut rng = Rng::new(11);
+        let rate = |dur: f64, rng: &mut Rng| {
+            let trials = 4000;
+            let mut downs = 0usize;
+            for i in 0..trials {
+                let ctx = FaultCtx::new(i, dur);
+                downs += m.sample(&ctx, rng).iter().filter(|&&d| d).count();
+            }
+            downs as f64 / (trials as usize * 32) as f64
+        };
+        let short = rate(0.2, &mut rng);
+        let nominal = rate(1.0, &mut rng);
+        let long = rate(5.0, &mut rng);
+        assert!(short < nominal && nominal < long, "{short} {nominal} {long}");
+        // calibration: at the horizon the rate matches the target
+        assert!((nominal - 0.1).abs() < 0.02, "nominal={nominal}");
+        assert!((m.p_down_at(1.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn true_outage_uses_horizon() {
+        let m = WeibullLifetime::from_target(vec![3], 1.0, 0.25, 2.0, 8).unwrap();
+        let p = m.true_outage();
+        assert!((p[3] - 0.25).abs() < 1e-12);
+        assert_eq!(p[0], 0.0);
+        // monotone in duration, bounded by 1
+        assert!(m.p_down_at(0.0) == 0.0);
+        assert!(m.p_down_at(1.0) < m.p_down_at(4.0));
+        assert!(m.p_down_at(1e9) <= 1.0);
+    }
+
+    #[test]
+    fn zero_duration_never_fails() {
+        let m = WeibullLifetime::from_target(vec![0, 1], 0.5, 0.5, 1.0, 4).unwrap();
+        let mut rng = Rng::new(2);
+        let down = m.sample(&FaultCtx::new(0, 0.0), &mut rng);
+        assert!(down.iter().all(|&d| !d));
+    }
+
+    #[test]
+    fn invalid_parameters_rejected() {
+        assert!(WeibullLifetime::new(vec![], 0.0, 1.0, 1.0, 4).is_err());
+        assert!(WeibullLifetime::new(vec![], 1.0, -1.0, 1.0, 4).is_err());
+        assert!(WeibullLifetime::from_target(vec![], 1.0, 0.0, 1.0, 4).is_err());
+        assert!(WeibullLifetime::from_target(vec![], 1.0, 1.0, 1.0, 4).is_err());
+    }
+}

@@ -12,14 +12,16 @@
 //!   network flow phases under a placement;
 //! * [`executor`] — whole-job simulation with phase memoization;
 //! * [`cache`] — the shared, concurrency-safe phase-duration cache;
-//! * [`failure`] — down-state sampling per scenario.
+//! * [`fault`] — pluggable fault models (i.i.d. Bernoulli, correlated
+//!   domains, Weibull lifetimes, trace replay) behind the
+//!   [`fault::FaultModel`] trait.
 
 pub mod cache;
 pub mod executor;
-pub mod failure;
+pub mod fault;
 pub mod network;
 pub mod smpi;
 
 pub use cache::PhaseCache;
 pub use executor::{simulate_job, JobOutcome, SimStats};
-pub use failure::sample_down_nodes;
+pub use fault::{FaultCtx, FaultModel, FaultScenario, FaultSpec};

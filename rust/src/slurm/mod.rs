@@ -13,6 +13,13 @@
 //! * [`srun`] — the user front-end (`--distribution=tofa --load-matrix=G`).
 //! * [`protocol`] / [`jobs`] / [`queue`] — messages, job records, FIFO.
 
+//! Ground-truth fault behaviour (which nodes are down, when) lives in
+//! [`crate::sim::fault`]: a [`crate::sim::fault::FaultScenario`] *emulates*
+//! node behaviour — the node side of the heartbeat protocol and the
+//! per-instance down sampling. The controller never reads it directly; it
+//! only sees heartbeat outcomes ([`heartbeat`]), from which it estimates
+//! the per-node outage vector the FANS plugin consumes.
+
 pub mod controller;
 pub mod heartbeat;
 pub mod jobs;
@@ -21,35 +28,3 @@ pub mod plugins;
 pub mod protocol;
 pub mod queue;
 pub mod srun;
-
-use crate::sim::failure::FaultScenario;
-
-/// Ground-truth fault model used to *emulate* node behaviour (the node
-/// side of the heartbeat protocol and the per-instance down sampling).
-/// The controller never reads this directly — it only sees heartbeat
-/// outcomes, from which it estimates outage probabilities.
-#[derive(Debug, Clone)]
-pub struct FaultModel {
-    /// The batch-level fault scenario.
-    pub scenario: FaultScenario,
-}
-
-impl FaultModel {
-    /// Fault-free model.
-    pub fn none(num_nodes: usize) -> Self {
-        FaultModel {
-            scenario: FaultScenario::none(num_nodes),
-        }
-    }
-
-    /// Wrap a scenario.
-    pub fn new(scenario: FaultScenario) -> Self {
-        FaultModel { scenario }
-    }
-
-    /// The *true* outage probabilities (oracle; tests and upper-bound
-    /// experiments only — production code estimates via heartbeats).
-    pub fn outage_estimates(&self) -> Vec<f64> {
-        self.scenario.true_outage()
-    }
-}

@@ -51,7 +51,10 @@ impl FansPlugin {
         }
     }
 
-    /// Full TOFA selection with path reporting.
+    /// Full TOFA selection with path reporting. The `outage` vector is
+    /// the generalized per-node probabilities of **any**
+    /// [`crate::sim::fault::FaultModel`] (correlated, Weibull, trace),
+    /// not just the paper's uniform `p_f`.
     pub fn select_tofa(
         &self,
         comm: &CommMatrix,
@@ -96,5 +99,24 @@ mod tests {
         let fans = FansPlugin::default();
         let p = fans.select_tofa(&comm, &plat, &outage).unwrap();
         assert!(!p.assignment.contains(&0));
+    }
+
+    #[test]
+    fn selection_avoids_correlated_domain_outage_vector() {
+        use crate::sim::fault::{CorrelatedDomains, FaultModel};
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        // whole first rack (nodes 0..4) flaky as a unit: FANS consumes
+        // the model's generalized (non-uniform) per-node outage vector
+        let model = CorrelatedDomains::racks(&plat, &[0], 0.4);
+        let fans = FansPlugin::default();
+        let mut rng = Rng::new(8);
+        let p = fans
+            .select(PlacementPolicy::Tofa, &comm, &plat, &model.true_outage(), &mut rng)
+            .unwrap();
+        for n in plat.rack_members(0) {
+            assert!(!p.assignment.contains(&n), "used flaky-rack node {n}");
+        }
     }
 }

@@ -96,6 +96,31 @@ impl FattPlugin {
         self.torus.intermediates(u, v)
     }
 
+    /// Failure-domain (rack) count (racks = X-lines; the single
+    /// definition lives in [`Torus::num_racks`]).
+    pub fn num_racks(&self) -> usize {
+        self.torus.num_racks()
+    }
+
+    /// The rack a node belongs to.
+    pub fn rack_of(&self, node: usize) -> usize {
+        self.torus.rack_of(node)
+    }
+
+    /// Aggregate a generalized per-node outage vector (any fault model's
+    /// [`crate::sim::fault::FaultModel::true_outage`], uniform or not)
+    /// into per-rack means — the topology-level view a correlated-outage
+    /// scheduler reasons about.
+    pub fn rack_outage(&self, outage: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(outage.len(), self.torus.num_nodes());
+        (0..self.num_racks())
+            .map(|r| {
+                let members = self.torus.rack_members(r);
+                members.iter().map(|&n| outage[n]).sum::<f64>() / members.len() as f64
+            })
+            .collect()
+    }
+
     /// Underlying torus.
     pub fn torus(&self) -> &Torus {
         &self.torus
@@ -135,5 +160,20 @@ mod tests {
         let r = f.route(0, 2);
         assert_eq!(r.len(), 2);
         assert_eq!(f.intermediates(0, 2), vec![1]);
+    }
+
+    #[test]
+    fn rack_outage_aggregates_non_uniform_vectors() {
+        let f = FattPlugin::new(TorusDims::new(4, 2, 1));
+        assert_eq!(f.num_racks(), 2);
+        assert_eq!(f.rack_of(3), 0);
+        assert_eq!(f.rack_of(4), 1);
+        let mut outage = vec![0.0; 8];
+        outage[0] = 0.4;
+        outage[1] = 0.2;
+        outage[5] = 0.1;
+        let racks = f.rack_outage(&outage);
+        assert!((racks[0] - 0.15).abs() < 1e-12);
+        assert!((racks[1] - 0.025).abs() < 1e-12);
     }
 }

@@ -10,8 +10,8 @@ use super::torus::{Torus, TorusDims};
 
 /// Immutable platform description shared by the placement and simulation
 /// layers. Fault *state* (which nodes are down in a given scenario) is kept
-/// separate — see [`crate::slurm::FaultModel`] — so one platform can be
-/// reused across thousands of simulated instances.
+/// separate — see [`crate::sim::fault::FaultScenario`] — so one platform
+/// can be reused across thousands of simulated instances.
 #[derive(Debug, Clone)]
 pub struct Platform {
     torus: Torus,
@@ -59,6 +59,24 @@ impl Platform {
     pub fn hop_matrix(&self) -> DistanceMatrix {
         DistanceMatrix::from_torus_hops(&self.torus)
     }
+
+    /// Failure-domain count (racks = X-lines; the definition lives in
+    /// [`Torus::num_racks`]). Correlated fault models
+    /// ([`crate::sim::fault::CorrelatedDomains`]) use these as their
+    /// default domains.
+    pub fn num_racks(&self) -> usize {
+        self.torus.num_racks()
+    }
+
+    /// The rack (failure domain) a node belongs to.
+    pub fn rack_of(&self, node: usize) -> usize {
+        self.torus.rack_of(node)
+    }
+
+    /// Member node ids of one rack, in ascending order.
+    pub fn rack_members(&self, rack: usize) -> Vec<usize> {
+        self.torus.rack_members(rack)
+    }
 }
 
 #[cfg(test)]
@@ -80,5 +98,22 @@ mod tests {
         let m = p.hop_matrix();
         assert_eq!(m.get(0, 1), 1.0);
         assert_eq!(m.len(), 64);
+    }
+
+    #[test]
+    fn racks_partition_the_platform() {
+        let p = Platform::paper_default(TorusDims::new(8, 4, 2));
+        assert_eq!(p.num_racks(), 8);
+        let mut seen = vec![false; p.num_nodes()];
+        for r in 0..p.num_racks() {
+            for n in p.rack_members(r) {
+                assert_eq!(p.rack_of(n), r);
+                assert!(!seen[n], "node {n} in two racks");
+                seen[n] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // members are consecutive ids (X-lines)
+        assert_eq!(p.rack_members(1), vec![8, 9, 10, 11, 12, 13, 14, 15]);
     }
 }

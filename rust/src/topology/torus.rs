@@ -100,6 +100,28 @@ impl Torus {
         (x, y, z)
     }
 
+    /// Failure-domain (rack) count: one rack per X-line. The `dims.x`
+    /// nodes sharing a `(y, z)` coordinate have consecutive row-major ids
+    /// — matching both how Slurm enumerates a cabinet and how nodes share
+    /// power/switch infrastructure. This is the single definition of the
+    /// rack grouping; `Platform` and the FATT plugin both delegate here.
+    pub fn num_racks(&self) -> usize {
+        self.num_nodes() / self.dims.x
+    }
+
+    /// The rack (failure domain) a node belongs to.
+    #[inline]
+    pub fn rack_of(&self, node: usize) -> usize {
+        debug_assert!(node < self.num_nodes());
+        node / self.dims.x
+    }
+
+    /// Member node ids of one rack, in ascending order.
+    pub fn rack_members(&self, rack: usize) -> Vec<usize> {
+        debug_assert!(rack < self.num_racks());
+        (rack * self.dims.x..(rack + 1) * self.dims.x).collect()
+    }
+
     /// Signed shortest displacement from `a` to `b` along a ring of size
     /// `n`: the per-step direction (+1/-1) and the hop count.
     #[inline]

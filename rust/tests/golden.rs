@@ -1,0 +1,183 @@
+//! Golden-value regression tests: the pluggable fault-model subsystem
+//! must not perturb the paper reproduction.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Reference-implementation equivalence** — the seed repo's Bernoulli
+//!    sampler and batch accounting are re-implemented here verbatim, and
+//!    the generalized engine must agree with them **bit-for-bit** under
+//!    `IidBernoulli`. This runs on every CI machine with no fixture.
+//! 2. **On-disk golden lock** — the reduced-scale Fig. 4/5 grid statistics
+//!    are compared against `tests/golden/fig4_fig5_iid.txt`. On the first
+//!    toolchain-equipped run the file is created (commit it to lock the
+//!    values); afterwards any bit drift fails the test.
+
+use std::path::PathBuf;
+
+use tofa::apps::lammps_proxy::LammpsProxy;
+use tofa::apps::MpiApp;
+use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
+use tofa::mapping::PlacementPolicy;
+use tofa::profiler::profile_app;
+use tofa::rng::Rng;
+use tofa::sim::executor::{JobOutcome, Simulator};
+use tofa::sim::fault::{FaultCtx, FaultModel, FaultScenario, FaultSpec, IidBernoulli};
+use tofa::slurm::plugins::fans::FansPlugin;
+use tofa::topology::{Platform, TorusDims};
+
+/// The seed repo's `sample_down_nodes`, reimplemented verbatim as the
+/// golden reference.
+fn seed_sample_down(faulty: &[usize], p_f: f64, num_nodes: usize, rng: &mut Rng) -> Vec<bool> {
+    let mut down = vec![false; num_nodes];
+    for &n in faulty {
+        if rng.bernoulli(p_f) {
+            down[n] = true;
+        }
+    }
+    down
+}
+
+#[test]
+fn iid_sampling_matches_seed_reference_bit_for_bit() {
+    let mut seed_rng = Rng::new(7);
+    let model = IidBernoulli::random(512, 16, 0.02, &mut seed_rng);
+    for instance in 0..500u64 {
+        let mut a = Rng::stream(99, instance);
+        let mut b = a.clone();
+        let ctx = FaultCtx::new(instance, 1.0);
+        let new = model.sample(&ctx, &mut a);
+        let old = seed_sample_down(&model.faulty_nodes, model.p_f, model.num_nodes, &mut b);
+        assert_eq!(new, old, "instance {instance}");
+        assert_eq!(a.next_u64(), b.next_u64(), "instance {instance}: rng diverged");
+    }
+}
+
+/// The seed repo's `run_batch` pipeline (oracle estimates, one placement
+/// per batch, per-instance streams, abort accounting), reimplemented from
+/// the pre-subsystem code as the golden reference.
+fn seed_reference_batch(
+    app: &dyn MpiApp,
+    platform: &Platform,
+    faulty: &[usize],
+    p_f: f64,
+    policy: PlacementPolicy,
+    instances: usize,
+    rng: &mut Rng,
+) -> (f64, Vec<(f64, u32)>) {
+    let comm = profile_app(app).volume;
+    let mut truth = vec![0.0; platform.num_nodes()];
+    for &n in faulty {
+        truth[n] = p_f;
+    }
+    let fans = FansPlugin::default();
+    let placement = fans.select(policy, &comm, platform, &truth, rng).unwrap();
+    let mut sim = Simulator::new(app, platform);
+    let profile = sim.prepare(&placement.assignment);
+    let success_run_s = profile.success_s;
+    let stream_base = rng.next_u64();
+    let mut total = 0.0f64;
+    let mut outcomes = Vec::with_capacity(instances);
+    for i in 0..instances {
+        let mut irng = Rng::stream(stream_base, i as u64);
+        let mut completion = 0.0f64;
+        let mut aborts = 0u32;
+        loop {
+            let down = seed_sample_down(faulty, p_f, platform.num_nodes(), &mut irng);
+            match profile.outcome(&down) {
+                JobOutcome::Completed { seconds } => {
+                    completion += seconds;
+                    break;
+                }
+                JobOutcome::Aborted { .. } => {
+                    completion += success_run_s;
+                    aborts += 1;
+                    if aborts >= 1000 {
+                        break;
+                    }
+                }
+            }
+        }
+        total += completion;
+        outcomes.push((completion, aborts));
+    }
+    (total, outcomes)
+}
+
+#[test]
+fn batch_engine_reproduces_seed_pipeline_bit_for_bit() {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = LammpsProxy::tiny(16, 3);
+    let faulty: Vec<usize> = (0..24).collect();
+    let p_f = 0.25;
+    for policy in [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa] {
+        let mut ref_rng = Rng::new(4242);
+        let (want_total, want_outcomes) =
+            seed_reference_batch(&app, &platform, &faulty, p_f, policy, 50, &mut ref_rng);
+
+        let scenario = FaultScenario::iid(faulty.clone(), p_f, platform.num_nodes());
+        let mut runner = BatchRunner::new(&app, &platform);
+        let cfg = BatchConfig {
+            instances: 50,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(4242);
+        let res = runner.run_batch(policy, &scenario, &cfg, &mut rng).unwrap();
+
+        assert_eq!(res.completion_s.to_bits(), want_total.to_bits(), "{policy}");
+        assert_eq!(res.outcomes.len(), want_outcomes.len());
+        for (i, (o, (wc, wa))) in res.outcomes.iter().zip(&want_outcomes).enumerate() {
+            assert_eq!(o.completion_s.to_bits(), wc.to_bits(), "{policy} instance {i}");
+            assert_eq!(o.aborts, *wa, "{policy} instance {i}");
+        }
+    }
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name)
+}
+
+#[test]
+fn fig4_fig5_iid_grid_statistics_locked() {
+    // Reduced-scale Fig. 5a-style sweep through the exact engine path the
+    // figures use (run_grid, seed 42, paper p_f), IidBernoulli model.
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = LammpsProxy::tiny(64, 3);
+    let runner = BatchRunner::new(&app, &platform);
+    let config = BatchConfig {
+        instances: 25,
+        fault: FaultSpec::Iid {
+            n_faulty: 8,
+            p_f: 0.02,
+        },
+        parallelism: Parallelism::fixed(2),
+        ..Default::default()
+    };
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    let grid = run_grid(&runner, &policies, &config, 3, 42).unwrap();
+    let mut got = String::new();
+    for c in &grid.cells {
+        got.push_str(&format!(
+            "{} {} {:016x} {:016x} {}\n",
+            c.batch_index,
+            c.policy,
+            c.result.completion_s.to_bits(),
+            c.result.success_run_s.to_bits(),
+            c.result.total_aborts,
+        ));
+    }
+    let path = golden_path("fig4_fig5_iid.txt");
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            got, want,
+            "IidBernoulli no longer reproduces the locked Fig. 4/5 statistics"
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!(
+                "golden file {} created on first run; commit it to lock the values",
+                path.display()
+            );
+        }
+    }
+}

@@ -12,8 +12,9 @@ use tofa::mapping::{cost::hop_bytes_cost, place, Placement, PlacementPolicy};
 use tofa::profiler::profile_app;
 use tofa::rng::Rng;
 use tofa::sim::executor::{simulate_job, Simulator};
-use tofa::sim::failure::FaultScenario;
+use tofa::sim::fault::{CorrelatedDomains, Domain, FaultScenario};
 use tofa::slurm::controller::Controller;
+use tofa::slurm::heartbeat::{probe_histories, OutagePolicy};
 use tofa::slurm::jobs::JobState;
 use tofa::slurm::srun;
 use tofa::tofa::placer::{TofaPath, TofaPlacer};
@@ -82,11 +83,11 @@ fn tofa_zero_aborts_when_clean_window_exists() {
             continue; // no clean window this trial
         }
         // simulate with EVERY faulty node down at once: still no abort
-        let out = simulate_job(&app, &platform, &placement.assignment, &scenario.faulty_nodes);
+        let faulty = scenario.suspect_nodes();
+        let out = simulate_job(&app, &platform, &placement.assignment, &faulty);
         assert!(
             !out.is_abort(),
-            "trial {trial}: window placement aborted with faulty {:?}",
-            scenario.faulty_nodes
+            "trial {trial}: window placement aborted with faulty {faulty:?}"
         );
     }
 }
@@ -100,8 +101,6 @@ fn batch_results_internally_consistent() {
     let scenario = FaultScenario::random(512, 16, 0.05, &mut rng);
     let config = BatchConfig {
         instances: 50,
-        n_faulty: 16,
-        p_f: 0.05,
         ..Default::default()
     };
     let res = runner
@@ -127,15 +126,9 @@ fn batch_deterministic_given_seed() {
     let platform = Platform::paper_default(TorusDims::new(4, 4, 4));
     let app = RingApp::new(8, 65_536.0, 5);
     let mut runner = BatchRunner::new(&app, &platform);
-    let scenario = FaultScenario {
-        faulty_nodes: vec![1, 7, 20],
-        p_f: 0.2,
-        num_nodes: 64,
-    };
+    let scenario = FaultScenario::iid(vec![1, 7, 20], 0.2, 64);
     let config = BatchConfig {
         instances: 30,
-        n_faulty: 3,
-        p_f: 0.2,
         ..Default::default()
     };
     let run = |runner: &mut BatchRunner| {
@@ -247,6 +240,55 @@ fn simulator_profile_fast_path_agrees_with_full_run() {
             assert!((a - b).abs() < 1e-9);
         }
     }
+}
+
+#[test]
+fn heartbeat_estimation_recovers_correlated_outage_vector() {
+    // Today's uniform-p_f path never exercised non-uniform truth; a
+    // CorrelatedDomains scenario has per-rack probabilities, and both the
+    // offline probe path and the live daemon path must recover them.
+    let platform = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let model = CorrelatedDomains::new(
+        vec![
+            Domain {
+                nodes: platform.rack_members(2),
+                p_d: 0.6,
+            },
+            Domain {
+                nodes: platform.rack_members(9),
+                p_d: 0.25,
+            },
+        ],
+        platform.num_nodes(),
+    );
+    let scenario = FaultScenario::new(model);
+    let truth = scenario.true_outage();
+
+    // offline probe path (what BatchRunner's heartbeat_rounds uses)
+    let mut rng = Rng::new(31);
+    let est = OutagePolicy::Empirical.estimate_all(&probe_histories(&truth, 600, &mut rng));
+    for (n, (&t, &e)) in truth.iter().zip(&est).enumerate() {
+        assert!((t - e).abs() < 0.08, "node {n}: truth {t} est {e}");
+    }
+
+    // live daemon path: slurmd-lite daemons emulate the generalized
+    // per-node outage vector; slurmctld-lite estimates from heartbeats
+    let mut ctl = Controller::new(platform.clone(), 3);
+    ctl.spawn_node_daemons(&truth, 77);
+    ctl.collect_heartbeats(120);
+    let live = ctl.outage_estimates();
+    ctl.shutdown_node_daemons();
+    for (n, (&t, &e)) in truth.iter().zip(&live).enumerate() {
+        assert!((t - e).abs() < 0.22, "node {n}: truth {t} live est {e}");
+    }
+    // the non-uniform structure is recovered: rack 2 >> rack 9 >> clean
+    let rack_mean = |r: usize, v: &[f64]| {
+        let m = platform.rack_members(r);
+        m.iter().map(|&n| v[n]).sum::<f64>() / m.len() as f64
+    };
+    assert!(rack_mean(2, &live) > rack_mean(9, &live));
+    assert!(rack_mean(9, &live) > rack_mean(5, &live));
+    assert!(rack_mean(5, &live) < 0.02, "clean rack estimated flaky");
 }
 
 #[test]

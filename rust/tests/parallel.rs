@@ -1,6 +1,7 @@
 //! Parallel batch engine: determinism contract, shared-cache equivalence,
 //! and the Send/Sync audit for everything the worker pool moves across
-//! threads.
+//! threads. Every pluggable fault model must uphold the same contract:
+//! bit-identical batch results for any worker count.
 
 use std::sync::Arc;
 
@@ -12,7 +13,9 @@ use tofa::mapping::PlacementPolicy;
 use tofa::rng::Rng;
 use tofa::sim::cache::PhaseCache;
 use tofa::sim::executor::Simulator;
-use tofa::sim::failure::FaultScenario;
+use tofa::sim::fault::{
+    CorrelatedDomains, FaultScenario, FaultSpec, FaultTrace, TraceReplay, WeibullLifetime,
+};
 use tofa::topology::{Platform, TorusDims};
 
 fn assert_send<T: Send>() {}
@@ -35,18 +38,12 @@ fn parallel_engine_types_are_send_sync() {
 #[test]
 fn batch_is_bit_identical_across_worker_counts() {
     let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
-    let scenario = FaultScenario {
-        faulty_nodes: (0..10).collect(),
-        p_f: 0.25,
-        num_nodes: plat.num_nodes(),
-    };
+    let scenario = FaultScenario::iid((0..10).collect(), 0.25, plat.num_nodes());
     let run = |workers: usize| {
         let app = LammpsProxy::tiny(16, 3);
         let mut runner = BatchRunner::new(&app, &plat);
         let cfg = BatchConfig {
             instances: 60,
-            n_faulty: 10,
-            p_f: 0.25,
             parallelism: Parallelism::fixed(workers),
             ..Default::default()
         };
@@ -75,17 +72,11 @@ fn batch_is_bit_identical_across_worker_counts() {
 fn auto_parallelism_matches_serial_results() {
     let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
     let app = RingApp::new(8, 65_536.0, 5);
-    let scenario = FaultScenario {
-        faulty_nodes: vec![1, 7, 20],
-        p_f: 0.2,
-        num_nodes: 64,
-    };
+    let scenario = FaultScenario::iid(vec![1, 7, 20], 0.2, 64);
     let run = |parallelism: Parallelism| {
         let mut runner = BatchRunner::new(&app, &plat);
         let cfg = BatchConfig {
             instances: 30,
-            n_faulty: 3,
-            p_f: 0.2,
             parallelism,
             ..Default::default()
         };
@@ -160,8 +151,10 @@ fn grid_is_deterministic_and_batch_major() {
         let runner = BatchRunner::new(&app, &plat);
         let cfg = BatchConfig {
             instances: 8,
-            n_faulty: 5,
-            p_f: 0.5,
+            fault: FaultSpec::Iid {
+                n_faulty: 5,
+                p_f: 0.5,
+            },
             parallelism: Parallelism::fixed(workers),
             ..Default::default()
         };
@@ -187,5 +180,104 @@ fn grid_is_deterministic_and_batch_major() {
             x.result.completion_s.to_bits(),
             y.result.completion_s.to_bits()
         );
+    }
+}
+
+/// One scenario per fault model on a common 4x4x4 platform, built so each
+/// model actually produces a mix of clean and aborted instances.
+fn all_model_scenarios(plat: &Platform) -> Vec<(&'static str, FaultScenario)> {
+    let n = plat.num_nodes();
+    let trace_text = "nodes 64\n1 0.0 0.4\n1 3.0 3.2\n9 1.0 2.5\n20 0.1 6.0\n";
+    let trace = Arc::new(FaultTrace::parse(trace_text.as_bytes()).unwrap());
+    let weibull = WeibullLifetime::from_target(vec![0, 3, 9, 17, 33], 0.7, 0.3, 0.1, n).unwrap();
+    vec![
+        ("iid", FaultScenario::iid(vec![0, 3, 9, 17, 33], 0.3, n)),
+        (
+            "correlated",
+            FaultScenario::new(CorrelatedDomains::racks(plat, &[0, 5, 9], 0.3)),
+        ),
+        ("weibull", FaultScenario::new(weibull)),
+        ("trace", FaultScenario::new(TraceReplay::new(trace))),
+    ]
+}
+
+#[test]
+fn every_fault_model_is_bit_identical_across_worker_counts() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    for (name, scenario) in all_model_scenarios(&plat) {
+        let run = |workers: usize| {
+            let app = LammpsProxy::tiny(16, 3);
+            let mut runner = BatchRunner::new(&app, &plat);
+            let cfg = BatchConfig {
+                instances: 40,
+                parallelism: Parallelism::fixed(workers),
+                ..Default::default()
+            };
+            let mut rng = Rng::new(4242);
+            runner
+                .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+                .unwrap()
+        };
+        let serial = run(1);
+        for workers in [2usize, 4] {
+            let par = run(workers);
+            assert_eq!(par.outcomes, serial.outcomes, "{name} @ {workers} workers");
+            assert_eq!(
+                par.completion_s.to_bits(),
+                serial.completion_s.to_bits(),
+                "{name} @ {workers} workers"
+            );
+            assert_eq!(par.total_aborts, serial.total_aborts, "{name}");
+        }
+    }
+}
+
+#[test]
+fn every_fault_spec_grid_is_deterministic_across_worker_counts() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let app = LammpsProxy::tiny(16, 2);
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    let trace_text = "nodes 64\n2 0.0 1.0\n11 0.5 4.0\n";
+    let trace = Arc::new(FaultTrace::parse(trace_text.as_bytes()).unwrap());
+    let specs = [
+        FaultSpec::Iid {
+            n_faulty: 5,
+            p_f: 0.4,
+        },
+        FaultSpec::CorrelatedRacks {
+            domains: 2,
+            p_domain: 0.4,
+        },
+        FaultSpec::Weibull {
+            n_faulty: 5,
+            shape: 0.8,
+            p_horizon: 0.4,
+            horizon_s: 0.1,
+        },
+        FaultSpec::Trace { trace },
+    ];
+    for spec in specs {
+        let run = |workers: usize| {
+            let runner = BatchRunner::new(&app, &plat);
+            let cfg = BatchConfig {
+                instances: 10,
+                fault: spec.clone(),
+                parallelism: Parallelism::fixed(workers),
+                ..Default::default()
+            };
+            run_grid(&runner, &policies, &cfg, 3, 17).unwrap().cells
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.len(), 6, "{}", spec.model_name());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.result.outcomes, y.result.outcomes, "{}", spec.model_name());
+            assert_eq!(
+                x.result.completion_s.to_bits(),
+                y.result.completion_s.to_bits(),
+                "{}",
+                spec.model_name()
+            );
+        }
     }
 }

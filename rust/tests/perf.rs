@@ -1,0 +1,49 @@
+//! Parallel-speedup floor for the Fig. 4 sweep (ROADMAP open item).
+//!
+//! `#[ignore]` by default: wall-clock assertions are meaningless on
+//! loaded/undersized CI runners. Run explicitly on a real machine:
+//!
+//! ```sh
+//! cargo test --release --test perf -- --ignored --nocapture
+//! ```
+
+use std::time::{Duration, Instant};
+
+use tofa::apps::npb_dt::NpbDt;
+use tofa::batch::{run_grid, BatchConfig, BatchRunner, GridRun, Parallelism};
+use tofa::mapping::PlacementPolicy;
+use tofa::topology::{Platform, TorusDims};
+
+fn sweep(workers: usize) -> (Duration, GridRun) {
+    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let app = NpbDt::class_c();
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    // fresh runner per point: cold cache, like the fig4_fig5 bench
+    let runner = BatchRunner::new(&app, &platform);
+    let config = BatchConfig {
+        instances: 100,
+        parallelism: Parallelism::fixed(workers),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let grid = run_grid(&runner, &policies, &config, 10, 42).unwrap();
+    (t0.elapsed(), grid)
+}
+
+#[test]
+#[ignore = "wall-clock floor; run on a quiet >=4-core machine"]
+fn four_worker_sweep_speedup_floor() {
+    let (w1, g1) = sweep(1);
+    let (w4, g4) = sweep(4);
+    // worker count must not change results...
+    let sum = |g: &GridRun| -> f64 { g.cells.iter().map(|c| c.result.completion_s).sum() };
+    assert_eq!(sum(&g1).to_bits(), sum(&g4).to_bits());
+    // ...and 4 workers must clear the 1.5x floor (expected ~2-4x)
+    let speedup = w1.as_secs_f64() / w4.as_secs_f64();
+    println!(
+        "fig4 sweep: 1 worker {w1:?}, 4 workers {w4:?}, speedup {speedup:.2}x, \
+         cache hit-rate {:.1}%",
+        100.0 * g4.telemetry.hit_rate()
+    );
+    assert!(speedup >= 1.5, "speedup {speedup:.2}x below the 1.5x floor");
+}

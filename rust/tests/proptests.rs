@@ -2,6 +2,8 @@
 //! proptest is unavailable in the offline environment, so each property is
 //! swept over a few hundred seeded random cases; failures print the seed).
 
+use std::sync::Arc;
+
 use tofa::commgraph::CommMatrix;
 use tofa::mapping::bisect::bisect;
 use tofa::mapping::cost::{hop_bytes_cost, vertex_contributions};
@@ -9,10 +11,14 @@ use tofa::mapping::kl::{move_delta, swap_delta};
 use tofa::mapping::recmap::{compact_subset, RecursiveMapper};
 use tofa::profiler::{expand, schedule_bytes, CollectiveKind};
 use tofa::rng::Rng;
+use tofa::sim::fault::{
+    CorrelatedDomains, FaultCtx, FaultModel, FaultTrace, IidBernoulli, TraceReplay,
+    WeibullLifetime,
+};
 use tofa::sim::network::{Flow, NetSim};
 use tofa::tofa::eq1::fault_aware_distance;
 use tofa::tofa::window::{find_fault_free_window, find_route_clean_window};
-use tofa::topology::{DistanceMatrix, Torus, TorusDims};
+use tofa::topology::{DistanceMatrix, Platform, Torus, TorusDims};
 
 fn random_comm(rng: &mut Rng, n: usize, edges: usize) -> CommMatrix {
     let mut c = CommMatrix::new(n);
@@ -300,6 +306,101 @@ fn prop_compact_subset_is_subset_with_exact_size() {
         dedup.dedup();
         assert_eq!(dedup.len(), k);
         assert!(s.iter().all(|&h| h < m));
+    }
+}
+
+#[test]
+fn prop_fault_models_outage_bounded_and_rates_match() {
+    // For every stochastic FaultModel: the true outage vector stays in
+    // [0, 1], and the empirical per-node down-rate over many draws (at a
+    // job duration equal to the Weibull horizon) converges to it.
+    let mut rng = Rng::new(200);
+    for case in 0..6 {
+        let plat = Platform::paper_default(random_dims(&mut rng));
+        let m = plat.num_nodes();
+        let k = 1 + rng.below_usize(m.min(12));
+        let p = 0.05 + 0.85 * rng.f64();
+        let shape = 0.4 + 1.6 * rng.f64();
+        let nodes = rng.sample_distinct(m, k);
+        let d = 1 + rng.below_usize(plat.num_racks());
+        let weibull = WeibullLifetime::from_target(nodes.clone(), shape, p, 1.0, m).unwrap();
+        let models: Vec<Box<dyn FaultModel>> = vec![
+            Box::new(IidBernoulli::new(nodes.clone(), p, m)),
+            Box::new(CorrelatedDomains::random_racks(&plat, d, p, &mut rng)),
+            Box::new(weibull),
+        ];
+        for model in &models {
+            let truth = model.true_outage();
+            assert_eq!(truth.len(), m, "case {case} {}", model.name());
+            let bounded = truth.iter().all(|&x| (0.0..=1.0).contains(&x));
+            assert!(bounded, "case {case} {}: {truth:?}", model.name());
+            let trials = 2500u64;
+            let mut downs = vec![0usize; m];
+            for i in 0..trials {
+                let ctx = FaultCtx::new(i, 1.0);
+                for (n, dn) in model.sample(&ctx, &mut rng).into_iter().enumerate() {
+                    if dn {
+                        downs[n] += 1;
+                    }
+                }
+            }
+            for (n, (&t, &c)) in truth.iter().zip(&downs).enumerate() {
+                let emp = c as f64 / trials as f64;
+                let name = model.name();
+                assert!((emp - t).abs() < 0.06, "case {case} {name} node {n}: {emp} vs {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_trace_replay_is_exact_on_integer_grids() {
+    // Synthetic traces on an integer time grid: replay with unit job
+    // duration must (a) be deterministic without consuming RNG, (b) only
+    // ever fail nodes the trace marks down in that exact window, and
+    // (c) tile the span so the per-node window down-rate equals the
+    // trace's down-time fraction exactly.
+    let mut rng = Rng::new(201);
+    for case in 0..20u64 {
+        let m = 4 + rng.below_usize(60);
+        let mut text = format!("nodes {m}\n");
+        let flaky = rng.sample_distinct(m, 1 + rng.below_usize(m.min(8)));
+        for &node in &flaky {
+            for _ in 0..1 + rng.below_usize(3) {
+                let start = rng.below(40);
+                let len = 1 + rng.below(5);
+                text.push_str(&format!("{node} {start} {}\n", start + len));
+            }
+        }
+        let model = TraceReplay::new(Arc::new(FaultTrace::parse(text.as_bytes()).unwrap()));
+        let truth = model.true_outage();
+        assert!(truth.iter().all(|&x| (0.0..=1.0).contains(&x)), "case {case}");
+
+        let span = model.trace().span_s() as u64;
+        let mut a = Rng::new(case);
+        let mut b = Rng::new(case);
+        let mut down_windows = vec![0u64; m];
+        for i in 0..span {
+            let ctx = FaultCtx::new(i, 1.0);
+            let d1 = model.sample(&ctx, &mut a);
+            let d2 = model.sample(&ctx, &mut b);
+            assert_eq!(d1, d2, "case {case} instance {i}");
+            for (n, &dn) in d1.iter().enumerate() {
+                if dn {
+                    assert!(flaky.contains(&n), "case {case}: clean node {n} down");
+                    let (t0, t1) = (i as f64, (i + 1) as f64);
+                    assert!(model.trace().down_in(n, t0, t1));
+                    down_windows[n] += 1;
+                }
+            }
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "case {case}: replay drew RNG");
+        // unit windows tile [0, span): rate == down fraction, exactly
+        for (n, &w) in down_windows.iter().enumerate() {
+            let rate = w as f64 / span as f64;
+            let frac = truth[n];
+            assert!((rate - frac).abs() < 1e-9, "case {case} node {n}: {rate} vs {frac}");
+        }
     }
 }
 
