@@ -12,11 +12,11 @@ use tofa::topology::{DistanceMatrix, Platform, Torus, TorusDims};
 
 fn main() {
     let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
-    let torus = platform.torus();
+    let topo = platform.topology();
     let dist = platform.hop_matrix();
 
     section("mapper microbenches (512-node torus)");
-    bench("hop-matrix/512", 5, || DistanceMatrix::from_torus_hops(torus));
+    bench("hop-matrix/512", 5, || DistanceMatrix::from_topology(topo));
 
     for ranks in [64usize, 85, 128, 256] {
         let app = LammpsProxy::rhodopsin(ranks);
@@ -38,10 +38,10 @@ fn main() {
         outage[f] = 0.02;
     }
     bench("eq1/fault-aware-distance/512", 5, || {
-        fault_aware_distance(torus, &outage)
+        fault_aware_distance(topo, &outage)
     });
     bench("window/route-clean-64", 10, || {
-        find_route_clean_window(&outage, 64, torus)
+        find_route_clean_window(&outage, 64, topo)
     });
     bench("compact-subset/85-of-512", 10, || {
         compact_subset(&dist, &(0..512).collect::<Vec<_>>(), 85)

@@ -1,0 +1,101 @@
+//! Cross-topology sweep: the same workload, placement pipeline, and batch
+//! experiment on all three platform families (torus, fat-tree, dragonfly).
+//!
+//! Reports per topology: the structural profile (nodes, links, diameter,
+//! bisection links), the cost of building the hop matrix and a TOFA
+//! placement, and a reduced Fig. 5-style batch grid under the correlated
+//! fault model (racks = X-lines / pods / groups respectively) — the
+//! experiment the paper could not run beyond the torus.
+
+use std::sync::Arc;
+
+use tofa::apps::lammps_proxy::LammpsProxy;
+use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
+use tofa::mapping::PlacementPolicy;
+use tofa::profiler::profile_app;
+use tofa::report::bench::{bench, section};
+use tofa::rng::Rng;
+use tofa::sim::fault::FaultSpec;
+use tofa::tofa::TofaPlacer;
+use tofa::topology::{ArchGraph, Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
+
+fn platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(8, 8, 8)), // 512 nodes
+        Platform::paper_default_on(Arc::new(FatTree::new(8).unwrap())), // 128 nodes
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(9, 4, 4, 2)).unwrap(), // 144 nodes
+        )),
+    ]
+}
+
+fn main() {
+    section("topology structural profile");
+    for plat in platforms() {
+        let t = plat.topology();
+        let dist = plat.hop_matrix();
+        // graph-level eccentricity over the full vertex set (switches
+        // included), from the physical-link graph
+        let g = ArchGraph::from_topology(t);
+        let far = g.pseudo_peripheral(0);
+        let ecc = g.bfs_hops(far).into_iter().filter(|&d| d != usize::MAX).max().unwrap();
+        println!(
+            "{:<44} {:>5} nodes {:>6} links  diameter {:>2} (graph {:>2})  bisection {:>4}  racks {:>3}",
+            t.describe(),
+            t.num_nodes(),
+            t.all_links().len(),
+            dist.max(),
+            ecc,
+            t.bisection_links(),
+            t.num_racks(),
+        );
+    }
+
+    section("hop matrix + TOFA placement per topology (LAMMPS 64p)");
+    let app = LammpsProxy::rhodopsin(64);
+    let comm = profile_app(&app).volume;
+    for plat in platforms() {
+        let kind = plat.topology().kind();
+        bench(&format!("hop-matrix/{kind}"), 5, || plat.hop_matrix());
+        let mut outage = vec![0.0; plat.num_nodes()];
+        let mut rng = Rng::new(3);
+        for f in rng.sample_distinct(plat.num_nodes(), plat.num_nodes() / 32) {
+            outage[f] = 0.02;
+        }
+        bench(&format!("tofa-place/{kind}"), 5, || {
+            TofaPlacer::default().place(&comm, &plat, &outage).unwrap()
+        });
+    }
+
+    section("batch grid under correlated domains (2 batches x 2 policies x 25)");
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    for plat in platforms() {
+        let kind = plat.topology().kind();
+        let runner = BatchRunner::new(&app, &plat);
+        let config = BatchConfig {
+            instances: 25,
+            fault: FaultSpec::CorrelatedRacks {
+                domains: 2,
+                p_domain: 0.05,
+            },
+            parallelism: Parallelism::fixed(2),
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let grid = run_grid(&runner, &policies, &config, 2, 42).unwrap();
+        let wall = t0.elapsed();
+        let (mut sum_d, mut sum_t) = (0.0f64, 0.0f64);
+        for pair in grid.cells.chunks(2) {
+            sum_d += pair[0].result.completion_s;
+            sum_t += pair[1].result.completion_s;
+        }
+        println!(
+            "{:<44} default {:>9.1} s  tofa {:>9.1} s  improvement {:>5.1}%  wall {:?}",
+            format!("grid/{kind}"),
+            sum_d,
+            sum_t,
+            (sum_d - sum_t) / sum_d * 100.0,
+            wall
+        );
+    }
+}

@@ -3,6 +3,8 @@
 //! ```sh
 //! cargo run --release --example fault_aware_batch            # full demo
 //! cargo run --release --example fault_aware_batch -- --smoke # CI-sized
+//! cargo run --release --example fault_aware_batch -- --smoke --topology=fattree
+//! cargo run --release --example fault_aware_batch -- --smoke --topology=dragonfly
 //! ```
 //!
 //! Exercises every layer of the stack the way the paper's Fig. 2 wires it:
@@ -19,8 +21,10 @@
 //!    lifetimes, trace replay), Default-Slurm vs TOFA, reporting batch
 //!    completion time and abort ratio per model.
 //!
-//! `--smoke` shrinks the platform (4x4x4), the heartbeat rounds, and the
-//! batch size so CI can run the whole pipeline in seconds.
+//! `--smoke` shrinks the platform, the heartbeat rounds, and the batch
+//! size so CI can run the whole pipeline in seconds. `--topology=` picks
+//! the platform family (torus | fattree | dragonfly); the correlated
+//! model's failure domain follows it (X-line / pod / group).
 
 use std::sync::Arc;
 
@@ -37,16 +41,25 @@ use tofa::sim::fault::{
 use tofa::slurm::controller::Controller;
 use tofa::slurm::jobs::JobRequest;
 use tofa::slurm::srun;
-use tofa::topology::{Platform, TorusDims};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, Topology, Torus, TorusDims};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let (dims, n_flaky, rounds, instances) = if smoke {
-        (TorusDims::new(4, 4, 4), 4, 20, 20)
-    } else {
-        (TorusDims::new(8, 8, 8), 8, 40, 100)
+    let topology = std::env::args()
+        .find_map(|a| a.strip_prefix("--topology=").map(str::to_string))
+        .unwrap_or_else(|| "torus".to_string());
+    let (n_flaky, rounds, instances) = if smoke { (4, 20, 20) } else { (8, 40, 100) };
+    let topo: Arc<dyn Topology> = match (topology.as_str(), smoke) {
+        ("torus", true) => Arc::new(Torus::new(TorusDims::new(4, 4, 4))), // 64 nodes
+        ("torus", false) => Arc::new(Torus::new(TorusDims::new(8, 8, 8))), // 512 nodes
+        ("fattree", true) => Arc::new(FatTree::new(6)?), // 54 nodes
+        ("fattree", false) => Arc::new(FatTree::new(8)?), // 128 nodes
+        ("dragonfly", true) => Arc::new(Dragonfly::new(DragonflyParams::new(5, 4, 2, 1))?), // 40
+        ("dragonfly", false) => Arc::new(Dragonfly::new(DragonflyParams::new(9, 4, 4, 2))?), // 144
+        (other, _) => return Err(format!("unknown --topology={other}").into()),
     };
-    let platform = Platform::paper_default(dims);
+    println!("platform: {}", topo.describe());
+    let platform = Platform::paper_default_on(topo);
     let app: Box<dyn MpiApp> = if smoke {
         Box::new(NpbDt::new(DtGraph::BlackHole, DtClass::W, 2)) // 21 ranks
     } else {

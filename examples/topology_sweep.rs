@@ -9,12 +9,14 @@
 //! rank-grid alignment, and how the topology-aware mapper adapts
 //! (the paper's Table 1 observation).
 
+use std::sync::Arc;
+
 use tofa::apps::{lammps_proxy::LammpsProxy, stencil::Stencil2D, MpiApp};
 use tofa::mapping::{place, PlacementPolicy};
 use tofa::profiler::profile_app;
 use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
-use tofa::topology::{Platform, TorusDims};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
 
 fn sweep(app: &dyn MpiApp, arrangements: &[&str]) -> tofa::error::Result<()> {
     println!(
@@ -49,10 +51,50 @@ fn sweep(app: &dyn MpiApp, arrangements: &[&str]) -> tofa::error::Result<()> {
     Ok(())
 }
 
+/// The same comparison across topology *families* at comparable scale.
+fn family_sweep(app: &dyn MpiApp) -> tofa::error::Result<()> {
+    println!(
+        "\n=== {} ({} ranks) across families ===\n{:<28} {:>14} {:>14} {:>10}",
+        app.name(),
+        app.num_ranks(),
+        "topology",
+        "default",
+        "tofa/scotch",
+        "winner"
+    );
+    let comm = profile_app(app).volume;
+    let platforms = [
+        Platform::paper_default(TorusDims::new(8, 4, 4)), // 128 nodes
+        Platform::paper_default_on(Arc::new(FatTree::new(8)?)), // 128 nodes
+        Platform::paper_default_on(Arc::new(Dragonfly::new(DragonflyParams::new(
+            8, 4, 4, 2,
+        ))?)), // 128 nodes
+    ];
+    for platform in platforms {
+        let dist = platform.hop_matrix();
+        let mut sim = Simulator::new(app, &platform);
+        let mut vals = Vec::new();
+        for policy in [PlacementPolicy::DefaultSlurm, PlacementPolicy::Scotch] {
+            let mut rng = Rng::new(1);
+            let p = place(policy, &comm, &dist, &mut rng)?;
+            vals.push(sim.metric_value(&p.assignment));
+        }
+        println!(
+            "{:<28} {:>14.1} {:>14.1} {:>10}",
+            platform.topology().describe(),
+            vals[0],
+            vals[1],
+            if vals[1] > vals[0] { "tofa" } else { "default" }
+        );
+    }
+    Ok(())
+}
+
 fn main() -> tofa::error::Result<()> {
     let arrangements = ["8x8x8", "4x8x16", "8x4x16", "4x4x32", "4x32x4", "2x16x16"];
     sweep(&LammpsProxy::rhodopsin(256), &arrangements)?;
     sweep(&Stencil2D::new(16, 16, 96, 30), &arrangements)?;
+    family_sweep(&LammpsProxy::rhodopsin(64))?;
     println!(
         "\nNote: higher is better (timesteps/s). Default-Slurm depends on\n\
          grid/torus alignment; the mapper tracks the topology instead."

@@ -18,9 +18,58 @@ use tofa::report::{fmt_secs, improvement_pct, Table};
 use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
 use tofa::sim::fault::{FaultSpec, FaultTrace};
-use tofa::topology::{Platform, TorusDims};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
 
 type Result<T> = std::result::Result<T, Error>;
+
+/// Platform-topology selection from the `repro` CLI (`--topology=` plus
+/// the per-family size flags). The paper's platform — the 8x8x8 torus —
+/// stays the default, so `repro` without flags reproduces the figures
+/// bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct TopoCliOpts {
+    /// `torus` | `fattree` | `dragonfly`.
+    pub topology: String,
+    /// Torus dimensions (`--torus=XxYxZ`).
+    pub torus: String,
+    /// Fat-tree arity (`--fattree-k=<k>`, k even; k^3/4 nodes).
+    pub fattree_k: usize,
+    /// Dragonfly parameters (`--dragonfly=GxAxPxH`: groups x routers x
+    /// hosts-per-router x global-links-per-router).
+    pub dragonfly: String,
+}
+
+impl Default for TopoCliOpts {
+    fn default() -> Self {
+        TopoCliOpts {
+            topology: "torus".to_string(),
+            torus: "8x8x8".to_string(),
+            fattree_k: 8, // 128 nodes
+            dragonfly: "9x4x4x2".to_string(), // 144 nodes
+        }
+    }
+}
+
+impl TopoCliOpts {
+    /// Build the platform (paper simulation parameters) for the selected
+    /// topology and size.
+    pub fn platform(&self) -> Result<Platform> {
+        Ok(match self.topology.as_str() {
+            "torus" => Platform::paper_default(TorusDims::parse(&self.torus)?),
+            "fattree" => {
+                Platform::paper_default_on(Arc::new(FatTree::new(self.fattree_k)?))
+            }
+            "dragonfly" => Platform::paper_default_on(Arc::new(Dragonfly::new(
+                DragonflyParams::parse(&self.dragonfly)?,
+            )?)),
+            other => {
+                return Err(Error::Topology(format!(
+                    "unknown topology: {other} (expected torus|fattree|dragonfly)"
+                )))
+            }
+        })
+    }
+}
 
 /// Fault-model selection from the `repro` CLI (`--fault-model=` plus the
 /// model-specific knobs). The figures' per-experiment faulty-node counts
@@ -280,23 +329,33 @@ fn batch_experiment(
     base_title: &str,
     app: &dyn MpiApp,
     n_faulty: usize,
+    topo_cli: &TopoCliOpts,
     fault_cli: &FaultCliOpts,
     batches: usize,
     instances: usize,
     seed: u64,
     workers: usize,
 ) -> Result<()> {
-    let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let platform = topo_cli.platform()?;
     let runner = BatchRunner::new(app, &platform);
     let fault = fault_cli.spec(&platform, n_faulty)?;
     // compose the fault clause from the actual spec so tables and CSVs
-    // are never mislabeled; the paper's exact regime keeps its canonical
-    // "(N faulty @ 2%)" wording
-    let paper_regime = matches!(&fault, FaultSpec::Iid { p_f, .. } if *p_f == 0.02);
+    // are never mislabeled; the paper's exact regime (8x8x8 torus, iid at
+    // 2%) keeps its canonical "(N faulty @ 2%)" wording
+    let paper_topology = platform
+        .topology()
+        .as_torus()
+        .is_some_and(|t| t.dims() == TorusDims::new(8, 8, 8));
+    let paper_regime =
+        paper_topology && matches!(&fault, FaultSpec::Iid { p_f, .. } if *p_f == 0.02);
     let title = if paper_regime {
         format!("{base_title} ({n_faulty} faulty @ 2%)")
     } else {
-        format!("{base_title} ({})", fault.describe())
+        format!(
+            "{base_title} ({}; {})",
+            platform.topology().describe(),
+            fault.describe()
+        )
     };
     let config = BatchConfig {
         instances,
@@ -357,8 +416,9 @@ fn batch_experiment(
     Ok(())
 }
 
-/// Figure 4: NPB-DT batches with 16 faulty nodes (model from the CLI;
-/// the paper's regime is `--fault-model=iid` at 2%).
+/// Figure 4: NPB-DT batches with 16 faulty nodes (topology and model from
+/// the CLI; the paper's regime is the 8x8x8 torus, `--fault-model=iid` at
+/// 2%).
 #[allow(clippy::too_many_arguments)]
 pub fn fig4(
     results: &Path,
@@ -366,6 +426,7 @@ pub fn fig4(
     batches: usize,
     instances: usize,
     workers: usize,
+    topo: &TopoCliOpts,
     fault: &FaultCliOpts,
 ) -> Result<()> {
     let app = NpbDt::class_c();
@@ -374,6 +435,7 @@ pub fn fig4(
         "Figure 4: NPB-DT batch completion",
         &app,
         16,
+        topo,
         fault,
         batches,
         instances,
@@ -392,6 +454,7 @@ pub fn fig5(
     instances: usize,
     tag: &str,
     workers: usize,
+    topo: &TopoCliOpts,
     fault: &FaultCliOpts,
 ) -> Result<()> {
     let app = LammpsProxy::rhodopsin(64);
@@ -400,6 +463,7 @@ pub fn fig5(
         &format!("Figure {tag}: LAMMPS 64p batch completion"),
         &app,
         n_faulty,
+        topo,
         fault,
         batches,
         instances,
@@ -425,15 +489,18 @@ pub fn profile(app_spec: &str) -> Result<()> {
 }
 
 /// `repro place`: mapping-quality comparison across policies.
-pub fn place(app_spec: &str, torus: &str, seed: u64) -> Result<()> {
+pub fn place(app_spec: &str, topo_cli: &TopoCliOpts, seed: u64) -> Result<()> {
     let app = parse_app(app_spec)?;
-    let dims = TorusDims::parse(torus)?;
-    let platform = Platform::paper_default(dims);
+    let platform = topo_cli.platform()?;
     let comm = profile_app(app.as_ref()).volume;
     let dist = platform.hop_matrix();
     let mut sim = Simulator::new(app.as_ref(), &platform);
     let mut t = Table::new(
-        &format!("Placement quality: {} on {}", app.name(), torus),
+        &format!(
+            "Placement quality: {} on {}",
+            app.name(),
+            platform.topology().describe()
+        ),
         &["policy", "hop-bytes (MB*hop)", "avg dilation", "max congestion (MB)", "metric"],
     );
     for policy in [
@@ -446,7 +513,7 @@ pub fn place(app_spec: &str, torus: &str, seed: u64) -> Result<()> {
         let pl = place_policy(policy, &comm, &dist, &mut rng)?;
         let hb = cost::hop_bytes_cost(&comm, &dist, &pl.assignment);
         let (avg_dil, _) = cost::dilation(&comm, &dist, &pl.assignment);
-        let (max_cong, _) = cost::congestion(&comm, platform.torus(), &pl.assignment);
+        let (max_cong, _) = cost::congestion(&comm, platform.topology(), &pl.assignment);
         let metric = sim.metric_value(&pl.assignment);
         t.row(vec![
             policy.to_string(),

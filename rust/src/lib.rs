@@ -47,6 +47,15 @@
 //! shared phase-solve cache that lets concurrent instances reuse each
 //! other's network solves.
 //!
+//! ## Topologies
+//!
+//! The platform interconnect is pluggable: [`topology::Topology`] defines
+//! the routing function, hop metric, and failure-domain decomposition,
+//! with three implementations — the paper's 3-D [`topology::Torus`], a
+//! k-ary [`topology::FatTree`], and a Cray-Aries-style
+//! [`topology::Dragonfly`]. `repro --topology=...` selects one for the
+//! batch sweeps; racks/pods/groups feed the correlated fault model.
+//!
 //! ## Fault models
 //!
 //! Down-state generation is pluggable: [`sim::fault`] defines the
@@ -98,7 +107,10 @@ pub mod prelude {
     pub use crate::slurm::controller::Controller;
     pub use crate::tofa::placer::{TofaConfig, TofaPlacer};
     pub use crate::topology::{
+        dragonfly::{Dragonfly, DragonflyParams},
+        fattree::FatTree,
         platform::Platform,
         torus::{Torus, TorusDims},
+        Topology,
     };
 }

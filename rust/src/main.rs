@@ -36,7 +36,13 @@ OPTIONS:
                        identical for any value     (default: 0 = all cores)
   --app=<spec>         app for profile/place: lammps:<ranks> | npb-dt |
                        stencil:<px>x<py> | ring:<ranks>   (default: lammps:64)
-  --torus=<XxYxZ>      torus dims for place        (default: 8x8x8)
+
+TOPOLOGY (fig4/fig5a/fig5b/place/all):
+  --topology=<t>       torus | fattree | dragonfly (default: torus)
+  --torus=<XxYxZ>      torus dims                  (default: 8x8x8)
+  --fattree-k=<k>      fat-tree arity, k even; k^3/4 nodes (default: 8)
+  --dragonfly=<GxAxPxH> groups x routers x hosts x global links per router
+                       (default: 9x4x4x2)
 
 FAULT MODEL (fig4/fig5a/fig5b/all):
   --fault-model=<m>    iid | correlated | weibull | trace  (default: iid)
@@ -58,7 +64,7 @@ struct Opts {
     instances: usize,
     workers: usize,
     app: String,
-    torus: String,
+    topo: experiments::TopoCliOpts,
     fault: experiments::FaultCliOpts,
 }
 
@@ -70,7 +76,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         instances: 100,
         workers: 0,
         app: "lammps:64".to_string(),
-        torus: "8x8x8".to_string(),
+        topo: experiments::TopoCliOpts::default(),
         fault: experiments::FaultCliOpts::default(),
     };
     for a in args {
@@ -86,8 +92,14 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             o.workers = v.parse().map_err(|_| format!("bad --workers: {v}"))?;
         } else if let Some(v) = a.strip_prefix("--app=") {
             o.app = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--topology=") {
+            o.topo.topology = v.to_string();
         } else if let Some(v) = a.strip_prefix("--torus=") {
-            o.torus = v.to_string();
+            o.topo.torus = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--fattree-k=") {
+            o.topo.fattree_k = v.parse().map_err(|_| format!("bad --fattree-k: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--dragonfly=") {
+            o.topo.dragonfly = v.to_string();
         } else if let Some(v) = a.strip_prefix("--fault-model=") {
             o.fault.model = v.to_string();
         } else if let Some(v) = a.strip_prefix("--p-f=") {
@@ -135,6 +147,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             opts.batches,
             opts.instances,
             opts.workers,
+            &opts.topo,
             &opts.fault,
         )?,
         "fig5a" => experiments::fig5(
@@ -145,6 +158,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             opts.instances,
             "5a",
             opts.workers,
+            &opts.topo,
             &opts.fault,
         )?,
         "fig5b" => experiments::fig5(
@@ -155,6 +169,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             opts.instances,
             "5b",
             opts.workers,
+            &opts.topo,
             &opts.fault,
         )?,
         "all" => {
@@ -162,13 +177,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             experiments::fig3a(r, opts.seed)?;
             experiments::fig3b(r, opts.seed)?;
             experiments::table1(r, opts.seed)?;
-            let (b, i, w, f) = (opts.batches, opts.instances, opts.workers, &opts.fault);
-            experiments::fig4(r, opts.seed, b, i, w, f)?;
-            experiments::fig5(r, opts.seed, 8, b, i, "5a", w, f)?;
-            experiments::fig5(r, opts.seed, 16, b, i, "5b", w, f)?;
+            let (b, i, w) = (opts.batches, opts.instances, opts.workers);
+            let (t, f) = (&opts.topo, &opts.fault);
+            experiments::fig4(r, opts.seed, b, i, w, t, f)?;
+            experiments::fig5(r, opts.seed, 8, b, i, "5a", w, t, f)?;
+            experiments::fig5(r, opts.seed, 16, b, i, "5b", w, t, f)?;
         }
         "profile" => experiments::profile(&opts.app)?,
-        "place" => experiments::place(&opts.app, &opts.torus, opts.seed)?,
+        "place" => experiments::place(&opts.app, &opts.topo, opts.seed)?,
         "runtime" => experiments::runtime_check()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {

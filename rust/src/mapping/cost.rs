@@ -5,7 +5,7 @@
 //! the runtime tests cross-check against.
 
 use crate::commgraph::CommMatrix;
-use crate::topology::{DistanceMatrix, Torus};
+use crate::topology::{DistanceMatrix, Topology};
 
 /// Hop-bytes objective: `1/2 * sum_{i,j} C[i,j] * D[a_i, a_j]`.
 pub fn hop_bytes_cost(comm: &CommMatrix, dist: &DistanceMatrix, assign: &[usize]) -> f64 {
@@ -61,17 +61,17 @@ pub fn dilation(comm: &CommMatrix, dist: &DistanceMatrix, assign: &[usize]) -> (
 }
 
 /// Maximum per-link traffic (congestion) when every pair's traffic follows
-/// the torus DOR route. Returns (max link bytes, mean link bytes over used
-/// links).
-pub fn congestion(comm: &CommMatrix, torus: &Torus, assign: &[usize]) -> (f64, f64) {
-    let (index, num_links) = torus.link_index();
-    let n_nodes = torus.num_nodes();
+/// the topology's fixed route. Returns (max link bytes, mean link bytes
+/// over used links).
+pub fn congestion(comm: &CommMatrix, topo: &dyn Topology, assign: &[usize]) -> (f64, f64) {
+    let (index, num_links) = topo.link_index();
+    let n_vertices = topo.num_vertices();
     let mut load = vec![0.0f64; num_links];
     let mut route = Vec::new();
     for (i, j, w) in comm.edges() {
-        torus.route_into(assign[i], assign[j], &mut route);
+        topo.route_into(assign[i], assign[j], &mut route);
         for l in &route {
-            load[index[l.src * n_nodes + l.dst] as usize] += w;
+            load[index[l.src * n_vertices + l.dst] as usize] += w;
         }
     }
     let max = load.iter().cloned().fold(0.0, f64::max);
@@ -87,7 +87,7 @@ pub fn congestion(comm: &CommMatrix, torus: &Torus, assign: &[usize]) -> (f64, f
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::TorusDims;
+    use crate::topology::{Torus, TorusDims};
 
     fn tiny() -> (CommMatrix, DistanceMatrix) {
         let mut c = CommMatrix::new(3);

@@ -93,7 +93,7 @@ impl Simulator {
             phases: phases_of(&ops),
             metric: app.metric(),
             timesteps: app.timesteps(),
-            net: NetSim::new(platform.torus(), platform.bandwidth, platform.latency),
+            net: NetSim::new(platform.topology(), platform.bandwidth, platform.latency),
             cache,
             salt: platform_salt(platform),
             stats: SimStats::default(),
@@ -130,7 +130,7 @@ impl Simulator {
                         continue;
                     }
                     let flows = flows_for_phase(
-                        self.platform.torus(),
+                        self.platform.topology(),
                         &self.net,
                         assignment,
                         down,
@@ -228,7 +228,7 @@ impl Simulator {
         for &n in assignment {
             touched[n] = true;
         }
-        let torus = self.platform.torus().clone();
+        let topo = self.platform.topology_arc();
         for phase in &self.phases {
             if let Phase::Comm { msgs } = phase {
                 for m in msgs {
@@ -236,10 +236,16 @@ impl Simulator {
                     if u == v {
                         continue;
                     }
-                    torus.route_into(u, v, &mut self.route_buf);
+                    topo.route_into(u, v, &mut self.route_buf);
                     for l in &self.route_buf {
-                        touched[l.src] = true;
-                        touched[l.dst] = true;
+                        // transit vertices >= num_nodes are switches;
+                        // they never fail, so only compute nodes matter
+                        if l.src < num_nodes {
+                            touched[l.src] = true;
+                        }
+                        if l.dst < num_nodes {
+                            touched[l.dst] = true;
+                        }
                     }
                 }
             }
@@ -255,14 +261,10 @@ impl Simulator {
 /// duration. Mixed into every phase key so one [`PhaseCache`] can be
 /// shared between simulators on *different* platforms without collisions
 /// (app identity is irrelevant: the key already encodes the node-level
-/// flow content).
+/// flow content). The topology contributes its own family/parameter salt.
 fn platform_salt(platform: &Platform) -> u64 {
-    let dims = platform.torus().dims();
-    let mut h = 0xcbf29ce484222325u64;
+    let mut h = platform.topology().salt();
     for x in [
-        dims.x as u64,
-        dims.y as u64,
-        dims.z as u64,
         platform.flops.to_bits(),
         platform.bandwidth.to_bits(),
         platform.latency.to_bits(),
@@ -425,6 +427,44 @@ mod tests {
         // the second simulator never solved the network itself
         assert_eq!(reuse.stats().solves, 0);
         assert!(reuse.stats().cache_hits > 0);
+    }
+
+    #[test]
+    fn jobs_run_on_every_topology_family() {
+        use crate::topology::{Dragonfly, DragonflyParams, FatTree};
+        use std::sync::Arc as StdArc;
+        let app = RingApp::new(8, 1e6, 3);
+        let platforms = [
+            Platform::paper_default(TorusDims::new(4, 4, 1)),
+            Platform::paper_default_on(StdArc::new(FatTree::new(4).unwrap())),
+            Platform::paper_default_on(StdArc::new(
+                Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap(),
+            )),
+        ];
+        for plat in &platforms {
+            let p = block_placement(8, plat.num_nodes()).unwrap();
+            let kind = plat.topology().kind();
+            // fault-free run completes deterministically
+            let a = simulate_job(&app, plat, &p.assignment, &[]);
+            let b = simulate_job(&app, plat, &p.assignment, &[]);
+            assert_eq!(a, b, "{kind}");
+            assert!(a.seconds().unwrap() > 0.0, "{kind}");
+            // a down compute node hosting a rank aborts
+            let out = simulate_job(&app, plat, &p.assignment, &[p.assignment[3]]);
+            assert!(out.is_abort(), "{kind}");
+            // a JobProfile agrees with the simulator on both cases
+            let mut sim = Simulator::new(&app, plat);
+            let profile = sim.prepare(&p.assignment);
+            let clean = vec![false; plat.num_nodes()];
+            assert_eq!(
+                profile.outcome(&clean).seconds().unwrap(),
+                a.seconds().unwrap(),
+                "{kind}"
+            );
+            let mut down = clean.clone();
+            down[p.assignment[3]] = true;
+            assert!(profile.outcome(&down).is_abort(), "{kind}");
+        }
     }
 
     #[test]

@@ -6,12 +6,12 @@
 //! fair share), freeze its flows at that rate, remove their demand, and
 //! continue. As flows finish, rates are recomputed event-by-event.
 
-use crate::topology::Torus;
+use crate::topology::Topology;
 
 /// A flow: bytes to move along a fixed route of directed link slots.
 #[derive(Debug, Clone)]
 pub struct Flow {
-    /// Link slot ids (see [`Torus::link_index`]); empty = same node.
+    /// Link slot ids (see [`Topology::link_index`]); empty = same node.
     pub links: Vec<u32>,
     /// Payload bytes.
     pub bytes: f64,
@@ -26,8 +26,10 @@ pub struct Flow {
 pub struct NetSim {
     num_links: usize,
     link_slot: Vec<u32>,
-    n_nodes: usize,
-    bandwidth: f64,
+    n_vertices: usize,
+    /// Per-slot full capacity: `bandwidth * Topology::link_capacity_scale`
+    /// (uniform fabrics keep every entry equal to `bandwidth`).
+    cap_full: Vec<f64>,
     latency: f64,
     // scratch
     cap: Vec<f64>,
@@ -40,14 +42,20 @@ pub struct NetSim {
 }
 
 impl NetSim {
-    /// Build for a torus platform.
-    pub fn new(torus: &Torus, bandwidth: f64, latency: f64) -> Self {
-        let (link_slot, num_links) = torus.link_index();
+    /// Build for a platform topology.
+    pub fn new(topo: &dyn Topology, bandwidth: f64, latency: f64) -> Self {
+        let (link_slot, num_links) = topo.link_index();
+        let n_vertices = topo.num_vertices();
+        let mut cap_full = vec![bandwidth; num_links];
+        for l in topo.all_links() {
+            let slot = link_slot[l.src * n_vertices + l.dst] as usize;
+            cap_full[slot] = bandwidth * topo.link_capacity_scale(l.src, l.dst);
+        }
         NetSim {
             num_links,
             link_slot,
-            n_nodes: torus.num_nodes(),
-            bandwidth,
+            n_vertices,
+            cap_full,
             latency,
             cap: vec![0.0; num_links],
             nflows_on: vec![0; num_links],
@@ -62,7 +70,7 @@ impl NetSim {
     /// Slot id of the directed link `src -> dst` (must be adjacent).
     #[inline]
     pub fn slot(&self, src: usize, dst: usize) -> u32 {
-        let s = self.link_slot[src * self.n_nodes + dst];
+        let s = self.link_slot[src * self.n_vertices + dst];
         debug_assert_ne!(s, u32::MAX, "not a physical link: {src}->{dst}");
         s
     }
@@ -132,7 +140,7 @@ impl NetSim {
         for (i, f) in flows.iter().enumerate() {
             if self.alive[i] {
                 for &l in &f.links {
-                    self.cap[l as usize] = self.bandwidth;
+                    self.cap[l as usize] = self.cap_full[l as usize];
                     self.nflows_on[l as usize] = 0;
                     self.link_live[l as usize] = true;
                 }
@@ -195,12 +203,37 @@ impl NetSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::TorusDims;
+    use crate::topology::{Torus, TorusDims};
 
     fn sim() -> NetSim {
         let t = Torus::new(TorusDims::new(8, 1, 1));
         // 1 GB/s, 1 us
         NetSim::new(&t, 1e9, 1e-6)
+    }
+
+    #[test]
+    fn per_link_capacity_scale_is_honored() {
+        // dragonfly global links run at 2x: a flow crossing only the
+        // global cable finishes twice as fast as a local-link flow
+        use crate::topology::{Dragonfly, DragonflyParams};
+        let d = Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap();
+        let mut s = NetSim::new(&d, 1e9, 0.0);
+        let route = d.route(0, 4); // crosses one global router-router link
+        let global = route
+            .iter()
+            .find(|l| d.link_capacity_scale(l.src, l.dst) == 2.0)
+            .expect("cross-group route must use a global link");
+        let local = route.first().unwrap(); // node -> router, 1x
+        let fast = s.phase_duration(&[Flow {
+            links: vec![s.slot(global.src, global.dst)],
+            bytes: 1e9,
+        }]);
+        let slow = s.phase_duration(&[Flow {
+            links: vec![s.slot(local.src, local.dst)],
+            bytes: 1e9,
+        }]);
+        assert!((fast - 0.5).abs() < 1e-6, "fast={fast}");
+        assert!((slow - 1.0).abs() < 1e-6, "slow={slow}");
     }
 
     #[test]

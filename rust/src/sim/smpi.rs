@@ -1,15 +1,15 @@
 //! SMPI-lite: translate MPI op schedules into network flow phases.
 //!
 //! Under a placement, every message `src_rank -> dst_rank` becomes a flow
-//! along the torus DOR route between the hosting nodes. Collectives expand
-//! through the same algorithm emulation the profiler uses
+//! along the topology's fixed route between the hosting nodes. Collectives
+//! expand through the same algorithm emulation the profiler uses
 //! ([`crate::profiler::collectives`]), so simulated timing and profiled
 //! traffic are consistent.
 
 use crate::apps::MpiOp;
 use crate::profiler::{expand, Msg};
 use crate::sim::network::{Flow, NetSim};
-use crate::topology::Torus;
+use crate::topology::Topology;
 
 /// A simulation phase: either local compute or a set of concurrent flows.
 #[derive(Debug, Clone)]
@@ -48,15 +48,17 @@ pub fn phases_of(ops: &[MpiOp]) -> Vec<Phase> {
 
 /// Convert a comm phase's messages into flows under a placement.
 /// Returns `None` if any flow touches a down node (endpoint or transit) —
-/// the SimGrid capacity-zero condition that aborts the job.
+/// the SimGrid capacity-zero condition that aborts the job. Transit
+/// vertices beyond `down.len()` are switches/routers, which never fail.
 pub fn flows_for_phase(
-    torus: &Torus,
+    topo: &dyn Topology,
     net: &NetSim,
     assignment: &[usize],
     down: &[bool],
     msgs: &[Msg],
     route_buf: &mut Vec<crate::topology::Link>,
 ) -> Option<Vec<Flow>> {
+    let node_down = |n: usize| n < down.len() && down[n];
     let mut flows = Vec::with_capacity(msgs.len());
     for m in msgs {
         let (u, v) = (assignment[m.src], assignment[m.dst]);
@@ -70,11 +72,11 @@ pub fn flows_for_phase(
             });
             continue;
         }
-        torus.route_into(u, v, route_buf);
+        topo.route_into(u, v, route_buf);
         let mut links = Vec::with_capacity(route_buf.len());
         for l in route_buf.iter() {
-            // transit through a down node fails the transmission
-            if down[l.dst] || down[l.src] {
+            // transit through a down compute node fails the transmission
+            if node_down(l.dst) || node_down(l.src) {
                 return None;
             }
             links.push(net.slot(l.src, l.dst));
@@ -91,7 +93,7 @@ pub fn flows_for_phase(
 mod tests {
     use super::*;
     use crate::profiler::{CollectiveKind, Communicator};
-    use crate::topology::TorusDims;
+    use crate::topology::{Torus, TorusDims};
 
     #[test]
     fn collective_ops_expand_to_rounds() {

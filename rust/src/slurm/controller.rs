@@ -37,12 +37,12 @@ impl Controller {
     /// Build a controller for a platform (no node daemons yet).
     pub fn new(platform: Platform, seed: u64) -> Self {
         let n = platform.num_nodes();
-        let dims = platform.torus().dims();
+        let fatt = FattPlugin::with_topology(platform.topology_arc());
         Controller {
             platform,
             queue: JobQueue::new(),
             fans: FansPlugin::default(),
-            fatt: FattPlugin::new(dims),
+            fatt,
             fault_ctld: FaultCtldPlugin::new(n, OutagePolicy::Empirical),
             nodes: Vec::new(),
             rng: Rng::new(seed),

@@ -1,28 +1,35 @@
-//! Fault-Aware Torus Topology (FATT) plugin.
+//! Fault-Aware Topology (FATT) plugin.
 //!
-//! Controller-side: reads a topology file (one entry per node: id plus
-//! x, y, z coordinates on the 3-D torus), builds the platform graph at
-//! slurmctld init, and exports the routing function `R(u, v)` — including
-//! intermediate transit nodes, which Slurm's stock torus plugin does not
-//! expose (the reason the paper had to write FATT).
+//! Controller-side: holds the platform's [`Topology`] (built at slurmctld
+//! init) and exports the routing function `R(u, v)` — including
+//! intermediate transit vertices, which Slurm's stock topology plugins do
+//! not expose (the reason the paper had to write FATT). The paper's
+//! artifact is the 3-D torus variant, parsed from a topology file (one
+//! entry per node: id plus x, y, z coordinates); fat-tree and dragonfly
+//! platforms plug in behind the same trait via
+//! [`FattPlugin::with_topology`].
 
 use std::io::{BufRead, BufReader, Read};
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::topology::{Torus, TorusDims};
+use crate::topology::{Topology, Torus, TorusDims};
 
 /// The FATT plugin: platform topology + routing oracle.
 #[derive(Debug, Clone)]
 pub struct FattPlugin {
-    torus: Torus,
+    topo: Arc<dyn Topology>,
 }
 
 impl FattPlugin {
-    /// Build directly from dimensions.
+    /// Build directly from torus dimensions (the paper's platform).
     pub fn new(dims: TorusDims) -> Self {
-        FattPlugin {
-            torus: Torus::new(dims),
-        }
+        Self::with_topology(Arc::new(Torus::new(dims)))
+    }
+
+    /// Build for any topology (fat-tree / dragonfly platforms).
+    pub fn with_topology(topo: Arc<dyn Topology>) -> Self {
+        FattPlugin { topo }
     }
 
     /// Parse the topology file format described in the paper: a header
@@ -71,40 +78,56 @@ impl FattPlugin {
         if !seen.iter().all(|&s| s) {
             return Err(Error::Topology("topology file missing nodes".into()));
         }
-        Ok(FattPlugin { torus })
+        Ok(FattPlugin {
+            topo: Arc::new(torus),
+        })
     }
 
-    /// Emit the topology file for this platform (used by `repro topo`).
-    pub fn to_topology_file(&self) -> String {
-        let d = self.torus.dims();
+    /// Emit the topology file for this platform. The file format stores
+    /// torus coordinates, so this errors for fat-tree/dragonfly platforms
+    /// (their parameters travel on the CLI instead).
+    pub fn to_topology_file(&self) -> Result<String> {
+        let torus = self.topo.as_torus().ok_or_else(|| {
+            Error::Topology(format!(
+                "the topology file format is torus-only ({} platform)",
+                self.topo.kind()
+            ))
+        })?;
+        let d = torus.dims();
         let mut out = format!("dims {} {} {}\n", d.x, d.y, d.z);
-        for id in 0..self.torus.num_nodes() {
-            let (x, y, z) = self.torus.coords(id);
+        for id in 0..torus.num_nodes() {
+            let (x, y, z) = torus.coords(id);
             out.push_str(&format!("{id} {x} {y} {z}\n"));
         }
-        out
+        Ok(out)
     }
 
     /// The routing function `R(u, v)`.
     pub fn route(&self, u: usize, v: usize) -> Vec<crate::topology::Link> {
-        self.torus.route(u, v)
+        self.topo.route(u, v)
     }
 
-    /// Intermediate transit nodes for `u -> v` (the registry entry the
-    /// paper maintains: node -> paths it serves as intermediate hop).
+    /// Intermediate transit vertices for `u -> v` (the registry entry the
+    /// paper maintains: vertex -> paths it serves as intermediate hop).
     pub fn intermediates(&self, u: usize, v: usize) -> Vec<usize> {
-        self.torus.intermediates(u, v)
+        self.topo.intermediates(u, v)
     }
 
-    /// Failure-domain (rack) count (racks = X-lines; the single
-    /// definition lives in [`Torus::num_racks`]).
+    /// Hop distance under the platform's metric (torus rings, fat-tree
+    /// LCA levels, dragonfly local/global tiers).
+    pub fn hops(&self, u: usize, v: usize) -> usize {
+        self.topo.hops(u, v)
+    }
+
+    /// Failure-domain (rack) count: torus X-lines, fat-tree pods,
+    /// dragonfly groups — each topology defines its own decomposition.
     pub fn num_racks(&self) -> usize {
-        self.torus.num_racks()
+        self.topo.num_racks()
     }
 
     /// The rack a node belongs to.
     pub fn rack_of(&self, node: usize) -> usize {
-        self.torus.rack_of(node)
+        self.topo.rack_of(node)
     }
 
     /// Aggregate a generalized per-node outage vector (any fault model's
@@ -112,18 +135,18 @@ impl FattPlugin {
     /// into per-rack means — the topology-level view a correlated-outage
     /// scheduler reasons about.
     pub fn rack_outage(&self, outage: &[f64]) -> Vec<f64> {
-        debug_assert_eq!(outage.len(), self.torus.num_nodes());
+        debug_assert_eq!(outage.len(), self.topo.num_nodes());
         (0..self.num_racks())
             .map(|r| {
-                let members = self.torus.rack_members(r);
+                let members = self.topo.rack_members(r);
                 members.iter().map(|&n| outage[n]).sum::<f64>() / members.len() as f64
             })
             .collect()
     }
 
-    /// Underlying torus.
-    pub fn torus(&self) -> &Torus {
-        &self.torus
+    /// Underlying topology.
+    pub fn topology(&self) -> &dyn Topology {
+        self.topo.as_ref()
     }
 }
 
@@ -134,9 +157,12 @@ mod tests {
     #[test]
     fn file_roundtrip() {
         let f = FattPlugin::new(TorusDims::new(4, 2, 2));
-        let text = f.to_topology_file();
+        let text = f.to_topology_file().unwrap();
         let back = FattPlugin::from_topology_file(text.as_bytes()).unwrap();
-        assert_eq!(back.torus().dims(), TorusDims::new(4, 2, 2));
+        assert_eq!(
+            back.topology().as_torus().unwrap().dims(),
+            TorusDims::new(4, 2, 2)
+        );
     }
 
     #[test]
@@ -160,6 +186,25 @@ mod tests {
         let r = f.route(0, 2);
         assert_eq!(r.len(), 2);
         assert_eq!(f.intermediates(0, 2), vec![1]);
+        assert_eq!(f.hops(0, 2), 2);
+    }
+
+    #[test]
+    fn non_torus_platforms_export_switch_transits() {
+        use crate::topology::FatTree;
+        let ft = FatTree::new(4).unwrap();
+        let n = Topology::num_nodes(&ft);
+        let f = FattPlugin::with_topology(Arc::new(ft));
+        // topology file is a torus-only artifact
+        assert!(f.to_topology_file().is_err());
+        // cross-pod route transits switches only
+        let inter = f.intermediates(0, 4);
+        assert_eq!(inter.len(), 5);
+        assert!(inter.iter().all(|&x| x >= n));
+        assert_eq!(f.hops(0, 4), 6);
+        // racks are pods
+        assert_eq!(f.num_racks(), 4);
+        assert_eq!(f.rack_of(5), 1);
     }
 
     #[test]

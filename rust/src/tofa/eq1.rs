@@ -12,7 +12,7 @@
 //! fault-free path on the platform (the paper found small increments gave
 //! only marginal abort-rate reductions — hence the x100).
 
-use crate::topology::{DistanceMatrix, Torus};
+use crate::topology::{DistanceMatrix, Topology};
 
 /// The hop cost constant `c` of Equation 1.
 pub const HOP_COST: f32 = 1.0;
@@ -21,19 +21,22 @@ pub const FAULT_FACTOR: f32 = 100.0;
 
 /// Build the full fault-aware distance matrix: entry `(u, v)` is Eq. 1
 /// evaluated over `R(u, v)`. `outage[n] > 0` marks node `n` as flaky.
-pub fn fault_aware_distance(torus: &Torus, outage: &[f64]) -> DistanceMatrix {
-    let m = torus.num_nodes();
+/// Route vertices beyond `outage.len()` are switches/routers (indirect
+/// topologies), which never fail and so never inflate a link.
+pub fn fault_aware_distance(topo: &dyn Topology, outage: &[f64]) -> DistanceMatrix {
+    let m = topo.num_nodes();
     assert_eq!(outage.len(), m);
     let flaky: Vec<bool> = outage.iter().map(|&p| p > 0.0).collect();
+    let is_flaky = |n: usize| n < flaky.len() && flaky[n];
     let mut dist = DistanceMatrix::zeros(m);
     let mut route = Vec::new();
     for u in 0..m {
         for v in (u + 1)..m {
-            torus.route_into(u, v, &mut route);
+            topo.route_into(u, v, &mut route);
             let mut w = 0.0f32;
             for l in &route {
                 w += HOP_COST;
-                if flaky[l.src] || flaky[l.dst] {
+                if is_flaky(l.src) || is_flaky(l.dst) {
                     w += HOP_COST * FAULT_FACTOR;
                 }
             }
@@ -47,7 +50,23 @@ pub fn fault_aware_distance(torus: &Torus, outage: &[f64]) -> DistanceMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::TorusDims;
+    use crate::topology::{Torus, TorusDims};
+
+    #[test]
+    fn indirect_topologies_inflate_on_flaky_endpoints_only() {
+        // fat-tree routes transit switches, never compute nodes: Eq. 1
+        // inflates exactly the pairs with a flaky endpoint
+        let f = crate::topology::FatTree::new(4).unwrap();
+        let mut outage = vec![0.0; 16];
+        outage[1] = 0.05;
+        let d = fault_aware_distance(&f, &outage);
+        // exactly one link of each route touches the flaky node (its
+        // access link); every switch-to-switch hop stays at cost 1
+        assert_eq!(d.get(0, 1), 2.0 + 100.0);
+        assert_eq!(d.get(0, 2), 4.0); // same pod, clean endpoints
+        assert_eq!(d.get(0, 4), 6.0); // cross pod, clean endpoints
+        assert_eq!(d.get(1, 4), 6.0 + 100.0);
+    }
 
     #[test]
     fn no_faults_reduces_to_hops() {

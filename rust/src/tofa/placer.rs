@@ -72,7 +72,7 @@ impl TofaPlacer {
         outage: &[f64],
     ) -> Result<TofaPlacement> {
         let n = comm.len();
-        let torus = platform.torus();
+        let topo = platform.topology();
 
         if outage.iter().all(|&p| p <= 0.0) {
             // Nothing flaky: Listing 1.1 still finds S (trivially the
@@ -90,7 +90,7 @@ impl TofaPlacer {
 
         // Prefer a window whose route closure is flaky-free (zero abort
         // guarantee); fall back to any endpoint-clean window.
-        let window = find_route_clean_window(outage, n, torus)
+        let window = find_route_clean_window(outage, n, topo)
             .or_else(|| find_fault_free_window(outage, n));
         if let Some(window) = window {
             // ScotchExtract: sub-topology restricted to the window, with
@@ -109,7 +109,7 @@ impl TofaPlacer {
             })
         } else {
             // no window: map over the Eq. 1 fault-weighted topology
-            let dist = fault_aware_distance(torus, outage);
+            let dist = fault_aware_distance(topo, outage);
             let p = self.config.mapper.map(comm, &dist)?;
             Ok(TofaPlacement {
                 assignment: p.assignment,
@@ -189,6 +189,43 @@ mod tests {
             flaky_used <= 4,
             "fault-weighted map used {flaky_used} flaky nodes"
         );
+    }
+
+    #[test]
+    fn tofa_runs_on_every_topology_family() {
+        use crate::topology::{Dragonfly, DragonflyParams, FatTree};
+        use std::sync::Arc;
+        let app = LammpsProxy::tiny(8, 2);
+        let profile = profile_app(&app);
+        let platforms = [
+            Platform::paper_default_on(Arc::new(FatTree::new(4).unwrap())),
+            Platform::paper_default_on(Arc::new(
+                Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap(),
+            )),
+        ];
+        for plat in &platforms {
+            let n = plat.num_nodes();
+            let kind = plat.topology().kind();
+            // window path dodges a flaky node in the middle
+            let mut outage = vec![0.0; n];
+            outage[2] = 0.1;
+            let p = TofaPlacer::default()
+                .place(&profile.volume, plat, &outage)
+                .unwrap();
+            assert_eq!(p.path, TofaPath::Window, "{kind}");
+            assert!(!p.assignment.contains(&2), "{kind}");
+            Placement::new(p.assignment).validate(n).unwrap();
+            // fault-weighted path when no 8-window survives
+            let mut dense = vec![0.0; n];
+            for i in (0..n).step_by(4) {
+                dense[i] = 0.1;
+            }
+            let p = TofaPlacer::default()
+                .place(&profile.volume, plat, &dense)
+                .unwrap();
+            assert_eq!(p.path, TofaPath::FaultWeighted, "{kind}");
+            Placement::new(p.assignment).validate(n).unwrap();
+        }
     }
 
     #[test]

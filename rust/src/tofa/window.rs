@@ -29,20 +29,22 @@ pub fn find_fault_free_window(outage: &[f64], len: usize) -> Option<Vec<usize>> 
 }
 
 /// Find a fault-free window whose **route closure** is also fault-free:
-/// no DOR route between any two window nodes transits a node with
+/// no fixed route between any two window nodes transits a node with
 /// `outage > 0`. This is the check the FANS plugin can make because FATT
 /// exports the intermediate nodes of `R(u, v)` (Section 4 of the paper) —
 /// a window passing it guarantees a zero abort ratio for jobs mapped
-/// inside. Falls back to `None` if no such window exists.
+/// inside. Transit vertices beyond `outage.len()` are switches/routers,
+/// which never fail. Falls back to `None` if no such window exists.
 pub fn find_route_clean_window(
     outage: &[f64],
     len: usize,
-    torus: &crate::topology::Torus,
+    topo: &dyn crate::topology::Topology,
 ) -> Option<Vec<usize>> {
     if len == 0 || len > outage.len() {
         return None;
     }
     let flaky: Vec<bool> = outage.iter().map(|&p| p > 0.0).collect();
+    let is_flaky = |n: usize| n < flaky.len() && flaky[n];
     let mut route = Vec::new();
     'starts: for start in 0..=(outage.len() - len) {
         // endpoint check first (cheap)
@@ -52,9 +54,9 @@ pub fn find_route_clean_window(
         // route-closure check against flaky transits
         for u in start..start + len {
             for v in (u + 1)..start + len {
-                torus.route_into(u, v, &mut route);
+                topo.route_into(u, v, &mut route);
                 for l in &route {
-                    if flaky[l.src] || flaky[l.dst] {
+                    if is_flaky(l.src) || is_flaky(l.dst) {
                         continue 'starts;
                     }
                 }

@@ -5,6 +5,7 @@
 //! produces the Eq. 1 fault-inflated variant.
 
 use super::torus::Torus;
+use super::Topology;
 
 /// Dense symmetric matrix of inter-node path costs (f32 to match the
 /// PJRT artifact's dtype).
@@ -25,6 +26,11 @@ impl DistanceMatrix {
 
     /// Hop-count matrix of a torus.
     pub fn from_torus_hops(t: &Torus) -> Self {
+        Self::from_topology(t)
+    }
+
+    /// Hop-count matrix over the compute nodes of any [`Topology`].
+    pub fn from_topology(t: &dyn Topology) -> Self {
         let n = t.num_nodes();
         let mut m = DistanceMatrix::zeros(n);
         for u in 0..n {

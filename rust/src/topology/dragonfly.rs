@@ -1,0 +1,396 @@
+//! Dragonfly topology (Kim/Dally construction, Cray Aries parameterization).
+//!
+//! `g` groups of `a` routers; each router hosts `p` compute nodes and owns
+//! `h` global links. Routers within a group are fully connected (the Aries
+//! all-to-all local fabric); the groups themselves are fully connected by
+//! the global links, so `g - 1 <= a * h` is required. Global optical links
+//! carry a higher capacity than local electrical ones
+//! ([`Topology::link_capacity_scale`] reports 2x, the Aries ratio).
+//!
+//! Node ids enumerate group-major then router-major, so consecutive ids
+//! share a router / group — the locality contract the TOFA window search
+//! relies on. Minimal routing: node → router, at most one local hop to the
+//! gateway router, one global hop, at most one local hop, router → node;
+//! hop distances are 0 / 2 (same router) / 3 (same group) / 3-5 (across
+//! groups).
+
+use super::torus::Link;
+use super::Topology;
+use crate::error::{Error, Result};
+
+/// Dragonfly parameters: `g` groups x `a` routers x `p` nodes, `h` global
+/// links per router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DragonflyParams {
+    /// Group count.
+    pub groups: usize,
+    /// Routers per group.
+    pub routers: usize,
+    /// Compute nodes per router.
+    pub hosts: usize,
+    /// Global links per router.
+    pub globals: usize,
+}
+
+impl DragonflyParams {
+    /// New parameter tuple (validated by [`Dragonfly::new`]).
+    pub const fn new(groups: usize, routers: usize, hosts: usize, globals: usize) -> Self {
+        DragonflyParams {
+            groups,
+            routers,
+            hosts,
+            globals,
+        }
+    }
+
+    /// Parse `"9x4x4x2"` (groups x routers x hosts x globals).
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<_> = s.split('x').collect();
+        if parts.len() != 4 {
+            return Err(Error::Topology(format!(
+                "bad dragonfly spec (want GxAxPxH): {s}"
+            )));
+        }
+        let mut v = [0usize; 4];
+        for (i, p) in parts.iter().enumerate() {
+            v[i] = p
+                .parse()
+                .map_err(|_| Error::Topology(format!("bad dragonfly spec: {s}")))?;
+        }
+        Ok(DragonflyParams::new(v[0], v[1], v[2], v[3]))
+    }
+
+    /// Total compute nodes `g * a * p`.
+    pub const fn nodes(&self) -> usize {
+        self.groups * self.routers * self.hosts
+    }
+}
+
+impl std::fmt::Display for DragonflyParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x{}x{}x{}",
+            self.groups, self.routers, self.hosts, self.globals
+        )
+    }
+}
+
+/// Dragonfly network over `g * a * p` compute nodes and `g * a` routers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dragonfly {
+    params: DragonflyParams,
+}
+
+impl Dragonfly {
+    /// Build a dragonfly; every parameter must be >= 1 and the global
+    /// links must suffice for the all-to-all group fabric
+    /// (`g - 1 <= a * h`).
+    pub fn new(params: DragonflyParams) -> Result<Self> {
+        let DragonflyParams {
+            groups,
+            routers,
+            hosts,
+            globals,
+        } = params;
+        if groups == 0 || routers == 0 || hosts == 0 || globals == 0 {
+            return Err(Error::Topology(format!(
+                "dragonfly parameters must all be >= 1: {params}"
+            )));
+        }
+        if groups > 1 && groups - 1 > routers * globals {
+            return Err(Error::Topology(format!(
+                "dragonfly {params}: {} groups need g-1 <= a*h = {} global slots",
+                groups,
+                routers * globals
+            )));
+        }
+        Ok(Dragonfly { params })
+    }
+
+    /// The parameter tuple.
+    pub fn params(&self) -> DragonflyParams {
+        self.params
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.params.nodes()
+    }
+
+    /// Group of a compute node.
+    #[inline]
+    pub fn group_of(&self, node: usize) -> usize {
+        node / (self.params.routers * self.params.hosts)
+    }
+
+    /// Global router index (0..g*a) of the router hosting `node`.
+    #[inline]
+    fn router_of(&self, node: usize) -> usize {
+        node / self.params.hosts
+    }
+
+    /// Vertex id of global router index `r`.
+    #[inline]
+    fn router_vertex(&self, r: usize) -> usize {
+        self.num_nodes() + r
+    }
+
+    /// The router in `from` group owning the global link toward `to`
+    /// (its global router index). The link for group pair `(i, j)` uses
+    /// slot `j - 1` on `i`'s side if `j > i` else slot `j`, and slots map
+    /// to routers `slot / h` — the standard consecutive assignment, fixed
+    /// so both directions name the same physical cable.
+    #[inline]
+    fn gateway(&self, from: usize, to: usize) -> usize {
+        debug_assert_ne!(from, to);
+        let slot = if to > from { to - 1 } else { to };
+        from * self.params.routers + slot / self.params.globals
+    }
+}
+
+impl Topology for Dragonfly {
+    fn kind(&self) -> &'static str {
+        "dragonfly"
+    }
+
+    fn describe(&self) -> String {
+        format!("dragonfly {} ({} nodes)", self.params, self.num_nodes())
+    }
+
+    fn num_nodes(&self) -> usize {
+        Dragonfly::num_nodes(self)
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.num_nodes() + self.params.groups * self.params.routers
+    }
+
+    fn hops(&self, u: usize, v: usize) -> usize {
+        if u == v {
+            return 0;
+        }
+        let (ru, rv) = (self.router_of(u), self.router_of(v));
+        if ru == rv {
+            return 2;
+        }
+        let (gu, gv) = (self.group_of(u), self.group_of(v));
+        if gu == gv {
+            return 3;
+        }
+        let (wu, wv) = (self.gateway(gu, gv), self.gateway(gv, gu));
+        3 + usize::from(ru != wu) + usize::from(rv != wv)
+    }
+
+    fn route_into(&self, u: usize, v: usize, links: &mut Vec<Link>) {
+        links.clear();
+        if u == v {
+            return;
+        }
+        // waypoint vertices of the minimal route (at most 6)
+        let mut way = [0usize; 6];
+        let mut k = 0;
+        let at = |way: &mut [usize; 6], k: &mut usize, w: usize| {
+            way[*k] = w;
+            *k += 1;
+        };
+        let (ru, rv) = (self.router_of(u), self.router_of(v));
+        at(&mut way, &mut k, u);
+        at(&mut way, &mut k, self.router_vertex(ru));
+        if ru != rv {
+            let (gu, gv) = (self.group_of(u), self.group_of(v));
+            if gu != gv {
+                let (wu, wv) = (self.gateway(gu, gv), self.gateway(gv, gu));
+                if ru != wu {
+                    at(&mut way, &mut k, self.router_vertex(wu)); // local to gateway
+                }
+                at(&mut way, &mut k, self.router_vertex(wv)); // global hop
+                if wv != rv {
+                    at(&mut way, &mut k, self.router_vertex(rv)); // local to dest
+                }
+            } else {
+                at(&mut way, &mut k, self.router_vertex(rv)); // local all-to-all
+            }
+        }
+        at(&mut way, &mut k, v);
+        for w in way[..k].windows(2) {
+            links.push(Link { src: w[0], dst: w[1] });
+        }
+        debug_assert_eq!(links.len(), self.hops(u, v));
+    }
+
+    fn all_links(&self) -> Vec<Link> {
+        let p = self.params;
+        let mut links = Vec::new();
+        let both = |a: usize, b: usize, links: &mut Vec<Link>| {
+            links.push(Link { src: a, dst: b });
+            links.push(Link { src: b, dst: a });
+        };
+        for n in 0..self.num_nodes() {
+            both(n, self.router_vertex(self.router_of(n)), &mut links);
+        }
+        for g in 0..p.groups {
+            for r1 in 0..p.routers {
+                for r2 in (r1 + 1)..p.routers {
+                    both(
+                        self.router_vertex(g * p.routers + r1),
+                        self.router_vertex(g * p.routers + r2),
+                        &mut links,
+                    );
+                }
+            }
+        }
+        for g1 in 0..p.groups {
+            for g2 in (g1 + 1)..p.groups {
+                both(
+                    self.router_vertex(self.gateway(g1, g2)),
+                    self.router_vertex(self.gateway(g2, g1)),
+                    &mut links,
+                );
+            }
+        }
+        links
+    }
+
+    fn link_capacity_scale(&self, src: usize, dst: usize) -> f64 {
+        // global (inter-group) router-router links are the fat optical
+        // pipes of the Aries fabric: 2x the local electrical capacity
+        let n = self.num_nodes();
+        if src >= n && dst >= n {
+            let per_group = self.params.routers;
+            if (src - n) / per_group != (dst - n) / per_group {
+                return 2.0;
+            }
+        }
+        1.0
+    }
+
+    fn bisection_links(&self) -> usize {
+        // halving the groups cuts ceil(g/2)*floor(g/2) global cables
+        let g = self.params.groups;
+        2 * (g / 2) * g.div_ceil(2)
+    }
+
+    fn num_racks(&self) -> usize {
+        self.params.groups
+    }
+
+    fn rack_of(&self, node: usize) -> usize {
+        self.group_of(node)
+    }
+
+    fn rack_members(&self, rack: usize) -> Vec<usize> {
+        let per_group = self.params.routers * self.params.hosts;
+        (rack * per_group..(rack + 1) * per_group).collect()
+    }
+
+    fn salt(&self) -> u64 {
+        super::fnv_salt(
+            "dragonfly",
+            &[
+                self.params.groups as u64,
+                self.params.routers as u64,
+                self.params.hosts as u64,
+                self.params.globals as u64,
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Dragonfly {
+        // 3 groups x 2 routers x 2 hosts, 1 global link per router
+        Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()
+    }
+
+    #[test]
+    fn construction_and_counts() {
+        let d = small();
+        assert_eq!(Topology::num_nodes(&d), 12);
+        assert_eq!(d.num_vertices(), 12 + 6);
+        assert_eq!(d.num_racks(), 3);
+        assert!(Dragonfly::new(DragonflyParams::new(9, 2, 2, 1)).is_err()); // 8 > 2*1
+        assert!(Dragonfly::new(DragonflyParams::new(0, 2, 2, 1)).is_err());
+        assert_eq!(
+            DragonflyParams::parse("9x4x4x2").unwrap(),
+            DragonflyParams::new(9, 4, 4, 2)
+        );
+        assert!(DragonflyParams::parse("9x4x4").is_err());
+    }
+
+    #[test]
+    fn hop_tiers() {
+        let d = small();
+        assert_eq!(d.hops(0, 0), 0);
+        assert_eq!(d.hops(0, 1), 2); // same router
+        assert_eq!(d.hops(0, 2), 3); // same group, other router
+        let cross = d.hops(0, 4); // other group
+        assert!((3..=5).contains(&cross), "cross-group hops {cross}");
+    }
+
+    #[test]
+    fn routes_match_hops_and_are_connected() {
+        let d = Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap();
+        let n = Topology::num_nodes(&d);
+        for u in 0..n {
+            for v in 0..n {
+                let r = d.route(u, v);
+                assert_eq!(r.len(), d.hops(u, v), "{u}->{v}");
+                if u != v {
+                    assert_eq!(r.first().unwrap().src, u);
+                    assert_eq!(r.last().unwrap().dst, v);
+                    for w in r.windows(2) {
+                        assert_eq!(w[0].dst, w[1].src);
+                    }
+                    for l in &r[..r.len() - 1] {
+                        assert!(l.dst >= n, "{u}->{v} transits compute node {}", l.dst);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routes_use_physical_links_only() {
+        let d = Dragonfly::new(DragonflyParams::new(4, 2, 3, 2)).unwrap();
+        let n = Topology::num_nodes(&d);
+        let mut physical = std::collections::HashSet::new();
+        for l in d.all_links() {
+            physical.insert((l.src, l.dst));
+        }
+        for u in 0..n {
+            for v in 0..n {
+                for l in d.route(u, v) {
+                    assert!(physical.contains(&(l.src, l.dst)), "{u}->{v}: {l:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_links_are_fatter() {
+        let d = small();
+        // group 0 -> group 1 cable: gateway(0,1) owns slot 0
+        let a = d.router_vertex(d.gateway(0, 1));
+        let b = d.router_vertex(d.gateway(1, 0));
+        assert_eq!(d.link_capacity_scale(a, b), 2.0);
+        // node-to-router and intra-group links stay at 1x
+        assert_eq!(d.link_capacity_scale(0, d.router_vertex(0)), 1.0);
+        assert_eq!(
+            d.link_capacity_scale(d.router_vertex(0), d.router_vertex(1)),
+            1.0
+        );
+    }
+
+    #[test]
+    fn groups_are_contiguous_racks() {
+        let d = small();
+        assert_eq!(d.rack_members(0), vec![0, 1, 2, 3]);
+        assert_eq!(d.rack_members(2), vec![8, 9, 10, 11]);
+        for node in 0..12 {
+            assert_eq!(d.rack_of(node), node / 4);
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! k-ary fat-tree topology (Al-Fares/Leiserson construction).
+//!
+//! A k-ary fat-tree has `k` pods; each pod holds `k/2` edge switches and
+//! `k/2` aggregation switches; `(k/2)^2` core switches join the pods.
+//! Every edge switch hosts `k/2` compute nodes, so the fabric serves
+//! `k^3/4` nodes at full bisection bandwidth with uniform link capacity.
+//!
+//! Node ids enumerate pod-major then edge-major, so consecutive ids share
+//! an edge switch / pod — the same locality contract the torus gives the
+//! TOFA window search. Distance is `2 * level(LCA)`: 2 within an edge
+//! switch, 4 within a pod, 6 across pods.
+//!
+//! Routing is deterministic destination-based up/down: the uplink
+//! (aggregation switch, then core switch) is chosen by a fixed function of
+//! the destination id — the usual static-ECMP hash, pinned so `R(u, v)` is
+//! a pure function, as the simulator and Eq. 1 require.
+
+use super::torus::Link;
+use super::Topology;
+use crate::error::{Error, Result};
+
+/// k-ary fat-tree over `k^3/4` compute nodes (`k` even, >= 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FatTree {
+    k: usize,
+}
+
+impl FatTree {
+    /// Build a k-ary fat-tree. `k` must be even and >= 2.
+    pub fn new(k: usize) -> Result<Self> {
+        if k < 2 || k % 2 != 0 {
+            return Err(Error::Topology(format!(
+                "fat-tree arity must be even and >= 2, got {k}"
+            )));
+        }
+        Ok(FatTree { k })
+    }
+
+    /// Parse the CLI form: the arity `k` (e.g. `"8"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let k = s
+            .parse()
+            .map_err(|_| Error::Topology(format!("bad fat-tree arity: {s}")))?;
+        FatTree::new(k)
+    }
+
+    /// The arity `k`.
+    pub fn arity(&self) -> usize {
+        self.k
+    }
+
+    /// Half-arity `k/2`: nodes per edge switch, edge/agg switches per pod.
+    #[inline]
+    fn h(&self) -> usize {
+        self.k / 2
+    }
+
+    /// Compute nodes per pod (`k^2/4`).
+    #[inline]
+    fn nodes_per_pod(&self) -> usize {
+        self.h() * self.h()
+    }
+
+    /// Pod of a compute node.
+    #[inline]
+    pub fn pod_of(&self, node: usize) -> usize {
+        node / self.nodes_per_pod()
+    }
+
+    /// Vertex id of the edge switch serving `node`.
+    #[inline]
+    fn edge_vertex(&self, node: usize) -> usize {
+        let pod = self.pod_of(node);
+        let edge_in_pod = (node % self.nodes_per_pod()) / self.h();
+        self.num_nodes() + pod * self.h() + edge_in_pod
+    }
+
+    /// Vertex id of aggregation switch `a` (0..k/2) in `pod`.
+    #[inline]
+    fn agg_vertex(&self, pod: usize, a: usize) -> usize {
+        self.num_nodes() + self.k * self.h() + pod * self.h() + a
+    }
+
+    /// Vertex id of core switch `(a, j)`: core group `a` (reachable from
+    /// aggregation switch `a` of every pod), member `j` (0..k/2).
+    #[inline]
+    fn core_vertex(&self, a: usize, j: usize) -> usize {
+        self.num_nodes() + 2 * self.k * self.h() + a * self.h() + j
+    }
+
+    /// The deterministic uplink choice for destination `v`: aggregation
+    /// index and core member (the pinned static-ECMP hash).
+    #[inline]
+    fn uplink_for(&self, v: usize) -> (usize, usize) {
+        (v % self.h(), (v / self.h()) % self.h())
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.k * self.k * self.k / 4
+    }
+}
+
+impl Topology for FatTree {
+    fn kind(&self) -> &'static str {
+        "fattree"
+    }
+
+    fn describe(&self) -> String {
+        format!("fat-tree k={} ({} nodes)", self.k, FatTree::num_nodes(self))
+    }
+
+    fn num_nodes(&self) -> usize {
+        FatTree::num_nodes(self)
+    }
+
+    fn num_vertices(&self) -> usize {
+        // nodes + k*(k/2) edge + k*(k/2) agg + (k/2)^2 core
+        FatTree::num_nodes(self) + 2 * self.k * self.h() + self.h() * self.h()
+    }
+
+    fn hops(&self, u: usize, v: usize) -> usize {
+        // 2 * tree-level of the lowest common ancestor
+        if u == v {
+            0
+        } else if self.edge_vertex(u) == self.edge_vertex(v) {
+            2
+        } else if self.pod_of(u) == self.pod_of(v) {
+            4
+        } else {
+            6
+        }
+    }
+
+    fn route_into(&self, u: usize, v: usize, links: &mut Vec<Link>) {
+        links.clear();
+        if u == v {
+            return;
+        }
+        // waypoint vertices of the up/down path (at most 7)
+        let mut way = [0usize; 7];
+        let mut k = 0;
+        let at = |way: &mut [usize; 7], k: &mut usize, w: usize| {
+            way[*k] = w;
+            *k += 1;
+        };
+        let (eu, ev) = (self.edge_vertex(u), self.edge_vertex(v));
+        at(&mut way, &mut k, u);
+        at(&mut way, &mut k, eu);
+        if eu != ev {
+            let (a, j) = self.uplink_for(v);
+            at(&mut way, &mut k, self.agg_vertex(self.pod_of(u), a));
+            if self.pod_of(u) != self.pod_of(v) {
+                at(&mut way, &mut k, self.core_vertex(a, j));
+                at(&mut way, &mut k, self.agg_vertex(self.pod_of(v), a));
+            }
+            at(&mut way, &mut k, ev);
+        }
+        at(&mut way, &mut k, v);
+        for w in way[..k].windows(2) {
+            links.push(Link { src: w[0], dst: w[1] });
+        }
+        debug_assert_eq!(links.len(), self.hops(u, v));
+    }
+
+    fn all_links(&self) -> Vec<Link> {
+        let mut links = Vec::new();
+        let both = |a: usize, b: usize, links: &mut Vec<Link>| {
+            links.push(Link { src: a, dst: b });
+            links.push(Link { src: b, dst: a });
+        };
+        for n in 0..FatTree::num_nodes(self) {
+            both(n, self.edge_vertex(n), &mut links);
+        }
+        for pod in 0..self.k {
+            for e in 0..self.h() {
+                let edge = FatTree::num_nodes(self) + pod * self.h() + e;
+                for a in 0..self.h() {
+                    both(edge, self.agg_vertex(pod, a), &mut links);
+                }
+            }
+            for a in 0..self.h() {
+                for j in 0..self.h() {
+                    both(self.agg_vertex(pod, a), self.core_vertex(a, j), &mut links);
+                }
+            }
+        }
+        links
+    }
+
+    fn bisection_links(&self) -> usize {
+        // splitting the pods in half cuts half the core downlinks:
+        // (k/2)^2 cores x k/2 pod links each, both directions
+        2 * self.h() * self.h() * self.h()
+    }
+
+    fn num_racks(&self) -> usize {
+        self.k
+    }
+
+    fn rack_of(&self, node: usize) -> usize {
+        self.pod_of(node)
+    }
+
+    fn rack_members(&self, rack: usize) -> Vec<usize> {
+        let npp = self.nodes_per_pod();
+        (rack * npp..(rack + 1) * npp).collect()
+    }
+
+    fn salt(&self) -> u64 {
+        super::fnv_salt("fattree", &[self.k as u64])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_counts() {
+        let f = FatTree::new(4).unwrap();
+        assert_eq!(Topology::num_nodes(&f), 16);
+        assert_eq!(f.num_vertices(), 16 + 8 + 8 + 4);
+        assert_eq!(f.num_racks(), 4);
+        let f8 = FatTree::parse("8").unwrap();
+        assert_eq!(Topology::num_nodes(&f8), 128);
+        assert!(FatTree::new(3).is_err());
+        assert!(FatTree::new(0).is_err());
+        assert!(FatTree::parse("x").is_err());
+    }
+
+    #[test]
+    fn distance_is_twice_lca_level() {
+        let f = FatTree::new(4).unwrap();
+        // nodes 0,1 share edge switch; 0,2 share only the pod; 0,4 differ
+        assert_eq!(f.hops(0, 0), 0);
+        assert_eq!(f.hops(0, 1), 2);
+        assert_eq!(f.hops(0, 2), 4);
+        assert_eq!(f.hops(0, 4), 6);
+    }
+
+    #[test]
+    fn routes_match_hops_and_are_connected() {
+        let f = FatTree::new(4).unwrap();
+        let n = Topology::num_nodes(&f);
+        for u in 0..n {
+            for v in 0..n {
+                let r = f.route(u, v);
+                assert_eq!(r.len(), f.hops(u, v), "{u}->{v}");
+                if u != v {
+                    assert_eq!(r.first().unwrap().src, u);
+                    assert_eq!(r.last().unwrap().dst, v);
+                    for w in r.windows(2) {
+                        assert_eq!(w[0].dst, w[1].src);
+                    }
+                    // interior hops are switches, never compute nodes
+                    for l in &r[..r.len() - 1] {
+                        assert!(l.dst >= n, "{u}->{v} transits node {}", l.dst);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routes_use_physical_links_only() {
+        let f = FatTree::new(6).unwrap();
+        let n = Topology::num_nodes(&f);
+        let mut physical = std::collections::HashSet::new();
+        for l in f.all_links() {
+            physical.insert((l.src, l.dst));
+        }
+        for u in (0..n).step_by(5) {
+            for v in (0..n).step_by(7) {
+                for l in f.route(u, v) {
+                    assert!(physical.contains(&(l.src, l.dst)), "{u}->{v}: {l:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pods_are_contiguous_racks() {
+        let f = FatTree::new(4).unwrap();
+        assert_eq!(f.rack_members(0), vec![0, 1, 2, 3]);
+        assert_eq!(f.rack_members(3), vec![12, 13, 14, 15]);
+        for node in 0..16 {
+            assert_eq!(f.rack_of(node), node / 4);
+        }
+    }
+
+    #[test]
+    fn link_index_is_dense() {
+        let f = FatTree::new(4).unwrap();
+        let (index, count) = f.link_index();
+        assert_eq!(count, f.all_links().len());
+        let mut seen = vec![false; count];
+        for slot in index.iter().filter(|&&s| s != u32::MAX) {
+            seen[*slot as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -33,6 +33,18 @@ impl ArchGraph {
         g
     }
 
+    /// Build the physical-link graph of any [`super::Topology`] over its
+    /// full vertex set (compute nodes + switches), unit edge weights.
+    pub fn from_topology(t: &dyn super::Topology) -> Self {
+        let mut g = ArchGraph::new(t.num_vertices());
+        for l in t.all_links() {
+            if l.src < l.dst {
+                g.add_edge(l.src, l.dst, 1.0);
+            }
+        }
+        g
+    }
+
     /// Add an undirected edge.
     pub fn add_edge(&mut self, u: usize, v: usize, w: f32) {
         assert!(u < self.n && v < self.n && u != v);
@@ -122,6 +134,20 @@ mod tests {
         for v in 0..g.len() {
             assert_eq!(d[v], t.hops(0, v), "v={v}");
         }
+    }
+
+    #[test]
+    fn topology_graph_spans_switch_vertices() {
+        use crate::topology::{FatTree, Topology};
+        let f = FatTree::new(4).unwrap();
+        let g = ArchGraph::from_topology(&f);
+        assert_eq!(g.len(), f.num_vertices());
+        // BFS over the physical graph agrees with the fat-tree metric
+        let d = g.bfs_hops(0);
+        assert_eq!(d[1], 2); // same edge switch
+        assert_eq!(d[4], 6); // cross-pod
+        // every vertex is reachable
+        assert!(d.iter().all(|&x| x != usize::MAX));
     }
 
     #[test]

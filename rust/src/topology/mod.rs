@@ -1,17 +1,253 @@
-//! Platform topology: 3-D torus model, dimension-ordered routing, distance
+//! Platform topology: pluggable interconnect models, routing, distance
 //! matrices, and SimGrid-style platform descriptions.
 //!
-//! This module is the substrate behind the paper's **FATT** (Fault-Aware
-//! Torus Topology) plugin: it provides the routing function `R(u, v)` (the
-//! exact list of links a message traverses) plus a graph representation of
-//! the platform, which [`crate::tofa`] re-weights per Eq. 1.
+//! The paper evaluates on a single 3-D torus, but its core claim — express
+//! the system as a graph, minimize hop-bytes — is topology-generic. This
+//! module therefore defines the [`Topology`] trait (routing function
+//! `R(u, v)`, hop metric, link enumeration, failure-domain decomposition)
+//! with three implementations:
+//!
+//! * [`Torus`] — the paper's 3-D torus with dimension-ordered routing;
+//! * [`FatTree`] — k-ary fat-tree (pods → edge/aggregation/core layers);
+//! * [`Dragonfly`] — router groups with all-to-all global links (Cray
+//!   Aries parameterization).
+//!
+//! Everything above this module ([`crate::tofa`], [`crate::sim`],
+//! [`crate::mapping`], the Slurm-lite plugins) consumes the trait, so the
+//! whole pipeline — placement, flow simulation, correlated fault domains —
+//! runs unchanged on any of the three.
 
 pub mod distance;
+pub mod dragonfly;
+pub mod fattree;
 pub mod graph;
 pub mod platform;
 pub mod torus;
 
 pub use distance::DistanceMatrix;
+pub use dragonfly::{Dragonfly, DragonflyParams};
+pub use fattree::FatTree;
 pub use graph::ArchGraph;
 pub use platform::Platform;
 pub use torus::{Link, Torus, TorusDims};
+
+/// A network topology: compute nodes (rank hosts, ids `0..num_nodes`)
+/// plus, for indirect networks, switch/router vertices (ids
+/// `num_nodes..num_vertices`) that carry transit traffic but never host
+/// ranks and never fail.
+///
+/// Implementations must be pure and deterministic: the routing function is
+/// fixed (`route_into(u, v)` always returns the same link sequence), which
+/// is what lets the flow simulator, the Eq. 1 re-weighting, and the FATT
+/// plugin's transit registry agree — and what preserves the batch engine's
+/// bit-identical-for-any-worker-count contract on every topology.
+pub trait Topology: std::fmt::Debug + Send + Sync {
+    /// Topology family name (`"torus"`, `"fattree"`, `"dragonfly"`).
+    fn kind(&self) -> &'static str;
+
+    /// Human-readable parameter summary (e.g. `"torus 8x8x8"`).
+    fn describe(&self) -> String;
+
+    /// Compute-node count (rank hosts). Node ids are `0..num_nodes()` and
+    /// enumerate the platform the way Slurm lists it, so "consecutive ids"
+    /// (the TOFA window) are physically close under every implementation.
+    fn num_nodes(&self) -> usize;
+
+    /// Total vertex count including switches/routers. Direct networks
+    /// (torus) have `num_vertices == num_nodes`.
+    fn num_vertices(&self) -> usize {
+        self.num_nodes()
+    }
+
+    /// Hop distance between two compute nodes: the length of
+    /// `route_into(u, v)`. Must be a metric on the node set — symmetric,
+    /// zero iff `u == v`, and triangle-inequality-consistent (asserted for
+    /// all implementations in `tests/proptests.rs`).
+    fn hops(&self, u: usize, v: usize) -> usize;
+
+    /// The routing function `R(u, v)`: the ordered directed links a
+    /// message traverses, over vertex ids (switch hops included).
+    fn route_into(&self, u: usize, v: usize, links: &mut Vec<Link>);
+
+    /// Allocating variant of [`Topology::route_into`].
+    fn route(&self, u: usize, v: usize) -> Vec<Link> {
+        let mut links = Vec::new();
+        self.route_into(u, v, &mut links);
+        links
+    }
+
+    /// Intermediate vertices (excluding endpoints) on the route `u -> v` —
+    /// the transit registry the FATT plugin exports.
+    fn intermediates(&self, u: usize, v: usize) -> Vec<usize> {
+        self.route(u, v)
+            .iter()
+            .map(|l| l.dst)
+            .filter(|&n| n != v)
+            .collect()
+    }
+
+    /// All directed physical links (both directions of every cable).
+    fn all_links(&self) -> Vec<Link>;
+
+    /// Dense index of directed links: `(index, count)` with slot
+    /// `index[src * num_vertices + dst]`, used by the flow simulator to
+    /// map a [`Link`] to a contiguous capacity slot.
+    fn link_index(&self) -> (Vec<u32>, usize) {
+        let n = self.num_vertices();
+        let mut index = vec![u32::MAX; n * n];
+        let mut count = 0u32;
+        for l in self.all_links() {
+            let slot = l.src * n + l.dst;
+            if index[slot] == u32::MAX {
+                index[slot] = count;
+                count += 1;
+            }
+        }
+        (index, count as usize)
+    }
+
+    /// Relative capacity of the directed link `src -> dst` (contention
+    /// weight): the flow simulator provisions `bandwidth * scale` on the
+    /// link. 1.0 everywhere for uniform fabrics (torus, fat-tree); the
+    /// dragonfly's global optical links report > 1.
+    fn link_capacity_scale(&self, src: usize, dst: usize) -> f64 {
+        let _ = (src, dst);
+        1.0
+    }
+
+    /// Number of directed links crossing the topology's canonical halving
+    /// — a contention figure of merit reported by `benches/topologies.rs`
+    /// (not used by the simulator, which models every link individually).
+    fn bisection_links(&self) -> usize;
+
+    /// Failure-domain (rack) count. Racks are the shared-infrastructure
+    /// groups correlated fault models take down as a unit: X-lines on the
+    /// torus, pods on the fat-tree, groups on the dragonfly.
+    fn num_racks(&self) -> usize;
+
+    /// The rack (failure domain) a compute node belongs to.
+    fn rack_of(&self, node: usize) -> usize;
+
+    /// Member node ids of one rack, in ascending order. Racks partition
+    /// the node set exactly (asserted in `tests/proptests.rs`).
+    fn rack_members(&self, rack: usize) -> Vec<usize> {
+        (0..self.num_nodes())
+            .filter(|&n| self.rack_of(n) == rack)
+            .collect()
+    }
+
+    /// FNV-1a hash over the topology family and its parameters — mixed
+    /// into the shared phase-cache key so simulators on different
+    /// platforms never collide.
+    fn salt(&self) -> u64;
+
+    /// Downcast escape hatch for torus-only artifacts (the FATT topology
+    /// file format stores torus coordinates).
+    fn as_torus(&self) -> Option<&Torus> {
+        None
+    }
+}
+
+/// FNV-1a over a kind tag and parameter words (helper for
+/// [`Topology::salt`] implementations).
+pub(crate) fn fnv_salt(kind: &str, words: &[u64]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut feed = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for b in kind.bytes() {
+        feed(b as u64);
+    }
+    for &w in words {
+        feed(w);
+    }
+    h
+}
+
+#[cfg(test)]
+mod trait_tests {
+    use super::*;
+
+    /// Minimal direct topology (a path graph) relying on every default
+    /// trait method: route, intermediates, link_index, rack_members.
+    #[derive(Debug)]
+    struct Line(usize);
+
+    impl Topology for Line {
+        fn kind(&self) -> &'static str {
+            "line"
+        }
+        fn describe(&self) -> String {
+            format!("line {}", self.0)
+        }
+        fn num_nodes(&self) -> usize {
+            self.0
+        }
+        fn hops(&self, u: usize, v: usize) -> usize {
+            u.abs_diff(v)
+        }
+        fn route_into(&self, u: usize, v: usize, links: &mut Vec<Link>) {
+            links.clear();
+            let step = |c: usize| if v > c { c + 1 } else { c - 1 };
+            let mut cur = u;
+            while cur != v {
+                let nxt = step(cur);
+                links.push(Link { src: cur, dst: nxt });
+                cur = nxt;
+            }
+        }
+        fn all_links(&self) -> Vec<Link> {
+            (0..self.0 - 1)
+                .flat_map(|i| {
+                    [Link { src: i, dst: i + 1 }, Link { src: i + 1, dst: i }]
+                })
+                .collect()
+        }
+        fn bisection_links(&self) -> usize {
+            2
+        }
+        fn num_racks(&self) -> usize {
+            1
+        }
+        fn rack_of(&self, _node: usize) -> usize {
+            0
+        }
+        fn salt(&self) -> u64 {
+            fnv_salt("line", &[self.0 as u64])
+        }
+    }
+
+    #[test]
+    fn default_trait_methods_are_consistent() {
+        let l = Line(6);
+        assert_eq!(l.route(1, 4).len(), 3);
+        assert_eq!(l.intermediates(1, 4), vec![2, 3]);
+        assert!(l.intermediates(1, 2).is_empty());
+        let (index, count) = l.link_index();
+        assert_eq!(count, 10);
+        let mut seen = vec![false; count];
+        for slot in index.iter().filter(|&&s| s != u32::MAX) {
+            seen[*slot as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(l.rack_members(0), (0..6).collect::<Vec<_>>());
+        assert_eq!(l.num_vertices(), 6);
+        assert_eq!(l.link_capacity_scale(0, 1), 1.0);
+        assert!(l.as_torus().is_none());
+    }
+
+    #[test]
+    fn salts_differ_across_families_and_params() {
+        let a: &dyn Topology = &Torus::new(TorusDims::new(8, 8, 8));
+        let b: &dyn Topology = &FatTree::new(8).unwrap();
+        let c: &dyn Topology = &Dragonfly::new(DragonflyParams::new(9, 4, 4, 2)).unwrap();
+        let d: &dyn Topology = &Torus::new(TorusDims::new(4, 8, 16));
+        let salts = [a.salt(), b.salt(), c.salt(), d.salt()];
+        for i in 0..salts.len() {
+            for j in (i + 1)..salts.len() {
+                assert_ne!(salts[i], salts[j], "{i} vs {j}");
+            }
+        }
+    }
+}

@@ -2,86 +2,115 @@
 //!
 //! Mirrors the components the paper feeds to SimGrid: nodes with a fixed
 //! compute capability, links with bandwidth + latency, and a static route
-//! for every node pair (provided by the torus DOR routing function). The
-//! paper's values: 6 Gflops per node, 10 Gbps and 1 us per link.
+//! for every node pair (provided by the pluggable [`Topology`]'s routing
+//! function). The paper's values: 6 Gflops per node, 10 Gbps and 1 us per
+//! link.
+
+use std::sync::Arc;
 
 use super::distance::DistanceMatrix;
 use super::torus::{Torus, TorusDims};
+use super::Topology;
 
 /// Immutable platform description shared by the placement and simulation
 /// layers. Fault *state* (which nodes are down in a given scenario) is kept
 /// separate — see [`crate::sim::fault::FaultScenario`] — so one platform
 /// can be reused across thousands of simulated instances.
+///
+/// The interconnect is any [`Topology`] (torus, fat-tree, dragonfly);
+/// cloning a platform shares it.
 #[derive(Debug, Clone)]
 pub struct Platform {
-    torus: Torus,
+    topo: Arc<dyn Topology>,
     /// Node compute capability in FLOPS.
     pub flops: f64,
-    /// Link bandwidth in bytes/second.
+    /// Link bandwidth in bytes/second (scaled per link by
+    /// [`Topology::link_capacity_scale`]).
     pub bandwidth: f64,
     /// Per-link latency in seconds.
     pub latency: f64,
 }
 
 impl Platform {
-    /// Platform with the paper's simulation parameters:
+    /// Torus platform with the paper's simulation parameters:
     /// 6 Gflops nodes, 10 Gbps links, 1 us latency.
     pub fn paper_default(dims: TorusDims) -> Self {
+        Self::paper_default_on(Arc::new(Torus::new(dims)))
+    }
+
+    /// Any topology with the paper's simulation parameters.
+    pub fn paper_default_on(topo: Arc<dyn Topology>) -> Self {
         Platform {
-            torus: Torus::new(dims),
+            topo,
             flops: 6e9,
             bandwidth: 10e9 / 8.0, // 10 Gbps in bytes/s
             latency: 1e-6,
         }
     }
 
-    /// Custom parameters.
+    /// Torus platform with custom parameters.
     pub fn new(dims: TorusDims, flops: f64, bandwidth_bps: f64, latency_s: f64) -> Self {
+        Self::with_topology(Arc::new(Torus::new(dims)), flops, bandwidth_bps, latency_s)
+    }
+
+    /// Any topology with custom parameters.
+    pub fn with_topology(
+        topo: Arc<dyn Topology>,
+        flops: f64,
+        bandwidth_bps: f64,
+        latency_s: f64,
+    ) -> Self {
         Platform {
-            torus: Torus::new(dims),
+            topo,
             flops,
             bandwidth: bandwidth_bps / 8.0,
             latency: latency_s,
         }
     }
 
-    /// Underlying torus (routing function provider).
-    pub fn torus(&self) -> &Torus {
-        &self.torus
+    /// The interconnect (routing function provider).
+    pub fn topology(&self) -> &dyn Topology {
+        self.topo.as_ref()
     }
 
-    /// Node count.
+    /// Shared handle to the interconnect.
+    pub fn topology_arc(&self) -> Arc<dyn Topology> {
+        Arc::clone(&self.topo)
+    }
+
+    /// Compute-node count.
     pub fn num_nodes(&self) -> usize {
-        self.torus.num_nodes()
+        self.topo.num_nodes()
     }
 
-    /// Fault-free hop-count distance matrix.
+    /// Fault-free hop-count distance matrix over the compute nodes.
     pub fn hop_matrix(&self) -> DistanceMatrix {
-        DistanceMatrix::from_torus_hops(&self.torus)
+        DistanceMatrix::from_topology(self.topo.as_ref())
     }
 
-    /// Failure-domain count (racks = X-lines; the definition lives in
-    /// [`Torus::num_racks`]). Correlated fault models
-    /// ([`crate::sim::fault::CorrelatedDomains`]) use these as their
-    /// default domains.
+    /// Failure-domain count (torus X-lines / fat-tree pods / dragonfly
+    /// groups; the definition lives with each [`Topology`]). Correlated
+    /// fault models ([`crate::sim::fault::CorrelatedDomains`]) use these
+    /// as their default domains.
     pub fn num_racks(&self) -> usize {
-        self.torus.num_racks()
+        self.topo.num_racks()
     }
 
     /// The rack (failure domain) a node belongs to.
     pub fn rack_of(&self, node: usize) -> usize {
-        self.torus.rack_of(node)
+        self.topo.rack_of(node)
     }
 
     /// Member node ids of one rack, in ascending order.
     pub fn rack_members(&self, rack: usize) -> Vec<usize> {
-        self.torus.rack_members(rack)
+        self.topo.rack_members(rack)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::{Dragonfly, DragonflyParams, FatTree};
 
     #[test]
     fn paper_default_parameters() {
@@ -90,6 +119,7 @@ mod tests {
         assert_eq!(p.flops, 6e9);
         assert!((p.bandwidth - 1.25e9).abs() < 1.0);
         assert_eq!(p.latency, 1e-6);
+        assert_eq!(p.topology().kind(), "torus");
     }
 
     #[test]
@@ -115,5 +145,24 @@ mod tests {
         assert!(seen.iter().all(|&s| s));
         // members are consecutive ids (X-lines)
         assert_eq!(p.rack_members(1), vec![8, 9, 10, 11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn non_torus_platforms_carry_their_topology() {
+        let ft = Platform::paper_default_on(Arc::new(FatTree::new(4).unwrap()));
+        assert_eq!(ft.num_nodes(), 16);
+        assert_eq!(ft.num_racks(), 4);
+        assert_eq!(ft.topology().kind(), "fattree");
+        assert_eq!(ft.hop_matrix().max(), 6.0);
+
+        let df = Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap(),
+        ));
+        assert_eq!(df.num_nodes(), 12);
+        assert_eq!(df.num_racks(), 3);
+        assert_eq!(df.topology().kind(), "dragonfly");
+        // cloning shares the topology
+        let clone = df.clone();
+        assert_eq!(clone.num_nodes(), 12);
     }
 }

@@ -271,6 +271,81 @@ impl Torus {
     }
 }
 
+impl super::Topology for Torus {
+    fn kind(&self) -> &'static str {
+        "torus"
+    }
+
+    fn describe(&self) -> String {
+        format!("torus {}", self.dims)
+    }
+
+    fn num_nodes(&self) -> usize {
+        Torus::num_nodes(self)
+    }
+
+    fn hops(&self, u: usize, v: usize) -> usize {
+        Torus::hops(self, u, v)
+    }
+
+    fn route_into(&self, u: usize, v: usize, links: &mut Vec<Link>) {
+        Torus::route_into(self, u, v, links)
+    }
+
+    fn route(&self, u: usize, v: usize) -> Vec<Link> {
+        Torus::route(self, u, v)
+    }
+
+    fn intermediates(&self, u: usize, v: usize) -> Vec<usize> {
+        Torus::intermediates(self, u, v)
+    }
+
+    fn all_links(&self) -> Vec<Link> {
+        Torus::all_links(self)
+    }
+
+    fn link_index(&self) -> (Vec<u32>, usize) {
+        Torus::link_index(self)
+    }
+
+    fn bisection_links(&self) -> usize {
+        // halve across the largest ring: two cut planes (the ring wraps),
+        // each severing nodes/max_dim full-duplex cables; on a 2-ring the
+        // direct and wrap links are the same cable, so only one plane
+        let d = self.dims;
+        let dmax = d.x.max(d.y).max(d.z);
+        let cut = match dmax {
+            0 | 1 => 0,
+            2 => 1,
+            _ => 2,
+        };
+        2 * cut * (self.num_nodes() / dmax)
+    }
+
+    fn num_racks(&self) -> usize {
+        Torus::num_racks(self)
+    }
+
+    fn rack_of(&self, node: usize) -> usize {
+        Torus::rack_of(self, node)
+    }
+
+    fn rack_members(&self, rack: usize) -> Vec<usize> {
+        Torus::rack_members(self, rack)
+    }
+
+    fn salt(&self) -> u64 {
+        super::fnv_salt(
+            "torus",
+            &[self.dims.x as u64, self.dims.y as u64, self.dims.z as u64],
+        )
+    }
+
+    fn as_torus(&self) -> Option<&Torus> {
+        Some(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -21,9 +21,9 @@ use tofa::mapping::PlacementPolicy;
 use tofa::profiler::profile_app;
 use tofa::rng::Rng;
 use tofa::sim::executor::{JobOutcome, Simulator};
-use tofa::sim::fault::{FaultCtx, FaultModel, FaultScenario, FaultSpec, IidBernoulli};
+use tofa::sim::fault::{FaultCtx, FaultModel, FaultScenario, FaultSpec, FaultTrace, IidBernoulli};
 use tofa::slurm::plugins::fans::FansPlugin;
-use tofa::topology::{Platform, TorusDims};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
 
 /// The seed repo's `sample_down_nodes`, reimplemented verbatim as the
 /// golden reference.
@@ -165,19 +165,101 @@ fn fig4_fig5_iid_grid_statistics_locked() {
             c.result.total_aborts,
         ));
     }
-    let path = golden_path("fig4_fig5_iid.txt");
+    lock_or_create("fig4_fig5_iid.txt", &got, "the Fig. 4/5 IidBernoulli statistics");
+}
+
+/// Compare against an on-disk golden file, creating it on the first
+/// toolchain-equipped run (commit the file to freeze the values).
+fn lock_or_create(name: &str, got: &str, what: &str) {
+    let path = golden_path(name);
     match std::fs::read_to_string(&path) {
-        Ok(want) => assert_eq!(
-            got, want,
-            "IidBernoulli no longer reproduces the locked Fig. 4/5 statistics"
-        ),
+        Ok(want) => assert_eq!(got, want, "{what} no longer match the golden lock"),
         Err(_) => {
             std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-            std::fs::write(&path, &got).unwrap();
+            std::fs::write(&path, got).unwrap();
             eprintln!(
                 "golden file {} created on first run; commit it to lock the values",
                 path.display()
             );
         }
     }
+}
+
+/// Reduced-scale batch grid over **all four fault models** on one
+/// platform, serialized bit-exactly (f64 bit patterns) for the on-disk
+/// topology locks.
+fn grid_stats_all_models(platform: &Platform) -> String {
+    let n = platform.num_nodes();
+    let app = LammpsProxy::tiny(16, 3);
+    let runner = BatchRunner::new(&app, platform);
+    let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
+    // a fixed synthetic down-interval trace sized to the platform
+    let mut trace_text = format!("nodes {n}\n");
+    for (i, node) in (0..n).step_by(n / 4).enumerate() {
+        let start = 0.05 * i as f64;
+        trace_text.push_str(&format!("{node} {start} {}\n", start + 1.0));
+    }
+    let trace = std::sync::Arc::new(FaultTrace::parse(trace_text.as_bytes()).unwrap());
+    let specs = [
+        FaultSpec::Iid {
+            n_faulty: 5,
+            p_f: 0.3,
+        },
+        FaultSpec::CorrelatedRacks {
+            domains: 2,
+            p_domain: 0.3,
+        },
+        FaultSpec::Weibull {
+            n_faulty: 5,
+            shape: 0.7,
+            p_horizon: 0.3,
+            horizon_s: 0.1,
+        },
+        FaultSpec::Trace { trace },
+    ];
+    let mut got = String::new();
+    for spec in specs {
+        let config = BatchConfig {
+            instances: 15,
+            fault: spec.clone(),
+            parallelism: Parallelism::fixed(2),
+            ..Default::default()
+        };
+        let grid = run_grid(&runner, &policies, &config, 2, 42).unwrap();
+        for c in &grid.cells {
+            got.push_str(&format!(
+                "{} {} {} {:016x} {:016x} {}\n",
+                spec.model_name(),
+                c.batch_index,
+                c.policy,
+                c.result.completion_s.to_bits(),
+                c.result.success_run_s.to_bits(),
+                c.result.total_aborts,
+            ));
+        }
+    }
+    got
+}
+
+#[test]
+fn fattree_grid_statistics_locked() {
+    // small k-ary fat-tree (k=6, 54 nodes): the full batch grid under all
+    // four fault models, frozen on disk
+    let platform = Platform::paper_default_on(std::sync::Arc::new(FatTree::new(6).unwrap()));
+    let got = grid_stats_all_models(&platform);
+    lock_or_create("fig4_fig5_fattree.txt", &got, "the fat-tree grid statistics");
+}
+
+#[test]
+fn dragonfly_grid_statistics_locked() {
+    // small dragonfly (5 groups x 4 routers x 2 hosts, 40 nodes)
+    let platform = Platform::paper_default_on(std::sync::Arc::new(
+        Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap(),
+    ));
+    let got = grid_stats_all_models(&platform);
+    lock_or_create(
+        "fig4_fig5_dragonfly.txt",
+        &got,
+        "the dragonfly grid statistics",
+    );
 }

@@ -18,7 +18,7 @@ use tofa::slurm::heartbeat::{probe_histories, OutagePolicy};
 use tofa::slurm::jobs::JobState;
 use tofa::slurm::srun;
 use tofa::tofa::placer::{TofaPath, TofaPlacer};
-use tofa::topology::{Platform, TorusDims};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
 
 fn all_apps() -> Vec<Box<dyn MpiApp>> {
     vec![
@@ -177,6 +177,50 @@ fn srun_to_controller_to_simulation_pipeline() {
     assert!(!out.is_abort(), "job touched the flaky node");
     ctl.complete(record, JobState::Completed);
     assert_eq!(ctl.finished().len(), 1);
+}
+
+#[test]
+fn srun_pipeline_runs_on_fattree_and_dragonfly() {
+    // the same Fig. 2 flow as above, on the two non-torus platforms: the
+    // controller's FATT plugin carries the generic topology end to end
+    use std::sync::Arc;
+    let platforms = [
+        Platform::paper_default_on(Arc::new(FatTree::new(6).unwrap())),
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap(),
+        )),
+    ];
+    for platform in platforms {
+        let kind = platform.topology().kind().to_string();
+        let n = platform.num_nodes();
+        let app = Stencil2D::new(4, 4, 64, 5);
+        let profile = profile_app(&app);
+
+        let dir = std::env::temp_dir().join(format!("tofa-int-{kind}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let gpath = dir.join("g.txt");
+        cg_io::save(&profile.volume, &gpath).unwrap();
+        let args = srun::parse_args(&[
+            "--ntasks=16",
+            "--distribution=tofa",
+            &format!("--load-matrix={}", gpath.display()),
+        ])
+        .unwrap();
+        let request = srun::build_request(&args).unwrap();
+
+        let mut ctl = Controller::new(platform.clone(), 9);
+        let mut est = vec![0.0; n];
+        est[0] = 0.5;
+        ctl.set_outage_estimates(&est);
+        ctl.submit(request);
+        let record = ctl.schedule_next().unwrap().unwrap();
+        let assignment = record.assignment.clone().unwrap();
+        assert!(!assignment.contains(&0), "{kind}: TOFA used the flaky node");
+        Placement::new(assignment.clone()).validate(n).unwrap();
+        let out = simulate_job(&app, &platform, &assignment, &[0]);
+        assert!(!out.is_abort(), "{kind}: job touched the flaky node");
+        ctl.complete(record, JobState::Completed);
+    }
 }
 
 #[test]

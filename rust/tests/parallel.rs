@@ -16,7 +16,7 @@ use tofa::sim::executor::Simulator;
 use tofa::sim::fault::{
     CorrelatedDomains, FaultScenario, FaultSpec, FaultTrace, TraceReplay, WeibullLifetime,
 };
-use tofa::topology::{Platform, TorusDims};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
 
 fn assert_send<T: Send>() {}
 fn assert_sync<T: Sync>() {}
@@ -183,18 +183,33 @@ fn grid_is_deterministic_and_batch_major() {
     }
 }
 
-/// One scenario per fault model on a common 4x4x4 platform, built so each
-/// model actually produces a mix of clean and aborted instances.
+/// One scenario per fault model, sized to the platform, built so each
+/// model actually produces a mix of clean and aborted instances. The
+/// correlated model's domains are the platform topology's own racks —
+/// torus X-lines, fat-tree pods, dragonfly groups.
 fn all_model_scenarios(plat: &Platform) -> Vec<(&'static str, FaultScenario)> {
     let n = plat.num_nodes();
-    let trace_text = "nodes 64\n1 0.0 0.4\n1 3.0 3.2\n9 1.0 2.5\n20 0.1 6.0\n";
+    let mut nodes: Vec<usize> = [0, 3, 9, 17, 33].iter().map(|&x| x % n).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let mut trace_text = format!("nodes {n}\n");
+    for (i, &node) in nodes.iter().enumerate() {
+        let start = 0.1 * i as f64;
+        trace_text.push_str(&format!("{node} {start} {}\n", start + 1.5));
+    }
     let trace = Arc::new(FaultTrace::parse(trace_text.as_bytes()).unwrap());
-    let weibull = WeibullLifetime::from_target(vec![0, 3, 9, 17, 33], 0.7, 0.3, 0.1, n).unwrap();
+    let weibull = WeibullLifetime::from_target(nodes.clone(), 0.7, 0.3, 0.1, n).unwrap();
+    let mut racks: Vec<usize> = [0usize, 5, 9]
+        .iter()
+        .map(|&r| r % plat.num_racks())
+        .collect();
+    racks.sort_unstable();
+    racks.dedup();
     vec![
-        ("iid", FaultScenario::iid(vec![0, 3, 9, 17, 33], 0.3, n)),
+        ("iid", FaultScenario::iid(nodes, 0.3, n)),
         (
             "correlated",
-            FaultScenario::new(CorrelatedDomains::racks(plat, &[0, 5, 9], 0.3)),
+            FaultScenario::new(CorrelatedDomains::racks(plat, &racks, 0.3)),
         ),
         ("weibull", FaultScenario::new(weibull)),
         ("trace", FaultScenario::new(TraceReplay::new(trace))),
@@ -228,6 +243,89 @@ fn every_fault_model_is_bit_identical_across_worker_counts() {
                 "{name} @ {workers} workers"
             );
             assert_eq!(par.total_aborts, serial.total_aborts, "{name}");
+        }
+    }
+}
+
+/// One platform per topology family, small enough for CI.
+fn all_topology_platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(4, 4, 4)), // 64 nodes
+        Platform::paper_default_on(Arc::new(FatTree::new(6).unwrap())), // 54 nodes
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap(), // 40 nodes
+        )),
+    ]
+}
+
+#[test]
+fn topology_fault_matrix_is_bit_identical_across_worker_counts() {
+    // the determinism contract over the full (topology x fault model)
+    // matrix, including CorrelatedDomains on fat-tree pods and dragonfly
+    // groups (the racks come from each platform's own decomposition)
+    for plat in all_topology_platforms() {
+        let kind = plat.topology().kind().to_string();
+        for (name, scenario) in all_model_scenarios(&plat) {
+            let run = |workers: usize| {
+                let app = LammpsProxy::tiny(16, 2);
+                let mut runner = BatchRunner::new(&app, &plat);
+                let cfg = BatchConfig {
+                    instances: 30,
+                    parallelism: Parallelism::fixed(workers),
+                    ..Default::default()
+                };
+                let mut rng = Rng::new(4242);
+                runner
+                    .run_batch(PlacementPolicy::Tofa, &scenario, &cfg, &mut rng)
+                    .unwrap()
+            };
+            let serial = run(1);
+            for workers in [2usize, 4] {
+                let par = run(workers);
+                assert_eq!(
+                    par.outcomes, serial.outcomes,
+                    "{kind}/{name} @ {workers} workers"
+                );
+                assert_eq!(
+                    par.completion_s.to_bits(),
+                    serial.completion_s.to_bits(),
+                    "{kind}/{name} @ {workers} workers"
+                );
+                assert_eq!(par.total_aborts, serial.total_aborts, "{kind}/{name}");
+            }
+        }
+    }
+}
+
+#[test]
+fn correlated_domains_fail_whole_pods_and_groups() {
+    // on indirect topologies the correlated model must take down exactly
+    // the topology's own failure domains
+    use tofa::sim::fault::{FaultCtx, FaultModel};
+    for plat in all_topology_platforms() {
+        let kind = plat.topology().kind().to_string();
+        let model = CorrelatedDomains::racks(&plat, &[0, plat.num_racks() - 1], 0.5);
+        let mut rng = Rng::new(7);
+        let ctx = FaultCtx::new(0, 1.0);
+        for _ in 0..100 {
+            let down = model.sample(&ctx, &mut rng);
+            for r in [0, plat.num_racks() - 1] {
+                let states: Vec<bool> =
+                    plat.rack_members(r).iter().map(|&n| down[n]).collect();
+                assert!(
+                    states.iter().all(|&s| s == states[0]),
+                    "{kind}: rack {r} split: {states:?}"
+                );
+            }
+            for (n, &d) in down.iter().enumerate() {
+                if d {
+                    let r = plat.rack_of(n);
+                    assert!(
+                        r == 0 || r == plat.num_racks() - 1,
+                        "{kind}: node {n} outside the faulty domains is down"
+                    );
+                }
+            }
         }
     }
 }

@@ -18,7 +18,9 @@ use tofa::sim::fault::{
 use tofa::sim::network::{Flow, NetSim};
 use tofa::tofa::eq1::fault_aware_distance;
 use tofa::tofa::window::{find_fault_free_window, find_route_clean_window};
-use tofa::topology::{DistanceMatrix, Platform, Torus, TorusDims};
+use tofa::topology::{
+    DistanceMatrix, Dragonfly, DragonflyParams, FatTree, Platform, Topology, Torus, TorusDims,
+};
 
 fn random_comm(rng: &mut Rng, n: usize, edges: usize) -> CommMatrix {
     let mut c = CommMatrix::new(n);
@@ -38,6 +40,120 @@ fn random_dims(rng: &mut Rng) -> TorusDims {
         let d = TorusDims::new(pick(rng), pick(rng), pick(rng));
         if d.nodes() >= 4 {
             return d;
+        }
+    }
+}
+
+/// Representative instances of every topology family, small enough for
+/// exhaustive pairwise sweeps.
+fn all_topologies() -> Vec<Box<dyn Topology>> {
+    vec![
+        Box::new(Torus::new(TorusDims::new(4, 4, 4))),
+        Box::new(Torus::new(TorusDims::new(8, 2, 1))),
+        Box::new(Torus::new(TorusDims::new(5, 3, 2))),
+        Box::new(FatTree::new(4).unwrap()),
+        Box::new(FatTree::new(6).unwrap()),
+        Box::new(FatTree::new(8).unwrap()),
+        Box::new(Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()),
+        Box::new(Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap()),
+        Box::new(Dragonfly::new(DragonflyParams::new(9, 4, 2, 2)).unwrap()),
+    ]
+}
+
+#[test]
+fn prop_topology_distance_is_a_metric() {
+    // zero self-distance, symmetry (exhaustive), triangle inequality
+    // (random triples) — for every topology family
+    let mut rng = Rng::new(300);
+    for t in all_topologies() {
+        let n = t.num_nodes();
+        let what = t.describe();
+        for u in 0..n {
+            assert_eq!(t.hops(u, u), 0, "{what}: d({u},{u}) != 0");
+            for v in (u + 1)..n {
+                let d = t.hops(u, v);
+                assert!(d > 0, "{what}: d({u},{v}) == 0 for distinct nodes");
+                assert_eq!(d, t.hops(v, u), "{what}: asymmetric {u}<->{v}");
+            }
+        }
+        for _ in 0..400 {
+            let (u, v, w) = (
+                rng.below_usize(n),
+                rng.below_usize(n),
+                rng.below_usize(n),
+            );
+            assert!(
+                t.hops(u, v) <= t.hops(u, w) + t.hops(w, v),
+                "{what}: triangle violated for ({u},{v},{w})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_topology_racks_partition_the_node_set_exactly() {
+    for t in all_topologies() {
+        let what = t.describe();
+        let mut owner = vec![usize::MAX; t.num_nodes()];
+        for r in 0..t.num_racks() {
+            let members = t.rack_members(r);
+            assert!(!members.is_empty(), "{what}: empty rack {r}");
+            assert!(members.windows(2).all(|w| w[0] < w[1]), "{what}: unsorted");
+            for n in members {
+                assert_eq!(t.rack_of(n), r, "{what}: rack_of({n})");
+                assert_eq!(owner[n], usize::MAX, "{what}: node {n} in two racks");
+                owner[n] = r;
+            }
+        }
+        assert!(
+            owner.iter().all(|&r| r != usize::MAX),
+            "{what}: racks do not cover every node"
+        );
+    }
+}
+
+#[test]
+fn prop_topology_routes_are_physical_paths_of_metric_length() {
+    let mut rng = Rng::new(301);
+    for t in all_topologies() {
+        let n = t.num_nodes();
+        let what = t.describe();
+        let mut physical = std::collections::HashSet::new();
+        for l in t.all_links() {
+            assert!(l.src < t.num_vertices() && l.dst < t.num_vertices(), "{what}");
+            physical.insert((l.src, l.dst));
+        }
+        for _ in 0..300 {
+            let (u, v) = (rng.below_usize(n), rng.below_usize(n));
+            let r = t.route(u, v);
+            assert_eq!(r.len(), t.hops(u, v), "{what}: |R({u},{v})| != d");
+            if u != v {
+                assert_eq!(r.first().unwrap().src, u, "{what}");
+                assert_eq!(r.last().unwrap().dst, v, "{what}");
+                for w in r.windows(2) {
+                    assert_eq!(w[0].dst, w[1].src, "{what}: disconnected route");
+                }
+                for l in &r {
+                    assert!(physical.contains(&(l.src, l.dst)), "{what}: {l:?}");
+                }
+                // intermediates = interior vertices of the route
+                let inter = t.intermediates(u, v);
+                assert_eq!(inter.len(), r.len().saturating_sub(1), "{what}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_topology_hop_matrix_matches_hops() {
+    for t in all_topologies() {
+        let d = DistanceMatrix::from_topology(t.as_ref());
+        let what = t.describe();
+        assert_eq!(d.len(), t.num_nodes(), "{what}");
+        for u in 0..t.num_nodes() {
+            for v in 0..t.num_nodes() {
+                assert_eq!(d.get(u, v), t.hops(u, v) as f32, "{what} ({u},{v})");
+            }
         }
     }
 }
