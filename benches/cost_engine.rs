@@ -1,0 +1,177 @@
+//! Bench for the incremental placement-cost engine (TopoIndex) and the
+//! event-driven max-min solver, against the dense reference
+//! implementations they replaced.
+//!
+//! Three sections, each asserting bit-identity before timing:
+//!
+//! * Eq. 1 at the paper's scale (512-node torus, 8 faulty @ 2%): dense
+//!   re-route of all pairs vs clean-copy + incidence-driven patching.
+//!   The acceptance floor is >= 5x (enforced in CI-manual `tests/perf.rs`
+//!   at >= 3x to absorb runner noise).
+//! * Route-clean window search: dense per-start closure re-routing vs the
+//!   sliding dirty-pair count, on the adversarial layout (flaky node every
+//!   65 ids: every candidate has clean endpoints but a dirty closure, so
+//!   the dense path re-routes at every start) and the easy layout (window
+//!   at the front).
+//! * Max-min phase solve on switch-heavy fabrics (fat-tree k=8,
+//!   dragonfly 9x4x2x2), where the link array dwarfs any phase's touched
+//!   set: full-array bottleneck scans vs the CSR active list.
+//!
+//! Emits `BENCH_cost_engine.json` at the repo root.
+
+use tofa::report::bench::{bench, section, write_bench_json, JsonValue, Measurement};
+use tofa::rng::Rng;
+use tofa::sim::network::{Flow, NetSim};
+use tofa::tofa::eq1::{fault_aware_distance, fault_aware_distance_indexed};
+use tofa::tofa::window::{find_route_clean_window, find_route_clean_window_indexed};
+use tofa::topology::{
+    CostWorkspace, Dragonfly, DragonflyParams, FatTree, TopoIndex, Topology, Torus, TorusDims,
+};
+
+fn speedup(dense: &Measurement, fast: &Measurement) -> f64 {
+    dense.median.as_secs_f64() / fast.median.as_secs_f64().max(1e-12)
+}
+
+fn pair_json(case: &str, dense: &Measurement, fast: &Measurement) -> JsonValue {
+    JsonValue::obj()
+        .set("case", JsonValue::Str(case.to_string()))
+        .set("dense", dense.to_json())
+        .set("indexed", fast.to_json())
+        .set("speedup_vs_naive", JsonValue::Num(speedup(dense, fast)))
+}
+
+fn eq1_section(entries: &mut Vec<JsonValue>) {
+    section("Eq. 1: dense re-route vs incremental patch (512 nodes, 8 faulty @ 2%)");
+    let t = Torus::new(TorusDims::new(8, 8, 8));
+    let mut rng = Rng::new(42);
+    let mut outage = vec![0.0; 512];
+    for f in rng.sample_distinct(512, 8) {
+        outage[f] = 0.02;
+    }
+    let build = bench("topo-index/build-512", 5, || TopoIndex::build(&t));
+    let index = TopoIndex::build(&t);
+    let mut ws = CostWorkspace::new();
+    // bit-identity before timing
+    let dense_m = fault_aware_distance(&t, &outage);
+    let fast_m = fault_aware_distance_indexed(&index, &t, &outage, &mut ws);
+    let identical = dense_m
+        .as_slice()
+        .iter()
+        .zip(fast_m.as_slice())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(identical, "incremental Eq. 1 diverged from the dense path");
+    let dense = bench("eq1/dense-512x8", 10, || fault_aware_distance(&t, &outage));
+    let fast = bench("eq1/indexed-512x8", 10, || {
+        fault_aware_distance_indexed(&index, &t, &outage, &mut ws)
+    });
+    let total_pairs = 512 * 511 / 2;
+    println!(
+        "eq1 speedup {:.2}x  patched {}/{} pairs ({:.1}%)  incidence {} entries",
+        speedup(&dense, &fast),
+        ws.pairs_patched(),
+        total_pairs,
+        100.0 * ws.pairs_patched() as f64 / total_pairs as f64,
+        index.incidence_len(),
+    );
+    entries.push(
+        pair_json("eq1-512x8", &dense, &fast)
+            .set("bit_identical", JsonValue::Bool(identical))
+            .set("index_build", build.to_json())
+            .set("incidence_entries", JsonValue::Int(index.incidence_len() as u64))
+            .set("pairs_patched", JsonValue::Int(ws.pairs_patched() as u64))
+            .set("pairs_total", JsonValue::Int(total_pairs as u64)),
+    );
+}
+
+fn window_section(entries: &mut Vec<JsonValue>) {
+    section("route-clean window: dense closure re-route vs sliding dirty-pair count");
+    let t = Torus::new(TorusDims::new(8, 8, 8));
+    let index = TopoIndex::build(&t);
+    let mut ws = CostWorkspace::new();
+    // adversarial: flaky every 65 ids -> plenty of 64-runs with clean
+    // endpoints, every closure dirty (wrap routes transit the flaky node)
+    let mut hard = vec![0.0; 512];
+    for i in (0..512).step_by(65) {
+        hard[i] = 0.02;
+    }
+    // easy: faults at the back, first window valid immediately
+    let mut easy = vec![0.0; 512];
+    for i in 448..456 {
+        easy[i] = 0.02;
+    }
+    for (what, outage) in [("hard", &hard), ("easy", &easy)] {
+        let want = find_route_clean_window(outage, 64, &t);
+        let got = find_route_clean_window_indexed(&index, outage, 64, &mut ws);
+        assert_eq!(got, want, "indexed window diverged ({what})");
+        let dense = bench(&format!("window/dense-{what}"), 10, || {
+            find_route_clean_window(outage, 64, &t)
+        });
+        let fast = bench(&format!("window/indexed-{what}"), 10, || {
+            find_route_clean_window_indexed(&index, outage, 64, &mut ws)
+        });
+        println!("window/{what} speedup {:.2}x", speedup(&dense, &fast));
+        entries.push(
+            pair_json(&format!("window-{what}"), &dense, &fast)
+                .set("window_found", JsonValue::Bool(want.is_some())),
+        );
+    }
+}
+
+fn maxmin_flows(topo: &dyn Topology, net: &NetSim, n_flows: usize, seed: u64) -> Vec<Flow> {
+    let mut rng = Rng::new(seed);
+    let n = topo.num_nodes();
+    let mut flows = Vec::with_capacity(n_flows);
+    while flows.len() < n_flows {
+        let u = rng.below_usize(n);
+        let v = rng.below_usize(n);
+        if u == v {
+            continue;
+        }
+        let links = topo
+            .route(u, v)
+            .iter()
+            .map(|l| net.slot(l.src, l.dst))
+            .collect();
+        flows.push(Flow {
+            links,
+            bytes: (rng.below(1_000_000) + 1) as f64,
+        });
+    }
+    flows
+}
+
+fn maxmin_section(entries: &mut Vec<JsonValue>) {
+    section("max-min solve: full link-array scans vs CSR active list (64 flows/phase)");
+    let fabrics: Vec<(&str, Box<dyn Topology>)> = vec![
+        ("torus-8x8x8", Box::new(Torus::new(TorusDims::new(8, 8, 8)))),
+        ("fattree-8", Box::new(FatTree::new(8).unwrap())),
+        (
+            "dragonfly-9x4x2x2",
+            Box::new(Dragonfly::new(DragonflyParams::new(9, 4, 2, 2)).unwrap()),
+        ),
+    ];
+    for (what, topo) in &fabrics {
+        let mut net = NetSim::new(topo.as_ref(), 1.25e9, 1e-6);
+        let flows = maxmin_flows(topo.as_ref(), &net, 64, 7);
+        let a = net.phase_duration(&flows);
+        let b = net.phase_duration_reference(&flows);
+        assert_eq!(a.to_bits(), b.to_bits(), "CSR solver diverged ({what})");
+        let dense = bench(&format!("maxmin/dense-{what}"), 10, || {
+            net.phase_duration_reference(&flows)
+        });
+        let fast = bench(&format!("maxmin/csr-{what}"), 10, || {
+            net.phase_duration(&flows)
+        });
+        println!("maxmin/{what} speedup {:.2}x", speedup(&dense, &fast));
+        entries.push(pair_json(&format!("maxmin-{what}"), &dense, &fast));
+    }
+}
+
+fn main() {
+    let mut entries = Vec::new();
+    eq1_section(&mut entries);
+    window_section(&mut entries);
+    maxmin_section(&mut entries);
+    let payload = JsonValue::obj().set("entries", JsonValue::Arr(entries));
+    write_bench_json("cost_engine", payload).expect("write BENCH_cost_engine.json");
+}

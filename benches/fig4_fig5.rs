@@ -4,6 +4,10 @@
 //! wall-clock cost of a full 100-instance batch per policy — demonstrating
 //! the JobProfile fast path (EXPERIMENTS.md §Perf) — and the parallel
 //! engine's speedup on the full `(batch, policy)` sweep at 1/2/4 workers.
+//!
+//! Emits `BENCH_fig4_fig5.json` at the repo root: per-figure wall-clock
+//! and abort statistics, sweep speedups per worker count, and phase-cache
+//! hit rates.
 
 use std::time::Instant;
 
@@ -11,12 +15,12 @@ use tofa::apps::npb_dt::NpbDt;
 use tofa::apps::{lammps_proxy::LammpsProxy, MpiApp};
 use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
 use tofa::mapping::PlacementPolicy;
-use tofa::report::bench::{bench, section};
+use tofa::report::bench::{bench, section, write_bench_json, JsonValue};
 use tofa::rng::Rng;
 use tofa::sim::fault::{FaultScenario, FaultSpec};
 use tofa::topology::{Platform, TorusDims};
 
-fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) {
+fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) -> JsonValue {
     let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
     let mut runner = BatchRunner::new(app, &platform);
     let config = BatchConfig {
@@ -27,6 +31,7 @@ fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) {
     let mut master = Rng::new(42);
     let mut scen_rng = master.fork(1);
     let scenario = FaultScenario::random(512, n_faulty, 0.02, &mut scen_rng);
+    let mut policies = Vec::new();
     for policy in [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa] {
         let mut rng = scen_rng.fork(7);
         let res = runner
@@ -38,25 +43,38 @@ fn run_case(title: &str, app: &dyn MpiApp, n_faulty: usize) {
             res.completion_s,
             100.0 * res.abort_ratio()
         );
-        bench(&format!("batch-wallclock/{policy}"), 5, || {
+        let wall = bench(&format!("batch-wallclock/{policy}"), 5, || {
             let mut rng = scen_rng.fork(8);
             runner
                 .run_batch(policy, &scenario, &config, &mut rng)
                 .unwrap()
         });
+        policies.push(
+            JsonValue::obj()
+                .set("policy", JsonValue::Str(policy.to_string()))
+                .set("completion_s", JsonValue::Num(res.completion_s))
+                .set("abort_ratio", JsonValue::Num(res.abort_ratio()))
+                .set("cache_hit_rate", JsonValue::Num(res.telemetry.hit_rate()))
+                .set("wallclock", wall.to_json()),
+        );
     }
+    JsonValue::obj()
+        .set("case", JsonValue::Str(title.to_string()))
+        .set("n_faulty", JsonValue::Int(n_faulty as u64))
+        .set("policies", JsonValue::Arr(policies))
 }
 
 /// The full Fig. 4-style sweep (batches x {default, tofa}) at several
 /// worker counts. Fresh runner (and thus fresh phase cache) per point so
 /// each measures cold-cache wall-clock; the checksum shows worker-count
 /// invariance of the results.
-fn sweep_speedup() {
+fn sweep_speedup() -> JsonValue {
     section("parallel sweep: 10 batches x 2 policies, NPB-DT, 16 faulty @ 2%");
     let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
     let app = NpbDt::class_c();
     let policies = [PlacementPolicy::DefaultSlurm, PlacementPolicy::Tofa];
     let mut serial_wall = None;
+    let mut points = Vec::new();
     for workers in [1usize, 2, 4] {
         let runner = BatchRunner::new(&app, &platform);
         let config = BatchConfig {
@@ -89,24 +107,48 @@ fn sweep_speedup() {
             100.0 * grid.telemetry.hit_rate(),
             checksum,
         );
+        points.push(
+            JsonValue::obj()
+                .set("workers", JsonValue::Int(workers as u64))
+                .set("wall_ns", JsonValue::Int(wall.as_nanos() as u64))
+                .set("speedup_vs_serial", JsonValue::Num(speedup))
+                .set(
+                    "slowest_shard_ns",
+                    JsonValue::Int(grid.telemetry.slowest_shard().as_nanos() as u64),
+                )
+                .set("cache_hit_rate", JsonValue::Num(grid.telemetry.hit_rate()))
+                .set("checksum", JsonValue::Num(checksum)),
+        );
     }
+    JsonValue::obj()
+        .set(
+            "case",
+            JsonValue::Str("sweep 10 batches x 2 policies, NPB-DT".to_string()),
+        )
+        .set("points", JsonValue::Arr(points))
 }
 
 fn main() {
-    run_case(
-        "Figure 4: NPB-DT class C, 16 faulty @ 2%, 100-instance batch",
-        &NpbDt::class_c(),
-        16,
-    );
-    run_case(
-        "Figure 5a: LAMMPS 64p, 8 faulty @ 2%",
-        &LammpsProxy::rhodopsin(64),
-        8,
-    );
-    run_case(
-        "Figure 5b: LAMMPS 64p, 16 faulty @ 2%",
-        &LammpsProxy::rhodopsin(64),
-        16,
-    );
-    sweep_speedup();
+    let cases = vec![
+        run_case(
+            "Figure 4: NPB-DT class C, 16 faulty @ 2%, 100-instance batch",
+            &NpbDt::class_c(),
+            16,
+        ),
+        run_case(
+            "Figure 5a: LAMMPS 64p, 8 faulty @ 2%",
+            &LammpsProxy::rhodopsin(64),
+            8,
+        ),
+        run_case(
+            "Figure 5b: LAMMPS 64p, 16 faulty @ 2%",
+            &LammpsProxy::rhodopsin(64),
+            16,
+        ),
+    ];
+    let sweep = sweep_speedup();
+    let payload = JsonValue::obj()
+        .set("cases", JsonValue::Arr(cases))
+        .set("sweep", sweep);
+    write_bench_json("fig4_fig5", payload).expect("write BENCH_fig4_fig5.json");
 }

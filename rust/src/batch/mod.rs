@@ -116,8 +116,15 @@ pub struct BatchRunner {
 
 impl BatchRunner {
     /// Profile the app and prepare the simulator.
+    ///
+    /// Also forces the platform's shared
+    /// [`crate::topology::TopoIndex`] to be built here, once, so the
+    /// per-worker runner clones of [`parallel::run_grid`] all reuse the
+    /// same precompute (like the phase cache) instead of each paying the
+    /// one-time route sweep inside their first cell.
     pub fn new(app: &dyn MpiApp, platform: &Platform) -> Self {
         let comm = profile_app(app).volume;
+        platform.topo_index();
         BatchRunner {
             platform: platform.clone(),
             comm,

@@ -11,7 +11,11 @@
 //!   the Fig. 4/5 sweeps out over the pool. Every cell derives its fault
 //!   scenario and RNG from `(seed, batch index)`, clones the runner, and
 //!   shares one [`crate::sim::PhaseCache`], so all cells with the same
-//!   placement reuse each other's network solves across threads.
+//!   placement reuse each other's network solves across threads. Cells
+//!   also share the platform's [`crate::topology::TopoIndex`] (clean hop
+//!   matrix + transit incidence, built once in
+//!   [`super::BatchRunner::new`]), which the TOFA placer's incremental
+//!   Eq. 1 and window engines read concurrently, lock-free.
 //!
 //! The pool is hand-rolled on `std::thread::scope` — the offline build
 //! environment has no rayon — and shards report per-worker wall-clock

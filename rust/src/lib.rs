@@ -109,6 +109,7 @@ pub mod prelude {
     pub use crate::topology::{
         dragonfly::{Dragonfly, DragonflyParams},
         fattree::FatTree,
+        index::{CostWorkspace, TopoIndex},
         platform::Platform,
         torus::{Torus, TorusDims},
         Topology,

@@ -1,7 +1,11 @@
 //! Minimal benchmark harness (criterion is unavailable in the offline
 //! build environment; this provides the same warmup + multi-sample
-//! median/mean discipline with zero dependencies).
+//! median/mean discipline with zero dependencies), plus a tiny JSON
+//! emitter so benches can drop machine-readable `BENCH_*.json` trajectory
+//! files at the repo root (consumed by CI artifacts and perf tracking).
 
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -69,6 +73,134 @@ pub fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> Measure
 /// Print a section header.
 pub fn section(title: &str) {
     println!("\n### {title}");
+}
+
+/// A JSON value for the bench trajectory files. Hand-rolled (no serde in
+/// the offline build environment); covers exactly what bench reports
+/// need: numbers, strings, bools, arrays, objects.
+#[derive(Debug, Clone)]
+pub enum JsonValue {
+    /// Float (non-finite values render as `null`).
+    Num(f64),
+    /// Integer (kept separate so counters render without a decimal).
+    Int(u64),
+    /// String (escaped on render).
+    Str(String),
+    /// Boolean.
+    Bool(bool),
+    /// Array.
+    Arr(Vec<JsonValue>),
+    /// Object with insertion-ordered keys.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Empty object builder.
+    pub fn obj() -> Self {
+        JsonValue::Obj(Vec::new())
+    }
+
+    /// Insert a key (objects only; panics otherwise — builder misuse).
+    pub fn set(mut self, key: &str, value: JsonValue) -> Self {
+        match &mut self {
+            JsonValue::Obj(pairs) => pairs.push((key.to_string(), value)),
+            _ => panic!("JsonValue::set on a non-object"),
+        }
+        self
+    }
+
+    /// Render as compact JSON.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            JsonValue::Num(x) if x.is_finite() => out.push_str(&format!("{x}")),
+            JsonValue::Num(_) => out.push_str("null"),
+            JsonValue::Int(x) => out.push_str(&format!("{x}")),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    JsonValue::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl Measurement {
+    /// This measurement as a JSON object (durations in nanoseconds).
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj()
+            .set("name", JsonValue::Str(self.name.clone()))
+            .set("median_ns", JsonValue::Int(self.median.as_nanos() as u64))
+            .set("mean_ns", JsonValue::Int(self.mean.as_nanos() as u64))
+            .set("min_ns", JsonValue::Int(self.min.as_nanos() as u64))
+            .set("max_ns", JsonValue::Int(self.max.as_nanos() as u64))
+            .set("samples", JsonValue::Int(self.samples as u64))
+    }
+}
+
+/// Repository root: the parent of this crate's manifest directory (the
+/// workspace layout is fixed — `rust/` inside the repo). Bench JSON
+/// trajectory files land here so CI can glob `BENCH_*.json`.
+pub fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate manifest dir has no parent")
+        .to_path_buf()
+}
+
+/// Write a bench trajectory file `BENCH_<name>.json` at the repo root and
+/// echo where it went. Content is wrapped with the bench name so files
+/// are self-describing.
+pub fn write_bench_json(name: &str, payload: JsonValue) -> std::io::Result<PathBuf> {
+    let doc = JsonValue::obj()
+        .set("bench", JsonValue::Str(name.to_string()))
+        .set("payload", payload);
+    let path = repo_root().join(format!("BENCH_{name}.json"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(doc.render().as_bytes())?;
+    f.write_all(b"\n")?;
+    println!("wrote {}", path.display());
+    Ok(path)
 }
 
 /// Wall-clock of one worker shard of a parallel region
@@ -168,6 +300,40 @@ mod tests {
         let text = r.to_string();
         assert!(text.contains("shard"));
         assert!(text.contains("75.0%"));
+    }
+
+    #[test]
+    fn json_renders_escaped_and_ordered() {
+        let v = JsonValue::obj()
+            .set("name", JsonValue::Str("a\"b\\c\nd".into()))
+            .set("x", JsonValue::Num(1.5))
+            .set("n", JsonValue::Int(7))
+            .set("ok", JsonValue::Bool(true))
+            .set("bad", JsonValue::Num(f64::NAN))
+            .set(
+                "arr",
+                JsonValue::Arr(vec![JsonValue::Int(1), JsonValue::Int(2)]),
+            );
+        assert_eq!(
+            v.render(),
+            r#"{"name":"a\"b\\c\nd","x":1.5,"n":7,"ok":true,"bad":null,"arr":[1,2]}"#
+        );
+    }
+
+    #[test]
+    fn measurement_json_has_all_fields() {
+        let m = bench("unit", 3, || 0);
+        let j = m.to_json().render();
+        for key in ["median_ns", "mean_ns", "min_ns", "max_ns", "samples"] {
+            assert!(j.contains(key), "{j}");
+        }
+    }
+
+    #[test]
+    fn repo_root_is_the_workspace_root() {
+        // the crate lives at <root>/rust, so the root holds the workspace
+        // manifest
+        assert!(repo_root().join("Cargo.toml").exists());
     }
 
     #[test]

@@ -5,6 +5,19 @@
 //! -style fluid model): we repeatedly find the bottleneck link (smallest
 //! fair share), freeze its flows at that rate, remove their demand, and
 //! continue. As flows finish, rates are recomputed event-by-event.
+//!
+//! The solver is event-driven around a per-phase **touched-link active
+//! list** and a **CSR link -> flow adjacency**, both built once per phase:
+//! bottleneck rounds scan only the links this phase's flows actually
+//! cross (a handful, vs the platform's full link array — the gap is
+//! widest on fat-tree/dragonfly fabrics whose link counts dwarf the
+//! torus), and freezing a bottleneck walks exactly the flows on that link
+//! instead of re-scanning the whole flow list. Results are bit-identical
+//! to the dense reference solver (kept as
+//! [`NetSim::phase_duration_reference`]; equivalence asserted in
+//! `tests/proptests.rs`): the active list is sorted ascending so
+//! bottleneck tie-breaking, freeze order, and every f64 operation happen
+//! in the same order as the dense scan.
 
 use crate::topology::Topology;
 
@@ -31,14 +44,31 @@ pub struct NetSim {
     /// (uniform fabrics keep every entry equal to `bandwidth`).
     cap_full: Vec<f64>,
     latency: f64,
-    // scratch
+    // --- per-phase index (built once per phase_duration call) ---
+    /// Distinct link slots this phase's flows cross, sorted ascending
+    /// (ascending order preserves the dense solver's bottleneck
+    /// tie-breaking bit-for-bit).
+    active_links: Vec<u32>,
+    /// Slot -> dense active index, valid for slots stamped this epoch.
+    link_pos: Vec<u32>,
+    /// Per-slot epoch stamps (u64: never wraps in practice), so the
+    /// dedup pass never has to clear the full link array.
+    link_epoch: Vec<u64>,
+    epoch: u64,
+    /// CSR offsets into [`Self::csr_flows`], one slice per active link.
+    csr_off: Vec<u32>,
+    /// Flow ids per active link, ascending (freeze order of the dense
+    /// solver's whole-flow-list scan).
+    csr_flows: Vec<u32>,
+    csr_cursor: Vec<u32>,
+    // --- per-round scratch, dense over the active links ---
     cap: Vec<f64>,
     nflows_on: Vec<u32>,
+    // --- per-flow scratch ---
     rate: Vec<f64>,
     remaining: Vec<f64>,
     alive: Vec<bool>,
     frozen: Vec<bool>,
-    link_live: Vec<bool>,
 }
 
 impl NetSim {
@@ -57,13 +87,19 @@ impl NetSim {
             n_vertices,
             cap_full,
             latency,
-            cap: vec![0.0; num_links],
-            nflows_on: vec![0; num_links],
+            active_links: Vec::new(),
+            link_pos: vec![0; num_links],
+            link_epoch: vec![0; num_links],
+            epoch: 0,
+            csr_off: Vec::new(),
+            csr_flows: Vec::new(),
+            csr_cursor: Vec::new(),
+            cap: Vec::new(),
+            nflows_on: Vec::new(),
             rate: Vec::new(),
             remaining: Vec::new(),
             alive: Vec::new(),
             frozen: Vec::new(),
-            link_live: vec![false; num_links],
         }
     }
 
@@ -80,17 +116,28 @@ impl NetSim {
     /// Duration = max over flows of (per-flow completion under max-min
     /// sharing + route latency). Zero-link flows (same node) take zero
     /// network time.
+    ///
+    /// # Panics
+    ///
+    /// Panics — in every build profile — if the solver cannot assign a
+    /// positive rate to some live flow (e.g. a flow whose links all ended
+    /// up with zero capacity): without progress the event loop would
+    /// otherwise spin forever on a zero-rate flow whose remaining bytes
+    /// never shrink.
     pub fn phase_duration(&mut self, flows: &[Flow]) -> f64 {
         let nf = flows.len();
         if nf == 0 {
             return 0.0;
         }
+        self.build_phase_index(flows);
         self.remaining.clear();
         self.remaining.extend(flows.iter().map(|f| f.bytes.max(0.0)));
         self.alive.clear();
         self.alive.resize(nf, true);
         self.rate.clear();
         self.rate.resize(nf, 0.0);
+        self.frozen.clear();
+        self.frozen.resize(nf, false);
 
         let mut n_alive = 0usize;
         for (i, f) in flows.iter().enumerate() {
@@ -114,7 +161,12 @@ impl NetSim {
                     dt = dt.min(self.remaining[i] / self.rate[i]);
                 }
             }
-            debug_assert!(dt.is_finite(), "live flow with zero rate");
+            assert!(
+                dt.is_finite(),
+                "max-min solver deadlock: {n_alive} live flow(s) were left at zero rate \
+                 (every usable link saturated at zero capacity), so the phase can never \
+                 finish — check link capacities and flow routes"
+            );
             t += dt;
             for i in 0..nf {
                 if self.alive[i] {
@@ -131,72 +183,218 @@ impl NetSim {
         dur
     }
 
-    /// Max-min progressive filling over the currently alive flows.
+    /// Build the per-phase touched-link active list (sorted ascending)
+    /// and the CSR link -> flow adjacency. Epoch stamps make the link
+    /// dedup O(total route length) with no per-phase clearing of the full
+    /// link array.
+    fn build_phase_index(&mut self, flows: &[Flow]) {
+        self.epoch += 1;
+        self.active_links.clear();
+        for f in flows {
+            for &l in &f.links {
+                if self.link_epoch[l as usize] != self.epoch {
+                    self.link_epoch[l as usize] = self.epoch;
+                    self.active_links.push(l);
+                }
+            }
+        }
+        self.active_links.sort_unstable();
+        for (j, &l) in self.active_links.iter().enumerate() {
+            self.link_pos[l as usize] = j as u32;
+        }
+        let na = self.active_links.len();
+        self.cap.clear();
+        self.cap.resize(na, 0.0);
+        self.nflows_on.clear();
+        self.nflows_on.resize(na, 0);
+        // CSR: count, prefix-sum, fill (flow ids end up ascending per link)
+        self.csr_off.clear();
+        self.csr_off.resize(na + 1, 0);
+        for f in flows {
+            for &l in &f.links {
+                let j = self.link_pos[l as usize] as usize;
+                self.csr_off[j + 1] += 1;
+            }
+        }
+        for j in 0..na {
+            self.csr_off[j + 1] += self.csr_off[j];
+        }
+        self.csr_cursor.clear();
+        self.csr_cursor.extend_from_slice(&self.csr_off[..na]);
+        self.csr_flows.clear();
+        self.csr_flows.resize(self.csr_off[na] as usize, 0);
+        for (i, f) in flows.iter().enumerate() {
+            for &l in &f.links {
+                let j = self.link_pos[l as usize] as usize;
+                let slot = self.csr_cursor[j] as usize;
+                self.csr_flows[slot] = i as u32;
+                self.csr_cursor[j] += 1;
+            }
+        }
+    }
+
+    /// Max-min progressive filling over the currently alive flows,
+    /// event-driven on the per-phase index: rounds scan the active links
+    /// only, and freezing walks the bottleneck's CSR flow list only.
     fn compute_maxmin(&mut self, flows: &[Flow]) {
-        let nf = flows.len();
-        self.frozen.clear();
-        self.frozen.resize(nf, false);
-        // reset only links used by alive flows
+        let na = self.active_links.len();
+        for j in 0..na {
+            self.cap[j] = self.cap_full[self.active_links[j] as usize];
+            self.nflows_on[j] = 0;
+        }
+        self.frozen.fill(false);
+        let mut unfrozen = 0usize;
         for (i, f) in flows.iter().enumerate() {
             if self.alive[i] {
+                unfrozen += 1;
                 for &l in &f.links {
-                    self.cap[l as usize] = self.cap_full[l as usize];
-                    self.nflows_on[l as usize] = 0;
-                    self.link_live[l as usize] = true;
+                    self.nflows_on[self.link_pos[l as usize] as usize] += 1;
                 }
             }
         }
-        for (i, f) in flows.iter().enumerate() {
-            if self.alive[i] {
-                for &l in &f.links {
-                    self.nflows_on[l as usize] += 1;
-                }
-            }
-        }
-        let mut unfrozen: usize = (0..nf).filter(|&i| self.alive[i]).count();
         while unfrozen > 0 {
-            // bottleneck link = min cap / nflows among live links
+            // bottleneck link = min cap / nflows among links with live
+            // flows; ascending scan keeps the dense solver's tie-breaking
             let mut best_fair = f64::INFINITY;
-            let mut best_link = usize::MAX;
-            for l in 0..self.num_links {
-                if self.link_live[l] && self.nflows_on[l] > 0 {
-                    let fair = self.cap[l] / self.nflows_on[l] as f64;
+            let mut best = usize::MAX;
+            for j in 0..na {
+                if self.nflows_on[j] > 0 {
+                    let fair = self.cap[j] / self.nflows_on[j] as f64;
                     if fair < best_fair {
                         best_fair = fair;
-                        best_link = l;
+                        best = j;
                     }
                 }
             }
-            if best_link == usize::MAX {
+            if best == usize::MAX {
                 break;
             }
-            // freeze all unfrozen alive flows crossing best_link
-            for (i, f) in flows.iter().enumerate() {
-                if self.alive[i]
-                    && !self.frozen[i]
-                    && f.links.iter().any(|&l| l as usize == best_link)
-                {
+            // freeze all unfrozen alive flows crossing the bottleneck
+            let (lo, hi) = (self.csr_off[best] as usize, self.csr_off[best + 1] as usize);
+            for k in lo..hi {
+                let i = self.csr_flows[k] as usize;
+                if self.alive[i] && !self.frozen[i] {
                     self.frozen[i] = true;
                     self.rate[i] = best_fair;
                     unfrozen -= 1;
-                    for &l in &f.links {
-                        let l = l as usize;
-                        self.cap[l] -= best_fair;
-                        self.nflows_on[l] -= 1;
-                        if self.nflows_on[l] == 0 {
-                            self.link_live[l] = false;
-                        }
+                    for &l in &flows[i].links {
+                        let j = self.link_pos[l as usize] as usize;
+                        self.cap[j] -= best_fair;
+                        self.nflows_on[j] -= 1;
                     }
                 }
             }
-            self.link_live[best_link] = false;
+            // every alive flow on the bottleneck is now frozen and has
+            // decremented it, so it can never be selected again
+            debug_assert_eq!(self.nflows_on[best], 0);
         }
-        // clear live markers for reuse
-        for f in flows.iter() {
-            for &l in &f.links {
-                self.link_live[l as usize] = false;
+    }
+
+    /// Dense reference solver: the pre-index implementation, kept verbatim
+    /// (whole-link-array bottleneck scans, whole-flow-list freezes) as the
+    /// ground truth for the bit-identity proptests and the `cost_engine`
+    /// bench. Allocates its own scratch; do not use on hot paths.
+    pub fn phase_duration_reference(&mut self, flows: &[Flow]) -> f64 {
+        let nf = flows.len();
+        if nf == 0 {
+            return 0.0;
+        }
+        let mut remaining: Vec<f64> = flows.iter().map(|f| f.bytes.max(0.0)).collect();
+        let mut alive = vec![true; nf];
+        let mut rate = vec![0.0f64; nf];
+        let mut cap = vec![0.0f64; self.num_links];
+        let mut nflows_on = vec![0u32; self.num_links];
+        let mut link_live = vec![false; self.num_links];
+
+        let mut n_alive = 0usize;
+        for (i, f) in flows.iter().enumerate() {
+            if f.links.is_empty() || f.bytes <= 0.0 {
+                alive[i] = false;
+            } else {
+                n_alive += 1;
             }
         }
+        let mut t = 0.0f64;
+        let mut dur = 0.0f64;
+        while n_alive > 0 {
+            // max-min progressive filling, dense
+            let mut frozen = vec![false; nf];
+            for (i, f) in flows.iter().enumerate() {
+                if alive[i] {
+                    for &l in &f.links {
+                        cap[l as usize] = self.cap_full[l as usize];
+                        nflows_on[l as usize] = 0;
+                        link_live[l as usize] = true;
+                    }
+                }
+            }
+            for (i, f) in flows.iter().enumerate() {
+                if alive[i] {
+                    for &l in &f.links {
+                        nflows_on[l as usize] += 1;
+                    }
+                }
+            }
+            let mut unfrozen: usize = (0..nf).filter(|&i| alive[i]).count();
+            while unfrozen > 0 {
+                let mut best_fair = f64::INFINITY;
+                let mut best_link = usize::MAX;
+                for l in 0..self.num_links {
+                    if link_live[l] && nflows_on[l] > 0 {
+                        let fair = cap[l] / nflows_on[l] as f64;
+                        if fair < best_fair {
+                            best_fair = fair;
+                            best_link = l;
+                        }
+                    }
+                }
+                if best_link == usize::MAX {
+                    break;
+                }
+                for (i, f) in flows.iter().enumerate() {
+                    if alive[i] && !frozen[i] && f.links.iter().any(|&l| l as usize == best_link) {
+                        frozen[i] = true;
+                        rate[i] = best_fair;
+                        unfrozen -= 1;
+                        for &l in &f.links {
+                            let l = l as usize;
+                            cap[l] -= best_fair;
+                            nflows_on[l] -= 1;
+                            if nflows_on[l] == 0 {
+                                link_live[l] = false;
+                            }
+                        }
+                    }
+                }
+                link_live[best_link] = false;
+            }
+            for f in flows.iter() {
+                for &l in &f.links {
+                    link_live[l as usize] = false;
+                }
+            }
+            // earliest completion
+            let mut dt = f64::INFINITY;
+            for i in 0..nf {
+                if alive[i] && rate[i] > 0.0 {
+                    dt = dt.min(remaining[i] / rate[i]);
+                }
+            }
+            assert!(dt.is_finite(), "reference solver: live flow with zero rate");
+            t += dt;
+            for i in 0..nf {
+                if alive[i] {
+                    remaining[i] -= rate[i] * dt;
+                    if remaining[i] <= 1e-9 * flows[i].bytes.max(1.0) {
+                        alive[i] = false;
+                        n_alive -= 1;
+                        let total = t + flows[i].links.len() as f64 * self.latency;
+                        dur = dur.max(total);
+                    }
+                }
+            }
+        }
+        dur
     }
 }
 
@@ -354,6 +552,45 @@ mod tests {
         // All finish at t=2 (every flow gets 0.5 GB/s).
         let d = s.phase_duration(&flows);
         assert!((d - 2.0).abs() < 1e-3, "d={d}");
+    }
+
+    #[test]
+    #[should_panic(expected = "max-min solver deadlock")]
+    fn zero_bandwidth_phase_panics_instead_of_spinning() {
+        // a live flow that can never progress must abort the solve loudly
+        // in every profile (in release builds the old code looped forever)
+        let t = Torus::new(TorusDims::new(4, 1, 1));
+        let mut s = NetSim::new(&t, 0.0, 0.0);
+        let f = vec![Flow {
+            links: vec![s.slot(0, 1)],
+            bytes: 1e6,
+        }];
+        s.phase_duration(&f);
+    }
+
+    #[test]
+    fn csr_solver_matches_dense_reference_bitwise() {
+        use crate::rng::Rng;
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let mut s = NetSim::new(&t, 1.25e9, 1e-6);
+        let mut rng = Rng::new(77);
+        for case in 0..200 {
+            let nf = 1 + rng.below_usize(16);
+            let mut flows = Vec::new();
+            for _ in 0..nf {
+                let u = rng.below_usize(32);
+                let v = rng.below_usize(32);
+                let route = t.route(u, v);
+                let links = route.iter().map(|l| s.slot(l.src, l.dst)).collect();
+                flows.push(Flow {
+                    links,
+                    bytes: (rng.below(1_000_000) + 1) as f64,
+                });
+            }
+            let fast = s.phase_duration(&flows);
+            let dense = s.phase_duration_reference(&flows);
+            assert_eq!(fast.to_bits(), dense.to_bits(), "case {case}");
+        }
     }
 
     #[test]

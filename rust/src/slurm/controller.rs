@@ -37,7 +37,9 @@ impl Controller {
     /// Build a controller for a platform (no node daemons yet).
     pub fn new(platform: Platform, seed: u64) -> Self {
         let n = platform.num_nodes();
-        let fatt = FattPlugin::with_topology(platform.topology_arc());
+        // share the platform's TopoIndex cell: FATT's transit registry and
+        // the FANS placer then reuse one route-sweep precompute
+        let fatt = FattPlugin::on_platform(&platform);
         Controller {
             platform,
             queue: JobQueue::new(),

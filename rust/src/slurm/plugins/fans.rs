@@ -45,8 +45,11 @@ impl FansPlugin {
         match policy {
             PlacementPolicy::Tofa => self.placer.placement(comm, platform, outage),
             _ => {
-                let dist = platform.hop_matrix();
-                mapping::place(policy, comm, &dist, rng)
+                // borrow the platform's shared clean hop matrix instead of
+                // rebuilding an O(n^2) matrix per selection (bit-identical
+                // values; see TopoIndex)
+                let dist = platform.topo_index().clean_hops();
+                mapping::place(policy, comm, dist, rng)
             }
         }
     }

@@ -10,15 +10,18 @@
 //! [`FattPlugin::with_topology`].
 
 use std::io::{BufRead, BufReader, Read};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
-use crate::topology::{Topology, Torus, TorusDims};
+use crate::topology::{Platform, TopoIndex, Topology, Torus, TorusDims};
 
 /// The FATT plugin: platform topology + routing oracle.
 #[derive(Debug, Clone)]
 pub struct FattPlugin {
     topo: Arc<dyn Topology>,
+    /// Lazily-built transit registry (node -> paths it serves), shared by
+    /// every clone of the plugin like the controller shares the platform.
+    index: Arc<OnceLock<TopoIndex>>,
 }
 
 impl FattPlugin {
@@ -29,7 +32,21 @@ impl FattPlugin {
 
     /// Build for any topology (fat-tree / dragonfly platforms).
     pub fn with_topology(topo: Arc<dyn Topology>) -> Self {
-        FattPlugin { topo }
+        FattPlugin {
+            topo,
+            index: Arc::new(OnceLock::new()),
+        }
+    }
+
+    /// Build for a platform, **sharing** its [`TopoIndex`] cell: the
+    /// transit registry and the placer's incremental engines then pay the
+    /// one-time route sweep once between them (this is how the controller
+    /// wires FATT up at slurmctld init).
+    pub fn on_platform(platform: &Platform) -> Self {
+        FattPlugin {
+            topo: platform.topology_arc(),
+            index: platform.index_cell(),
+        }
     }
 
     /// Parse the topology file format described in the paper: a header
@@ -78,9 +95,7 @@ impl FattPlugin {
         if !seen.iter().all(|&s| s) {
             return Err(Error::Topology("topology file missing nodes".into()));
         }
-        Ok(FattPlugin {
-            topo: Arc::new(torus),
-        })
+        Ok(FattPlugin::with_topology(Arc::new(torus)))
     }
 
     /// Emit the topology file for this platform. The file format stores
@@ -111,6 +126,27 @@ impl FattPlugin {
     /// paper maintains: vertex -> paths it serves as intermediate hop).
     pub fn intermediates(&self, u: usize, v: usize) -> Vec<usize> {
         self.topo.intermediates(u, v)
+    }
+
+    /// The full transit registry of Section 4, inverted: for every compute
+    /// node, the pairs whose fixed route it serves. Backed by the shared
+    /// [`TopoIndex`] (built once per plugin, reused by every clone); the
+    /// incremental Eq. 1 / window engines consume the same structure.
+    /// Switch/router vertices are not listed — they never fail, so no
+    /// consumer ever asks for their paths.
+    pub fn transit_index(&self) -> &TopoIndex {
+        self.index.get_or_init(|| TopoIndex::build(self.topo.as_ref()))
+    }
+
+    /// The pairs `(u, v)` whose route `R(u, v)` transits (or terminates
+    /// at) compute node `node` — the paper's per-node registry export,
+    /// offered to external schedulers/tooling. The in-tree FANS path does
+    /// not call this: it consumes the same `TopoIndex` directly through
+    /// the incremental window/Eq. 1 engines. Allocates the answer; callers
+    /// iterating many nodes should use
+    /// [`TopoIndex::pairs_through`] on [`Self::transit_index`] instead.
+    pub fn paths_through(&self, node: usize) -> Vec<(usize, usize)> {
+        self.transit_index().pairs_through(node).collect()
     }
 
     /// Hop distance under the platform's metric (torus rings, fat-tree
@@ -205,6 +241,43 @@ mod tests {
         // racks are pods
         assert_eq!(f.num_racks(), 4);
         assert_eq!(f.rack_of(5), 1);
+    }
+
+    #[test]
+    fn transit_registry_agrees_with_intermediates() {
+        let f = FattPlugin::new(TorusDims::new(4, 2, 1));
+        // node 1 serves exactly the pairs whose route crosses it (plus its
+        // own pairs: endpoints are link endpoints too)
+        for (u, v) in f.paths_through(1) {
+            let touches = u == 1
+                || v == 1
+                || f.route(u, v).iter().any(|l| l.src == 1 || l.dst == 1);
+            assert!(touches, "({u},{v}) listed but does not touch node 1");
+        }
+        // inverse direction: every pair with node 1 as intermediate is in
+        // the registry
+        for u in 0..8 {
+            for v in (u + 1)..8 {
+                if f.intermediates(u, v).contains(&1) {
+                    assert!(
+                        f.paths_through(1).contains(&(u, v)),
+                        "({u},{v}) transits 1 but is not registered"
+                    );
+                }
+            }
+        }
+        // clones share the one registry
+        let clone = f.clone();
+        assert!(std::ptr::eq(f.transit_index(), clone.transit_index()));
+    }
+
+    #[test]
+    fn on_platform_shares_the_platform_index() {
+        // the controller wiring must not duplicate the route sweep: the
+        // plugin's registry IS the platform's TopoIndex
+        let plat = Platform::paper_default(TorusDims::new(4, 2, 2));
+        let f = FattPlugin::on_platform(&plat);
+        assert!(std::ptr::eq(f.transit_index(), plat.topo_index()));
     }
 
     #[test]

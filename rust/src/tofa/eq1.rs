@@ -12,7 +12,7 @@
 //! fault-free path on the platform (the paper found small increments gave
 //! only marginal abort-rate reductions — hence the x100).
 
-use crate::topology::{DistanceMatrix, Topology};
+use crate::topology::{CostWorkspace, DistanceMatrix, TopoIndex, Topology};
 
 /// The hop cost constant `c` of Equation 1.
 pub const HOP_COST: f32 = 1.0;
@@ -23,6 +23,14 @@ pub const FAULT_FACTOR: f32 = 100.0;
 /// evaluated over `R(u, v)`. `outage[n] > 0` marks node `n` as flaky.
 /// Route vertices beyond `outage.len()` are switches/routers (indirect
 /// topologies), which never fail and so never inflate a link.
+///
+/// This is the **dense reference implementation**: it re-routes all
+/// `O(n^2)` pairs regardless of how many nodes are flaky. The hot path —
+/// [`fault_aware_distance_indexed`] — copies the precomputed clean matrix
+/// and patches only the entries the flaky nodes can perturb; it is
+/// bit-identical to this function (asserted for every topology family and
+/// fault model in `tests/proptests.rs`), which stays the ground truth for
+/// those equivalence tests and the `cost_engine` bench.
 pub fn fault_aware_distance(topo: &dyn Topology, outage: &[f64]) -> DistanceMatrix {
     let m = topo.num_nodes();
     assert_eq!(outage.len(), m);
@@ -44,6 +52,70 @@ pub fn fault_aware_distance(topo: &dyn Topology, outage: &[f64]) -> DistanceMatr
             dist.set(v, u, w);
         }
     }
+    dist
+}
+
+/// Incremental Eq. 1 over a precomputed [`TopoIndex`]: start from the
+/// clean hop matrix (a memcpy) and re-evaluate only the pairs whose route
+/// touches a flaky node — the union of the flaky nodes' transit-incidence
+/// lists. In the paper's regime (few flaky nodes) that is a small fraction
+/// of the `n * (n - 1) / 2` pairs the dense path re-routes, turning
+/// `O(n^2 * route_len)` into `O(faulty * incidence * route_len)`.
+///
+/// Bit-identical to [`fault_aware_distance`]: untouched entries are the
+/// exact `|R(u, v)| as f32` the dense path produces with no flaky link
+/// (a sum of `1.0f32` per hop is exact), and touched entries are
+/// recomputed with the same accumulation loop in the same order.
+///
+/// `ws` is reusable scratch (see [`CostWorkspace`]); nothing is allocated
+/// after the buffers have grown to the platform size, except the returned
+/// matrix itself.
+pub fn fault_aware_distance_indexed(
+    index: &TopoIndex,
+    topo: &dyn Topology,
+    outage: &[f64],
+    ws: &mut CostWorkspace,
+) -> DistanceMatrix {
+    let m = topo.num_nodes();
+    assert_eq!(outage.len(), m);
+    assert_eq!(index.num_nodes(), m, "index built for a different platform");
+    ws.prepare(outage);
+    ws.begin_pairs(m);
+    let mut dist = index.clean_hops().clone();
+    // split borrows: the flaky list is iterated while the route buffer and
+    // pair marks are mutated
+    let CostWorkspace {
+        flaky,
+        flaky_nodes,
+        route,
+        pair_mark,
+        pair_epoch,
+        pairs_patched,
+        ..
+    } = ws;
+    let epoch = *pair_epoch;
+    let is_flaky = |n: usize| n < flaky.len() && flaky[n];
+    let mut patched = 0usize;
+    for &f in flaky_nodes.iter() {
+        for &packed in index.pairs_through_packed(f as usize) {
+            let (u, v) = crate::topology::index::pair_of(packed);
+            if !crate::topology::index::mark_cell(&mut pair_mark[u * m + v], epoch) {
+                continue; // another flaky node already patched this pair
+            }
+            topo.route_into(u, v, route);
+            let mut w = 0.0f32;
+            for l in route.iter() {
+                w += HOP_COST;
+                if is_flaky(l.src) || is_flaky(l.dst) {
+                    w += HOP_COST * FAULT_FACTOR;
+                }
+            }
+            dist.set(u, v, w);
+            dist.set(v, u, w);
+            patched += 1;
+        }
+    }
+    *pairs_patched = patched;
     dist
 }
 
@@ -109,6 +181,38 @@ mod tests {
         let neighbors = t.neighbors(100);
         for &nb in &neighbors {
             assert!(d.get(nb, 100) > clean_max);
+        }
+    }
+
+    #[test]
+    fn indexed_engine_is_bit_identical_to_dense() {
+        use crate::topology::{Dragonfly, DragonflyParams, FatTree, TopoIndex};
+        // ascending node counts (12, 16, 32): the shared workspace must
+        // survive growing to a larger platform mid-life
+        let topos: Vec<Box<dyn Topology>> = vec![
+            Box::new(Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()),
+            Box::new(FatTree::new(4).unwrap()),
+            Box::new(Torus::new(TorusDims::new(4, 4, 2))),
+        ];
+        let mut rng = crate::rng::Rng::new(17);
+        let mut ws = crate::topology::CostWorkspace::new();
+        for t in &topos {
+            let n = t.num_nodes();
+            let index = TopoIndex::build(t.as_ref());
+            for n_flaky in [0usize, 1, 3, n / 2, n] {
+                let mut outage = vec![0.0; n];
+                for f in rng.sample_distinct(n, n_flaky) {
+                    outage[f] = 0.01 + rng.f64() * 0.5;
+                }
+                let dense = fault_aware_distance(t.as_ref(), &outage);
+                let fast = fault_aware_distance_indexed(&index, t.as_ref(), &outage, &mut ws);
+                for (a, b) in dense.as_slice().iter().zip(fast.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} flaky={n_flaky}", t.describe());
+                }
+                if n_flaky == 0 {
+                    assert_eq!(ws.pairs_patched(), 0);
+                }
+            }
         }
     }
 

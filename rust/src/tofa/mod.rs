@@ -9,11 +9,20 @@
 //! * [`placer`] — the TOFA procedure: extract the window sub-topology and
 //!   map into it, or fall back to mapping over the fault-weighted full
 //!   topology.
+//!
+//! Both cost kernels come in two flavors: a dense reference
+//! ([`eq1::fault_aware_distance`], [`window::find_route_clean_window`])
+//! that re-routes everything, and the incremental engines
+//! ([`eq1::fault_aware_distance_indexed`],
+//! [`window::find_route_clean_window_indexed`]) that run on the platform's
+//! shared [`crate::topology::TopoIndex`] and touch only what faults
+//! perturb. The placer uses the incremental engines; they are bit-
+//! identical to the references (asserted in `tests/proptests.rs`).
 
 pub mod eq1;
 pub mod placer;
 pub mod window;
 
-pub use eq1::fault_aware_distance;
+pub use eq1::{fault_aware_distance, fault_aware_distance_indexed};
 pub use placer::{TofaConfig, TofaPlacer};
-pub use window::find_fault_free_window;
+pub use window::{find_fault_free_window, find_route_clean_window_indexed};

@@ -8,13 +8,15 @@
 //!                T = ScotchMap(G, H_s)         # map inside the window
 //! ```
 
-use super::eq1::fault_aware_distance;
-use super::window::{find_fault_free_window, find_route_clean_window};
+use std::sync::Mutex;
+
+use super::eq1::fault_aware_distance_indexed;
+use super::window::{find_fault_free_window, find_route_clean_window_indexed};
 use crate::commgraph::CommMatrix;
 use crate::error::Result;
 use crate::mapping::recmap::RecursiveMapper;
 use crate::mapping::Placement;
-use crate::topology::{DistanceMatrix, Platform};
+use crate::topology::{CostWorkspace, DistanceMatrix, Platform};
 
 /// Tunables of the TOFA pipeline.
 #[derive(Debug, Clone)]
@@ -52,15 +54,38 @@ pub struct TofaPlacement {
 }
 
 /// The TOFA placer.
-#[derive(Debug, Clone, Default)]
+///
+/// Runs on the incremental cost engines: the platform's shared
+/// [`crate::topology::TopoIndex`] provides the clean hop matrix and the
+/// transit-incidence lists, and a per-placer [`CostWorkspace`] (behind a
+/// `Mutex` so the placer stays `Sync` for the parallel batch engine; each
+/// worker's runner clone owns its own placer, so the lock is never
+/// contended) makes the window search and Eq. 1 allocation-free: the
+/// flaky-node buffers the two engines used to allocate per call are
+/// hoisted here and reused across every `place()` of this placer.
+#[derive(Debug, Default)]
 pub struct TofaPlacer {
     config: TofaConfig,
+    ws: Mutex<CostWorkspace>,
+}
+
+impl Clone for TofaPlacer {
+    fn clone(&self) -> Self {
+        // scratch is per-instance; clones start with fresh buffers
+        TofaPlacer {
+            config: self.config.clone(),
+            ws: Mutex::new(CostWorkspace::new()),
+        }
+    }
 }
 
 impl TofaPlacer {
     /// Build with a config.
     pub fn new(config: TofaConfig) -> Self {
-        TofaPlacer { config }
+        TofaPlacer {
+            config,
+            ws: Mutex::new(CostWorkspace::new()),
+        }
     }
 
     /// Place `comm` on `platform` given per-node outage probability
@@ -73,13 +98,15 @@ impl TofaPlacer {
     ) -> Result<TofaPlacement> {
         let n = comm.len();
         let topo = platform.topology();
+        // clean hop matrix + transit incidence, shared across all clones
+        // of this platform (built once, like the phase cache)
+        let index = platform.topo_index();
 
         if outage.iter().all(|&p| p <= 0.0) {
             // Nothing flaky: Listing 1.1 still finds S (trivially the
             // first |V_G| node ids) and maps inside that window.
             let window: Vec<usize> = (0..n).collect();
-            let full = platform.hop_matrix();
-            let sub = full.extract(&window);
+            let sub = index.clean_hops().extract(&window);
             let local = self.config.mapper.map(comm, &sub)?;
             let assignment = local.assignment.iter().map(|&li| window[li]).collect();
             return Ok(TofaPlacement {
@@ -88,15 +115,18 @@ impl TofaPlacer {
             });
         }
 
+        // one workspace for both engines: the flaky view of `outage` is
+        // built once here instead of once per callee
+        let mut ws = self.ws.lock().expect("TOFA cost workspace poisoned");
+
         // Prefer a window whose route closure is flaky-free (zero abort
         // guarantee); fall back to any endpoint-clean window.
-        let window = find_route_clean_window(outage, n, topo)
+        let window = find_route_clean_window_indexed(index, outage, n, &mut ws)
             .or_else(|| find_fault_free_window(outage, n));
         if let Some(window) = window {
             // ScotchExtract: sub-topology restricted to the window, with
             // plain hop distances (window is fault-free by construction).
-            let full = platform.hop_matrix();
-            let sub: DistanceMatrix = full.extract(&window);
+            let sub: DistanceMatrix = index.clean_hops().extract(&window);
             let local = self.config.mapper.map(comm, &sub)?;
             let assignment = local
                 .assignment
@@ -109,7 +139,7 @@ impl TofaPlacer {
             })
         } else {
             // no window: map over the Eq. 1 fault-weighted topology
-            let dist = fault_aware_distance(topo, outage);
+            let dist = fault_aware_distance_indexed(index, topo, outage, &mut ws);
             let p = self.config.mapper.map(comm, &dist)?;
             Ok(TofaPlacement {
                 assignment: p.assignment,

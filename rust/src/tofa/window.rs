@@ -4,6 +4,8 @@
 //! which have zero (estimated) outage probability. Node ids enumerate the
 //! torus row-major, so a window is a contiguous run in Slurm's node list.
 
+use crate::topology::CostWorkspace;
+
 /// Find the first run of `len` consecutive node ids whose outage
 /// probability is zero. Returns the node ids, or `None`.
 pub fn find_fault_free_window(outage: &[f64], len: usize) -> Option<Vec<usize>> {
@@ -35,6 +37,13 @@ pub fn find_fault_free_window(outage: &[f64], len: usize) -> Option<Vec<usize>> 
 /// a window passing it guarantees a zero abort ratio for jobs mapped
 /// inside. Transit vertices beyond `outage.len()` are switches/routers,
 /// which never fail. Falls back to `None` if no such window exists.
+///
+/// This is the **dense reference implementation**: every candidate start
+/// re-routes `O(len^2)` pairs. The hot path —
+/// [`find_route_clean_window_indexed`] — slides the window with per-window
+/// dirty-pair counts instead; it returns the *same* window (asserted in
+/// `tests/proptests.rs`), and this function stays the ground truth for
+/// those equivalence tests and the `cost_engine` bench.
 pub fn find_route_clean_window(
     outage: &[f64],
     len: usize,
@@ -63,6 +72,96 @@ pub fn find_route_clean_window(
             }
         }
         return Some((start..start + len).collect());
+    }
+    None
+}
+
+/// Incremental route-clean window search over a precomputed
+/// [`TopoIndex`](crate::topology::TopoIndex).
+///
+/// A pair `(u, v)` is *dirty* when some link of `R(u, v)` has a flaky
+/// endpoint — exactly the pairs in the union of the flaky nodes' transit-
+/// incidence lists. A window is valid iff it contains no flaky node and no
+/// dirty pair. Instead of re-routing the `O(len^2)` closure at every
+/// candidate start, this builds per-node sorted dirty-partner lists once
+/// per outage vector and then *slides*: moving the window from `s` to
+/// `s + 1` subtracts the dirty pairs `(s, .)` leaving on the left and adds
+/// the dirty pairs `(., s + len)` entering on the right (two binary
+/// searches), with flaky-node membership answered by a prefix sum.
+///
+/// Returns the **same** window as [`find_route_clean_window`] — the first
+/// valid start — or `None` (equivalence asserted in `tests/proptests.rs`).
+pub fn find_route_clean_window_indexed(
+    index: &crate::topology::TopoIndex,
+    outage: &[f64],
+    len: usize,
+    ws: &mut CostWorkspace,
+) -> Option<Vec<usize>> {
+    let n = index.num_nodes();
+    assert_eq!(outage.len(), n, "index built for a different platform");
+    if len == 0 || len > n {
+        return None;
+    }
+    ws.prepare(outage);
+    ws.begin_pairs(n);
+    // reset only the partner lists the previous call populated
+    let CostWorkspace {
+        flaky_nodes,
+        flaky_prefix,
+        pair_mark,
+        pair_epoch,
+        partners,
+        partner_touched,
+        ..
+    } = ws;
+    if partners.len() < n {
+        partners.resize_with(n, Vec::new);
+    }
+    for &t in partner_touched.iter() {
+        partners[t as usize].clear();
+    }
+    partner_touched.clear();
+    let epoch = *pair_epoch;
+    for &f in flaky_nodes.iter() {
+        for &packed in index.pairs_through_packed(f as usize) {
+            let (u, v) = crate::topology::index::pair_of(packed);
+            if !crate::topology::index::mark_cell(&mut pair_mark[u * n + v], epoch) {
+                continue;
+            }
+            if partners[u].is_empty() {
+                partner_touched.push(u as u32);
+            }
+            partners[u].push(v as u32);
+            if partners[v].is_empty() {
+                partner_touched.push(v as u32);
+            }
+            partners[v].push(u as u32);
+        }
+    }
+    for &t in partner_touched.iter() {
+        partners[t as usize].sort_unstable();
+    }
+    // dirty partners of `x` with ids in [lo, hi)
+    let count_in = |x: usize, lo: usize, hi: usize| -> i64 {
+        let p = &partners[x];
+        let a = p.partition_point(|&y| (y as usize) < lo);
+        let b = p.partition_point(|&y| (y as usize) < hi);
+        (b - a) as i64
+    };
+    // flaky nodes among ids [lo, hi), via the prepared prefix sums
+    let flaky_in = |lo: usize, hi: usize| flaky_prefix[hi] - flaky_prefix[lo];
+    // dirty pairs fully inside the initial window [0, len)
+    let mut dirty: i64 = (0..len).map(|u| count_in(u, u + 1, len)).sum();
+    for s in 0..=(n - len) {
+        debug_assert!(dirty >= 0, "dirty-pair count went negative at {s}");
+        if flaky_in(s, s + len) == 0 && dirty == 0 {
+            return Some((s..s + len).collect());
+        }
+        if s + len < n {
+            // shared core [s+1, s+len): drop pairs (s, .), add (., s+len)
+            dirty -= count_in(s, s + 1, s + len);
+            dirty += count_in(s + len, s + 1, s + len);
+        }
     }
     None
 }
@@ -124,6 +223,35 @@ mod tests {
     fn runs_enumeration() {
         let outage = vec![0.0, 0.0, 0.5, 0.0, 0.0, 0.0, 0.5, 0.0];
         assert_eq!(fault_free_runs(&outage), vec![(0, 2), (3, 3), (7, 1)]);
+    }
+
+    #[test]
+    fn indexed_search_returns_the_same_window_as_dense() {
+        use crate::topology::{Dragonfly, DragonflyParams, FatTree, TopoIndex, Torus, TorusDims};
+        // ascending node counts: the shared workspace must survive
+        // growing to a larger platform mid-life
+        let topos: Vec<Box<dyn crate::topology::Topology>> = vec![
+            Box::new(Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()),
+            Box::new(FatTree::new(4).unwrap()),
+            Box::new(Torus::new(TorusDims::new(4, 4, 2))),
+        ];
+        let mut rng = crate::rng::Rng::new(23);
+        let mut ws = CostWorkspace::new();
+        for t in &topos {
+            let n = t.num_nodes();
+            let index = TopoIndex::build(t.as_ref());
+            for case in 0..40 {
+                let mut outage = vec![0.0; n];
+                let n_flaky = rng.below_usize(n / 2 + 1);
+                for f in rng.sample_distinct(n, n_flaky) {
+                    outage[f] = 0.02;
+                }
+                let len = rng.below_usize(n + 2); // includes 0 and > n
+                let dense = find_route_clean_window(&outage, len, t.as_ref());
+                let fast = find_route_clean_window_indexed(&index, &outage, len, &mut ws);
+                assert_eq!(fast, dense, "{} case {case} len {len}", t.describe());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! `TopoIndex` — per-topology precompute shared across the placement and
+//! simulation layers.
+//!
+//! Every batch cell used to pay three hot paths from scratch: Eq. 1
+//! re-routed all `O(n^2)` node pairs per outage vector, the route-clean
+//! window search re-routed `O(len^2)` pairs per candidate start, and the
+//! max-min solver rescanned the whole link array per bottleneck round. The
+//! paper's regime — *few* nodes with low outage probability — means almost
+//! all of that work recomputes the clean answer. `TopoIndex` precomputes
+//! the structure that lets the hot paths touch only what faults actually
+//! perturb:
+//!
+//! * **clean hop matrix** — `|R(u, v)|` for every pair, built from the
+//!   routes themselves (so it is bit-identical to what Eq. 1 produces with
+//!   no faults: a sum of `1.0f32` per hop is exact for any realistic hop
+//!   count);
+//! * **transit-incidence index** — for every compute node `n`, the ordered
+//!   list of pairs `(u, v)` whose fixed route `R(u, v)` has `n` as a link
+//!   endpoint. This is the inverse of the routing function: the set of
+//!   matrix entries a flaky `n` can perturb. It is also exactly the
+//!   registry the paper's FATT plugin exports (vertex -> paths it serves).
+//!
+//! The index is built once per platform ([`super::Platform::topo_index`])
+//! and shared `Arc`-style across batch instances and worker threads, the
+//! same ownership model as [`crate::sim::cache::PhaseCache`]. Consumers:
+//! [`crate::tofa::eq1::fault_aware_distance_indexed`],
+//! [`crate::tofa::window::find_route_clean_window_indexed`], the TOFA
+//! placer, and the FATT plugin's transit registry.
+
+use super::distance::DistanceMatrix;
+use super::torus::Link;
+use super::Topology;
+
+/// Pack a node pair `(u, v)` with `u < v` into one word.
+#[inline]
+fn pack(u: usize, v: usize) -> u64 {
+    ((u as u64) << 32) | v as u64
+}
+
+/// Inverse of [`pack`].
+#[inline]
+fn unpack(p: u64) -> (usize, usize) {
+    ((p >> 32) as usize, (p & 0xffff_ffff) as usize)
+}
+
+/// Immutable per-topology precompute: clean hop matrix + transit-incidence
+/// CSR. Build once (one full route sweep, the cost of a single dense
+/// Eq. 1 evaluation) and share.
+pub struct TopoIndex {
+    num_nodes: usize,
+    /// Clean route-length matrix: entry `(u, v)` is `|R(u, v)|` as f32.
+    clean: DistanceMatrix,
+    /// CSR offsets into [`Self::inc_pairs`], one slice per compute node.
+    inc_off: Vec<u32>,
+    /// Packed `(u, v)` pairs (`u < v`, lexicographic per node) whose route
+    /// touches the node as a link endpoint. Endpoints count: `u` and `v`
+    /// are themselves endpoints of the first/last link of `R(u, v)`.
+    inc_pairs: Vec<u64>,
+}
+
+impl TopoIndex {
+    /// Build the index with one sweep over all `(u, v)` routes. Transit
+    /// vertices `>= num_nodes()` (switches/routers of indirect fabrics)
+    /// never fail and are not indexed.
+    pub fn build(topo: &dyn Topology) -> Self {
+        let n = topo.num_nodes();
+        let mut clean = DistanceMatrix::zeros(n);
+        let mut per_node: Vec<Vec<u64>> = vec![Vec::new(); n];
+        // last pair that touched each node: routes revisit a node as the
+        // dst of one link and the src of the next, so this collapses the
+        // duplicate without a per-pair set
+        let mut last_pair = vec![u64::MAX; n];
+        let mut route: Vec<Link> = Vec::new();
+        for u in 0..n {
+            for v in (u + 1)..n {
+                topo.route_into(u, v, &mut route);
+                let h = route.len() as f32;
+                clean.set(u, v, h);
+                clean.set(v, u, h);
+                let p = pack(u, v);
+                for l in &route {
+                    for e in [l.src, l.dst] {
+                        if e < n && last_pair[e] != p {
+                            last_pair[e] = p;
+                            per_node[e].push(p);
+                        }
+                    }
+                }
+            }
+        }
+        #[cfg(debug_assertions)]
+        for u in 0..n {
+            for v in 0..n {
+                debug_assert_eq!(
+                    clean.get(u, v),
+                    topo.hops(u, v) as f32,
+                    "route length disagrees with the hop metric for ({u},{v})"
+                );
+            }
+        }
+        let mut inc_off = Vec::with_capacity(n + 1);
+        let mut inc_pairs = Vec::with_capacity(per_node.iter().map(Vec::len).sum());
+        inc_off.push(0u32);
+        for pairs in &per_node {
+            inc_pairs.extend_from_slice(pairs);
+            inc_off.push(inc_pairs.len() as u32);
+        }
+        TopoIndex {
+            num_nodes: n,
+            clean,
+            inc_off,
+            inc_pairs,
+        }
+    }
+
+    /// Compute-node count the index covers.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// The clean (fault-free) hop matrix, `|R(u, v)|` per entry.
+    #[inline]
+    pub fn clean_hops(&self) -> &DistanceMatrix {
+        &self.clean
+    }
+
+    /// Packed pairs whose route touches `node` (see [`pair_of`] to
+    /// unpack). Lexicographically sorted, `u < v`.
+    #[inline]
+    pub fn pairs_through_packed(&self, node: usize) -> &[u64] {
+        &self.inc_pairs[self.inc_off[node] as usize..self.inc_off[node + 1] as usize]
+    }
+
+    /// The pairs `(u, v)` (with `u < v`) whose route `R(u, v)` touches
+    /// `node` as a link endpoint — the transit registry entry for `node`.
+    pub fn pairs_through(&self, node: usize) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.pairs_through_packed(node).iter().map(|&p| unpack(p))
+    }
+
+    /// Total incidence entries across all nodes (index memory figure of
+    /// merit, reported by `benches/cost_engine.rs`).
+    pub fn incidence_len(&self) -> usize {
+        self.inc_pairs.len()
+    }
+}
+
+/// Unpack a packed pair from [`TopoIndex::pairs_through_packed`].
+#[inline]
+pub fn pair_of(packed: u64) -> (usize, usize) {
+    unpack(packed)
+}
+
+/// The epoch-mark protocol of [`CostWorkspace::mark_pair`], usable on a
+/// destructured `pair_mark` cell under split borrows (the incremental
+/// engines iterate one workspace field while marking another): returns
+/// true iff `cell` had not been stamped with `epoch` yet.
+#[inline]
+pub(crate) fn mark_cell(cell: &mut u32, epoch: u32) -> bool {
+    if *cell == epoch {
+        false
+    } else {
+        *cell = epoch;
+        true
+    }
+}
+
+impl std::fmt::Debug for TopoIndex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TopoIndex")
+            .field("num_nodes", &self.num_nodes)
+            .field("incidence_pairs", &self.inc_pairs.len())
+            .finish()
+    }
+}
+
+/// Reusable scratch for the incremental cost engines — one per worker
+/// thread (the TOFA placer owns one), so the hot paths allocate nothing
+/// after warm-up. Holds the flaky-node view of the current outage vector
+/// (built **once** per `place()` call and shared by the window search and
+/// Eq. 1, which used to rebuild it back-to-back) plus epoch-stamped pair
+/// marks for de-duplicating incidence lists without clearing.
+pub struct CostWorkspace {
+    /// `flaky[n]` = `outage[n] > 0`, for the last prepared outage vector.
+    pub(crate) flaky: Vec<bool>,
+    /// Indices of the flaky nodes, ascending.
+    pub(crate) flaky_nodes: Vec<u32>,
+    /// `flaky_prefix[i]` = flaky nodes among ids `0..i` (window check).
+    pub(crate) flaky_prefix: Vec<u32>,
+    /// Epoch-stamped marks over the dense pair space (`u * n + v`).
+    pub(crate) pair_mark: Vec<u32>,
+    pub(crate) pair_epoch: u32,
+    /// Route scratch for Eq. 1 recomputation.
+    pub(crate) route: Vec<Link>,
+    /// Per-node dirty-partner lists for the sliding window search.
+    pub(crate) partners: Vec<Vec<u32>>,
+    /// Nodes whose partner list is non-empty (cleared lazily next call).
+    pub(crate) partner_touched: Vec<u32>,
+    /// Matrix entries recomputed by the last incremental Eq. 1 call
+    /// (index effectiveness stat: compare against `n * (n - 1) / 2`).
+    pub(crate) pairs_patched: usize,
+}
+
+impl Default for CostWorkspace {
+    fn default() -> Self {
+        CostWorkspace {
+            flaky: Vec::new(),
+            flaky_nodes: Vec::new(),
+            flaky_prefix: Vec::new(),
+            pair_mark: Vec::new(),
+            pair_epoch: 0,
+            route: Vec::new(),
+            partners: Vec::new(),
+            partner_touched: Vec::new(),
+            pairs_patched: 0,
+        }
+    }
+}
+
+impl CostWorkspace {
+    /// Fresh workspace (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (Re)fill the flaky view from an outage vector. O(n), allocation-
+    /// free once the buffers have grown to the platform size. Idempotent:
+    /// callers that invoke several engines back-to-back with the same
+    /// vector pay two cheap passes, never a rebuild of the index.
+    pub fn prepare(&mut self, outage: &[f64]) {
+        let n = outage.len();
+        self.flaky.clear();
+        self.flaky.extend(outage.iter().map(|&p| p > 0.0));
+        self.flaky_nodes.clear();
+        self.flaky_prefix.clear();
+        self.flaky_prefix.reserve(n + 1);
+        self.flaky_prefix.push(0);
+        let mut acc = 0u32;
+        for (i, &f) in self.flaky.iter().enumerate() {
+            if f {
+                self.flaky_nodes.push(i as u32);
+                acc += 1;
+            }
+            self.flaky_prefix.push(acc);
+        }
+    }
+
+    /// True if node `n` is flaky under the prepared outage vector
+    /// (vertices beyond the node range — switches — are never flaky).
+    #[inline]
+    pub fn is_flaky(&self, n: usize) -> bool {
+        n < self.flaky.len() && self.flaky[n]
+    }
+
+    /// Flaky nodes among ids `lo..hi` under the prepared outage vector.
+    #[inline]
+    pub fn flaky_in(&self, lo: usize, hi: usize) -> u32 {
+        self.flaky_prefix[hi] - self.flaky_prefix[lo]
+    }
+
+    /// Start a pair-dedup pass over an `n x n` pair space (see
+    /// [`Self::mark_pair`]; custom engines walking incidence lists use
+    /// this to visit each pair once even when flaky lists overlap).
+    pub fn begin_pairs(&mut self, n: usize) {
+        if self.pair_mark.len() < n * n {
+            // growing re-lays the pair space out (`u * n + v` changes
+            // meaning), so zero everything — old marks kept by a plain
+            // resize() would alias other pairs once the epoch recycles
+            self.pair_mark.clear();
+            self.pair_mark.resize(n * n, 0);
+            self.pair_epoch = 0;
+        }
+        self.pair_epoch = self.pair_epoch.wrapping_add(1);
+        if self.pair_epoch == 0 {
+            // u32 wrapped (once per ~4e9 passes): stale marks could alias
+            self.pair_mark.fill(0);
+            self.pair_epoch = 1;
+        }
+    }
+
+    /// Mark pair `(u, v)`; true the first time this pass sees it.
+    #[inline]
+    pub fn mark_pair(&mut self, n: usize, u: usize, v: usize) -> bool {
+        mark_cell(&mut self.pair_mark[u * n + v], self.pair_epoch)
+    }
+
+    /// Matrix entries the last incremental Eq. 1 call actually recomputed.
+    pub fn pairs_patched(&self) -> usize {
+        self.pairs_patched
+    }
+}
+
+impl std::fmt::Debug for CostWorkspace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CostWorkspace")
+            .field("nodes", &self.flaky.len())
+            .field("flaky", &self.flaky_nodes.len())
+            .field("pairs_patched", &self.pairs_patched)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Dragonfly, DragonflyParams, FatTree, Torus, TorusDims};
+
+    fn families() -> Vec<Box<dyn Topology>> {
+        vec![
+            Box::new(Torus::new(TorusDims::new(4, 4, 2))),
+            Box::new(FatTree::new(4).unwrap()),
+            Box::new(Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()),
+        ]
+    }
+
+    #[test]
+    fn clean_matrix_matches_hop_matrix_exactly() {
+        for t in families() {
+            let idx = TopoIndex::build(t.as_ref());
+            let hops = DistanceMatrix::from_topology(t.as_ref());
+            let what = t.describe();
+            assert_eq!(idx.num_nodes(), t.num_nodes(), "{what}");
+            for u in 0..t.num_nodes() {
+                for v in 0..t.num_nodes() {
+                    assert_eq!(
+                        idx.clean_hops().get(u, v).to_bits(),
+                        hops.get(u, v).to_bits(),
+                        "{what} ({u},{v})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incidence_matches_brute_force_route_sweep() {
+        for t in families() {
+            let n = t.num_nodes();
+            let what = t.describe();
+            let idx = TopoIndex::build(t.as_ref());
+            for node in 0..n {
+                let mut want = Vec::new();
+                for u in 0..n {
+                    for v in (u + 1)..n {
+                        let r = t.route(u, v);
+                        if r.iter().any(|l| l.src == node || l.dst == node) {
+                            want.push((u, v));
+                        }
+                    }
+                }
+                let got: Vec<(usize, usize)> = idx.pairs_through(node).collect();
+                assert_eq!(got, want, "{what} node {node}");
+                // lists are lexicographically sorted and duplicate-free
+                let packed = idx.pairs_through_packed(node);
+                assert!(packed.windows(2).all(|w| w[0] < w[1]), "{what} node {node}");
+            }
+        }
+    }
+
+    #[test]
+    fn endpoints_are_in_their_own_incidence_lists() {
+        let t = Torus::new(TorusDims::new(4, 4, 1));
+        let idx = TopoIndex::build(&t);
+        // every pair (u, v) must appear in both u's and v's list
+        for u in 0..16 {
+            for v in (u + 1)..16 {
+                for node in [u, v] {
+                    assert!(
+                        idx.pairs_through(node).any(|p| p == (u, v)),
+                        "pair ({u},{v}) missing from node {node}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn switches_are_not_indexed() {
+        let f = FatTree::new(4).unwrap();
+        let idx = TopoIndex::build(&f);
+        assert_eq!(idx.num_nodes(), 16);
+        // all pairs reference compute nodes only
+        for node in 0..16 {
+            for (u, v) in idx.pairs_through(node) {
+                assert!(u < 16 && v < 16 && u < v);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_prepare_is_reusable_and_consistent() {
+        let mut ws = CostWorkspace::new();
+        let mut outage = vec![0.0; 10];
+        outage[3] = 0.1;
+        outage[7] = 0.2;
+        ws.prepare(&outage);
+        assert_eq!(ws.flaky_nodes, vec![3, 7]);
+        assert_eq!(ws.flaky_in(0, 10), 2);
+        assert_eq!(ws.flaky_in(4, 7), 0);
+        assert!(ws.is_flaky(3) && !ws.is_flaky(4));
+        // switches beyond the node range never count as flaky
+        assert!(!ws.is_flaky(10_000));
+        // re-prepare with a different vector reuses the buffers
+        ws.prepare(&vec![0.0; 10]);
+        assert!(ws.flaky_nodes.is_empty());
+        assert_eq!(ws.flaky_in(0, 10), 0);
+    }
+
+    #[test]
+    fn pair_marks_dedup_per_pass() {
+        let mut ws = CostWorkspace::new();
+        ws.begin_pairs(8);
+        assert!(ws.mark_pair(8, 1, 2));
+        assert!(!ws.mark_pair(8, 1, 2));
+        assert!(ws.mark_pair(8, 2, 3));
+        ws.begin_pairs(8);
+        assert!(ws.mark_pair(8, 1, 2), "new pass must reset marks");
+    }
+
+    #[test]
+    fn pair_marks_survive_workspace_growth() {
+        // growing the pair space re-lays it out; a stale mark written
+        // under the small layout must never read as current once the
+        // epoch restarts (regression: resize() used to keep old cells)
+        let mut ws = CostWorkspace::new();
+        ws.begin_pairs(4);
+        assert!(ws.mark_pair(4, 1, 2)); // cell 1*4+2 = 6 under n=4
+        ws.begin_pairs(8);
+        assert!(ws.mark_pair(8, 0, 6), "stale small-layout mark aliased"); // cell 6 under n=8
+        // shrinking back keeps monotonic epochs: nothing stale survives
+        ws.begin_pairs(4);
+        assert!(ws.mark_pair(4, 1, 2));
+    }
+}

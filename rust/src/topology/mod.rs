@@ -21,6 +21,7 @@ pub mod distance;
 pub mod dragonfly;
 pub mod fattree;
 pub mod graph;
+pub mod index;
 pub mod platform;
 pub mod torus;
 
@@ -28,6 +29,7 @@ pub use distance::DistanceMatrix;
 pub use dragonfly::{Dragonfly, DragonflyParams};
 pub use fattree::FatTree;
 pub use graph::ArchGraph;
+pub use index::{CostWorkspace, TopoIndex};
 pub use platform::Platform;
 pub use torus::{Link, Torus, TorusDims};
 

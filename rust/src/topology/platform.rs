@@ -6,9 +6,10 @@
 //! function). The paper's values: 6 Gflops per node, 10 Gbps and 1 us per
 //! link.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use super::distance::DistanceMatrix;
+use super::index::TopoIndex;
 use super::torus::{Torus, TorusDims};
 use super::Topology;
 
@@ -22,6 +23,11 @@ use super::Topology;
 #[derive(Debug, Clone)]
 pub struct Platform {
     topo: Arc<dyn Topology>,
+    /// Lazily-built [`TopoIndex`] (clean hop matrix + transit-incidence
+    /// index). Behind `Arc` so every clone of the platform — including the
+    /// per-worker runner clones of the parallel batch engine — shares the
+    /// one index, exactly like the phase cache.
+    index: Arc<OnceLock<TopoIndex>>,
     /// Node compute capability in FLOPS.
     pub flops: f64,
     /// Link bandwidth in bytes/second (scaled per link by
@@ -42,6 +48,7 @@ impl Platform {
     pub fn paper_default_on(topo: Arc<dyn Topology>) -> Self {
         Platform {
             topo,
+            index: Arc::new(OnceLock::new()),
             flops: 6e9,
             bandwidth: 10e9 / 8.0, // 10 Gbps in bytes/s
             latency: 1e-6,
@@ -62,6 +69,7 @@ impl Platform {
     ) -> Self {
         Platform {
             topo,
+            index: Arc::new(OnceLock::new()),
             flops,
             bandwidth: bandwidth_bps / 8.0,
             latency: latency_s,
@@ -84,8 +92,26 @@ impl Platform {
     }
 
     /// Fault-free hop-count distance matrix over the compute nodes.
+    ///
+    /// Allocates a fresh matrix per call; hot paths should prefer
+    /// [`Platform::topo_index`] and borrow
+    /// [`TopoIndex::clean_hops`] instead (same values bit-for-bit).
     pub fn hop_matrix(&self) -> DistanceMatrix {
         DistanceMatrix::from_topology(self.topo.as_ref())
+    }
+
+    /// The shared [`TopoIndex`] for this platform, built on first use and
+    /// reused by every clone (worker threads included — `OnceLock` makes
+    /// the one-time build race-free).
+    pub fn topo_index(&self) -> &TopoIndex {
+        self.index.get_or_init(|| TopoIndex::build(self.topo.as_ref()))
+    }
+
+    /// Shared handle to the lazily-built index cell, so consumers that
+    /// outlive a `&Platform` borrow (the FATT plugin's transit registry)
+    /// can reuse the same one-time build instead of duplicating it.
+    pub(crate) fn index_cell(&self) -> Arc<OnceLock<TopoIndex>> {
+        Arc::clone(&self.index)
     }
 
     /// Failure-domain count (torus X-lines / fat-tree pods / dragonfly
@@ -164,5 +190,23 @@ mod tests {
         // cloning shares the topology
         let clone = df.clone();
         assert_eq!(clone.num_nodes(), 12);
+    }
+
+    #[test]
+    fn topo_index_is_built_once_and_shared_by_clones() {
+        let p = Platform::paper_default(TorusDims::new(4, 4, 2));
+        let clone = p.clone();
+        assert!(
+            std::ptr::eq(p.topo_index(), clone.topo_index()),
+            "clones must share one index"
+        );
+        // index agrees with the allocating hop matrix bit-for-bit
+        let hops = p.hop_matrix();
+        let clean = p.topo_index().clean_hops();
+        for u in 0..p.num_nodes() {
+            for v in 0..p.num_nodes() {
+                assert_eq!(clean.get(u, v).to_bits(), hops.get(u, v).to_bits());
+            }
+        }
     }
 }

@@ -12,7 +12,9 @@ use std::time::{Duration, Instant};
 use tofa::apps::npb_dt::NpbDt;
 use tofa::batch::{run_grid, BatchConfig, BatchRunner, GridRun, Parallelism};
 use tofa::mapping::PlacementPolicy;
-use tofa::topology::{Platform, TorusDims};
+use tofa::rng::Rng;
+use tofa::tofa::eq1::{fault_aware_distance, fault_aware_distance_indexed};
+use tofa::topology::{CostWorkspace, Platform, TopoIndex, Torus, TorusDims};
 
 fn sweep(workers: usize) -> (Duration, GridRun) {
     let platform = Platform::paper_default(TorusDims::new(8, 8, 8));
@@ -46,4 +48,51 @@ fn four_worker_sweep_speedup_floor() {
         100.0 * g4.telemetry.hit_rate()
     );
     assert!(speedup >= 1.5, "speedup {speedup:.2}x below the 1.5x floor");
+}
+
+#[test]
+#[ignore = "wall-clock floor; run on a quiet machine"]
+fn eq1_incremental_speedup_floor() {
+    // the incremental Eq. 1 engine must clear >= 3x over the dense
+    // reference at the paper's scale (512 nodes, 8 faulty @ 2%); the
+    // cost_engine bench targets >= 5x on quiet hardware, this floor
+    // absorbs runner noise
+    let t = Torus::new(TorusDims::new(8, 8, 8));
+    let index = TopoIndex::build(&t);
+    let mut ws = CostWorkspace::new();
+    let mut rng = Rng::new(42);
+    let mut outage = vec![0.0; 512];
+    for f in rng.sample_distinct(512, 8) {
+        outage[f] = 0.02;
+    }
+    // bit-identity sanity before timing
+    let dense = fault_aware_distance(&t, &outage);
+    let fast = fault_aware_distance_indexed(&index, &t, &outage, &mut ws);
+    for (a, b) in dense.as_slice().iter().zip(fast.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let reps = 20;
+    let best = |f: &mut dyn FnMut()| -> Duration {
+        (0..reps)
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed()
+            })
+            .min()
+            .unwrap()
+    };
+    let dense_t = best(&mut || {
+        std::hint::black_box(fault_aware_distance(&t, &outage));
+    });
+    let fast_t = best(&mut || {
+        std::hint::black_box(fault_aware_distance_indexed(&index, &t, &outage, &mut ws));
+    });
+    let speedup = dense_t.as_secs_f64() / fast_t.as_secs_f64();
+    println!(
+        "eq1 @ 512 nodes / 8 faulty: dense {dense_t:?}, indexed {fast_t:?}, \
+         speedup {speedup:.2}x, patched {} pairs",
+        ws.pairs_patched()
+    );
+    assert!(speedup >= 3.0, "speedup {speedup:.2}x below the 3x floor");
 }

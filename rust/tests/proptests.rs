@@ -16,10 +16,13 @@ use tofa::sim::fault::{
     WeibullLifetime,
 };
 use tofa::sim::network::{Flow, NetSim};
-use tofa::tofa::eq1::fault_aware_distance;
-use tofa::tofa::window::{find_fault_free_window, find_route_clean_window};
+use tofa::tofa::eq1::{fault_aware_distance, fault_aware_distance_indexed};
+use tofa::tofa::window::{
+    find_fault_free_window, find_route_clean_window, find_route_clean_window_indexed,
+};
 use tofa::topology::{
-    DistanceMatrix, Dragonfly, DragonflyParams, FatTree, Platform, Topology, Torus, TorusDims,
+    CostWorkspace, DistanceMatrix, Dragonfly, DragonflyParams, FatTree, Platform, TopoIndex,
+    Topology, Torus, TorusDims,
 };
 
 fn random_comm(rng: &mut Rng, n: usize, edges: usize) -> CommMatrix {
@@ -516,6 +519,170 @@ fn prop_trace_replay_is_exact_on_integer_grids() {
             let rate = w as f64 / span as f64;
             let frac = truth[n];
             assert!((rate - frac).abs() < 1e-9, "case {case} node {n}: {rate} vs {frac}");
+        }
+    }
+}
+
+/// One platform per topology family, small enough for dense reference
+/// sweeps, plus outage vectors realized from **all four** fault models
+/// (i.i.d. Bernoulli, correlated domains, Weibull lifetimes, trace
+/// replay) — the inputs the incremental cost engines must reproduce the
+/// dense implementations on, bit for bit.
+fn engine_platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(4, 4, 4)),
+        Platform::paper_default_on(Arc::new(FatTree::new(4).unwrap())),
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap(),
+        )),
+    ]
+}
+
+fn all_model_outages(plat: &Platform, rng: &mut Rng) -> Vec<(String, Vec<f64>)> {
+    let m = plat.num_nodes();
+    let k = 1 + rng.below_usize(m.min(10));
+    let p = 0.02 + 0.3 * rng.f64();
+    let nodes = rng.sample_distinct(m, k);
+    let domains = 1 + rng.below_usize(plat.num_racks());
+    let mut trace_text = format!("nodes {m}\n");
+    for &node in &nodes {
+        let start = rng.below(20);
+        trace_text.push_str(&format!("{node} {start} {}\n", start + 1 + rng.below(10)));
+    }
+    let models: Vec<Box<dyn FaultModel>> = vec![
+        Box::new(IidBernoulli::new(nodes.clone(), p, m)),
+        Box::new(CorrelatedDomains::random_racks(plat, domains, p, rng)),
+        Box::new(WeibullLifetime::from_target(nodes, 1.2, p, 1.0, m).unwrap()),
+        Box::new(TraceReplay::new(Arc::new(
+            FaultTrace::parse(trace_text.as_bytes()).unwrap(),
+        ))),
+    ];
+    models
+        .iter()
+        .map(|mo| (mo.name().to_string(), mo.true_outage()))
+        .collect()
+}
+
+#[test]
+fn prop_eq1_indexed_is_bit_identical_to_dense_for_all_models() {
+    // the incremental engine must agree with the dense reference bit for
+    // bit, for every topology family x every fault model's outage vector
+    let mut rng = Rng::new(400);
+    let mut ws = CostWorkspace::new();
+    for plat in engine_platforms() {
+        let topo = plat.topology();
+        let index = plat.topo_index();
+        let what = topo.describe();
+        for case in 0..6 {
+            for (model, outage) in all_model_outages(&plat, &mut rng) {
+                let dense = fault_aware_distance(topo, &outage);
+                let fast = fault_aware_distance_indexed(index, topo, &outage, &mut ws);
+                assert_eq!(dense.len(), fast.len());
+                for (i, (a, b)) in dense.as_slice().iter().zip(fast.as_slice()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{what} case {case} model {model} entry {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_window_indexed_returns_the_same_window_for_all_models() {
+    // not just *a* valid window — the *same* Option<Vec<usize>> the dense
+    // search returns, for every topology family x fault model x length
+    let mut rng = Rng::new(401);
+    let mut ws = CostWorkspace::new();
+    for plat in engine_platforms() {
+        let topo = plat.topology();
+        let index = plat.topo_index();
+        let n = plat.num_nodes();
+        let what = topo.describe();
+        for case in 0..6 {
+            for (model, outage) in all_model_outages(&plat, &mut rng) {
+                for len in [1usize, 2, n / 4, n / 2, n, n + 1, 1 + rng.below_usize(n)] {
+                    let dense = find_route_clean_window(&outage, len, topo);
+                    let fast = find_route_clean_window_indexed(index, &outage, len, &mut ws);
+                    assert_eq!(fast, dense, "{what} case {case} model {model} len {len}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_csr_maxmin_is_bit_identical_to_dense_reference() {
+    // the event-driven solver (touched-link active list + CSR freezes)
+    // must reproduce the dense full-array solver bit for bit, on every
+    // topology family including switch-heavy fabrics
+    let mut rng = Rng::new(402);
+    for t in all_topologies() {
+        let what = t.describe();
+        let n = t.num_nodes();
+        let mut net = NetSim::new(t.as_ref(), 1.25e9, 1e-6);
+        for case in 0..25 {
+            let nf = 1 + rng.below_usize(24);
+            let mut flows = Vec::new();
+            for _ in 0..nf {
+                let u = rng.below_usize(n);
+                let v = rng.below_usize(n);
+                let links = t
+                    .route(u, v)
+                    .iter()
+                    .map(|l| net.slot(l.src, l.dst))
+                    .collect();
+                // occasionally zero-byte / local flows to hit the
+                // instantaneous path
+                let bytes = if rng.below(10) == 0 {
+                    0.0
+                } else {
+                    (rng.below(1_000_000) + 1) as f64
+                };
+                flows.push(Flow { links, bytes });
+            }
+            let fast = net.phase_duration(&flows);
+            let dense = net.phase_duration_reference(&flows);
+            assert_eq!(fast.to_bits(), dense.to_bits(), "{what} case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_topo_index_incidence_covers_exactly_the_perturbable_pairs() {
+    // a pair is in some flaky node's incidence list iff its dense Eq. 1
+    // entry differs from the clean hops — on every family
+    let mut rng = Rng::new(403);
+    for plat in engine_platforms() {
+        let topo = plat.topology();
+        let index: &TopoIndex = plat.topo_index();
+        let n = plat.num_nodes();
+        let what = topo.describe();
+        for _ in 0..4 {
+            let flaky = rng.sample_distinct(n, 1 + rng.below_usize(4));
+            let mut outage = vec![0.0; n];
+            for &f in &flaky {
+                outage[f] = 0.1;
+            }
+            let dense = fault_aware_distance(topo, &outage);
+            let clean = index.clean_hops();
+            let mut in_lists = std::collections::HashSet::new();
+            for &f in &flaky {
+                in_lists.extend(index.pairs_through(f));
+            }
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    let perturbed = dense.get(u, v) != clean.get(u, v);
+                    if perturbed {
+                        assert!(
+                            in_lists.contains(&(u, v)),
+                            "{what}: perturbed pair ({u},{v}) missing from incidence"
+                        );
+                    }
+                }
+            }
         }
     }
 }
