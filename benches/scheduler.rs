@@ -1,0 +1,107 @@
+//! Bench for the cluster-level event-driven scheduler (`slurm::sched`):
+//! a contended 100-job workload per topology family, FIFO vs conservative
+//! backfill, default-slurm vs TOFA placement.
+//!
+//! Reports makespan, mean queue wait, utilization, abort/backfill counts,
+//! and the engine's wall-clock (events/s figure of merit), and emits
+//! `BENCH_scheduler.json` at the repo root for the perf CI artifact
+//! upload.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tofa::mapping::PlacementPolicy;
+use tofa::report::bench::{section, write_bench_json, JsonValue};
+use tofa::sim::fault::FaultSpec;
+use tofa::slurm::sched::{run_sweep, SchedConfig, WorkloadSpec};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
+
+fn platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(8, 8, 8)), // 512 nodes
+        Platform::paper_default_on(Arc::new(FatTree::new(8).unwrap())), // 128 nodes
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(9, 4, 4, 2)).unwrap(), // 144 nodes
+        )),
+    ]
+}
+
+fn main() {
+    let mut topo_payloads = Vec::new();
+    for plat in platforms() {
+        let kind = plat.topology().kind().to_string();
+        let n = plat.num_nodes();
+        section(&format!(
+            "sched: 100 jobs on {} ({n} nodes), iid {} faulty @ 2%",
+            plat.topology().describe(),
+            n / 32,
+        ));
+        let workload = WorkloadSpec::paper_like(n);
+        let fault = FaultSpec::Iid {
+            n_faulty: n / 32,
+            p_f: 0.02,
+        };
+        let cells = [
+            (PlacementPolicy::DefaultSlurm, false),
+            (PlacementPolicy::Tofa, false),
+            (PlacementPolicy::DefaultSlurm, true),
+            (PlacementPolicy::Tofa, true),
+        ];
+        let config = SchedConfig {
+            seed: 42,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let sweep = run_sweep(&plat, &workload, &fault, &cells, &config, 4).unwrap();
+        let wall = t0.elapsed();
+        let mut cell_payloads = Vec::new();
+        for cell in &sweep {
+            let r = &cell.result;
+            let queue = if cell.backfill { "backfill" } else { "fifo" };
+            println!(
+                "{:<44} makespan {:>9.2} s  wait {:>8.3} s  util {:>5.1}%  \
+                 aborts {:>3}  backfills {:>3}  events {:>5}",
+                format!("{kind}/{queue}/{}", cell.placement),
+                r.makespan_s,
+                r.mean_wait_s,
+                100.0 * r.utilization,
+                r.total_aborts,
+                r.backfills,
+                r.trace.len(),
+            );
+            cell_payloads.push(
+                JsonValue::obj()
+                    .set("placement", JsonValue::Str(cell.placement.to_string()))
+                    .set("queue", JsonValue::Str(queue.to_string()))
+                    .set("makespan_s", JsonValue::Num(r.makespan_s))
+                    .set("mean_wait_s", JsonValue::Num(r.mean_wait_s))
+                    .set("max_wait_s", JsonValue::Num(r.max_wait_s))
+                    .set("utilization", JsonValue::Num(r.utilization))
+                    .set("completed", JsonValue::Int(r.completed as u64))
+                    .set("failed", JsonValue::Int(r.failed as u64))
+                    .set("exhausted", JsonValue::Int(r.exhausted as u64))
+                    .set("total_aborts", JsonValue::Int(r.total_aborts as u64))
+                    .set("backfills", JsonValue::Int(r.backfills as u64))
+                    .set("trace_events", JsonValue::Int(r.trace.len() as u64)),
+            );
+        }
+        let events: usize = sweep.iter().map(|c| c.result.trace.len()).sum();
+        println!(
+            "{:<44} {:>12?}  ({:.0} events/s across 4 cells)",
+            format!("{kind}/sweep-wallclock"),
+            wall,
+            events as f64 / wall.as_secs_f64(),
+        );
+        topo_payloads.push(
+            JsonValue::obj()
+                .set("topology", JsonValue::Str(kind))
+                .set("nodes", JsonValue::Int(n as u64))
+                .set("wall_ns", JsonValue::Int(wall.as_nanos() as u64))
+                .set("cells", JsonValue::Arr(cell_payloads)),
+        );
+    }
+    let payload = JsonValue::obj()
+        .set("jobs", JsonValue::Int(100))
+        .set("topologies", JsonValue::Arr(topo_payloads));
+    write_bench_json("scheduler", payload).expect("write BENCH_scheduler.json");
+}

@@ -72,6 +72,10 @@ pub struct InstanceOutcome {
     pub completion_s: f64,
     /// Aborts (restarts) the instance went through.
     pub aborts: u32,
+    /// True if the instance hit `max_restarts` and gave up: its
+    /// `completion_s` holds only abort penalties and **no** successful
+    /// run. These used to be silently counted like successes.
+    pub exhausted: bool,
 }
 
 /// Result of one batch run.
@@ -83,6 +87,10 @@ pub struct BatchResult {
     pub aborted_instances: usize,
     /// Total aborts (restarts).
     pub total_aborts: usize,
+    /// Instances that hit `max_restarts` and never completed (0 at the
+    /// paper's parameters; nonzero values flag that `completion_s`
+    /// under-reports the batch).
+    pub exhausted_instances: usize,
     /// Instances in the batch.
     pub instances: usize,
     /// Fault-free single-run duration under this placement.
@@ -95,9 +103,15 @@ pub struct BatchResult {
 }
 
 impl BatchResult {
-    /// Fraction of instances that aborted at least once.
+    /// Fraction of instances that aborted at least once. An empty batch
+    /// has ratio 0.0 (used to be NaN, which the JSON emitter then turned
+    /// into a missing/`null` field downstream).
     pub fn abort_ratio(&self) -> f64 {
-        self.aborted_instances as f64 / self.instances as f64
+        if self.instances == 0 {
+            0.0
+        } else {
+            self.aborted_instances as f64 / self.instances as f64
+        }
     }
 }
 
@@ -185,7 +199,7 @@ impl BatchRunner {
         let outage = self.estimate_outage(scenario, config.heartbeat_rounds, rng);
         let placement =
             self.fans
-                .select(policy, &self.comm, &self.platform, &outage, rng)?;
+                .select(policy, &self.comm, &self.platform, &outage, None, rng)?;
         let assignment = placement.assignment;
         // simulator-local stats give *exact* per-run cache attribution
         // even when other grid cells hammer the shared cache concurrently
@@ -206,6 +220,7 @@ impl BatchRunner {
             let mut ctx = profile.fault_ctx(i as u64);
             let mut completion = 0.0f64;
             let mut aborts = 0u32;
+            let mut exhausted = false;
             loop {
                 let down = scenario.sample_down(&ctx, &mut irng);
                 match profile.outcome(&down) {
@@ -220,6 +235,9 @@ impl BatchRunner {
                         aborts += 1;
                         ctx.attempt = aborts;
                         if aborts >= config.max_restarts {
+                            // give-up is flagged, not silently counted
+                            // like a success
+                            exhausted = true;
                             break;
                         }
                     }
@@ -228,6 +246,7 @@ impl BatchRunner {
             InstanceOutcome {
                 completion_s: completion,
                 aborts,
+                exhausted,
             }
         });
 
@@ -235,11 +254,15 @@ impl BatchRunner {
         let mut completion = 0.0f64;
         let mut aborted_instances = 0usize;
         let mut total_aborts = 0usize;
+        let mut exhausted_instances = 0usize;
         for o in &outcomes {
             completion += o.completion_s;
             total_aborts += o.aborts as usize;
             if o.aborts > 0 {
                 aborted_instances += 1;
+            }
+            if o.exhausted {
+                exhausted_instances += 1;
             }
         }
         let stats1 = self.sim.stats();
@@ -252,6 +275,7 @@ impl BatchRunner {
             completion_s: completion,
             aborted_instances,
             total_aborts,
+            exhausted_instances,
             instances: config.instances,
             success_run_s,
             outcomes,
@@ -285,7 +309,27 @@ mod tests {
             .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
             .unwrap();
         assert_eq!(res.aborted_instances, 0);
+        assert_eq!(res.exhausted_instances, 0);
         assert!((res.completion_s - 5.0 * res.success_run_s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_batch_has_zero_abort_ratio() {
+        // regression: 0 instances used to yield NaN, which then emitted a
+        // null/malformed field in BENCH_*.json payloads
+        let (mut r, plat) = runner(8);
+        let scenario = FaultScenario::none(plat.num_nodes());
+        let cfg = BatchConfig {
+            instances: 0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1);
+        let res = r
+            .run_batch(PlacementPolicy::DefaultSlurm, &scenario, &cfg, &mut rng)
+            .unwrap();
+        assert_eq!(res.instances, 0);
+        assert_eq!(res.abort_ratio(), 0.0);
+        assert!(res.abort_ratio().is_finite());
     }
 
     #[test]
@@ -327,6 +371,10 @@ mod tests {
             .unwrap();
         assert_eq!(res.aborted_instances, 2);
         assert_eq!(res.total_aborts, 6);
+        // silent-exhaustion regression: both instances gave up and are
+        // flagged as such — completion_s holds only abort penalties
+        assert_eq!(res.exhausted_instances, 2);
+        assert!(res.outcomes.iter().all(|o| o.exhausted));
         assert!((res.completion_s - 6.0 * res.success_run_s).abs() < 1e-9);
     }
 
@@ -358,6 +406,7 @@ mod tests {
             );
             assert_eq!(par.aborted_instances, serial.aborted_instances);
             assert_eq!(par.total_aborts, serial.total_aborts);
+            assert_eq!(par.exhausted_instances, serial.exhausted_instances);
         }
     }
 

@@ -18,6 +18,7 @@ use tofa::report::{fmt_secs, improvement_pct, Table};
 use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
 use tofa::sim::fault::{FaultSpec, FaultTrace};
+use tofa::slurm::sched::{run_sweep, SchedConfig, WorkloadSpec};
 use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
 
 type Result<T> = std::result::Result<T, Error>;
@@ -161,6 +162,179 @@ impl FaultCliOpts {
             ))),
         }
     }
+}
+
+/// `repro sched` options (cluster-level event-driven scheduler).
+#[derive(Debug, Clone)]
+pub struct SchedCliOpts {
+    /// Jobs in the workload (`--jobs`).
+    pub jobs: usize,
+    /// Mean interarrival gap in simulated seconds; 0 = batch dump
+    /// (`--arrival`).
+    pub arrival_s: f64,
+    /// Queueing policy: `fifo` | `backfill` (`--policy`, `--backfill`).
+    pub policy: String,
+    /// Job-size mix `ranks:weight,...`; empty = platform-scaled default
+    /// (`--mix`).
+    pub mix: String,
+    /// Faulty-node count for the fault spec (`--n-faulty`).
+    pub n_faulty: usize,
+    /// Heartbeat health-epoch period, seconds; 0 = off (`--hb-period`).
+    pub hb_period_s: f64,
+    /// Restart budget per job (`--max-restarts`).
+    pub max_restarts: u32,
+    /// Reduced-size smoke run for CI (`--smoke`).
+    pub smoke: bool,
+}
+
+impl Default for SchedCliOpts {
+    fn default() -> Self {
+        SchedCliOpts {
+            jobs: 100,
+            arrival_s: 0.0,
+            policy: "fifo".to_string(),
+            mix: String::new(),
+            n_faulty: 16,
+            hb_period_s: 0.0,
+            max_restarts: 100,
+            smoke: false,
+        }
+    }
+}
+
+impl SchedCliOpts {
+    fn parse_mix(&self) -> Result<Vec<(usize, f64)>> {
+        let mk_err = |s: &str| Error::Slurm(format!("bad --mix entry: {s} (want ranks:weight)"));
+        let mix: Vec<(usize, f64)> = self
+            .mix
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|entry| {
+                let (r, w) = entry.split_once(':').ok_or_else(|| mk_err(entry))?;
+                let ranks: usize = r.parse().map_err(|_| mk_err(entry))?;
+                let weight: f64 = w.parse().map_err(|_| mk_err(entry))?;
+                // reject degenerate entries here, at the CLI boundary —
+                // the workload generator would otherwise assert/panic
+                if ranks == 0 || !weight.is_finite() || weight <= 0.0 {
+                    return Err(Error::Slurm(format!(
+                        "bad --mix entry: {entry} (ranks must be > 0, weight > 0)"
+                    )));
+                }
+                Ok((ranks, weight))
+            })
+            .collect::<Result<_>>()?;
+        if mix.is_empty() {
+            return Err(Error::Slurm("--mix has no entries".into()));
+        }
+        Ok(mix)
+    }
+}
+
+/// `repro sched`: push a workload of concurrent MPI jobs through the
+/// cluster-level event-driven scheduler (shared `NodeLedger` allocation
+/// state, FIFO or conservative backfill) and report makespan / queue wait
+/// / utilization per placement policy, next to the Fig. 4/5-style abort
+/// statistics.
+pub fn sched(
+    results: &Path,
+    seed: u64,
+    workers: usize,
+    topo_cli: &TopoCliOpts,
+    fault_cli: &FaultCliOpts,
+    opts: &SchedCliOpts,
+) -> Result<()> {
+    let platform = topo_cli.platform()?;
+    let n = platform.num_nodes();
+    let backfill = match opts.policy.as_str() {
+        "fifo" => false,
+        "backfill" => true,
+        other => {
+            return Err(Error::Slurm(format!(
+                "unknown --policy: {other} (expected fifo|backfill)"
+            )))
+        }
+    };
+    let mut workload = WorkloadSpec::paper_like(n);
+    workload.seed = seed ^ 0x5eed;
+    workload.jobs = opts.jobs;
+    workload.mean_interarrival_s = opts.arrival_s;
+    if !opts.mix.is_empty() {
+        workload.mix = opts.parse_mix()?;
+    }
+    if opts.smoke {
+        workload.jobs = workload.jobs.min(12);
+        workload.steps = 2;
+    }
+    let n_faulty = opts.n_faulty.min(n / 2);
+    let fault = fault_cli.spec(&platform, n_faulty)?;
+    let config = SchedConfig {
+        placement: PlacementPolicy::Tofa, // overridden per cell
+        backfill,
+        max_restarts: opts.max_restarts,
+        heartbeat_period_s: opts.hb_period_s,
+        seed,
+    };
+    let cells = [
+        (PlacementPolicy::DefaultSlurm, backfill),
+        (PlacementPolicy::Tofa, backfill),
+    ];
+    let policy_name = if backfill { "backfill" } else { "fifo" };
+    let title = format!(
+        "Cluster scheduler: {} jobs, {} queue, {}; {}",
+        workload.jobs,
+        policy_name,
+        platform.topology().describe(),
+        fault.describe()
+    );
+    let wall = std::time::Instant::now();
+    let sweep = run_sweep(&platform, &workload, &fault, &cells, &config, workers)?;
+    let wall = wall.elapsed();
+    let mut t = Table::new(
+        &title,
+        &[
+            "placement",
+            "makespan (s)",
+            "mean wait (s)",
+            "max wait (s)",
+            "util (%)",
+            "aborts",
+            "exhausted",
+            "failed",
+            "backfills",
+        ],
+    );
+    for cell in &sweep {
+        let r = &cell.result;
+        t.row(vec![
+            cell.placement.to_string(),
+            fmt_secs(r.makespan_s),
+            fmt_secs(r.mean_wait_s),
+            fmt_secs(r.max_wait_s),
+            format!("{:.1}", 100.0 * r.utilization),
+            r.total_aborts.to_string(),
+            r.exhausted.to_string(),
+            r.failed.to_string(),
+            r.backfills.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let (d, tf) = (&sweep[0].result, &sweep[1].result);
+    println!(
+        "batch completion (makespan): default {} vs tofa {} ({:.1}% improvement)  \
+         mean wait: default {} vs tofa {}",
+        fmt_secs(d.makespan_s),
+        fmt_secs(tf.makespan_s),
+        improvement_pct(d.makespan_s, tf.makespan_s),
+        fmt_secs(d.mean_wait_s),
+        fmt_secs(tf.mean_wait_s),
+    );
+    println!(
+        "[sched] {} jobs x 2 placements, wall-clock {:.3} s\n",
+        workload.jobs,
+        wall.as_secs_f64()
+    );
+    t.save_csv(results)?;
+    Ok(())
 }
 
 /// Parse an app spec: `lammps:<ranks>` | `npb-dt` | `stencil:<px>x<py>` |

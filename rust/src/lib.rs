@@ -105,6 +105,9 @@ pub mod prelude {
     };
     pub use crate::sim::{simulate_job, JobOutcome};
     pub use crate::slurm::controller::Controller;
+    pub use crate::slurm::sched::{
+        ClusterScheduler, NodeLedger, SchedConfig, SchedResult, WorkloadSpec,
+    };
     pub use crate::tofa::placer::{TofaConfig, TofaPlacer};
     pub use crate::topology::{
         dragonfly::{Dragonfly, DragonflyParams},

@@ -21,6 +21,8 @@ COMMANDS:
   fig4                 Figure 4: NPB-DT batches, 16 faulty nodes @ 2%
   fig5a                Figure 5a: LAMMPS batches, 8 faulty nodes @ 2%
   fig5b                Figure 5b: LAMMPS batches, 16 faulty nodes @ 2%
+  sched                cluster-level event-driven scheduler: concurrent
+                       jobs on shared allocation state (FIFO/backfill)
   all                  run every experiment in sequence
   profile              print an app's comm-graph stats + heatmap
   place                compare mapping quality across policies
@@ -55,6 +57,19 @@ FAULT MODEL (fig4/fig5a/fig5b/all):
                        (default: 1.0)
   --fault-trace=<path> down-interval trace file, required for trace
                        (format: header 'nodes N', then 'node start end')
+
+SCHEDULER (sched):
+  --jobs=<n>           workload size                (default: 100)
+  --arrival=<s>        mean interarrival gap; 0 = all jobs at t=0
+                       (default: 0)
+  --policy=<p>         fifo | backfill              (default: fifo)
+  --backfill           shorthand for --policy=backfill
+  --mix=<r:w,...>      job-size mix, ranks:weight pairs
+                       (default: n/32, n/16, n/8 at 50/30/20%)
+  --n-faulty=<n>       faulty nodes for the fault model (default: 16)
+  --hb-period=<s>      heartbeat health-epoch period; 0 = off (default: 0)
+  --max-restarts=<n>   per-job restart budget       (default: 100)
+  --smoke              reduced-size CI smoke run
 ";
 
 struct Opts {
@@ -66,6 +81,7 @@ struct Opts {
     app: String,
     topo: experiments::TopoCliOpts,
     fault: experiments::FaultCliOpts,
+    sched: experiments::SchedCliOpts,
 }
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
@@ -78,6 +94,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         app: "lammps:64".to_string(),
         topo: experiments::TopoCliOpts::default(),
         fault: experiments::FaultCliOpts::default(),
+        sched: experiments::SchedCliOpts::default(),
     };
     for a in args {
         if let Some(v) = a.strip_prefix("--results=") {
@@ -114,6 +131,24 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             o.fault.horizon_s = v.parse().map_err(|_| format!("bad --fault-horizon: {v}"))?;
         } else if let Some(v) = a.strip_prefix("--fault-trace=") {
             o.fault.trace_path = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--jobs=") {
+            o.sched.jobs = v.parse().map_err(|_| format!("bad --jobs: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--arrival=") {
+            o.sched.arrival_s = v.parse().map_err(|_| format!("bad --arrival: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--policy=") {
+            o.sched.policy = v.to_string();
+        } else if a == "--backfill" {
+            o.sched.policy = "backfill".to_string();
+        } else if let Some(v) = a.strip_prefix("--mix=") {
+            o.sched.mix = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--n-faulty=") {
+            o.sched.n_faulty = v.parse().map_err(|_| format!("bad --n-faulty: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--hb-period=") {
+            o.sched.hb_period_s = v.parse().map_err(|_| format!("bad --hb-period: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--max-restarts=") {
+            o.sched.max_restarts = v.parse().map_err(|_| format!("bad --max-restarts: {v}"))?;
+        } else if a == "--smoke" {
+            o.sched.smoke = true;
         } else {
             return Err(format!("unknown option: {a}"));
         }
@@ -171,6 +206,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             opts.workers,
             &opts.topo,
             &opts.fault,
+        )?,
+        "sched" => experiments::sched(
+            r,
+            opts.seed,
+            opts.workers,
+            &opts.topo,
+            &opts.fault,
+            &opts.sched,
         )?,
         "all" => {
             experiments::fig1(r)?;

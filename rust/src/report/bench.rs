@@ -119,6 +119,9 @@ impl JsonValue {
     fn render_into(&self, out: &mut String) {
         match self {
             JsonValue::Num(x) if x.is_finite() => out.push_str(&format!("{x}")),
+            // JSON has no NaN/Infinity literal: serialize explicitly as
+            // null so the field is present (and obviously degenerate)
+            // downstream instead of producing a malformed document
             JsonValue::Num(_) => out.push_str("null"),
             JsonValue::Int(x) => out.push_str(&format!("{x}")),
             JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
@@ -317,6 +320,24 @@ mod tests {
         assert_eq!(
             v.render(),
             r#"{"name":"a\"b\\c\nd","x":1.5,"n":7,"ok":true,"bad":null,"arr":[1,2]}"#
+        );
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_explicit_null() {
+        // every non-finite flavor, at top level and nested: the document
+        // must stay valid JSON with the key present
+        let v = JsonValue::obj()
+            .set("nan", JsonValue::Num(f64::NAN))
+            .set("inf", JsonValue::Num(f64::INFINITY))
+            .set("ninf", JsonValue::Num(f64::NEG_INFINITY))
+            .set(
+                "arr",
+                JsonValue::Arr(vec![JsonValue::Num(1.0), JsonValue::Num(f64::NAN)]),
+            );
+        assert_eq!(
+            v.render(),
+            r#"{"nan":null,"inf":null,"ninf":null,"arr":[1,null]}"#
         );
     }
 

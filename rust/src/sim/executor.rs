@@ -203,6 +203,19 @@ impl JobProfile {
         crate::sim::fault::FaultCtx::new(instance, self.success_s)
     }
 
+    /// Resolve one run into the scheduler's event terms: `(duration,
+    /// aborted)`. The duration a run **holds its allocation** is the
+    /// fault-free makespan either way — a completed run takes `success_s`
+    /// and an aborted run costs one success interval before the restart
+    /// (the paper's exact accounting) — so this single value feeds the
+    /// event heap of [`crate::slurm::sched`] directly.
+    pub fn resolve(&self, down: &[bool]) -> (f64, bool) {
+        match self.outcome(down) {
+            JobOutcome::Completed { seconds } => (seconds, false),
+            JobOutcome::Aborted { .. } => (self.success_s, true),
+        }
+    }
+
     /// Resolve one instance against a down-state vector.
     pub fn outcome(&self, down: &[bool]) -> JobOutcome {
         debug_assert_eq!(down.len(), self.touched.len());
@@ -427,6 +440,25 @@ mod tests {
         // the second simulator never solved the network itself
         assert_eq!(reuse.stats().solves, 0);
         assert!(reuse.stats().cache_hits > 0);
+    }
+
+    #[test]
+    fn profile_resolve_matches_outcome() {
+        let app = RingApp::new(4, 1e6, 2);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(4, 16).unwrap();
+        let mut sim = Simulator::new(&app, &plat);
+        let profile = sim.prepare(&p.assignment);
+        let clean = vec![false; 16];
+        let (d, aborted) = profile.resolve(&clean);
+        assert!(!aborted);
+        assert_eq!(d.to_bits(), profile.success_s.to_bits());
+        let mut down = clean;
+        down[p.assignment[1]] = true;
+        let (d, aborted) = profile.resolve(&down);
+        assert!(aborted, "down rank host must abort");
+        // an aborted run still holds the allocation for one interval
+        assert_eq!(d.to_bits(), profile.success_s.to_bits());
     }
 
     #[test]

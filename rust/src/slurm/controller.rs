@@ -1,11 +1,13 @@
 //! slurmctld-lite: the controller.
 //!
-//! Owns the job queue, the plugin set, and the node daemons. The flow for
-//! one job mirrors the paper's Fig. 2: srun submits a request (optionally
-//! carrying the LoadMatrix comm graph); FANS combines the comm graph, the
-//! FATT routing/topology info, and the Fault-Aware-Slurmctld outage
-//! estimates to produce the task layout `T`; the job then executes (here:
-//! in the SimGrid-lite simulator, driven by [`crate::batch`]).
+//! Owns the job queue, the plugin set, the node-occupancy ledger, and the
+//! node daemons. The flow for one job mirrors the paper's Fig. 2: srun
+//! submits a request (optionally carrying the LoadMatrix comm graph); FANS
+//! combines the comm graph, the FATT routing/topology info, and the
+//! Fault-Aware-Slurmctld outage estimates to produce the task layout `T`
+//! — restricted to the ledger's free nodes; the job then executes (here:
+//! in the SimGrid-lite simulator, driven by [`crate::batch`] for dedicated
+//! batches or [`crate::slurm::sched`] for a shared cluster).
 
 use super::jobs::{JobRecord, JobRequest, JobState};
 use super::noded::NodeHandle;
@@ -14,19 +16,21 @@ use super::plugins::fatt::FattPlugin;
 use super::plugins::fault_ctld::FaultCtldPlugin;
 use super::plugins::node_state::NodeStatePlugin;
 use super::queue::JobQueue;
+use super::sched::NodeLedger;
 use crate::error::Result;
 use crate::mapping::Placement;
 use crate::rng::Rng;
 use crate::slurm::heartbeat::OutagePolicy;
 use crate::topology::Platform;
 
-/// The controller: queue + plugins + (optionally) live node daemons.
+/// The controller: queue + plugins + ledger + (optionally) node daemons.
 pub struct Controller {
     platform: Platform,
     queue: JobQueue,
     fans: FansPlugin,
     fatt: FattPlugin,
     fault_ctld: FaultCtldPlugin,
+    ledger: NodeLedger,
     nodes: Vec<NodeHandle>,
     rng: Rng,
     /// Injected estimates (offline mode); overrides heartbeat-derived ones.
@@ -46,6 +50,7 @@ impl Controller {
             fans: FansPlugin::default(),
             fatt,
             fault_ctld: FaultCtldPlugin::new(n, OutagePolicy::Empirical),
+            ledger: NodeLedger::new(n),
             nodes: Vec::new(),
             rng: Rng::new(seed),
             offline_estimates: None,
@@ -102,37 +107,131 @@ impl Controller {
         self.queue.submit(request)
     }
 
+    /// Submit a job arriving at simulated time `now`.
+    pub fn submit_at(&mut self, request: JobRequest, now: f64) -> u64 {
+        self.queue.submit_at(request, now)
+    }
+
     /// Allocate nodes for the next pending job; returns the record with
-    /// its assignment filled in (state = Running).
+    /// its assignment filled in (state = Running) and the nodes held in
+    /// the ledger.
+    ///
+    /// If resource selection fails the job is **not** dropped: the record
+    /// is parked in `finished` as [`JobState::Failed`] with the error
+    /// recorded, so every submitted job stays accounted for (it used to
+    /// vanish — neither pending nor finished).
     pub fn schedule_next(&mut self) -> Option<Result<JobRecord>> {
-        let mut record = self.queue.next()?;
+        self.try_schedule_at(0)
+    }
+
+    /// Like [`Controller::schedule_next`] for the pending job at queue
+    /// position `pos` (backfill pulls candidates from behind the head).
+    pub fn try_schedule_at(&mut self, pos: usize) -> Option<Result<JobRecord>> {
+        let mut record = self.queue.take_at(pos)?;
         let outage = self.outage_estimates();
         let comm = match &record.request.comm_graph {
             Some(c) => c.clone(),
             None => crate::commgraph::CommMatrix::new(record.request.ranks),
         };
+        let free = self.ledger.free_nodes();
         let placement: Result<Placement> = self.fans.select(
             record.request.distribution,
             &comm,
             &self.platform,
             &outage,
+            Some(&free),
             &mut self.rng,
         );
-        Some(placement.map(|p| {
-            record.assignment = Some(p.assignment);
-            record.state = JobState::Running;
-            record
-        }))
+        let placement = placement.and_then(|p| {
+            self.ledger.allocate(record.id, &p.assignment)?;
+            Ok(p)
+        });
+        match placement {
+            Ok(p) => {
+                record.assignment = Some(p.assignment);
+                record.state = JobState::Running;
+                Some(Ok(record))
+            }
+            Err(e) => {
+                // job-loss bugfix: park the record as Failed instead of
+                // dropping it on the floor
+                record.error = Some(e.to_string());
+                self.queue.finish(record, JobState::Failed);
+                Some(Err(e))
+            }
+        }
     }
 
-    /// Mark a job finished.
+    /// Mark a job finished: release its ledger allocation and retire the
+    /// record. `state` must be terminal (asserted by the queue).
     pub fn complete(&mut self, record: JobRecord, state: JobState) {
+        self.ledger.release(record.id);
         self.queue.finish(record, state);
+    }
+
+    /// Mark a job finished with its simulated outcome: fills
+    /// `completion_s`, `aborts`, and `end_s` on the record (they used to
+    /// stay `None`/0 forever), releases the allocation, and retires it.
+    pub fn complete_with(
+        &mut self,
+        mut record: JobRecord,
+        state: JobState,
+        completion_s: f64,
+        aborts: u32,
+        end_s: f64,
+    ) {
+        record.completion_s = Some(completion_s);
+        record.aborts = aborts;
+        record.end_s = Some(end_s);
+        self.complete(record, state);
+    }
+
+    /// Re-enqueue a running job after an abort (scheduler resubmission):
+    /// releases its nodes and pushes the record to the queue tail.
+    pub fn resubmit(&mut self, record: JobRecord) {
+        self.ledger.release(record.id);
+        self.queue.resubmit(record);
+    }
+
+    /// Undo a tentative [`Controller::try_schedule_at`]: release the
+    /// allocation and put the record back at queue position `pos`
+    /// (conservative backfill probes placements this way).
+    pub fn rollback_schedule(&mut self, pos: usize, mut record: JobRecord) {
+        self.ledger.release(record.id);
+        record.state = JobState::Pending;
+        record.assignment = None;
+        self.queue.insert_at(pos, record);
+    }
+
+    /// Remove and return the pending job at queue position `pos` without
+    /// scheduling it (the scheduler's starvation drain).
+    pub fn take_pending(&mut self, pos: usize) -> Option<JobRecord> {
+        self.queue.take_at(pos)
     }
 
     /// Finished job records.
     pub fn finished(&self) -> &[JobRecord] {
         self.queue.finished()
+    }
+
+    /// Pending job count.
+    pub fn pending_len(&self) -> usize {
+        self.queue.pending_len()
+    }
+
+    /// The pending job at queue position `pos`.
+    pub fn peek_pending(&self, pos: usize) -> Option<&JobRecord> {
+        self.queue.peek_at(pos)
+    }
+
+    /// The node-occupancy ledger.
+    pub fn ledger(&self) -> &NodeLedger {
+        &self.ledger
+    }
+
+    /// Mutable ledger access (heartbeat health epochs).
+    pub fn ledger_mut(&mut self) -> &mut NodeLedger {
+        &mut self.ledger
     }
 
     /// The FATT plugin (routing oracle).
@@ -215,5 +314,69 @@ mod tests {
         assert_eq!(ctl.schedule_next().unwrap().unwrap().id, a);
         assert_eq!(ctl.schedule_next().unwrap().unwrap().id, b);
         assert!(ctl.schedule_next().is_none());
+    }
+
+    #[test]
+    fn concurrent_running_jobs_never_share_nodes() {
+        // the overlap bug: two Running jobs used to both get the full
+        // platform; the ledger now makes allocations exclusive
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut ctl = Controller::new(plat, 5);
+        ctl.submit(request(6, PlacementPolicy::DefaultSlurm));
+        ctl.submit(request(6, PlacementPolicy::DefaultSlurm));
+        let a = ctl.schedule_next().unwrap().unwrap();
+        let b = ctl.schedule_next().unwrap().unwrap();
+        let an = a.assignment.clone().unwrap();
+        let bn = b.assignment.clone().unwrap();
+        for n in &bn {
+            assert!(!an.contains(n), "node {n} allocated twice");
+        }
+        // block over the remaining free nodes is sequential after a's
+        assert_eq!(an, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(bn, vec![6, 7, 8, 9, 10, 11]);
+        ctl.ledger().assert_consistent();
+        assert_eq!(ctl.ledger().num_busy(), 12);
+        ctl.complete(a, JobState::Completed);
+        assert_eq!(ctl.ledger().num_busy(), 6);
+        ctl.complete(b, JobState::Completed);
+        assert_eq!(ctl.ledger().num_free(), 64);
+    }
+
+    #[test]
+    fn unplaceable_job_is_parked_as_failed_not_lost() {
+        // job-loss regression: more ranks than free nodes used to make
+        // the record vanish (neither pending nor finished)
+        let plat = Platform::paper_default(TorusDims::new(2, 2, 2)); // 8 nodes
+        let mut ctl = Controller::new(plat, 6);
+        ctl.submit(request(16, PlacementPolicy::DefaultSlurm));
+        let r = ctl.schedule_next().unwrap();
+        assert!(r.is_err());
+        assert_eq!(ctl.pending_len(), 0);
+        assert_eq!(ctl.finished().len(), 1, "job lost from accounting");
+        let rec = &ctl.finished()[0];
+        assert_eq!(rec.state, JobState::Failed);
+        assert!(rec.error.as_deref().unwrap().contains("ranks"), "{rec:?}");
+        // the failed attempt must not leak ledger state
+        assert_eq!(ctl.ledger().num_free(), 8);
+    }
+
+    #[test]
+    fn complete_with_fills_outcome_fields() {
+        // dead-fields regression: completion_s / aborts / end_s used to
+        // stay empty forever
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut ctl = Controller::new(plat, 7);
+        ctl.submit_at(request(4, PlacementPolicy::DefaultSlurm), 1.5);
+        let mut rec = ctl.schedule_next().unwrap().unwrap();
+        rec.start_s = Some(2.0);
+        ctl.complete_with(rec, JobState::Completed, 3.25, 2, 5.25);
+        let done = &ctl.finished()[0];
+        assert_eq!(done.state, JobState::Completed);
+        assert_eq!(done.completion_s, Some(3.25));
+        assert_eq!(done.aborts, 2);
+        assert_eq!(done.submit_s, 1.5);
+        assert_eq!(done.end_s, Some(5.25));
+        assert!((done.wait_s().unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(ctl.ledger().num_free(), 64);
     }
 }

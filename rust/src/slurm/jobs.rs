@@ -23,6 +23,21 @@ pub enum JobState {
     Running,
     Completed,
     Aborted,
+    /// Terminal failure: the job could never be placed (resource-selection
+    /// error) or exhausted its restart budget. Unlike `Aborted` — which a
+    /// scheduler resubmits — a `Failed` job leaves the system.
+    Failed,
+}
+
+impl JobState {
+    /// True for states a job can be parked in `finished` under. The queue
+    /// asserts this, so a record can never be retired mid-lifecycle.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::Aborted | JobState::Failed
+        )
+    }
 }
 
 /// A job record tracked by the controller.
@@ -40,6 +55,14 @@ pub struct JobRecord {
     pub completion_s: Option<f64>,
     /// Abort count (restarts performed).
     pub aborts: u32,
+    /// Simulated submission (arrival) time.
+    pub submit_s: f64,
+    /// Simulated time of the job's **first** launch (queue wait ends).
+    pub start_s: Option<f64>,
+    /// Simulated time the job reached a terminal state.
+    pub end_s: Option<f64>,
+    /// Why the job failed, for `Failed` records.
+    pub error: Option<String>,
 }
 
 impl JobRecord {
@@ -52,7 +75,16 @@ impl JobRecord {
             assignment: None,
             completion_s: None,
             aborts: 0,
+            submit_s: 0.0,
+            start_s: None,
+            end_s: None,
+            error: None,
         }
+    }
+
+    /// Queue wait: first launch minus arrival (`None` until launched).
+    pub fn wait_s(&self) -> Option<f64> {
+        self.start_s.map(|s| s - self.submit_s)
     }
 }
 
@@ -74,5 +106,33 @@ mod tests {
         assert_eq!(r.state, JobState::Pending);
         assert!(r.assignment.is_none());
         assert_eq!(r.aborts, 0);
+        assert_eq!(r.submit_s, 0.0);
+        assert!(r.start_s.is_none() && r.end_s.is_none() && r.error.is_none());
+        assert!(r.wait_s().is_none());
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(!JobState::Pending.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Completed.is_terminal());
+        assert!(JobState::Aborted.is_terminal());
+        assert!(JobState::Failed.is_terminal());
+    }
+
+    #[test]
+    fn wait_is_start_minus_submit() {
+        let mut r = JobRecord::new(
+            0,
+            JobRequest {
+                name: "x".into(),
+                ranks: 1,
+                distribution: PlacementPolicy::DefaultSlurm,
+                comm_graph: None,
+            },
+        );
+        r.submit_s = 2.0;
+        r.start_s = Some(5.5);
+        assert!((r.wait_s().unwrap() - 3.5).abs() < 1e-12);
     }
 }

@@ -12,6 +12,9 @@
 //!   *FANS* (fault-aware node selection = TOFA).
 //! * [`srun`] — the user front-end (`--distribution=tofa --load-matrix=G`).
 //! * [`protocol`] / [`jobs`] / [`queue`] — messages, job records, FIFO.
+//! * [`sched`] — the cluster-level discrete-event scheduler: concurrent
+//!   jobs on the shared [`sched::NodeLedger`] occupancy state, FIFO +
+//!   conservative backfill, abort -> resubmit, heartbeat health epochs.
 
 //! Ground-truth fault behaviour (which nodes are down, when) lives in
 //! [`crate::sim::fault`]: a [`crate::sim::fault::FaultScenario`] *emulates*
@@ -27,4 +30,5 @@ pub mod noded;
 pub mod plugins;
 pub mod protocol;
 pub mod queue;
+pub mod sched;
 pub mod srun;

@@ -9,12 +9,19 @@
 //! When the job does not request `--distribution=tofa`, FANS falls through
 //! to the standard policies so TOFA "does not interfere with the standard
 //! resource allocation path of Slurm".
+//!
+//! On a shared cluster the controller's
+//! [`crate::slurm::sched::NodeLedger`] owns which nodes are actually
+//! available; [`FansPlugin::select`] takes that candidate set as an
+//! optional mask. With `None` (a dedicated cluster — the batch engine's
+//! mode) selection is over the full platform, bit-identical to the
+//! pre-scheduler code.
 
 use crate::commgraph::CommMatrix;
 use crate::error::Result;
 use crate::mapping::{self, Placement, PlacementPolicy};
 use crate::rng::Rng;
-use crate::tofa::placer::{TofaPlacer, TofaPlacement};
+use crate::tofa::placer::{TofaPlacement, TofaPlacer};
 use crate::topology::Platform;
 
 /// The FANS plugin.
@@ -34,22 +41,54 @@ impl FansPlugin {
     /// * `policy` — the srun `--distribution` value.
     /// * `comm` — communication graph (required for greedy/scotch/tofa).
     /// * `outage` — per-node outage estimates from the heartbeat plugin.
+    /// * `candidates` — the ledger's free nodes (ascending), or `None`
+    ///   for the whole platform. Every policy then selects only from the
+    ///   candidates: the shared [`crate::topology::TopoIndex`] clean hop
+    ///   matrix is extracted to the candidate set for the standard
+    ///   policies, and the TOFA window/Eq. 1 paths run mask-aware.
     pub fn select(
         &self,
         policy: PlacementPolicy,
         comm: &CommMatrix,
         platform: &Platform,
         outage: &[f64],
+        candidates: Option<&[usize]>,
         rng: &mut Rng,
     ) -> Result<Placement> {
-        match policy {
-            PlacementPolicy::Tofa => self.placer.placement(comm, platform, outage),
-            _ => {
-                // borrow the platform's shared clean hop matrix instead of
-                // rebuilding an O(n^2) matrix per selection (bit-identical
-                // values; see TopoIndex)
-                let dist = platform.topo_index().clean_hops();
-                mapping::place(policy, comm, dist, rng)
+        // an all-free ledger is the dedicated-cluster case: drop the mask
+        // so the standard policies borrow the shared clean hop matrix
+        // instead of cloning an O(n^2) extract per selection (results are
+        // bit-identical — the masked paths reduce to the unmasked ones
+        // when every node is a candidate)
+        let candidates = candidates.filter(|free| free.len() < platform.num_nodes());
+        match candidates {
+            None => match policy {
+                PlacementPolicy::Tofa => self.placer.placement(comm, platform, outage),
+                _ => {
+                    // borrow the platform's shared clean hop matrix instead
+                    // of rebuilding an O(n^2) matrix per selection
+                    // (bit-identical values; see TopoIndex)
+                    let dist = platform.topo_index().clean_hops();
+                    mapping::place(policy, comm, dist, rng)
+                }
+            },
+            Some(free) => {
+                if policy == PlacementPolicy::Tofa {
+                    let mut mask = vec![false; platform.num_nodes()];
+                    for &n in free {
+                        mask[n] = true;
+                    }
+                    return self.placer.placement_within(comm, platform, outage, &mask);
+                }
+                // standard policies run on the clean hop matrix restricted
+                // to the candidates, then relabel back to platform ids —
+                // block placement over the extract is exactly Slurm's
+                // "sequential over available nodes"
+                let sub = platform.topo_index().clean_hops().extract(free);
+                let local = mapping::place(policy, comm, &sub, rng)?;
+                Ok(Placement::new(
+                    local.assignment.iter().map(|&li| free[li]).collect(),
+                ))
             }
         }
     }
@@ -85,7 +124,7 @@ mod tests {
         let mut rng = Rng::new(5);
         for policy in PlacementPolicy::all() {
             let p = fans
-                .select(policy, &comm, &plat, &outage, &mut rng)
+                .select(policy, &comm, &plat, &outage, None, &mut rng)
                 .unwrap();
             p.validate(64).unwrap();
             assert_eq!(p.num_ranks(), 16, "{policy}");
@@ -116,10 +155,96 @@ mod tests {
         let fans = FansPlugin::default();
         let mut rng = Rng::new(8);
         let p = fans
-            .select(PlacementPolicy::Tofa, &comm, &plat, &model.true_outage(), &mut rng)
+            .select(
+                PlacementPolicy::Tofa,
+                &comm,
+                &plat,
+                &model.true_outage(),
+                None,
+                &mut rng,
+            )
             .unwrap();
         for n in plat.rack_members(0) {
             assert!(!p.assignment.contains(&n), "used flaky-rack node {n}");
+        }
+    }
+
+    #[test]
+    fn every_policy_respects_the_candidate_mask() {
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let outage = vec![0.0; 64];
+        // only every other node free — a heavily fragmented ledger
+        let free: Vec<usize> = (0..64).step_by(2).collect();
+        let fans = FansPlugin::default();
+        let mut rng = Rng::new(21);
+        for policy in PlacementPolicy::all() {
+            let p = fans
+                .select(policy, &comm, &plat, &outage, Some(&free), &mut rng)
+                .unwrap();
+            p.validate(64).unwrap();
+            for &n in &p.assignment {
+                assert!(free.contains(&n), "{policy} used busy node {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_candidate_set_matches_unmasked_selection() {
+        // the all-free fast path must be bit-identical to passing None
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut outage = vec![0.0; 64];
+        outage[5] = 0.3;
+        let all: Vec<usize> = (0..64).collect();
+        let fans = FansPlugin::default();
+        for policy in PlacementPolicy::all() {
+            let mut rng_a = Rng::new(31);
+            let mut rng_b = Rng::new(31);
+            let unmasked = fans
+                .select(policy, &comm, &plat, &outage, None, &mut rng_a)
+                .unwrap();
+            let masked = fans
+                .select(policy, &comm, &plat, &outage, Some(&all), &mut rng_b)
+                .unwrap();
+            assert_eq!(masked, unmasked, "{policy}");
+        }
+    }
+
+    #[test]
+    fn block_over_candidates_is_sequential_over_free_nodes() {
+        let app = LammpsProxy::tiny(4, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let free = vec![3usize, 5, 9, 10, 40, 41];
+        let fans = FansPlugin::default();
+        let mut rng = Rng::new(1);
+        let p = fans
+            .select(
+                PlacementPolicy::DefaultSlurm,
+                &comm,
+                &plat,
+                &vec![0.0; 64],
+                Some(&free),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(p.assignment, vec![3, 5, 9, 10]);
+    }
+
+    #[test]
+    fn selection_fails_cleanly_when_candidates_are_too_few() {
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let free = vec![0usize, 1, 2];
+        let fans = FansPlugin::default();
+        let mut rng = Rng::new(2);
+        for policy in PlacementPolicy::all() {
+            let r = fans.select(policy, &comm, &plat, &vec![0.0; 64], Some(&free), &mut rng);
+            assert!(r.is_err(), "{policy} placed 8 ranks on 3 free nodes");
         }
     }
 }

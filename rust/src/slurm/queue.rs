@@ -20,10 +20,26 @@ impl JobQueue {
 
     /// Enqueue a request; returns the assigned job id.
     pub fn submit(&mut self, request: JobRequest) -> u64 {
+        self.submit_at(request, 0.0)
+    }
+
+    /// Enqueue a request arriving at simulated time `now`.
+    pub fn submit_at(&mut self, request: JobRequest, now: f64) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.pending.push_back(JobRecord::new(id, request));
+        let mut record = JobRecord::new(id, request);
+        record.submit_s = now;
+        self.pending.push_back(record);
         id
+    }
+
+    /// Re-enqueue an existing record at the queue tail (scheduler
+    /// resubmission after an abort). The record keeps its id, original
+    /// arrival time, and abort count.
+    pub fn resubmit(&mut self, mut record: JobRecord) {
+        record.state = JobState::Pending;
+        record.assignment = None;
+        self.pending.push_back(record);
     }
 
     /// Pop the next pending job.
@@ -31,8 +47,37 @@ impl JobQueue {
         self.pending.pop_front()
     }
 
-    /// Record a finished job.
+    /// Pop the pending job at position `pos` (0 = head). Backfill pulls
+    /// candidates from behind the head with this.
+    pub fn take_at(&mut self, pos: usize) -> Option<JobRecord> {
+        self.pending.remove(pos)
+    }
+
+    /// Put a record back at position `pos` (backfill rollback).
+    pub fn insert_at(&mut self, pos: usize, record: JobRecord) {
+        let pos = pos.min(self.pending.len());
+        self.pending.insert(pos, record);
+    }
+
+    /// The pending job at position `pos`, if any.
+    pub fn peek_at(&self, pos: usize) -> Option<&JobRecord> {
+        self.pending.get(pos)
+    }
+
+    /// Iterate the pending records in queue order.
+    pub fn iter_pending(&self) -> impl Iterator<Item = &JobRecord> {
+        self.pending.iter()
+    }
+
+    /// Record a finished job. `state` must be terminal
+    /// ([`JobState::is_terminal`]) — retiring a `Pending`/`Running` record
+    /// is a scheduler bug (it is how jobs used to vanish from accounting).
     pub fn finish(&mut self, mut record: JobRecord, state: JobState) {
+        assert!(
+            state.is_terminal(),
+            "job {} finished in non-terminal state {state:?}",
+            record.id
+        );
         record.state = state;
         self.finished.push(record);
     }
@@ -81,5 +126,57 @@ mod tests {
         q.finish(r, JobState::Completed);
         assert_eq!(q.finished().len(), 1);
         assert_eq!(q.finished()[0].state, JobState::Completed);
+    }
+
+    #[test]
+    fn submit_at_records_arrival_time() {
+        let mut q = JobQueue::new();
+        q.submit_at(req(), 3.25);
+        let r = q.next().unwrap();
+        assert_eq!(r.submit_s, 3.25);
+    }
+
+    #[test]
+    fn take_and_insert_preserve_order() {
+        let mut q = JobQueue::new();
+        let a = q.submit(req());
+        let b = q.submit(req());
+        let c = q.submit(req());
+        // pull the middle job, then put it back where it was
+        let mid = q.take_at(1).unwrap();
+        assert_eq!(mid.id, b);
+        assert_eq!(q.pending_len(), 2);
+        q.insert_at(1, mid);
+        let order: Vec<u64> = q.iter_pending().map(|r| r.id).collect();
+        assert_eq!(order, vec![a, b, c]);
+        assert!(q.take_at(7).is_none());
+    }
+
+    #[test]
+    fn resubmit_goes_to_the_tail_and_stays_pending() {
+        let mut q = JobQueue::new();
+        let a = q.submit_at(req(), 1.0);
+        let b = q.submit(req());
+        let mut r = q.next().unwrap();
+        r.aborts = 2;
+        r.state = JobState::Running;
+        r.assignment = Some(vec![0, 1]);
+        q.resubmit(r);
+        assert_eq!(q.next().unwrap().id, b);
+        let back = q.next().unwrap();
+        assert_eq!(back.id, a);
+        assert_eq!(back.state, JobState::Pending);
+        assert_eq!(back.aborts, 2);
+        assert_eq!(back.submit_s, 1.0);
+        assert!(back.assignment.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-terminal state")]
+    fn finish_rejects_non_terminal_states() {
+        let mut q = JobQueue::new();
+        q.submit(req());
+        let r = q.next().unwrap();
+        q.finish(r, JobState::Running);
     }
 }

@@ -1,0 +1,293 @@
+//! `NodeLedger` — per-node occupancy state for the cluster scheduler.
+//!
+//! The controller used to hand every job the full platform: two "Running"
+//! jobs silently overlapped on the same nodes and queue wait was never
+//! modeled. The ledger is the shared allocation state that fixes that:
+//! every node is `Free`, `Busy(job)`, or `Down`, allocations are exclusive
+//! (allocating a non-free node is an error), and the FANS/TOFA selection
+//! path draws its candidate set from [`NodeLedger::free_nodes`].
+//!
+//! Fragmentation statistics ([`NodeLedger::largest_free_run`],
+//! [`NodeLedger::free_runs`]) expose the quantity TOFA's consecutive-id
+//! window search actually depends on: under contention the free set
+//! fragments, clean windows disappear, and placement falls back to the
+//! Eq. 1 fault-weighted path — the candidate-set-shape effect the
+//! QAP-mapping literature observes for restricted node sets.
+
+use crate::error::{Error, Result};
+
+/// Occupancy state of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Available for allocation.
+    Free,
+    /// Held by the job with this id.
+    Busy(u64),
+    /// Administratively down (heartbeat epoch marked it unhealthy).
+    Down,
+}
+
+/// Per-node free/busy/down ledger with exclusive allocate/release.
+#[derive(Debug, Clone)]
+pub struct NodeLedger {
+    state: Vec<NodeState>,
+    free: usize,
+    /// Live allocations in allocation order: `(job id, nodes)`.
+    /// A `Vec` (not a hash map) so every walk over it is deterministic.
+    allocs: Vec<(u64, Vec<usize>)>,
+}
+
+impl NodeLedger {
+    /// All-free ledger over `num_nodes` nodes.
+    pub fn new(num_nodes: usize) -> Self {
+        NodeLedger {
+            state: vec![NodeState::Free; num_nodes],
+            free: num_nodes,
+            allocs: Vec::new(),
+        }
+    }
+
+    /// Total nodes tracked.
+    pub fn num_nodes(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Currently free nodes.
+    pub fn num_free(&self) -> usize {
+        self.free
+    }
+
+    /// Currently busy nodes.
+    pub fn num_busy(&self) -> usize {
+        self.allocs.iter().map(|(_, ns)| ns.len()).sum()
+    }
+
+    /// Currently down nodes.
+    pub fn num_down(&self) -> usize {
+        self.state.len() - self.free - self.num_busy()
+    }
+
+    /// State of one node.
+    pub fn state_of(&self, node: usize) -> NodeState {
+        self.state[node]
+    }
+
+    /// True if `node` is free.
+    pub fn is_free(&self, node: usize) -> bool {
+        self.state[node] == NodeState::Free
+    }
+
+    /// Ascending ids of the free nodes — the candidate set FANS selects
+    /// from.
+    pub fn free_nodes(&self) -> Vec<usize> {
+        (0..self.state.len()).filter(|&n| self.is_free(n)).collect()
+    }
+
+    /// Jobs currently holding nodes, in allocation order.
+    pub fn running_jobs(&self) -> impl Iterator<Item = (u64, &[usize])> {
+        self.allocs.iter().map(|(j, ns)| (*j, ns.as_slice()))
+    }
+
+    /// Exclusively allocate `nodes` to `job`. Every node must be free and
+    /// the job must not already hold an allocation; violating either is an
+    /// error (and means the caller bypassed the candidate mask).
+    pub fn allocate(&mut self, job: u64, nodes: &[usize]) -> Result<()> {
+        if self.allocs.iter().any(|(j, _)| *j == job) {
+            return Err(Error::Slurm(format!("job {job} already holds nodes")));
+        }
+        for (i, &n) in nodes.iter().enumerate() {
+            match self.state.get(n) {
+                Some(NodeState::Free) => {}
+                Some(s) => {
+                    return Err(Error::Slurm(format!(
+                        "job {job} allocation overlaps node {n} ({s:?})"
+                    )))
+                }
+                None => {
+                    return Err(Error::Slurm(format!(
+                        "job {job} allocation references node {n} beyond the platform"
+                    )))
+                }
+            }
+            if nodes[..i].contains(&n) {
+                return Err(Error::Slurm(format!(
+                    "job {job} allocation lists node {n} twice"
+                )));
+            }
+        }
+        for &n in nodes {
+            self.state[n] = NodeState::Busy(job);
+        }
+        self.free -= nodes.len();
+        self.allocs.push((job, nodes.to_vec()));
+        Ok(())
+    }
+
+    /// Release whatever `job` holds; returns the freed node ids (empty if
+    /// the job held nothing — release is idempotent).
+    pub fn release(&mut self, job: u64) -> Vec<usize> {
+        let Some(pos) = self.allocs.iter().position(|(j, _)| *j == job) else {
+            return Vec::new();
+        };
+        let (_, nodes) = self.allocs.remove(pos);
+        for &n in &nodes {
+            debug_assert_eq!(self.state[n], NodeState::Busy(job));
+            self.state[n] = NodeState::Free;
+        }
+        self.free += nodes.len();
+        nodes
+    }
+
+    /// Apply a health epoch: free nodes flagged in `down` go `Down`, down
+    /// nodes no longer flagged return to `Free`. Busy nodes are left
+    /// untouched — a failure under a running job surfaces as that job's
+    /// abort, and the node re-enters the ledger at release time.
+    pub fn apply_health(&mut self, down: &[bool]) {
+        assert_eq!(down.len(), self.state.len());
+        for (n, &d) in down.iter().enumerate() {
+            match (self.state[n], d) {
+                (NodeState::Free, true) => {
+                    self.state[n] = NodeState::Down;
+                    self.free -= 1;
+                }
+                (NodeState::Down, false) => {
+                    self.state[n] = NodeState::Free;
+                    self.free += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Length of the longest run of consecutive free node ids (the largest
+    /// window TOFA could possibly use).
+    pub fn largest_free_run(&self) -> usize {
+        let mut best = 0usize;
+        let mut run = 0usize;
+        for n in 0..self.state.len() {
+            if self.is_free(n) {
+                run += 1;
+                best = best.max(run);
+            } else {
+                run = 0;
+            }
+        }
+        best
+    }
+
+    /// Number of maximal free runs (fragmentation: more runs for the same
+    /// free count = a more shredded candidate set).
+    pub fn free_runs(&self) -> usize {
+        let mut runs = 0usize;
+        let mut in_run = false;
+        for n in 0..self.state.len() {
+            match (self.is_free(n), in_run) {
+                (true, false) => {
+                    runs += 1;
+                    in_run = true;
+                }
+                (false, true) => in_run = false,
+                _ => {}
+            }
+        }
+        runs
+    }
+
+    /// Internal-consistency audit (used by tests and debug assertions):
+    /// allocation lists and per-node states must agree, and the free count
+    /// must match the state vector.
+    pub fn assert_consistent(&self) {
+        let mut owner = vec![None::<u64>; self.state.len()];
+        for (job, nodes) in &self.allocs {
+            for &n in nodes {
+                assert!(
+                    owner[n].is_none(),
+                    "node {n} allocated to jobs {} and {job}",
+                    owner[n].unwrap()
+                );
+                owner[n] = Some(*job);
+                assert_eq!(self.state[n], NodeState::Busy(*job));
+            }
+        }
+        let free = self
+            .state
+            .iter()
+            .filter(|&&s| s == NodeState::Free)
+            .count();
+        assert_eq!(free, self.free, "free count drifted");
+        for (n, s) in self.state.iter().enumerate() {
+            if let NodeState::Busy(j) = s {
+                assert_eq!(owner[n], Some(*j), "node {n} busy without allocation");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut l = NodeLedger::new(8);
+        assert_eq!(l.num_free(), 8);
+        l.allocate(1, &[0, 2, 5]).unwrap();
+        assert_eq!(l.num_free(), 5);
+        assert_eq!(l.num_busy(), 3);
+        assert_eq!(l.state_of(2), NodeState::Busy(1));
+        assert_eq!(l.free_nodes(), vec![1, 3, 4, 6, 7]);
+        l.assert_consistent();
+        let freed = l.release(1);
+        assert_eq!(freed, vec![0, 2, 5]);
+        assert_eq!(l.num_free(), 8);
+        l.assert_consistent();
+        // release is idempotent
+        assert!(l.release(1).is_empty());
+    }
+
+    #[test]
+    fn overlapping_allocation_is_rejected() {
+        let mut l = NodeLedger::new(4);
+        l.allocate(1, &[1, 2]).unwrap();
+        assert!(l.allocate(2, &[2, 3]).is_err());
+        // the failed allocation must not leak partial state
+        assert_eq!(l.state_of(3), NodeState::Free);
+        assert_eq!(l.num_free(), 2);
+        l.assert_consistent();
+        // double allocation by the same job is also rejected
+        assert!(l.allocate(1, &[3]).is_err());
+        // out-of-range node
+        assert!(l.allocate(3, &[9]).is_err());
+        // duplicate node within one request
+        assert!(l.allocate(4, &[0, 0]).is_err());
+        assert_eq!(l.num_free(), 2);
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn health_epochs_toggle_only_non_busy_nodes() {
+        let mut l = NodeLedger::new(4);
+        l.allocate(7, &[1]).unwrap();
+        l.apply_health(&[true, true, false, false]);
+        assert_eq!(l.state_of(0), NodeState::Down);
+        assert_eq!(l.state_of(1), NodeState::Busy(7), "busy survives health");
+        assert_eq!(l.num_free(), 2);
+        assert_eq!(l.num_down(), 1);
+        l.apply_health(&[false; 4]);
+        assert_eq!(l.state_of(0), NodeState::Free);
+        assert_eq!(l.num_free(), 3);
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn fragmentation_stats() {
+        let mut l = NodeLedger::new(10);
+        assert_eq!(l.largest_free_run(), 10);
+        assert_eq!(l.free_runs(), 1);
+        l.allocate(1, &[3]).unwrap();
+        l.allocate(2, &[7]).unwrap();
+        // free: 0..3, 4..7, 8..10
+        assert_eq!(l.largest_free_run(), 3);
+        assert_eq!(l.free_runs(), 3);
+    }
+}

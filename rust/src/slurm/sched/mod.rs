@@ -1,0 +1,1257 @@
+//! `slurm::sched` — a discrete-event cluster scheduler running
+//! **concurrent** jobs on shared allocation state.
+//!
+//! The paper's Section 5.2 pushes batches of 100 MPI jobs through a Slurm
+//! queue; [`crate::batch`] reproduces the *accounting* of that experiment
+//! but schedules one job at a time against an always-empty cluster. This
+//! module models the cluster itself: a [`NodeLedger`] (per-node
+//! free/busy/down occupancy owned by the
+//! [`crate::slurm::controller::Controller`]), jobs with arrival / start /
+//! end times, and an event loop over job arrivals, job completions, abort
+//! -> resubmit cycles, and heartbeat health epochs. FANS/TOFA select only
+//! from the ledger's free nodes (the candidate mask threaded through
+//! [`crate::slurm::plugins::fans::FansPlugin::select`]), so fault-aware
+//! placement now interacts with *fragmentation*: under contention the
+//! free set shreds, TOFA's consecutive-id windows vanish, and placement
+//! falls back to the Eq. 1 fault-weighted path — the candidate-set-shape
+//! effect the QAP mapping literature observes for restricted node sets.
+//!
+//! Two queueing policies:
+//!
+//! * **FIFO** — strict arrival order; the head blocks the queue until it
+//!   fits.
+//! * **Conservative backfill** — when the head does not fit, compute its
+//!   *shadow time* (the earliest instant enough capacity could exist:
+//!   exact end times of running jobs, clamped further to the next
+//!   heartbeat epoch when Down-node recovery could free capacity sooner)
+//!   and start later jobs now iff they are guaranteed to finish by then.
+//!   The simulator knows each run's exact duration at start time (where
+//!   real Slurm would trust the walltime limit), so a backfilled job can
+//!   **never** delay the head — asserted per decision via
+//!   [`SchedResult::backfill_audit`].
+//!
+//! Everything is deterministic: events are ordered by `(time, sequence)`,
+//! per-(job, attempt) fault draws come from [`Rng::stream`], and the
+//! sweep fan-out ([`run_sweep`]) shards cells with the same machinery as
+//! the batch engine, so results are bit-identical for every worker count.
+
+pub mod ledger;
+
+pub use ledger::{NodeLedger, NodeState};
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::apps::lammps_proxy::LammpsProxy;
+use crate::batch::parallel::run_sharded;
+use crate::commgraph::CommMatrix;
+use crate::error::Result;
+use crate::mapping::PlacementPolicy;
+use crate::profiler::profile_app;
+use crate::rng::Rng;
+use crate::sim::cache::PhaseCache;
+use crate::sim::executor::Simulator;
+use crate::sim::fault::{FaultCtx, FaultScenario, FaultSpec};
+use crate::slurm::controller::Controller;
+use crate::slurm::jobs::{JobRecord, JobRequest, JobState};
+use crate::topology::Platform;
+
+/// Stop pushing heartbeat epochs after this many consecutive epochs with
+/// nothing running and no arrivals left (pending jobs that the health
+/// process will clearly never unblock — e.g. permanently-down nodes — are
+/// then parked as `Failed` by the starvation drain instead of beating
+/// forever).
+const MAX_IDLE_HEARTBEATS: u32 = 1000;
+
+/// One job of a scheduler workload: an application class (ranks, steps)
+/// arriving at a simulated time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedJobSpec {
+    /// Job name (reporting).
+    pub name: String,
+    /// MPI ranks requested.
+    pub ranks: usize,
+    /// Application timesteps (LAMMPS-proxy workload intensity).
+    pub steps: usize,
+    /// Simulated arrival time.
+    pub arrival_s: f64,
+}
+
+/// Workload generator: `jobs` jobs drawn from a rank-size `mix`, arriving
+/// all at once (`mean_interarrival_s == 0`, the paper's batch dump) or as
+/// a Poisson-like process with exponential interarrival times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Jobs to generate (paper: 100).
+    pub jobs: usize,
+    /// Mean interarrival gap in simulated seconds (0 = all at t = 0).
+    pub mean_interarrival_s: f64,
+    /// `(ranks, weight)` job-size mix; weights are normalized.
+    pub mix: Vec<(usize, f64)>,
+    /// Timesteps per job (workload intensity knob).
+    pub steps: usize,
+    /// Workload RNG seed (sizes + arrival gaps).
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// A mix scaled to the platform: small (n/32) / medium (n/16) / large
+    /// (n/8) jobs at 50/30/20 %, 100 jobs, batch-dump arrivals.
+    pub fn paper_like(num_nodes: usize) -> Self {
+        let unit = (num_nodes / 32).max(2);
+        WorkloadSpec {
+            jobs: 100,
+            mean_interarrival_s: 0.0,
+            mix: vec![(unit, 0.5), (unit * 2, 0.3), (unit * 4, 0.2)],
+            steps: 3,
+            seed: 7,
+        }
+    }
+
+    /// Materialize the job list (deterministic in `self.seed`).
+    pub fn generate(&self) -> Vec<SchedJobSpec> {
+        assert!(!self.mix.is_empty(), "empty job-size mix");
+        let total_w: f64 = self.mix.iter().map(|(_, w)| w).sum();
+        assert!(total_w > 0.0, "job-size mix has zero total weight");
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64;
+        (0..self.jobs)
+            .map(|i| {
+                let mut pick = rng.f64() * total_w;
+                let mut ranks = self.mix[self.mix.len() - 1].0;
+                for &(r, w) in &self.mix {
+                    if pick < w {
+                        ranks = r;
+                        break;
+                    }
+                    pick -= w;
+                }
+                if self.mean_interarrival_s > 0.0 && i > 0 {
+                    // exponential interarrival (Poisson process)
+                    t += -self.mean_interarrival_s * (1.0 - rng.f64()).ln();
+                }
+                SchedJobSpec {
+                    name: format!("lammps:{ranks}"),
+                    ranks,
+                    steps: self.steps,
+                    arrival_s: t,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Placement policy every job requests (`--distribution`).
+    pub placement: PlacementPolicy,
+    /// Conservative backfill on top of FIFO.
+    pub backfill: bool,
+    /// Give up on a job after this many aborts (terminal `Failed`).
+    pub max_restarts: u32,
+    /// Heartbeat health-epoch period in simulated seconds (0 = disabled).
+    /// Each epoch samples a down-state from the fault scenario and flips
+    /// non-busy ledger nodes free <-> down accordingly.
+    pub heartbeat_period_s: f64,
+    /// Base seed (placement RNG + per-(job, attempt) fault streams).
+    pub seed: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            placement: PlacementPolicy::Tofa,
+            backfill: false,
+            max_restarts: 100,
+            heartbeat_period_s: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// One entry of the deterministic event trace (the scheduler's ground
+/// truth for tests: worker-count invariance compares whole traces, the
+/// no-overlap invariant replays `Start`/`End`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Simulated time of the event.
+    pub t: f64,
+    /// What happened.
+    pub kind: TraceKind,
+}
+
+/// Event trace entry kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// Job arrived in the queue.
+    Submit {
+        /// Job id.
+        job: u64,
+    },
+    /// Job launched on `nodes` (exclusive allocation).
+    Start {
+        /// Job id.
+        job: u64,
+        /// Allocated nodes.
+        nodes: Vec<usize>,
+        /// True if the launch jumped the queue via backfill.
+        backfilled: bool,
+    },
+    /// Job released its nodes; `aborted` runs are resubmitted or failed.
+    End {
+        /// Job id.
+        job: u64,
+        /// True if the run aborted (down node in the touched set).
+        aborted: bool,
+    },
+    /// Job left the system as `Failed` (unplaceable / starved / budget
+    /// exhausted).
+    Fail {
+        /// Job id.
+        job: u64,
+    },
+    /// Heartbeat health epoch applied to the ledger.
+    Heartbeat {
+        /// Epoch counter.
+        epoch: u64,
+        /// Nodes the epoch sampled as down.
+        down: usize,
+    },
+}
+
+/// One committed backfill decision, for the never-delays-the-head audit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackfillAudit {
+    /// The backfilled job.
+    pub job: u64,
+    /// The queue head it jumped over.
+    pub head: u64,
+    /// Commit time.
+    pub t: f64,
+    /// The head's shadow time at commit — a lower bound on when the head
+    /// could possibly start; the backfilled job was guaranteed (exact
+    /// durations) to release its nodes by then. Without heartbeat churn
+    /// the shadow is exact, so `head.start_s <= shadow` holds; with
+    /// health epochs the head may start later than the (recovery-
+    /// optimistic) bound, but never *because of* the backfilled job.
+    pub shadow: f64,
+}
+
+/// Result of one scheduler run.
+#[derive(Debug, Clone)]
+pub struct SchedResult {
+    /// Batch completion: time the last job left the system.
+    pub makespan_s: f64,
+    /// Mean queue wait over jobs that launched at least once.
+    pub mean_wait_s: f64,
+    /// Max queue wait.
+    pub max_wait_s: f64,
+    /// Busy node-seconds / (nodes x makespan).
+    pub utilization: f64,
+    /// Jobs that completed.
+    pub completed: usize,
+    /// Jobs that left as `Failed` without exhausting restarts
+    /// (unplaceable or starved).
+    pub failed: usize,
+    /// Jobs that exhausted their restart budget.
+    pub exhausted: usize,
+    /// Total aborts (each cost one held-allocation run interval).
+    pub total_aborts: usize,
+    /// Committed backfill decisions.
+    pub backfills: usize,
+    /// Jobs submitted.
+    pub total_jobs: usize,
+    /// Terminal job records (`squeue`-style accounting: every submitted
+    /// job appears exactly once, with times and outcome filled in).
+    pub records: Vec<JobRecord>,
+    /// Deterministic event trace.
+    pub trace: Vec<TraceEvent>,
+    /// Per-decision backfill audit.
+    pub backfill_audit: Vec<BackfillAudit>,
+}
+
+impl SchedResult {
+    /// Sum of per-job completion intervals (the paper's batch-completion
+    /// accounting: one run interval per launch, aborted or not).
+    pub fn total_completion_s(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.completion_s.unwrap_or(0.0))
+            .sum()
+    }
+}
+
+/// Discrete-event heap entry: `(time bits, sequence, event)`; times are
+/// non-negative so the f64 bit pattern orders numerically, and the
+/// sequence makes simultaneous events fire in creation order.
+type HeapEntry = Reverse<(u64, u64, Event)>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    Arrival { spec: u32 },
+    JobEnd { job: u64, aborted: bool },
+    Heartbeat { epoch: u64 },
+}
+
+/// One application class of the workload (distinct `(ranks, steps)`), with
+/// its profiled comm graph and a simulator sharing the phase cache.
+struct AppClass {
+    ranks: usize,
+    steps: usize,
+    comm: CommMatrix,
+    sim: Simulator,
+}
+
+struct RunningJob {
+    record: JobRecord,
+    end_s: f64,
+    duration: f64,
+}
+
+/// The event-driven cluster scheduler.
+pub struct ClusterScheduler {
+    platform: Platform,
+    controller: Controller,
+    config: SchedConfig,
+    scenario: FaultScenario,
+    specs: Vec<SchedJobSpec>,
+    classes: Vec<AppClass>,
+    /// spec index -> class index.
+    class_of_spec: Vec<usize>,
+    /// job id -> class index (ids are assigned sequentially at arrival).
+    class_of_job: Vec<usize>,
+    /// job id -> accumulated completion interval (paper accounting).
+    acc_completion: Vec<f64>,
+    heap: BinaryHeap<HeapEntry>,
+    seq: u64,
+    running: Vec<RunningJob>,
+    arrivals_left: usize,
+    idle_heartbeats: u32,
+    /// When the next heartbeat epoch fires (`f64::INFINITY` once the
+    /// chain stops or when heartbeats are disabled). Backfill uses it to
+    /// bound how early Down-node recovery could free capacity.
+    next_heartbeat_s: f64,
+    stream_base: u64,
+    hb_base: u64,
+    trace: Vec<TraceEvent>,
+    backfill_audit: Vec<BackfillAudit>,
+    busy_node_s: f64,
+    backfills: usize,
+    completed: usize,
+    failed: usize,
+    exhausted: usize,
+    total_aborts: usize,
+    now: f64,
+}
+
+impl ClusterScheduler {
+    /// Build a scheduler for a generated workload under a fault scenario.
+    pub fn new(
+        platform: &Platform,
+        workload: &WorkloadSpec,
+        scenario: FaultScenario,
+        config: SchedConfig,
+    ) -> Self {
+        Self::with_jobs(platform, workload.generate(), scenario, config)
+    }
+
+    /// Build a scheduler for an explicit job list with a private phase
+    /// cache.
+    pub fn with_jobs(
+        platform: &Platform,
+        specs: Vec<SchedJobSpec>,
+        scenario: FaultScenario,
+        config: SchedConfig,
+    ) -> Self {
+        Self::with_jobs_cached(platform, specs, scenario, config, Arc::new(PhaseCache::new()))
+    }
+
+    /// Build a scheduler for an explicit job list reusing `cache` —
+    /// sweeps pass one cache so cells replay each other's network solves
+    /// (sharing never changes results; see [`PhaseCache`]). Outage
+    /// estimates are oracle (the scenario's true per-node vector), the
+    /// mode the batch experiments default to.
+    pub fn with_jobs_cached(
+        platform: &Platform,
+        specs: Vec<SchedJobSpec>,
+        scenario: FaultScenario,
+        config: SchedConfig,
+        cache: Arc<PhaseCache>,
+    ) -> Self {
+        assert_eq!(scenario.num_nodes(), platform.num_nodes());
+        let mut controller = Controller::new(platform.clone(), config.seed);
+        controller.set_outage_estimates(&scenario.true_outage());
+        // one simulator per distinct app class, all on the shared cache
+        let mut classes: Vec<AppClass> = Vec::new();
+        let mut class_of_spec = Vec::with_capacity(specs.len());
+        for s in &specs {
+            let found = classes
+                .iter()
+                .position(|c| c.ranks == s.ranks && c.steps == s.steps);
+            let idx = match found {
+                Some(i) => i,
+                None => {
+                    let app = LammpsProxy::tiny(s.ranks, s.steps);
+                    classes.push(AppClass {
+                        ranks: s.ranks,
+                        steps: s.steps,
+                        comm: profile_app(&app).volume,
+                        sim: Simulator::with_cache(&app, platform, Arc::clone(&cache)),
+                    });
+                    classes.len() - 1
+                }
+            };
+            class_of_spec.push(idx);
+        }
+        let mut seed_rng = Rng::new(config.seed ^ 0x5eed_5c4e_d011);
+        let stream_base = seed_rng.next_u64();
+        let hb_base = seed_rng.next_u64();
+        let mut sched = ClusterScheduler {
+            platform: platform.clone(),
+            controller,
+            config,
+            scenario,
+            specs,
+            classes,
+            class_of_spec,
+            class_of_job: Vec::new(),
+            acc_completion: Vec::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            running: Vec::new(),
+            arrivals_left: 0,
+            idle_heartbeats: 0,
+            next_heartbeat_s: f64::INFINITY,
+            stream_base,
+            hb_base,
+            trace: Vec::new(),
+            backfill_audit: Vec::new(),
+            busy_node_s: 0.0,
+            backfills: 0,
+            completed: 0,
+            failed: 0,
+            exhausted: 0,
+            total_aborts: 0,
+            now: 0.0,
+        };
+        for i in 0..sched.specs.len() {
+            let t = sched.specs[i].arrival_s;
+            sched.push_event(t, Event::Arrival { spec: i as u32 });
+        }
+        sched.arrivals_left = sched.specs.len();
+        if sched.config.heartbeat_period_s > 0.0 {
+            let period = sched.config.heartbeat_period_s;
+            sched.next_heartbeat_s = period;
+            sched.push_event(period, Event::Heartbeat { epoch: 1 });
+        }
+        sched
+    }
+
+    fn push_event(&mut self, t: f64, ev: Event) {
+        debug_assert!(t >= 0.0 && t.is_finite());
+        self.seq += 1;
+        self.heap.push(Reverse((t.to_bits(), self.seq, ev)));
+    }
+
+    /// Run the event loop to completion and report.
+    pub fn run(mut self) -> SchedResult {
+        while let Some(Reverse((t_bits, _, ev))) = self.heap.pop() {
+            let t = f64::from_bits(t_bits);
+            self.now = t;
+            self.handle(t, ev);
+            // drain every event at this timestamp before scheduling, so
+            // simultaneous completions free all their nodes first
+            while let Some(&Reverse((nt, _, _))) = self.heap.peek() {
+                if nt != t_bits {
+                    break;
+                }
+                let Reverse((_, _, ev)) = self.heap.pop().unwrap();
+                self.handle(t, ev);
+            }
+            self.try_schedule(t);
+        }
+        // no events left: anything still pending can never start (e.g.
+        // permanently down nodes under FIFO) — park it as Failed so no
+        // job ever silently disappears from the accounting
+        while let Some(mut record) = self.controller.take_pending(0) {
+            record.error = Some("starved: no remaining event can free enough nodes".into());
+            let id = record.id;
+            let t = self.now;
+            self.controller.complete(record, JobState::Failed);
+            self.failed += 1;
+            self.trace.push(TraceEvent {
+                t,
+                kind: TraceKind::Fail { job: id },
+            });
+        }
+        self.report()
+    }
+
+    fn handle(&mut self, t: f64, ev: Event) {
+        match ev {
+            Event::Arrival { spec } => {
+                let s = &self.specs[spec as usize];
+                let class = self.class_of_spec[spec as usize];
+                let request = JobRequest {
+                    name: s.name.clone(),
+                    ranks: s.ranks,
+                    distribution: self.config.placement,
+                    comm_graph: Some(self.classes[class].comm.clone()),
+                };
+                let id = self.controller.submit_at(request, t);
+                debug_assert_eq!(id as usize, self.class_of_job.len());
+                self.class_of_job.push(class);
+                self.acc_completion.push(0.0);
+                self.arrivals_left -= 1;
+                self.trace.push(TraceEvent {
+                    t,
+                    kind: TraceKind::Submit { job: id },
+                });
+            }
+            Event::JobEnd { job, aborted } => {
+                let pos = self
+                    .running
+                    .iter()
+                    .position(|r| r.record.id == job)
+                    .expect("JobEnd for a job that is not running");
+                let rj = self.running.remove(pos);
+                let mut record = rj.record;
+                let nodes = record.assignment.as_ref().map_or(0, Vec::len);
+                self.busy_node_s += rj.duration * nodes as f64;
+                self.acc_completion[job as usize] += rj.duration;
+                self.trace.push(TraceEvent {
+                    t,
+                    kind: TraceKind::End { job, aborted },
+                });
+                if !aborted {
+                    let acc = self.acc_completion[job as usize];
+                    let aborts = record.aborts;
+                    self.controller
+                        .complete_with(record, JobState::Completed, acc, aborts, t);
+                    self.completed += 1;
+                } else {
+                    record.aborts += 1;
+                    self.total_aborts += 1;
+                    if record.aborts >= self.config.max_restarts {
+                        record.error = Some(format!(
+                            "exhausted restart budget after {} aborts",
+                            record.aborts
+                        ));
+                        let acc = self.acc_completion[job as usize];
+                        let aborts = record.aborts;
+                        self.controller
+                            .complete_with(record, JobState::Failed, acc, aborts, t);
+                        self.exhausted += 1;
+                        self.trace.push(TraceEvent {
+                            t,
+                            kind: TraceKind::Fail { job },
+                        });
+                    } else {
+                        // abort -> resubmit at the queue tail: the restart
+                        // re-queues like a fresh arrival (original
+                        // submit_s and abort count are kept)
+                        self.controller.resubmit(record);
+                    }
+                }
+            }
+            Event::Heartbeat { epoch } => {
+                let ctx = FaultCtx::new(epoch, self.config.heartbeat_period_s);
+                let mut rng = Rng::stream(self.hb_base, epoch);
+                let down = self.scenario.sample_down(&ctx, &mut rng);
+                self.controller.ledger_mut().apply_health(&down);
+                self.trace.push(TraceEvent {
+                    t,
+                    kind: TraceKind::Heartbeat {
+                        epoch,
+                        down: down.iter().filter(|&&d| d).count(),
+                    },
+                });
+                // keep beating while there is work the epochs can affect;
+                // give up after a long streak of idle epochs (pending jobs
+                // blocked on nodes that never come back) so the loop
+                // terminates and the starvation drain accounts for them
+                if self.running.is_empty() && self.arrivals_left == 0 {
+                    self.idle_heartbeats += 1;
+                } else {
+                    self.idle_heartbeats = 0;
+                }
+                let work_left = self.arrivals_left > 0
+                    || !self.running.is_empty()
+                    || self.controller.pending_len() > 0;
+                if work_left && self.idle_heartbeats < MAX_IDLE_HEARTBEATS {
+                    self.next_heartbeat_s = t + self.config.heartbeat_period_s;
+                    self.push_event(
+                        t + self.config.heartbeat_period_s,
+                        Event::Heartbeat { epoch: epoch + 1 },
+                    );
+                } else {
+                    self.next_heartbeat_s = f64::INFINITY;
+                }
+            }
+        }
+    }
+
+    /// FIFO pass: launch head jobs while they fit; when the head does not
+    /// fit, optionally backfill behind it.
+    fn try_schedule(&mut self, now: f64) {
+        loop {
+            let (head_id, ranks) = match self.controller.peek_pending(0) {
+                Some(h) => (h.id, h.request.ranks),
+                None => return,
+            };
+            let fits_now = ranks <= self.controller.ledger().num_free();
+            let fits_ever = ranks <= self.platform.num_nodes();
+            if fits_now || !fits_ever {
+                // attempt the head: placeable now, or permanently
+                // unplaceable (selection then fails and the controller
+                // parks the record as Failed — accounted, not lost)
+                match self.controller.try_schedule_at(0) {
+                    Some(Ok(record)) => self.launch_scheduled(record, now, false),
+                    Some(Err(_)) => {
+                        self.failed += 1;
+                        self.trace.push(TraceEvent {
+                            t: now,
+                            kind: TraceKind::Fail { job: head_id },
+                        });
+                    }
+                    None => return,
+                }
+                continue;
+            }
+            // head must wait for releases
+            if self.config.backfill {
+                self.backfill(now);
+            }
+            return;
+        }
+    }
+
+    /// Conservative backfill: jobs behind the head may start now iff they
+    /// are guaranteed to release their nodes by the head's shadow time.
+    fn backfill(&mut self, now: f64) {
+        let (head_id, head_ranks) = match self.controller.peek_pending(0) {
+            Some(h) => (h.id, h.request.ranks),
+            None => return,
+        };
+        // shadow time: walk running jobs by end time, accumulating the
+        // nodes they release, until the head fits
+        let mut releases: Vec<(u64, usize)> = self
+            .running
+            .iter()
+            .map(|r| (r.end_s.to_bits(), r.record.assignment.as_ref().map_or(0, Vec::len)))
+            .collect();
+        releases.sort_unstable();
+        let free = self.controller.ledger().num_free();
+        let mut avail = free;
+        let mut shadow = f64::INFINITY;
+        for &(end_bits, n) in &releases {
+            avail += n;
+            if avail >= head_ranks {
+                shadow = f64::from_bits(end_bits);
+                break;
+            }
+        }
+        // heartbeat epochs can also *add* capacity by recovering Down
+        // nodes, so with any node currently down the head might start as
+        // early as the first epoch whose recoveries (plus releases by
+        // then) cover it. Clamp the shadow to that earliest-possible
+        // start, keeping the no-delay guarantee under health churn.
+        let down = self.controller.ledger().num_down();
+        if down > 0 && self.next_heartbeat_s.is_finite() {
+            let mut avail = free + down;
+            let mut recovery_shadow = self.next_heartbeat_s.max(now);
+            if avail < head_ranks {
+                let mut found = false;
+                for &(end_bits, n) in &releases {
+                    avail += n;
+                    if avail >= head_ranks {
+                        recovery_shadow = recovery_shadow.max(f64::from_bits(end_bits));
+                        found = true;
+                        break;
+                    }
+                }
+                if !found {
+                    recovery_shadow = f64::INFINITY;
+                }
+            }
+            shadow = shadow.min(recovery_shadow);
+        }
+        if !shadow.is_finite() {
+            // even with every running job done (and every down node
+            // recovered) the head cannot fit; there is no reservation to
+            // protect and no point backfilling against it this round
+            return;
+        }
+        let mut pos = 1usize;
+        loop {
+            let (cand_id, cand_ranks) = match self.controller.peek_pending(pos) {
+                Some(c) => (c.id, c.request.ranks),
+                None => return,
+            };
+            if cand_ranks > self.controller.ledger().num_free() {
+                pos += 1;
+                continue;
+            }
+            match self.controller.try_schedule_at(pos) {
+                Some(Ok(record)) => {
+                    let class = self.class_of_job[record.id as usize];
+                    let assignment = record.assignment.clone().expect("running without nodes");
+                    let (duration, aborted) =
+                        self.resolve_run(record.id, record.aborts, class, &assignment);
+                    if now + duration <= shadow + 1e-12 {
+                        // guaranteed to be gone before the head can start
+                        self.backfill_audit.push(BackfillAudit {
+                            job: record.id,
+                            head: head_id,
+                            t: now,
+                            shadow,
+                        });
+                        self.launch(record, now, duration, aborted, true);
+                        // the candidate list shifted left; rescan at pos
+                    } else {
+                        // would overrun the shadow: roll the allocation
+                        // back and leave the job where it was
+                        self.controller.rollback_schedule(pos, record);
+                        pos += 1;
+                    }
+                }
+                Some(Err(_)) => {
+                    // capacity was pre-checked, so this is a genuine
+                    // selection failure; the record is parked Failed
+                    self.failed += 1;
+                    self.trace.push(TraceEvent {
+                        t: now,
+                        kind: TraceKind::Fail { job: cand_id },
+                    });
+                }
+                None => return,
+            }
+        }
+    }
+
+    /// Resolve and launch a freshly-scheduled head job.
+    fn launch_scheduled(&mut self, record: JobRecord, now: f64, backfilled: bool) {
+        let class = self.class_of_job[record.id as usize];
+        let assignment = record.assignment.clone().expect("running without nodes");
+        let (duration, aborted) = self.resolve_run(record.id, record.aborts, class, &assignment);
+        self.launch(record, now, duration, aborted, backfilled);
+    }
+
+    /// Exact duration + abort flag for run `attempt` of `job` under
+    /// `assignment`: one `prepare()` (phase-cache backed) plus one
+    /// down-state draw from the per-(job, attempt) RNG stream. Pure in
+    /// `(job, attempt, assignment)`, so event interleaving cannot change
+    /// outcomes.
+    fn resolve_run(
+        &mut self,
+        job: u64,
+        attempt: u32,
+        class: usize,
+        assignment: &[usize],
+    ) -> (f64, bool) {
+        let profile = self.classes[class].sim.prepare(assignment);
+        let mut ctx = profile.fault_ctx(job);
+        ctx.attempt = attempt;
+        let mut rng = Rng::stream(
+            self.stream_base ^ job.wrapping_mul(0x9E3779B97F4A7C15),
+            attempt as u64,
+        );
+        let down = self.scenario.sample_down(&ctx, &mut rng);
+        profile.resolve(&down)
+    }
+
+    fn launch(
+        &mut self,
+        mut record: JobRecord,
+        now: f64,
+        duration: f64,
+        aborted: bool,
+        backfilled: bool,
+    ) {
+        let nodes = record.assignment.clone().expect("running without nodes");
+        if record.start_s.is_none() {
+            record.start_s = Some(now);
+        }
+        let end = now + duration;
+        self.trace.push(TraceEvent {
+            t: now,
+            kind: TraceKind::Start {
+                job: record.id,
+                nodes,
+                backfilled,
+            },
+        });
+        if backfilled {
+            self.backfills += 1;
+        }
+        self.push_event(
+            end,
+            Event::JobEnd {
+                job: record.id,
+                aborted,
+            },
+        );
+        self.running.push(RunningJob {
+            record,
+            end_s: end,
+            duration,
+        });
+    }
+
+    fn report(self) -> SchedResult {
+        let records = self.controller.finished().to_vec();
+        debug_assert_eq!(
+            records.len(),
+            self.specs.len(),
+            "job lost: {} submitted, {} accounted",
+            self.specs.len(),
+            records.len()
+        );
+        let waits: Vec<f64> = records.iter().filter_map(JobRecord::wait_s).collect();
+        let mean_wait_s = if waits.is_empty() {
+            0.0
+        } else {
+            waits.iter().sum::<f64>() / waits.len() as f64
+        };
+        let max_wait_s = waits.iter().cloned().fold(0.0, f64::max);
+        // makespan is the last *job* event — never the trailing (possibly
+        // idle) heartbeat epochs, which would inflate it and deflate
+        // utilization
+        let makespan_s = records
+            .iter()
+            .filter_map(|r| r.end_s)
+            .fold(0.0, f64::max);
+        let utilization = if makespan_s > 0.0 {
+            self.busy_node_s / (self.platform.num_nodes() as f64 * makespan_s)
+        } else {
+            0.0
+        };
+        SchedResult {
+            makespan_s,
+            mean_wait_s,
+            max_wait_s,
+            utilization,
+            completed: self.completed,
+            failed: self.failed,
+            exhausted: self.exhausted,
+            total_aborts: self.total_aborts,
+            backfills: self.backfills,
+            total_jobs: self.specs.len(),
+            records,
+            trace: self.trace,
+            backfill_audit: self.backfill_audit,
+        }
+    }
+}
+
+/// One cell of a scheduler sweep: a placement policy x backfill setting.
+#[derive(Debug, Clone)]
+pub struct SchedCell {
+    /// Placement policy the cell ran under.
+    pub placement: PlacementPolicy,
+    /// Whether conservative backfill was enabled.
+    pub backfill: bool,
+    /// The run's result.
+    pub result: SchedResult,
+}
+
+/// Run a `(placement x backfill)` scheduler sweep on `workers` threads
+/// (0 = one per core, clamped to the cell count). Every cell realizes the
+/// **same** fault scenario from `(seed)` — the paper's paired comparison —
+/// and the per-cell engines are fully deterministic, so results are
+/// bit-identical for every worker count.
+pub fn run_sweep(
+    platform: &Platform,
+    workload: &WorkloadSpec,
+    fault: &FaultSpec,
+    cells: &[(PlacementPolicy, bool)],
+    config: &SchedConfig,
+    workers: usize,
+) -> Result<Vec<SchedCell>> {
+    let workers = if workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        workers
+    };
+    // force the shared TopoIndex once, like BatchRunner::new, and share
+    // one phase cache so cells reuse each other's network solves
+    platform.topo_index();
+    let cache = Arc::new(PhaseCache::new());
+    let (results, _) = run_sharded(cells.len(), workers.min(cells.len().max(1)), |i| {
+        let (placement, backfill) = cells[i];
+        let mut scen_rng = Rng::stream(config.seed, 0);
+        let scenario = fault.realize(platform, &mut scen_rng)?;
+        let cell_cfg = SchedConfig {
+            placement,
+            backfill,
+            ..config.clone()
+        };
+        let sched = ClusterScheduler::with_jobs_cached(
+            platform,
+            workload.generate(),
+            scenario,
+            cell_cfg,
+            Arc::clone(&cache),
+        );
+        Ok(SchedCell {
+            placement,
+            backfill,
+            result: sched.run(),
+        })
+    });
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TorusDims;
+
+    fn workload(jobs: usize, ranks: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            jobs,
+            mean_interarrival_s: 0.0,
+            mix: vec![(ranks, 1.0)],
+            steps: 2,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn workload_generation_is_deterministic_and_sized() {
+        let w = WorkloadSpec {
+            jobs: 20,
+            mean_interarrival_s: 0.5,
+            mix: vec![(4, 0.5), (8, 0.5)],
+            steps: 2,
+            seed: 9,
+        };
+        let a = w.generate();
+        let b = w.generate();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        assert!(a.iter().all(|j| j.ranks == 4 || j.ranks == 8));
+        // arrival times are non-decreasing
+        assert!(a.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+        assert!(a.last().unwrap().arrival_s > 0.0);
+        // batch dump: all at t = 0
+        let dump = workload(5, 4).generate();
+        assert!(dump.iter().all(|j| j.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn fault_free_fifo_completes_every_job() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let w = workload(12, 16); // 4 jobs fit at once on 64 nodes
+        let scenario = FaultScenario::none(64);
+        let sched = ClusterScheduler::new(&plat, &w, scenario, SchedConfig::default());
+        let res = sched.run();
+        assert_eq!(res.completed, 12);
+        assert_eq!(res.failed + res.exhausted, 0);
+        assert_eq!(res.records.len(), 12);
+        assert!(res.makespan_s > 0.0);
+        // contention: 12 x 16 ranks on 64 nodes => queue wait is real
+        assert!(res.mean_wait_s > 0.0, "no queue wait under 3x contention");
+        assert!(res.utilization > 0.0 && res.utilization <= 1.0 + 1e-9);
+        // every record carries its outcome
+        for r in &res.records {
+            assert_eq!(r.state, JobState::Completed);
+            assert!(r.completion_s.unwrap() > 0.0);
+            assert!(r.end_s.unwrap() >= r.start_s.unwrap());
+        }
+    }
+
+    #[test]
+    fn concurrent_jobs_share_the_makespan_but_not_nodes() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let w = workload(4, 16);
+        let scenario = FaultScenario::none(64);
+        let res = ClusterScheduler::new(&plat, &w, scenario, SchedConfig::default()).run();
+        // 4 x 16 = 64 ranks fit simultaneously: no waiting, overlap in time
+        assert_eq!(res.completed, 4);
+        assert_eq!(res.mean_wait_s, 0.0);
+        // replay the trace: occupancy must never overlap
+        let mut held: Vec<Option<u64>> = vec![None; 64];
+        let mut overlapped_in_time = false;
+        let mut running = 0usize;
+        for ev in &res.trace {
+            match &ev.kind {
+                TraceKind::Start { job, nodes, .. } => {
+                    running += 1;
+                    overlapped_in_time |= running > 1;
+                    for &n in nodes {
+                        assert!(held[n].is_none(), "node {n} double-held");
+                        held[n] = Some(*job);
+                    }
+                }
+                TraceKind::End { job, .. } => {
+                    running -= 1;
+                    for h in held.iter_mut() {
+                        if *h == Some(*job) {
+                            *h = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(overlapped_in_time, "jobs never overlapped in time");
+    }
+
+    #[test]
+    fn oversized_job_fails_but_stays_accounted() {
+        let plat = Platform::paper_default(TorusDims::new(2, 2, 2)); // 8 nodes
+        let w = WorkloadSpec {
+            jobs: 3,
+            mean_interarrival_s: 0.0,
+            mix: vec![(16, 1.0)], // 16 ranks > 8 nodes
+            steps: 2,
+            seed: 1,
+        };
+        let scenario = FaultScenario::none(8);
+        let res = ClusterScheduler::new(&plat, &w, scenario, SchedConfig::default()).run();
+        assert_eq!(res.completed, 0);
+        assert_eq!(res.failed, 3);
+        assert_eq!(res.records.len(), 3, "jobs lost from accounting");
+        assert!(res
+            .records
+            .iter()
+            .all(|r| r.state == JobState::Failed && r.error.is_some()));
+    }
+
+    #[test]
+    fn abort_resubmit_exhaustion_is_counted() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let w = workload(2, 4);
+        // nodes 0 and 4 always down: block placement lands job 0 on node
+        // 0 and job 1 on node 4, so every run of both jobs aborts
+        let scenario = FaultScenario::iid(vec![0, 4], 1.0, 16);
+        let cfg = SchedConfig {
+            placement: PlacementPolicy::DefaultSlurm,
+            max_restarts: 3,
+            ..Default::default()
+        };
+        let res = ClusterScheduler::new(&plat, &w, scenario, cfg).run();
+        assert_eq!(res.records.len(), 2);
+        assert_eq!(res.exhausted, 2);
+        assert_eq!(res.total_aborts, 6);
+        for r in &res.records {
+            assert_eq!(r.state, JobState::Failed);
+            assert_eq!(r.aborts, 3);
+            assert!(r.error.as_deref().unwrap().contains("exhausted"));
+            // each abort held the allocation for one run interval
+            assert!(r.completion_s.unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn tofa_dodges_down_nodes_where_block_aborts() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let w = workload(6, 8);
+        let scenario = FaultScenario::iid(vec![0, 1, 2], 1.0, 64);
+        let fifo = |placement| {
+            let cfg = SchedConfig {
+                placement,
+                max_restarts: 50,
+                ..Default::default()
+            };
+            ClusterScheduler::new(&plat, &w, scenario.clone(), cfg).run()
+        };
+        let tofa = fifo(PlacementPolicy::Tofa);
+        // TOFA never *hosts* ranks on the known-down nodes, so every job
+        // completes within the restart budget (a concurrent job can still
+        // abort on a flaky transit when fragmentation leaves only
+        // endpoint-clean windows)
+        assert_eq!(tofa.completed, 6);
+        assert_eq!(tofa.exhausted, 0);
+        for ev in &tofa.trace {
+            if let TraceKind::Start { job, nodes, .. } = &ev.kind {
+                for down in [0usize, 1, 2] {
+                    assert!(!nodes.contains(&down), "job {job} hosted on down {down}");
+                }
+            }
+        }
+        let block = fifo(PlacementPolicy::DefaultSlurm);
+        assert!(block.total_aborts > 0, "block dodged always-down nodes?");
+        assert!(block.total_aborts > tofa.total_aborts);
+    }
+
+    #[test]
+    fn backfill_fills_holes_and_never_delays_the_head() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        // two long 48-rank jobs head the queue; short 16-rank jobs behind
+        // them can only run early via backfill
+        let mut specs = Vec::new();
+        for i in 0..2 {
+            specs.push(SchedJobSpec {
+                name: format!("big{i}"),
+                ranks: 48,
+                steps: 6,
+                arrival_s: 0.0,
+            });
+        }
+        for i in 0..4 {
+            specs.push(SchedJobSpec {
+                name: format!("small{i}"),
+                ranks: 16,
+                steps: 2,
+                arrival_s: 0.0,
+            });
+        }
+        let scenario = FaultScenario::none(64);
+        let run = |backfill| {
+            let cfg = SchedConfig {
+                backfill,
+                ..Default::default()
+            };
+            ClusterScheduler::with_jobs(&plat, specs.clone(), scenario.clone(), cfg).run()
+        };
+        let fifo = run(false);
+        let bf = run(true);
+        assert_eq!(fifo.backfills, 0);
+        assert!(bf.backfills > 0, "workload never backfilled");
+        assert_eq!(bf.completed, fifo.completed);
+        // the audit holds: every head a job jumped over started by its
+        // shadow time
+        for a in &bf.backfill_audit {
+            let head_start = bf
+                .records
+                .iter()
+                .find(|r| r.id == a.head)
+                .and_then(|r| r.start_s)
+                .expect("head never started");
+            assert!(
+                head_start <= a.shadow + 1e-9,
+                "head {} started {} after its shadow {}",
+                a.head,
+                head_start,
+                a.shadow
+            );
+        }
+        // conservative backfill with exact durations cannot hurt makespan
+        assert!(bf.makespan_s <= fifo.makespan_s + 1e-9);
+        // and here it strictly helps the small jobs' waits
+        assert!(bf.mean_wait_s < fifo.mean_wait_s);
+    }
+
+    #[test]
+    fn heartbeat_epochs_mark_nodes_down_and_up() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let w = WorkloadSpec {
+            jobs: 6,
+            mean_interarrival_s: 0.3,
+            mix: vec![(4, 1.0)],
+            steps: 2,
+            seed: 2,
+        };
+        let scenario = FaultScenario::iid(vec![3, 9], 0.5, 16);
+        let cfg = SchedConfig {
+            heartbeat_period_s: 0.1,
+            ..Default::default()
+        };
+        let res = ClusterScheduler::new(&plat, &w, scenario, cfg).run();
+        let beats = res
+            .trace
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::Heartbeat { .. }))
+            .count();
+        assert!(beats > 0, "no heartbeat epochs fired");
+        assert_eq!(res.completed + res.failed + res.exhausted, 6);
+        // makespan pins to the last job end, not the trailing heartbeat
+        let last_end = res
+            .records
+            .iter()
+            .filter_map(|r| r.end_s)
+            .fold(0.0, f64::max);
+        assert_eq!(res.makespan_s.to_bits(), last_end.to_bits());
+        let last_beat = res
+            .trace
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::Heartbeat { .. }))
+            .map(|e| e.t)
+            .fold(0.0, f64::max);
+        assert!(
+            last_beat >= last_end,
+            "heartbeats stopped before the work did"
+        );
+    }
+
+    #[test]
+    fn backfill_under_heartbeat_churn_keeps_accounting_consistent() {
+        // health epochs add/remove capacity while backfill reserves
+        // against the (recovery-clamped) shadow: every job must still
+        // reach a terminal state and the no-overlap invariant must hold
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let w = WorkloadSpec {
+            jobs: 8,
+            mean_interarrival_s: 0.1,
+            mix: vec![(4, 0.5), (10, 0.5)],
+            steps: 2,
+            seed: 13,
+        };
+        let scenario = FaultScenario::iid(vec![2, 7, 11], 0.5, 16);
+        let cfg = SchedConfig {
+            backfill: true,
+            heartbeat_period_s: 0.05,
+            max_restarts: 30,
+            ..Default::default()
+        };
+        let res = ClusterScheduler::new(&plat, &w, scenario, cfg).run();
+        assert_eq!(res.records.len(), 8);
+        assert_eq!(res.completed + res.failed + res.exhausted, 8);
+        let mut held: Vec<Option<u64>> = vec![None; 16];
+        for ev in &res.trace {
+            match &ev.kind {
+                TraceKind::Start { job, nodes, .. } => {
+                    for &n in nodes {
+                        assert!(held[n].is_none(), "node {n} double-held");
+                        held[n] = Some(*job);
+                    }
+                }
+                TraceKind::End { job, .. } => {
+                    for h in held.iter_mut() {
+                        if *h == Some(*job) {
+                            *h = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_for_any_worker_count() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let w = workload(8, 4);
+        let fault = FaultSpec::Iid {
+            n_faulty: 3,
+            p_f: 0.4,
+        };
+        let cells = [
+            (PlacementPolicy::DefaultSlurm, false),
+            (PlacementPolicy::Tofa, false),
+            (PlacementPolicy::DefaultSlurm, true),
+            (PlacementPolicy::Tofa, true),
+        ];
+        let cfg = SchedConfig::default();
+        let run = |workers| run_sweep(&plat, &w, &fault, &cells, &cfg, workers).unwrap();
+        let serial = run(1);
+        for workers in [2usize, 4] {
+            let par = run(workers);
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.result.trace, b.result.trace, "{workers} workers");
+                assert_eq!(
+                    a.result.makespan_s.to_bits(),
+                    b.result.makespan_s.to_bits(),
+                    "{workers} workers"
+                );
+            }
+        }
+    }
+}

@@ -11,7 +11,11 @@
 use std::sync::Mutex;
 
 use super::eq1::fault_aware_distance_indexed;
-use super::window::{find_fault_free_window, find_route_clean_window_indexed};
+use super::window::{
+    find_fault_free_window, find_fault_free_window_masked, find_route_clean_window_indexed,
+    find_route_clean_window_masked,
+};
+use crate::error::Error;
 use crate::commgraph::CommMatrix;
 use crate::error::Result;
 use crate::mapping::recmap::RecursiveMapper;
@@ -148,6 +152,65 @@ impl TofaPlacer {
         }
     }
 
+    /// TOFA placement restricted to a candidate node set (Listing 1.1 on
+    /// a shared cluster): `free[n]` marks the nodes the scheduler's
+    /// [`crate::slurm::sched::NodeLedger`] currently has available. The
+    /// window search only accepts windows of free nodes (a busy node
+    /// fragments a window like a flaky one, though busy *transits* stay
+    /// acceptable — allocated nodes keep forwarding traffic), and the
+    /// fault-weighted fallback maps over the Eq. 1 matrix extracted to the
+    /// candidates, reusing the platform's shared
+    /// [`crate::topology::TopoIndex`].
+    pub fn place_within(
+        &self,
+        comm: &CommMatrix,
+        platform: &Platform,
+        outage: &[f64],
+        free: &[bool],
+    ) -> Result<TofaPlacement> {
+        let n = comm.len();
+        let topo = platform.topology();
+        let index = platform.topo_index();
+        assert_eq!(free.len(), index.num_nodes());
+        let candidates: Vec<usize> = (0..free.len()).filter(|&i| free[i]).collect();
+        if candidates.len() < n {
+            return Err(Error::Placement(format!(
+                "{n} ranks > {} free nodes",
+                candidates.len()
+            )));
+        }
+        let clean = outage.iter().all(|&p| p <= 0.0);
+        let mut ws = self.ws.lock().expect("TOFA cost workspace poisoned");
+        let window = find_route_clean_window_masked(index, outage, n, free, &mut ws)
+            .or_else(|| find_fault_free_window_masked(outage, free, n));
+        if let Some(window) = window {
+            let sub: DistanceMatrix = index.clean_hops().extract(&window);
+            let local = self.config.mapper.map(comm, &sub)?;
+            let assignment = local.assignment.iter().map(|&li| window[li]).collect();
+            return Ok(TofaPlacement {
+                assignment,
+                path: if clean {
+                    TofaPath::FaultFree
+                } else {
+                    TofaPath::Window
+                },
+            });
+        }
+        // no window inside the free set (fragmentation or faults): map
+        // over the fault-weighted matrix restricted to the candidates
+        let dist = if clean {
+            index.clean_hops().extract(&candidates)
+        } else {
+            fault_aware_distance_indexed(index, topo, outage, &mut ws).extract(&candidates)
+        };
+        let local = self.config.mapper.map(comm, &dist)?;
+        let assignment = local.assignment.iter().map(|&li| candidates[li]).collect();
+        Ok(TofaPlacement {
+            assignment,
+            path: TofaPath::FaultWeighted,
+        })
+    }
+
     /// Place and wrap as a [`Placement`].
     pub fn placement(
         &self,
@@ -156,6 +219,19 @@ impl TofaPlacer {
         outage: &[f64],
     ) -> Result<Placement> {
         Ok(Placement::new(self.place(comm, platform, outage)?.assignment))
+    }
+
+    /// [`TofaPlacer::place_within`] wrapped as a [`Placement`].
+    pub fn placement_within(
+        &self,
+        comm: &CommMatrix,
+        platform: &Platform,
+        outage: &[f64],
+        free: &[bool],
+    ) -> Result<Placement> {
+        Ok(Placement::new(
+            self.place_within(comm, platform, outage, free)?.assignment,
+        ))
     }
 }
 
@@ -256,6 +332,76 @@ mod tests {
             assert_eq!(p.path, TofaPath::FaultWeighted, "{kind}");
             Placement::new(p.assignment).validate(n).unwrap();
         }
+    }
+
+    #[test]
+    fn candidate_mask_excludes_busy_nodes_entirely() {
+        let (c, plat) = setup(32);
+        let mut outage = vec![0.0; 512];
+        outage[40] = 0.05;
+        // nodes 0..64 busy: neither the window nor the fallback may use
+        // them, flaky or not
+        let mut free = vec![true; 512];
+        for f in free.iter_mut().take(64) {
+            *f = false;
+        }
+        let p = TofaPlacer::default()
+            .place_within(&c, &plat, &outage, &free)
+            .unwrap();
+        for &node in &p.assignment {
+            assert!(free[node], "busy node {node} used");
+        }
+        assert_eq!(p.path, TofaPath::Window);
+        Placement::new(p.assignment).validate(512).unwrap();
+    }
+
+    #[test]
+    fn fragmented_free_set_forces_fault_weighted_path() {
+        let (c, plat) = setup(32);
+        let mut outage = vec![0.0; 512];
+        outage[9] = 0.05;
+        // every second 16-run busy: no 32-window of free ids exists
+        let mut free = vec![true; 512];
+        for start in (0..512).step_by(32) {
+            for n in start + 16..start + 32 {
+                free[n] = false;
+            }
+        }
+        let p = TofaPlacer::default()
+            .place_within(&c, &plat, &outage, &free)
+            .unwrap();
+        assert_eq!(p.path, TofaPath::FaultWeighted);
+        for &node in &p.assignment {
+            assert!(free[node], "busy node {node} used");
+        }
+        Placement::new(p.assignment).validate(512).unwrap();
+    }
+
+    #[test]
+    fn all_free_mask_matches_unrestricted_placement() {
+        let (c, plat) = setup(32);
+        let mut outage = vec![0.0; 512];
+        outage[100] = 0.02;
+        let placer = TofaPlacer::default();
+        let unrestricted = placer.place(&c, &plat, &outage).unwrap();
+        let masked = placer
+            .place_within(&c, &plat, &outage, &vec![true; 512])
+            .unwrap();
+        assert_eq!(masked.path, unrestricted.path);
+        assert_eq!(masked.assignment, unrestricted.assignment);
+    }
+
+    #[test]
+    fn too_few_free_nodes_is_a_placement_error() {
+        let (c, plat) = setup(32);
+        let mut free = vec![false; 512];
+        for f in free.iter_mut().take(16) {
+            *f = true;
+        }
+        let err = TofaPlacer::default()
+            .place_within(&c, &plat, &vec![0.0; 512], &free)
+            .unwrap_err();
+        assert!(err.to_string().contains("free nodes"), "{err}");
     }
 
     #[test]

@@ -9,13 +9,26 @@ use crate::topology::CostWorkspace;
 /// Find the first run of `len` consecutive node ids whose outage
 /// probability is zero. Returns the node ids, or `None`.
 pub fn find_fault_free_window(outage: &[f64], len: usize) -> Option<Vec<usize>> {
+    fault_free_window_core(outage, None, len)
+}
+
+/// Shared core of the plain and candidate-masked endpoint-clean window
+/// searches: one run scanner, with eligibility as an optional extra
+/// condition (so the two public entry points cannot drift apart).
+fn fault_free_window_core(
+    outage: &[f64],
+    eligible: Option<&[bool]>,
+    len: usize,
+) -> Option<Vec<usize>> {
     if len == 0 || len > outage.len() {
         return None;
     }
+    // map_or (not is_none_or): the crate's MSRV is 1.74
+    let ok = |i: usize| eligible.map_or(true, |e| e[i]);
     let mut run_start = 0usize;
     let mut run_len = 0usize;
     for (i, &p) in outage.iter().enumerate() {
-        if p <= 0.0 {
+        if p <= 0.0 && ok(i) {
             if run_len == 0 {
                 run_start = i;
             }
@@ -97,6 +110,55 @@ pub fn find_route_clean_window_indexed(
     len: usize,
     ws: &mut CostWorkspace,
 ) -> Option<Vec<usize>> {
+    route_clean_window_core(index, outage, len, None, ws)
+}
+
+/// [`find_fault_free_window`] restricted to a candidate set: every window
+/// node must additionally be `eligible` (free in the scheduler's
+/// [`crate::slurm::sched::NodeLedger`]). A busy node breaks a run exactly
+/// like a flaky one — windows are consecutive *ids*, and an occupied node
+/// in the middle fragments them.
+pub fn find_fault_free_window_masked(
+    outage: &[f64],
+    eligible: &[bool],
+    len: usize,
+) -> Option<Vec<usize>> {
+    assert_eq!(outage.len(), eligible.len());
+    fault_free_window_core(outage, Some(eligible), len)
+}
+
+/// [`find_route_clean_window_indexed`] restricted to a candidate set.
+///
+/// Window *endpoints* must be eligible (free) and zero-outage; the route
+/// closure must avoid flaky transits only — a **busy** transit node is
+/// fine, because an allocated node keeps forwarding traffic (links keep
+/// their capacity; only failures abort). The dirty-pair machinery is the
+/// same slide as the unmasked search; eligibility enters solely through
+/// the per-window membership check, via a blocked-node prefix sum.
+pub fn find_route_clean_window_masked(
+    index: &crate::topology::TopoIndex,
+    outage: &[f64],
+    len: usize,
+    eligible: &[bool],
+    ws: &mut CostWorkspace,
+) -> Option<Vec<usize>> {
+    assert_eq!(eligible.len(), index.num_nodes());
+    route_clean_window_core(index, outage, len, Some(eligible), ws)
+}
+
+/// Shared core of the plain and candidate-masked route-clean window
+/// searches: the dirty-pair build + slide is written exactly once, and
+/// eligibility enters solely through the membership prefix (the prepared
+/// flaky prefix, or a blocked = flaky-or-ineligible prefix rebuilt into
+/// workspace scratch). With `eligible == None` this is bit-identical to
+/// the pre-mask search.
+fn route_clean_window_core(
+    index: &crate::topology::TopoIndex,
+    outage: &[f64],
+    len: usize,
+    eligible: Option<&[bool]>,
+    ws: &mut CostWorkspace,
+) -> Option<Vec<usize>> {
     let n = index.num_nodes();
     assert_eq!(outage.len(), n, "index built for a different platform");
     if len == 0 || len > n {
@@ -106,12 +168,14 @@ pub fn find_route_clean_window_indexed(
     ws.begin_pairs(n);
     // reset only the partner lists the previous call populated
     let CostWorkspace {
+        flaky,
         flaky_nodes,
         flaky_prefix,
         pair_mark,
         pair_epoch,
         partners,
         partner_touched,
+        blocked_prefix,
         ..
     } = ws;
     if partners.len() < n {
@@ -148,13 +212,31 @@ pub fn find_route_clean_window_indexed(
         let b = p.partition_point(|&y| (y as usize) < hi);
         (b - a) as i64
     };
-    // flaky nodes among ids [lo, hi), via the prepared prefix sums
-    let flaky_in = |lo: usize, hi: usize| flaky_prefix[hi] - flaky_prefix[lo];
+    // window-membership prefix: flaky nodes alone (unmasked — the
+    // prepared prefix), or flaky-or-ineligible (masked, rebuilt into the
+    // reusable workspace buffer)
+    let prefix: &[u32] = match eligible {
+        None => flaky_prefix.as_slice(),
+        Some(elig) => {
+            blocked_prefix.clear();
+            blocked_prefix.reserve(n + 1);
+            blocked_prefix.push(0u32);
+            let mut acc = 0u32;
+            for i in 0..n {
+                if flaky[i] || !elig[i] {
+                    acc += 1;
+                }
+                blocked_prefix.push(acc);
+            }
+            blocked_prefix.as_slice()
+        }
+    };
+    let blocked_in = |lo: usize, hi: usize| prefix[hi] - prefix[lo];
     // dirty pairs fully inside the initial window [0, len)
     let mut dirty: i64 = (0..len).map(|u| count_in(u, u + 1, len)).sum();
     for s in 0..=(n - len) {
         debug_assert!(dirty >= 0, "dirty-pair count went negative at {s}");
-        if flaky_in(s, s + len) == 0 && dirty == 0 {
+        if blocked_in(s, s + len) == 0 && dirty == 0 {
             return Some((s..s + len).collect());
         }
         if s + len < n {
@@ -251,6 +333,88 @@ mod tests {
                 let fast = find_route_clean_window_indexed(&index, &outage, len, &mut ws);
                 assert_eq!(fast, dense, "{} case {case} len {len}", t.describe());
             }
+        }
+    }
+
+    #[test]
+    fn masked_window_skips_busy_and_flaky_nodes() {
+        let mut outage = vec![0.0; 16];
+        outage[1] = 0.1;
+        let mut eligible = vec![true; 16];
+        eligible[6] = false; // busy node fragments the run 2..16
+        let w = find_fault_free_window_masked(&outage, &eligible, 4).unwrap();
+        assert_eq!(w, vec![2, 3, 4, 5]);
+        let w = find_fault_free_window_masked(&outage, &eligible, 8).unwrap();
+        assert_eq!(w, (7..15).collect::<Vec<_>>());
+        // all-eligible mask reduces to the unmasked search
+        assert_eq!(
+            find_fault_free_window_masked(&outage, &vec![true; 16], 5),
+            find_fault_free_window(&outage, 5)
+        );
+    }
+
+    #[test]
+    fn masked_route_clean_window_matches_dense_reference() {
+        use crate::topology::{TopoIndex, Torus, TorusDims};
+        // dense reference: endpoints eligible + clean, transits clean
+        fn dense(
+            outage: &[f64],
+            eligible: &[bool],
+            len: usize,
+            topo: &dyn crate::topology::Topology,
+        ) -> Option<Vec<usize>> {
+            if len == 0 || len > outage.len() {
+                return None;
+            }
+            let flaky: Vec<bool> = outage.iter().map(|&p| p > 0.0).collect();
+            let mut route = Vec::new();
+            'starts: for start in 0..=(outage.len() - len) {
+                for i in start..start + len {
+                    if flaky[i] || !eligible[i] {
+                        continue 'starts;
+                    }
+                }
+                for u in start..start + len {
+                    for v in (u + 1)..start + len {
+                        topo.route_into(u, v, &mut route);
+                        for l in &route {
+                            let f = |n: usize| n < flaky.len() && flaky[n];
+                            if f(l.src) || f(l.dst) {
+                                continue 'starts;
+                            }
+                        }
+                    }
+                }
+                return Some((start..start + len).collect());
+            }
+            None
+        }
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let index = TopoIndex::build(&t);
+        let n = t.num_nodes();
+        let mut rng = crate::rng::Rng::new(91);
+        let mut ws = CostWorkspace::new();
+        for case in 0..60 {
+            let mut outage = vec![0.0; n];
+            for f in rng.sample_distinct(n, rng.below_usize(n / 3 + 1)) {
+                outage[f] = 0.02;
+            }
+            let mut eligible = vec![true; n];
+            for b in rng.sample_distinct(n, rng.below_usize(n / 2 + 1)) {
+                eligible[b] = false;
+            }
+            let len = rng.below_usize(n + 2);
+            let want = dense(&outage, &eligible, len, &t);
+            let got = find_route_clean_window_masked(&index, &outage, len, &eligible, &mut ws);
+            assert_eq!(got, want, "case {case} len {len}");
+            // with everything eligible the masked search must equal the
+            // unmasked indexed search
+            let all = vec![true; n];
+            assert_eq!(
+                find_route_clean_window_masked(&index, &outage, len, &all, &mut ws),
+                find_route_clean_window_indexed(&index, &outage, len, &mut ws),
+                "case {case} all-eligible"
+            );
         }
     }
 

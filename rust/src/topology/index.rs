@@ -196,6 +196,9 @@ pub struct CostWorkspace {
     pub(crate) partners: Vec<Vec<u32>>,
     /// Nodes whose partner list is non-empty (cleared lazily next call).
     pub(crate) partner_touched: Vec<u32>,
+    /// Prefix sums of blocked (flaky or candidate-masked) nodes for the
+    /// masked window search; rebuilt per call, buffer reused.
+    pub(crate) blocked_prefix: Vec<u32>,
     /// Matrix entries recomputed by the last incremental Eq. 1 call
     /// (index effectiveness stat: compare against `n * (n - 1) / 2`).
     pub(crate) pairs_patched: usize,
@@ -212,6 +215,7 @@ impl Default for CostWorkspace {
             route: Vec::new(),
             partners: Vec::new(),
             partner_touched: Vec::new(),
+            blocked_prefix: Vec::new(),
             pairs_patched: 0,
         }
     }

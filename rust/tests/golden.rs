@@ -70,7 +70,9 @@ fn seed_reference_batch(
         truth[n] = p_f;
     }
     let fans = FansPlugin::default();
-    let placement = fans.select(policy, &comm, platform, &truth, rng).unwrap();
+    let placement = fans
+        .select(policy, &comm, platform, &truth, None, rng)
+        .unwrap();
     let mut sim = Simulator::new(app, platform);
     let profile = sim.prepare(&placement.assignment);
     let success_run_s = profile.success_s;
@@ -129,6 +131,10 @@ fn batch_engine_reproduces_seed_pipeline_bit_for_bit() {
             assert_eq!(o.completion_s.to_bits(), wc.to_bits(), "{policy} instance {i}");
             assert_eq!(o.aborts, *wa, "{policy} instance {i}");
         }
+        // at paper parameters (max_restarts = 1000) nothing exhausts its
+        // restart budget — the give-up flag stays everywhere-false
+        assert_eq!(res.exhausted_instances, 0, "{policy}");
+        assert!(res.outcomes.iter().all(|o| !o.exhausted), "{policy}");
     }
 }
 
@@ -156,6 +162,7 @@ fn fig4_fig5_iid_grid_statistics_locked() {
     let grid = run_grid(&runner, &policies, &config, 3, 42).unwrap();
     let mut got = String::new();
     for c in &grid.cells {
+        assert_eq!(c.result.exhausted_instances, 0, "paper params exhausted");
         got.push_str(&format!(
             "{} {} {:016x} {:016x} {}\n",
             c.batch_index,
@@ -227,6 +234,12 @@ fn grid_stats_all_models(platform: &Platform) -> String {
         };
         let grid = run_grid(&runner, &policies, &config, 2, 42).unwrap();
         for c in &grid.cells {
+            assert_eq!(
+                c.result.exhausted_instances,
+                0,
+                "{} exhausted at paper max_restarts",
+                spec.model_name()
+            );
             got.push_str(&format!(
                 "{} {} {} {:016x} {:016x} {}\n",
                 spec.model_name(),

@@ -64,8 +64,11 @@ fn batch_is_bit_identical_across_worker_counts() {
             "{workers} workers"
         );
         assert_eq!(par.total_aborts, serial.total_aborts);
+        assert_eq!(par.exhausted_instances, serial.exhausted_instances);
         assert_eq!(par.success_run_s.to_bits(), serial.success_run_s.to_bits());
     }
+    // paper parameters: the exhaustion counter must stay at 0
+    assert_eq!(serial.exhausted_instances, 0);
 }
 
 #[test]

@@ -1,0 +1,335 @@
+//! Cluster-scheduler integration tests: the no-overlap ledger invariant
+//! under randomized workloads, event-trace determinism across worker
+//! counts for the full (topology x fault model) matrix, the
+//! backfill-never-delays-the-head property, and the job-accounting
+//! regressions (no job is ever lost, silent exhaustion is flagged).
+
+use std::sync::Arc;
+
+use tofa::mapping::PlacementPolicy;
+use tofa::rng::Rng;
+use tofa::sim::fault::{FaultScenario, FaultSpec, FaultTrace};
+use tofa::slurm::jobs::JobState;
+use tofa::slurm::sched::{
+    run_sweep, ClusterScheduler, SchedConfig, SchedJobSpec, SchedResult, TraceKind, WorkloadSpec,
+};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
+
+/// One platform per topology family, small enough for CI.
+fn all_topology_platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(4, 4, 4)), // 64 nodes
+        Platform::paper_default_on(Arc::new(FatTree::new(4).unwrap())), // 16 nodes
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap(), // 40 nodes
+        )),
+    ]
+}
+
+/// One spec per fault model, sized to the platform.
+fn all_fault_specs(plat: &Platform) -> Vec<FaultSpec> {
+    let n = plat.num_nodes();
+    let mut trace_text = format!("nodes {n}\n");
+    for (i, node) in (0..n).step_by((n / 4).max(1)).enumerate() {
+        let start = 0.05 * i as f64;
+        trace_text.push_str(&format!("{node} {start} {}\n", start + 0.4));
+    }
+    vec![
+        FaultSpec::Iid {
+            n_faulty: (n / 8).max(1),
+            p_f: 0.3,
+        },
+        FaultSpec::CorrelatedRacks {
+            domains: 2,
+            p_domain: 0.3,
+        },
+        FaultSpec::Weibull {
+            n_faulty: (n / 8).max(1),
+            shape: 0.7,
+            p_horizon: 0.3,
+            horizon_s: 0.1,
+        },
+        FaultSpec::Trace {
+            trace: Arc::new(FaultTrace::parse(trace_text.as_bytes()).unwrap()),
+        },
+    ]
+}
+
+/// Replay a result's trace and assert the ledger invariant: at no instant
+/// do two running jobs hold the same node. Returns the maximum number of
+/// simultaneously running jobs observed.
+fn assert_no_overlap(res: &SchedResult, num_nodes: usize) -> usize {
+    let mut held: Vec<Option<u64>> = vec![None; num_nodes];
+    let mut running = 0usize;
+    let mut peak = 0usize;
+    for ev in &res.trace {
+        match &ev.kind {
+            TraceKind::Start { job, nodes, .. } => {
+                running += 1;
+                peak = peak.max(running);
+                assert!(!nodes.is_empty(), "job {job} started with no nodes");
+                for &n in nodes {
+                    assert!(
+                        held[n].is_none(),
+                        "t={}: node {n} held by {:?} and {job}",
+                        ev.t,
+                        held[n]
+                    );
+                    held[n] = Some(*job);
+                }
+            }
+            TraceKind::End { job, .. } => {
+                running -= 1;
+                for h in held.iter_mut() {
+                    if *h == Some(*job) {
+                        *h = None;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(running, 0, "trace left jobs running");
+    peak
+}
+
+#[test]
+fn no_overlap_invariant_over_randomized_workloads() {
+    // proptest-style sweep: random workloads x topologies x policies;
+    // two Running jobs must never share a node, and every submitted job
+    // must end up accounted exactly once
+    let mut rng = Rng::new(20260730);
+    for plat in all_topology_platforms() {
+        let n = plat.num_nodes();
+        let kind = plat.topology().kind().to_string();
+        for case in 0..6 {
+            let small = (n / 8).max(2);
+            let w = WorkloadSpec {
+                jobs: 6 + rng.below_usize(8),
+                mean_interarrival_s: if case % 2 == 0 { 0.0 } else { 0.05 },
+                mix: vec![
+                    (small, 0.6),
+                    (small * 2, 0.3),
+                    ((n / 2).max(small), 0.1),
+                ],
+                steps: 2,
+                seed: rng.next_u64(),
+            };
+            let scenario =
+                FaultScenario::iid(rng.sample_distinct(n, n / 8), 0.3, n);
+            for backfill in [false, true] {
+                let cfg = SchedConfig {
+                    placement: if case % 2 == 0 {
+                        PlacementPolicy::Tofa
+                    } else {
+                        PlacementPolicy::DefaultSlurm
+                    },
+                    backfill,
+                    max_restarts: 20,
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                };
+                let res =
+                    ClusterScheduler::new(&plat, &w, scenario.clone(), cfg).run();
+                assert_eq!(
+                    res.records.len(),
+                    res.total_jobs,
+                    "{kind} case {case}: jobs lost"
+                );
+                assert_eq!(
+                    res.completed + res.failed + res.exhausted,
+                    res.total_jobs,
+                    "{kind} case {case}: terminal states do not add up"
+                );
+                assert_no_overlap(&res, n);
+            }
+        }
+    }
+}
+
+#[test]
+fn event_trace_is_identical_for_1_2_4_workers_across_matrix() {
+    // the scheduler determinism contract over the full
+    // (topology x fault model) matrix: whole event traces must match
+    for plat in all_topology_platforms() {
+        let n = plat.num_nodes();
+        let kind = plat.topology().kind().to_string();
+        let w = WorkloadSpec {
+            jobs: 8,
+            mean_interarrival_s: 0.0,
+            mix: vec![((n / 8).max(2), 0.7), ((n / 4).max(2), 0.3)],
+            steps: 2,
+            seed: 11,
+        };
+        let cells = [
+            (PlacementPolicy::DefaultSlurm, false),
+            (PlacementPolicy::Tofa, false),
+            (PlacementPolicy::Tofa, true),
+        ];
+        for fault in all_fault_specs(&plat) {
+            let name = fault.model_name();
+            let cfg = SchedConfig {
+                max_restarts: 20,
+                ..Default::default()
+            };
+            let run = |workers| run_sweep(&plat, &w, &fault, &cells, &cfg, workers).unwrap();
+            let serial = run(1);
+            for workers in [2usize, 4] {
+                let par = run(workers);
+                assert_eq!(par.len(), serial.len(), "{kind}/{name}");
+                for (a, b) in serial.iter().zip(&par) {
+                    assert_eq!(
+                        a.result.trace, b.result.trace,
+                        "{kind}/{name} @ {workers} workers"
+                    );
+                    assert_eq!(
+                        a.result.makespan_s.to_bits(),
+                        b.result.makespan_s.to_bits(),
+                        "{kind}/{name} @ {workers} workers"
+                    );
+                    assert_eq!(
+                        a.result.mean_wait_s.to_bits(),
+                        b.result.mean_wait_s.to_bits(),
+                        "{kind}/{name} @ {workers} workers"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn backfill_never_delays_the_fifo_head_property() {
+    // randomized workloads with blocking big jobs: every committed
+    // backfill's head must start by the shadow time recorded at commit,
+    // and FIFO-relative start times of the heads must not regress
+    let mut rng = Rng::new(99);
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let mut audited = 0usize;
+    for case in 0..8u64 {
+        let mut specs = Vec::new();
+        let jobs = 6 + rng.below_usize(6);
+        for i in 0..jobs {
+            let big = rng.bernoulli(0.4);
+            specs.push(SchedJobSpec {
+                name: format!("j{i}"),
+                ranks: if big { 40 + rng.below_usize(16) } else { 8 + rng.below_usize(8) },
+                steps: 2 + rng.below_usize(5),
+                arrival_s: 0.02 * rng.below_usize(5) as f64,
+            });
+        }
+        let scenario = FaultScenario::none(64);
+        let run = |backfill: bool| {
+            let cfg = SchedConfig {
+                backfill,
+                seed: 7 + case,
+                ..Default::default()
+            };
+            ClusterScheduler::with_jobs(&plat, specs.clone(), scenario.clone(), cfg).run()
+        };
+        let fifo = run(false);
+        let bf = run(true);
+        assert_eq!(bf.completed, fifo.completed, "case {case}");
+        assert_no_overlap(&bf, 64);
+        for a in &bf.backfill_audit {
+            audited += 1;
+            let head_start = bf
+                .records
+                .iter()
+                .find(|r| r.id == a.head)
+                .and_then(|r| r.start_s)
+                .unwrap_or_else(|| panic!("case {case}: head {} never started", a.head));
+            assert!(
+                head_start <= a.shadow + 1e-9,
+                "case {case}: head {} started {} after shadow {}",
+                a.head,
+                head_start,
+                a.shadow
+            );
+            // the head it protected must not start later than under FIFO
+            let fifo_start = fifo
+                .records
+                .iter()
+                .find(|r| r.id == a.head)
+                .and_then(|r| r.start_s)
+                .expect("head finished under FIFO");
+            assert!(
+                head_start <= fifo_start + 1e-9,
+                "case {case}: backfill delayed head {} ({} vs fifo {})",
+                a.head,
+                head_start,
+                fifo_start
+            );
+        }
+    }
+    assert!(audited > 0, "no workload ever backfilled — property untested");
+}
+
+#[test]
+fn contention_shows_nonzero_queue_wait_and_bounded_utilization() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let w = WorkloadSpec {
+        jobs: 16,
+        mean_interarrival_s: 0.0,
+        mix: vec![(16, 1.0)],
+        steps: 2,
+        seed: 3,
+    };
+    let fault = FaultSpec::Iid {
+        n_faulty: 4,
+        p_f: 0.02,
+    };
+    let cells = [
+        (PlacementPolicy::DefaultSlurm, false),
+        (PlacementPolicy::Tofa, false),
+    ];
+    let cfg = SchedConfig::default();
+    let sweep = run_sweep(&plat, &w, &fault, &cells, &cfg, 2).unwrap();
+    for cell in &sweep {
+        let r = &cell.result;
+        assert!(
+            r.mean_wait_s > 0.0,
+            "{}: 16x16 ranks on 64 nodes must queue",
+            cell.placement
+        );
+        assert!(r.utilization > 0.2 && r.utilization <= 1.0 + 1e-9);
+        assert!(r.makespan_s > 0.0);
+        assert_eq!(r.records.len(), 16);
+    }
+}
+
+#[test]
+fn every_sched_record_reaches_a_terminal_state_with_outcome() {
+    // dead-fields regression at the scheduler level: completion_s,
+    // aborts, submit/start/end times are all populated on every record
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+    let w = WorkloadSpec {
+        jobs: 10,
+        mean_interarrival_s: 0.1,
+        mix: vec![(4, 0.7), (8, 0.3)],
+        steps: 2,
+        seed: 17,
+    };
+    let scenario = FaultScenario::iid(vec![0, 5], 0.4, 16);
+    let cfg = SchedConfig {
+        placement: PlacementPolicy::DefaultSlurm,
+        max_restarts: 30,
+        ..Default::default()
+    };
+    let res = ClusterScheduler::new(&plat, &w, scenario, cfg).run();
+    assert_eq!(res.records.len(), 10);
+    for r in &res.records {
+        assert!(r.state.is_terminal(), "job {} in {:?}", r.id, r.state);
+        match r.state {
+            JobState::Completed => {
+                assert!(r.completion_s.unwrap() > 0.0, "job {}", r.id);
+                assert!(r.end_s.unwrap() >= r.start_s.unwrap());
+                assert!(r.wait_s().unwrap() >= 0.0);
+            }
+            JobState::Failed => assert!(r.error.is_some(), "job {}", r.id),
+            s => panic!("job {} left in {s:?}", r.id),
+        }
+    }
+    let aborts_on_records: u32 = res.records.iter().map(|r| r.aborts).sum();
+    assert_eq!(aborts_on_records as usize, res.total_aborts);
+}
