@@ -1,0 +1,200 @@
+//! Bench for the implicit hop metric: closed-form distances vs the dense
+//! TopoIndex, and the O(n)-memory path that serves 100k-node platforms.
+//!
+//! Three sections:
+//!
+//! * Parity at the paper's scale (512-node torus): dense lookups vs the
+//!   closed forms, asserting bit-identity over every pair before timing,
+//!   plus the job-sized `extract` both modes share.
+//! * Scaling at 1k / 10k / 100k nodes, implicit-only beyond the dense
+//!   limit: hop-query throughput, the lazy route-clean window search, and
+//!   a candidate-sized Eq. 1 submatrix. Each entry records what the dense
+//!   n^2 matrix *would* cost (4 bytes per entry) and whether the
+//!   `DENSE_NODE_LIMIT` guard allows it — 100k nodes is ~42 GB, refused.
+//! * A whole TOFA placement (64 ranks, window path) on the 102400-node
+//!   torus, start to finish, with no O(n^2) state ever built.
+//!
+//! Emits `BENCH_implicit_metric.json` at the repo root.
+
+use tofa::commgraph::CommMatrix;
+use tofa::report::bench::{bench, section, write_bench_json, JsonValue, Measurement};
+use tofa::rng::Rng;
+use tofa::tofa::eq1::fault_aware_submatrix;
+use tofa::tofa::placer::{TofaPath, TofaPlacer};
+use tofa::tofa::window::find_route_clean_window_implicit;
+use tofa::topology::{CostWorkspace, MetricMode, Platform, TopoIndex, TorusDims, DENSE_NODE_LIMIT};
+
+fn speedup(dense: &Measurement, fast: &Measurement) -> f64 {
+    dense.median.as_secs_f64() / fast.median.as_secs_f64().max(1e-12)
+}
+
+/// What the dense hop matrix would occupy: n^2 f32 entries.
+fn dense_matrix_bytes(n: usize) -> u64 {
+    (n as u64) * (n as u64) * 4
+}
+
+fn random_comm(rng: &mut Rng, n: usize) -> CommMatrix {
+    let mut c = CommMatrix::new(n);
+    for _ in 0..n * 2 {
+        let i = rng.below_usize(n);
+        let j = rng.below_usize(n);
+        if i != j {
+            c.add_sym(i, j, (rng.below(1_000_000) + 1) as f64);
+        }
+    }
+    c
+}
+
+/// The first-x-line fault layout every section shares: a few flaky nodes
+/// in the y=0 row, so the window search has to slide past the whole row.
+fn front_line_outage(n: usize) -> Vec<f64> {
+    let mut outage = vec![0.0; n];
+    for f in [0usize, 3, 17, 40] {
+        outage[f] = 0.05;
+    }
+    outage
+}
+
+fn parity_section(entries: &mut Vec<JsonValue>) {
+    section("hop queries: dense TopoIndex lookups vs closed forms (512 nodes)");
+    let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let implicit = plat.clone().with_metric(MetricMode::Implicit);
+    let n = plat.num_nodes();
+    let build = bench("index/build-512", 5, || {
+        TopoIndex::build(plat.topology())
+    });
+    let (d, i) = (plat.hop_oracle(), implicit.hop_oracle());
+    let mut identical = true;
+    for u in 0..n {
+        for v in 0..n {
+            identical &= d.hops(u, v).to_bits() == i.hops(u, v).to_bits();
+        }
+    }
+    assert!(identical, "implicit hops diverged from the dense matrix");
+    let dense = bench("hops/dense-512", 10, || {
+        let mut acc = 0.0f32;
+        for u in 0..n {
+            for v in 0..n {
+                acc += d.hops(u, v);
+            }
+        }
+        acc
+    });
+    let fast = bench("hops/implicit-512", 10, || {
+        let mut acc = 0.0f32;
+        for u in 0..n {
+            for v in 0..n {
+                acc += i.hops(u, v);
+            }
+        }
+        acc
+    });
+    let window: Vec<usize> = (64..128).collect();
+    let extract = bench("extract/implicit-64of512", 10, || i.extract(&window));
+    println!(
+        "hops-512: implicit is {:.2}x the dense lookup cost (parity of values asserted)",
+        1.0 / speedup(&dense, &fast).max(1e-12)
+    );
+    entries.push(
+        JsonValue::obj()
+            .set("case", JsonValue::Str("parity-512".to_string()))
+            .set("bit_identical", JsonValue::Bool(identical))
+            .set("index_build", build.to_json())
+            .set("dense", dense.to_json())
+            .set("implicit", fast.to_json())
+            .set("extract_64", extract.to_json()),
+    );
+}
+
+fn scale_section(entries: &mut Vec<JsonValue>) {
+    section("scaling: implicit metric at 1k / 10k / 100k nodes, O(n) memory");
+    let sizes = [
+        ("1k", TorusDims::new(10, 10, 10)),
+        ("10k", TorusDims::new(25, 20, 20)),
+        ("100k", TorusDims::new(64, 40, 40)),
+    ];
+    for (what, dims) in sizes {
+        let plat = Platform::paper_default(dims).with_metric(MetricMode::Implicit);
+        let n = plat.num_nodes();
+        let oracle = plat.hop_oracle();
+        let mut rng = Rng::new(9);
+        let pairs: Vec<(usize, usize)> = (0..100_000)
+            .map(|_| (rng.below_usize(n), rng.below_usize(n)))
+            .collect();
+        let queries = bench(&format!("hops/implicit-{what}"), 10, || {
+            let mut acc = 0.0f32;
+            for &(u, v) in &pairs {
+                acc += oracle.hops(u, v);
+            }
+            acc
+        });
+        let outage = front_line_outage(n);
+        let mut ws = CostWorkspace::new();
+        assert!(
+            find_route_clean_window_implicit(plat.topology(), &outage, 64, &mut ws).is_some(),
+            "{what}: no route-clean window found"
+        );
+        let win = bench(&format!("window/implicit-{what}"), 5, || {
+            find_route_clean_window_implicit(plat.topology(), &outage, 64, &mut ws)
+        });
+        let subset: Vec<usize> = (n / 2..n / 2 + 64).collect();
+        let sub = bench(&format!("eq1-submatrix/implicit-{what}"), 5, || {
+            fault_aware_submatrix(plat.topology(), &outage, &subset, &mut ws)
+        });
+        let refused = n > DENSE_NODE_LIMIT;
+        println!(
+            "{what}: {n} nodes — dense matrix would be {:.1} MB {}",
+            dense_matrix_bytes(n) as f64 / 1e6,
+            if refused { "(refused)" } else { "(allowed)" },
+        );
+        entries.push(
+            JsonValue::obj()
+                .set("case", JsonValue::Str(format!("scale-{what}")))
+                .set("nodes", JsonValue::Int(n as u64))
+                .set("dense_matrix_bytes", JsonValue::Int(dense_matrix_bytes(n)))
+                .set("dense_refused", JsonValue::Bool(refused))
+                .set("hops_100k_queries", queries.to_json())
+                .set("window_search_64", win.to_json())
+                .set("eq1_submatrix_64", sub.to_json()),
+        );
+    }
+}
+
+fn placement_section(entries: &mut Vec<JsonValue>) {
+    section("whole TOFA placement on the 102400-node torus (64 ranks)");
+    let plat = Platform::paper_default(TorusDims::new(64, 40, 40))
+        .with_metric(MetricMode::Implicit);
+    let n = plat.num_nodes();
+    assert!(plat.try_topo_index().is_err(), "dense index must be refused");
+    let mut rng = Rng::new(11);
+    let comm = random_comm(&mut rng, 64);
+    let outage = front_line_outage(n);
+    let placer = TofaPlacer::default();
+    let placed = placer.place(&comm, &plat, &outage).expect("placement");
+    assert_eq!(placed.path, TofaPath::Window);
+    assert_eq!(placed.assignment.len(), 64);
+    let m = bench("place/implicit-100k", 5, || {
+        placer.place(&comm, &plat, &outage).unwrap()
+    });
+    println!(
+        "place-100k: {:.2} ms median, window path, dense index refused",
+        m.median.as_secs_f64() * 1e3
+    );
+    entries.push(
+        JsonValue::obj()
+            .set("case", JsonValue::Str("place-100k".to_string()))
+            .set("nodes", JsonValue::Int(n as u64))
+            .set("ranks", JsonValue::Int(64))
+            .set("path", JsonValue::Str("window".to_string()))
+            .set("place", m.to_json()),
+    );
+}
+
+fn main() {
+    let mut entries = Vec::new();
+    parity_section(&mut entries);
+    scale_section(&mut entries);
+    placement_section(&mut entries);
+    let payload = JsonValue::obj().set("entries", JsonValue::Arr(entries));
+    write_bench_json("implicit_metric", payload).expect("write BENCH_implicit_metric.json");
+}

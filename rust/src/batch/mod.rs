@@ -138,7 +138,11 @@ impl BatchRunner {
     /// one-time route sweep inside their first cell.
     pub fn new(app: &dyn MpiApp, platform: &Platform) -> Self {
         let comm = profile_app(app).volume;
-        platform.topo_index();
+        // only the dense metric has an index to warm; implicit platforms
+        // serve every query on demand
+        if platform.resolved_metric().is_dense() {
+            platform.topo_index();
+        }
         BatchRunner {
             platform: platform.clone(),
             comm,

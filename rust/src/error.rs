@@ -9,6 +9,9 @@ pub enum Error {
     Placement(String),
     /// Topology construction / routing errors.
     Topology(String),
+    /// An operation needs a topology family the platform does not have
+    /// (e.g. the torus-only FATT topology file format).
+    UnsupportedTopology(String),
     /// Simulation invariant violations.
     Simulation(String),
     /// Fault-model configuration / trace parse errors.
@@ -26,6 +29,7 @@ impl fmt::Display for Error {
         match self {
             Error::Placement(m) => write!(f, "placement error: {m}"),
             Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::UnsupportedTopology(m) => write!(f, "unsupported topology: {m}"),
             Error::Simulation(m) => write!(f, "simulation error: {m}"),
             Error::Fault(m) => write!(f, "fault-model error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),

@@ -19,7 +19,7 @@ use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
 use tofa::sim::fault::{FaultSpec, FaultTrace};
 use tofa::slurm::sched::{run_sweep, SchedConfig, WorkloadSpec};
-use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, MetricMode, Platform, TorusDims};
 
 type Result<T> = std::result::Result<T, Error>;
 
@@ -38,6 +38,8 @@ pub struct TopoCliOpts {
     /// Dragonfly parameters (`--dragonfly=GxAxPxH`: groups x routers x
     /// hosts-per-router x global-links-per-router).
     pub dragonfly: String,
+    /// Distance metric (`--metric=auto|dense|implicit`).
+    pub metric: String,
 }
 
 impl Default for TopoCliOpts {
@@ -47,6 +49,7 @@ impl Default for TopoCliOpts {
             torus: "8x8x8".to_string(),
             fattree_k: 8, // 128 nodes
             dragonfly: "9x4x4x2".to_string(), // 144 nodes
+            metric: "auto".to_string(),
         }
     }
 }
@@ -55,6 +58,7 @@ impl TopoCliOpts {
     /// Build the platform (paper simulation parameters) for the selected
     /// topology and size.
     pub fn platform(&self) -> Result<Platform> {
+        let metric = MetricMode::parse(&self.metric)?;
         Ok(match self.topology.as_str() {
             "torus" => Platform::paper_default(TorusDims::parse(&self.torus)?),
             "fattree" => {
@@ -68,7 +72,8 @@ impl TopoCliOpts {
                     "unknown topology: {other} (expected torus|fattree|dragonfly)"
                 )))
             }
-        })
+        }
+        .with_metric(metric))
     }
 }
 

@@ -56,6 +56,11 @@
 //! [`topology::Dragonfly`]. `repro --topology=...` selects one for the
 //! batch sweeps; racks/pods/groups feed the correlated fault model.
 //!
+//! The distance metric itself is pluggable too ([`topology::metric`]):
+//! dense O(n²) matrices as the bit-identity reference up to a size
+//! threshold, or the implicit closed-form path (`repro --metric=implicit`)
+//! that serves 100k-node platforms in O(n) memory.
+//!
 //! ## Fault models
 //!
 //! Down-state generation is pluggable: [`sim::fault`] defines the
@@ -113,6 +118,7 @@ pub mod prelude {
         dragonfly::{Dragonfly, DragonflyParams},
         fattree::FatTree,
         index::{CostWorkspace, TopoIndex},
+        metric::{HopOracle, MetricMode, ResolvedMetric},
         platform::Platform,
         torus::{Torus, TorusDims},
         Topology,

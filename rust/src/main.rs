@@ -45,6 +45,9 @@ TOPOLOGY (fig4/fig5a/fig5b/place/all):
   --fattree-k=<k>      fat-tree arity, k even; k^3/4 nodes (default: 8)
   --dragonfly=<GxAxPxH> groups x routers x hosts x global links per router
                        (default: 9x4x4x2)
+  --metric=<m>         distance metric: auto | dense | implicit
+                       (auto: dense up to 4096 nodes, implicit beyond)
+                       (default: auto)
 
 FAULT MODEL (fig4/fig5a/fig5b/all):
   --fault-model=<m>    iid | correlated | weibull | trace  (default: iid)
@@ -117,6 +120,8 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             o.topo.fattree_k = v.parse().map_err(|_| format!("bad --fattree-k: {v}"))?;
         } else if let Some(v) = a.strip_prefix("--dragonfly=") {
             o.topo.dragonfly = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--metric=") {
+            o.topo.metric = v.to_string();
         } else if let Some(v) = a.strip_prefix("--fault-model=") {
             o.fault.model = v.to_string();
         } else if let Some(v) = a.strip_prefix("--p-f=") {

@@ -25,6 +25,19 @@
 //! [`Rng::stream`], so results stay bit-identical for every worker count
 //! — the same contract `batch::parallel` establishes for the paper's
 //! model holds for all four (checked by `tests/parallel.rs`).
+//!
+//! ```
+//! use tofa::rng::Rng;
+//! use tofa::sim::fault::{FaultCtx, FaultModel, IidBernoulli};
+//!
+//! // the paper's model: nodes 3 and 7 flaky, each down with p_f = 0.5
+//! let model = IidBernoulli::new(vec![3, 7], 0.5, 16);
+//! assert_eq!(model.true_outage()[3], 0.5);
+//! let down = model.sample(&FaultCtx::new(0, 1.0), &mut Rng::new(42));
+//! for (node, &d) in down.iter().enumerate() {
+//!     assert!(!d || node == 3 || node == 7, "only flaky nodes go down");
+//! }
+//! ```
 
 pub mod correlated;
 pub mod iid;

@@ -22,6 +22,7 @@ use crate::error::Result;
 use crate::mapping::{self, Placement, PlacementPolicy};
 use crate::rng::Rng;
 use crate::tofa::placer::{TofaPlacement, TofaPlacer};
+use crate::topology::metric::check_materialize;
 use crate::topology::Platform;
 
 /// The FANS plugin.
@@ -43,9 +44,11 @@ impl FansPlugin {
     /// * `outage` — per-node outage estimates from the heartbeat plugin.
     /// * `candidates` — the ledger's free nodes (ascending), or `None`
     ///   for the whole platform. Every policy then selects only from the
-    ///   candidates: the shared [`crate::topology::TopoIndex`] clean hop
-    ///   matrix is extracted to the candidate set for the standard
-    ///   policies, and the TOFA window/Eq. 1 paths run mask-aware.
+    ///   candidates: the clean hop matrix (dense
+    ///   [`crate::topology::TopoIndex`] or the implicit metric's
+    ///   closed forms, per [`Platform::hop_oracle`]) is extracted to the
+    ///   candidate set for the standard policies, and the TOFA
+    ///   window/Eq. 1 paths run mask-aware.
     pub fn select(
         &self,
         policy: PlacementPolicy,
@@ -61,16 +64,24 @@ impl FansPlugin {
         // bit-identical — the masked paths reduce to the unmasked ones
         // when every node is a candidate)
         let candidates = candidates.filter(|free| free.len() < platform.num_nodes());
+        let oracle = platform.hop_oracle();
         match candidates {
             None => match policy {
                 PlacementPolicy::Tofa => self.placer.placement(comm, platform, outage),
-                _ => {
+                _ => match oracle.index() {
                     // borrow the platform's shared clean hop matrix instead
                     // of rebuilding an O(n^2) matrix per selection
                     // (bit-identical values; see TopoIndex)
-                    let dist = platform.topo_index().clean_hops();
-                    mapping::place(policy, comm, dist, rng)
-                }
+                    Some(index) => mapping::place(policy, comm, index.clean_hops(), rng),
+                    None => {
+                        // the standard policies need the whole matrix; an
+                        // implicit platform refuses a cluster-scale one
+                        check_materialize(platform.num_nodes())?;
+                        let all: Vec<usize> = (0..platform.num_nodes()).collect();
+                        let dist = oracle.extract(&all);
+                        mapping::place(policy, comm, &dist, rng)
+                    }
+                },
             },
             Some(free) => {
                 if policy == PlacementPolicy::Tofa {
@@ -84,7 +95,10 @@ impl FansPlugin {
                 // to the candidates, then relabel back to platform ids —
                 // block placement over the extract is exactly Slurm's
                 // "sequential over available nodes"
-                let sub = platform.topo_index().clean_hops().extract(free);
+                if !oracle.is_dense() {
+                    check_materialize(free.len())?;
+                }
+                let sub = oracle.extract(free);
                 let local = mapping::place(policy, comm, &sub, rng)?;
                 Ok(Placement::new(
                     local.assignment.iter().map(|&li| free[li]).collect(),
@@ -210,6 +224,32 @@ mod tests {
                 .select(policy, &comm, &plat, &outage, Some(&all), &mut rng_b)
                 .unwrap();
             assert_eq!(masked, unmasked, "{policy}");
+        }
+    }
+
+    #[test]
+    fn implicit_platform_selects_identically_to_dense() {
+        use crate::topology::MetricMode;
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let mut outage = vec![0.0; 64];
+        outage[5] = 0.3;
+        let free: Vec<usize> = (0..64).step_by(2).collect();
+        let fans = FansPlugin::default();
+        for policy in PlacementPolicy::all() {
+            for mask in [None, Some(free.as_slice())] {
+                let mut rng_a = Rng::new(47);
+                let mut rng_b = Rng::new(47);
+                let a = fans
+                    .select(policy, &comm, &plat, &outage, mask, &mut rng_a)
+                    .unwrap();
+                let b = fans
+                    .select(policy, &comm, &implicit, &outage, mask, &mut rng_b)
+                    .unwrap();
+                assert_eq!(a, b, "{policy} masked={}", mask.is_some());
+            }
         }
     }
 

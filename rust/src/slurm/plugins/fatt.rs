@@ -99,11 +99,12 @@ impl FattPlugin {
     }
 
     /// Emit the topology file for this platform. The file format stores
-    /// torus coordinates, so this errors for fat-tree/dragonfly platforms
+    /// torus coordinates, so this returns
+    /// [`Error::UnsupportedTopology`] for fat-tree/dragonfly platforms
     /// (their parameters travel on the CLI instead).
     pub fn to_topology_file(&self) -> Result<String> {
         let torus = self.topo.as_torus().ok_or_else(|| {
-            Error::Topology(format!(
+            Error::UnsupportedTopology(format!(
                 "the topology file format is torus-only ({} platform)",
                 self.topo.kind()
             ))
@@ -241,6 +242,30 @@ mod tests {
         // racks are pods
         assert_eq!(f.num_racks(), 4);
         assert_eq!(f.rack_of(5), 1);
+    }
+
+    #[test]
+    fn topology_file_export_is_typed_per_family() {
+        use crate::topology::{Dragonfly, DragonflyParams, FatTree};
+        // torus: the paper's artifact, exports fine
+        let torus = FattPlugin::new(TorusDims::new(2, 2, 1));
+        assert!(torus.to_topology_file().is_ok());
+        // fat-tree and dragonfly: a typed UnsupportedTopology, not a panic
+        let others: Vec<FattPlugin> = vec![
+            FattPlugin::with_topology(Arc::new(FatTree::new(4).unwrap())),
+            FattPlugin::with_topology(Arc::new(
+                Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap(),
+            )),
+        ];
+        for plugin in &others {
+            let err = plugin.to_topology_file().unwrap_err();
+            assert!(
+                matches!(err, Error::UnsupportedTopology(_)),
+                "{}: {err:?}",
+                plugin.topology().kind()
+            );
+            assert!(err.to_string().contains("unsupported topology"), "{err}");
+        }
     }
 
     #[test]

@@ -34,6 +34,20 @@
 //! per-(job, attempt) fault draws come from [`Rng::stream`], and the
 //! sweep fan-out ([`run_sweep`]) shards cells with the same machinery as
 //! the batch engine, so results are bit-identical for every worker count.
+//!
+//! The ledger at the heart of it all:
+//!
+//! ```
+//! use tofa::slurm::sched::NodeLedger;
+//!
+//! let mut ledger = NodeLedger::new(8);
+//! ledger.allocate(1, &[2, 3, 4]).unwrap();
+//! assert_eq!(ledger.num_free(), 5);
+//! assert_eq!(ledger.free_nodes(), vec![0, 1, 5, 6, 7]);
+//! // release returns the freed ids (idempotent — not a Result)
+//! assert_eq!(ledger.release(1), vec![2, 3, 4]);
+//! assert_eq!(ledger.num_free(), 8);
+//! ```
 
 pub mod ledger;
 
@@ -877,9 +891,12 @@ pub fn run_sweep(
     } else {
         workers
     };
-    // force the shared TopoIndex once, like BatchRunner::new, and share
-    // one phase cache so cells reuse each other's network solves
-    platform.topo_index();
+    // force the shared TopoIndex once (dense metric only), like
+    // BatchRunner::new, and share one phase cache so cells reuse each
+    // other's network solves
+    if platform.resolved_metric().is_dense() {
+        platform.topo_index();
+    }
     let cache = Arc::new(PhaseCache::new());
     let (results, _) = run_sharded(cells.len(), workers.min(cells.len().max(1)), |i| {
         let (placement, backfill) = cells[i];

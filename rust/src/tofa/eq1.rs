@@ -11,6 +11,25 @@
 //! instead of 1, making any failed path far costlier than the longest
 //! fault-free path on the platform (the paper found small increments gave
 //! only marginal abort-rate reductions — hence the x100).
+//!
+//! Three evaluators share these semantics bit-for-bit:
+//! [`fault_aware_distance`] (dense reference, re-routes all pairs),
+//! [`fault_aware_distance_indexed`] (patches a precomputed clean matrix),
+//! and [`fault_aware_submatrix`] (job-sized view for the implicit metric,
+//! never materializing cluster-sized state).
+//!
+//! ```
+//! use tofa::tofa::eq1::fault_aware_distance;
+//! use tofa::topology::{Torus, TorusDims};
+//!
+//! // an 8-node ring with node 1 flaky
+//! let ring = Torus::new(TorusDims::new(8, 1, 1));
+//! let mut outage = vec![0.0; 8];
+//! outage[1] = 0.05;
+//! let d = fault_aware_distance(&ring, &outage);
+//! assert_eq!(d.get(0, 1), 101.0); // one link, flaky endpoint: 1 + 100
+//! assert_eq!(d.get(0, 7), 1.0); // wraps the other way, fault-free
+//! ```
 
 use crate::topology::{CostWorkspace, DistanceMatrix, TopoIndex, Topology};
 
@@ -119,6 +138,67 @@ pub fn fault_aware_distance_indexed(
     dist
 }
 
+/// Eq. 1 over a candidate subset only — the implicit-metric counterpart of
+/// [`fault_aware_distance_indexed`]. Entry `(i, j)` is the fault-aware
+/// weight of the pair `(subset[i], subset[j])`; the returned matrix is
+/// `k x k` for `k = subset.len()`, sized by the job's candidate set rather
+/// than the cluster, and nothing O(n²) is ever built.
+///
+/// Pair screening uses [`Topology::route_touches`] (closed-form for the
+/// in-tree families): a pair no flaky node's route membership can perturb
+/// is served as the exact `hops as f32` without routing; perturbed pairs
+/// are routed and accumulated with the very loop of
+/// [`fault_aware_distance`], keeping bit-identity with the dense reference
+/// on the extracted entries (asserted in `tests/proptests.rs`).
+pub fn fault_aware_submatrix(
+    topo: &dyn Topology,
+    outage: &[f64],
+    subset: &[usize],
+    ws: &mut CostWorkspace,
+) -> DistanceMatrix {
+    let m = topo.num_nodes();
+    assert_eq!(outage.len(), m);
+    debug_assert!(subset.iter().all(|&n| n < m));
+    ws.prepare(outage);
+    let CostWorkspace {
+        flaky,
+        flaky_nodes,
+        route,
+        ..
+    } = ws;
+    let is_flaky = |n: usize| n < flaky.len() && flaky[n];
+    let k = subset.len();
+    let mut dist = DistanceMatrix::zeros(k);
+    for i in 0..k {
+        for j in (i + 1)..k {
+            // route the (lo, hi) orientation the dense reference uses
+            let (lo, hi) = (subset[i].min(subset[j]), subset[i].max(subset[j]));
+            if lo == hi {
+                continue; // duplicate candidate: weight 0, as dense extract gives
+            }
+            let touched = flaky_nodes
+                .iter()
+                .any(|&f| topo.route_touches(lo, hi, f as usize));
+            let w = if touched {
+                topo.route_into(lo, hi, route);
+                let mut w = 0.0f32;
+                for l in route.iter() {
+                    w += HOP_COST;
+                    if is_flaky(l.src) || is_flaky(l.dst) {
+                        w += HOP_COST * FAULT_FACTOR;
+                    }
+                }
+                w
+            } else {
+                topo.hops(lo, hi) as f32
+            };
+            dist.set(i, j, w);
+            dist.set(j, i, w);
+        }
+    }
+    dist
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +291,42 @@ mod tests {
                 }
                 if n_flaky == 0 {
                     assert_eq!(ws.pairs_patched(), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn submatrix_matches_the_dense_extract_bit_for_bit() {
+        use crate::topology::{Dragonfly, DragonflyParams, FatTree};
+        let topos: Vec<Box<dyn Topology>> = vec![
+            Box::new(Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()),
+            Box::new(FatTree::new(4).unwrap()),
+            Box::new(Torus::new(TorusDims::new(4, 4, 2))),
+        ];
+        let mut rng = crate::rng::Rng::new(23);
+        let mut ws = crate::topology::CostWorkspace::new();
+        for t in &topos {
+            let n = t.num_nodes();
+            for n_flaky in [0usize, 2, n / 3] {
+                let mut outage = vec![0.0; n];
+                for f in rng.sample_distinct(n, n_flaky) {
+                    outage[f] = 0.01 + rng.f64() * 0.5;
+                }
+                let dense = fault_aware_distance(t.as_ref(), &outage);
+                // the full set and a few random subsets
+                let full: Vec<usize> = (0..n).collect();
+                let mut subsets = vec![full];
+                for _ in 0..4 {
+                    let k = 1 + rng.below_usize(n);
+                    subsets.push(rng.sample_distinct(n, k));
+                }
+                for subset in &subsets {
+                    let sub = fault_aware_submatrix(t.as_ref(), &outage, subset, &mut ws);
+                    let reference = dense.extract(subset);
+                    for (a, b) in reference.as_slice().iter().zip(sub.as_slice()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{}", t.describe());
+                    }
                 }
             }
         }

@@ -10,16 +10,18 @@
 
 use std::sync::Mutex;
 
-use super::eq1::fault_aware_distance_indexed;
+use super::eq1::{fault_aware_distance_indexed, fault_aware_submatrix};
 use super::window::{
-    find_fault_free_window, find_fault_free_window_masked, find_route_clean_window_indexed,
-    find_route_clean_window_masked,
+    find_fault_free_window, find_fault_free_window_masked, find_route_clean_window_implicit,
+    find_route_clean_window_indexed, find_route_clean_window_masked,
+    find_route_clean_window_masked_implicit,
 };
 use crate::error::Error;
 use crate::commgraph::CommMatrix;
 use crate::error::Result;
 use crate::mapping::recmap::RecursiveMapper;
 use crate::mapping::Placement;
+use crate::topology::metric::check_materialize;
 use crate::topology::{CostWorkspace, DistanceMatrix, Platform};
 
 /// Tunables of the TOFA pipeline.
@@ -59,9 +61,11 @@ pub struct TofaPlacement {
 
 /// The TOFA placer.
 ///
-/// Runs on the incremental cost engines: the platform's shared
-/// [`crate::topology::TopoIndex`] provides the clean hop matrix and the
-/// transit-incidence lists, and a per-placer [`CostWorkspace`] (behind a
+/// Runs on whichever distance source the platform's metric mode resolves
+/// to ([`Platform::hop_oracle`]): the shared dense
+/// [`crate::topology::TopoIndex`] (clean hop matrix + transit-incidence
+/// lists) or the implicit closed-form metric, which serves the same
+/// values with O(n) memory. A per-placer [`CostWorkspace`] (behind a
 /// `Mutex` so the placer stays `Sync` for the parallel batch engine; each
 /// worker's runner clone owns its own placer, so the lock is never
 /// contended) makes the window search and Eq. 1 allocation-free: the
@@ -102,15 +106,15 @@ impl TofaPlacer {
     ) -> Result<TofaPlacement> {
         let n = comm.len();
         let topo = platform.topology();
-        // clean hop matrix + transit incidence, shared across all clones
-        // of this platform (built once, like the phase cache)
-        let index = platform.topo_index();
+        // the platform's distance source: a shared dense TopoIndex (built
+        // once, like the phase cache) or the on-demand implicit metric
+        let oracle = platform.hop_oracle();
 
         if outage.iter().all(|&p| p <= 0.0) {
             // Nothing flaky: Listing 1.1 still finds S (trivially the
             // first |V_G| node ids) and maps inside that window.
             let window: Vec<usize> = (0..n).collect();
-            let sub = index.clean_hops().extract(&window);
+            let sub = oracle.extract(&window);
             let local = self.config.mapper.map(comm, &sub)?;
             let assignment = local.assignment.iter().map(|&li| window[li]).collect();
             return Ok(TofaPlacement {
@@ -125,12 +129,15 @@ impl TofaPlacer {
 
         // Prefer a window whose route closure is flaky-free (zero abort
         // guarantee); fall back to any endpoint-clean window.
-        let window = find_route_clean_window_indexed(index, outage, n, &mut ws)
-            .or_else(|| find_fault_free_window(outage, n));
+        let window = match oracle.index() {
+            Some(index) => find_route_clean_window_indexed(index, outage, n, &mut ws),
+            None => find_route_clean_window_implicit(topo, outage, n, &mut ws),
+        }
+        .or_else(|| find_fault_free_window(outage, n));
         if let Some(window) = window {
             // ScotchExtract: sub-topology restricted to the window, with
             // plain hop distances (window is fault-free by construction).
-            let sub: DistanceMatrix = index.clean_hops().extract(&window);
+            let sub: DistanceMatrix = oracle.extract(&window);
             let local = self.config.mapper.map(comm, &sub)?;
             let assignment = local
                 .assignment
@@ -142,8 +149,17 @@ impl TofaPlacer {
                 path: TofaPath::Window,
             })
         } else {
-            // no window: map over the Eq. 1 fault-weighted topology
-            let dist = fault_aware_distance_indexed(index, topo, outage, &mut ws);
+            // no window: map over the Eq. 1 fault-weighted topology. The
+            // full matrix is cluster-sized, so the implicit path refuses
+            // it beyond the dense limit instead of allocating O(n²).
+            let dist = match oracle.index() {
+                Some(index) => fault_aware_distance_indexed(index, topo, outage, &mut ws),
+                None => {
+                    check_materialize(topo.num_nodes())?;
+                    let all: Vec<usize> = (0..topo.num_nodes()).collect();
+                    fault_aware_submatrix(topo, outage, &all, &mut ws)
+                }
+            };
             let p = self.config.mapper.map(comm, &dist)?;
             Ok(TofaPlacement {
                 assignment: p.assignment,
@@ -159,8 +175,8 @@ impl TofaPlacer {
     /// fragments a window like a flaky one, though busy *transits* stay
     /// acceptable — allocated nodes keep forwarding traffic), and the
     /// fault-weighted fallback maps over the Eq. 1 matrix extracted to the
-    /// candidates, reusing the platform's shared
-    /// [`crate::topology::TopoIndex`].
+    /// candidates — served by the platform's [`Platform::hop_oracle`]
+    /// (dense [`crate::topology::TopoIndex`] or implicit closed forms).
     pub fn place_within(
         &self,
         comm: &CommMatrix,
@@ -170,8 +186,8 @@ impl TofaPlacer {
     ) -> Result<TofaPlacement> {
         let n = comm.len();
         let topo = platform.topology();
-        let index = platform.topo_index();
-        assert_eq!(free.len(), index.num_nodes());
+        let oracle = platform.hop_oracle();
+        assert_eq!(free.len(), platform.num_nodes());
         let candidates: Vec<usize> = (0..free.len()).filter(|&i| free[i]).collect();
         if candidates.len() < n {
             return Err(Error::Placement(format!(
@@ -181,10 +197,13 @@ impl TofaPlacer {
         }
         let clean = outage.iter().all(|&p| p <= 0.0);
         let mut ws = self.ws.lock().expect("TOFA cost workspace poisoned");
-        let window = find_route_clean_window_masked(index, outage, n, free, &mut ws)
-            .or_else(|| find_fault_free_window_masked(outage, free, n));
+        let window = match oracle.index() {
+            Some(index) => find_route_clean_window_masked(index, outage, n, free, &mut ws),
+            None => find_route_clean_window_masked_implicit(topo, outage, n, free, &mut ws),
+        }
+        .or_else(|| find_fault_free_window_masked(outage, free, n));
         if let Some(window) = window {
-            let sub: DistanceMatrix = index.clean_hops().extract(&window);
+            let sub: DistanceMatrix = oracle.extract(&window);
             let local = self.config.mapper.map(comm, &sub)?;
             let assignment = local.assignment.iter().map(|&li| window[li]).collect();
             return Ok(TofaPlacement {
@@ -197,11 +216,24 @@ impl TofaPlacer {
             });
         }
         // no window inside the free set (fragmentation or faults): map
-        // over the fault-weighted matrix restricted to the candidates
+        // over the fault-weighted matrix restricted to the candidates —
+        // candidate-sized, but an implicit platform still refuses a
+        // cluster-scale candidate set rather than allocate O(n²)
         let dist = if clean {
-            index.clean_hops().extract(&candidates)
+            if !oracle.is_dense() {
+                check_materialize(candidates.len())?;
+            }
+            oracle.extract(&candidates)
         } else {
-            fault_aware_distance_indexed(index, topo, outage, &mut ws).extract(&candidates)
+            match oracle.index() {
+                Some(index) => {
+                    fault_aware_distance_indexed(index, topo, outage, &mut ws).extract(&candidates)
+                }
+                None => {
+                    check_materialize(candidates.len())?;
+                    fault_aware_submatrix(topo, outage, &candidates, &mut ws)
+                }
+            }
         };
         let local = self.config.mapper.map(comm, &dist)?;
         let assignment = local.assignment.iter().map(|&li| candidates[li]).collect();
@@ -402,6 +434,35 @@ mod tests {
             .place_within(&c, &plat, &vec![0.0; 512], &free)
             .unwrap_err();
         assert!(err.to_string().contains("free nodes"), "{err}");
+    }
+
+    #[test]
+    fn implicit_platform_places_identically_to_dense() {
+        use crate::topology::MetricMode;
+        let (c, plat) = setup(32);
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let placer = TofaPlacer::default();
+        // the three Listing 1.1 paths plus a candidate mask
+        let mut window_outage = vec![0.0; 512];
+        window_outage[40] = 0.05;
+        let mut dense_outage = vec![0.0; 512];
+        for i in (0..512).step_by(16) {
+            dense_outage[i] = 0.02;
+        }
+        for outage in [vec![0.0; 512], window_outage, dense_outage] {
+            let a = placer.place(&c, &plat, &outage).unwrap();
+            let b = placer.place(&c, &implicit, &outage).unwrap();
+            assert_eq!(a.path, b.path);
+            assert_eq!(a.assignment, b.assignment);
+            let mut free = vec![true; 512];
+            for f in free.iter_mut().take(64) {
+                *f = false;
+            }
+            let a = placer.place_within(&c, &plat, &outage, &free).unwrap();
+            let b = placer.place_within(&c, &implicit, &outage, &free).unwrap();
+            assert_eq!(a.path, b.path);
+            assert_eq!(a.assignment, b.assignment);
+        }
     }
 
     #[test]

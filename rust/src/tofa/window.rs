@@ -3,8 +3,25 @@
 //! TOFA first tries to find `|V_G|` nodes with **consecutive ids** all of
 //! which have zero (estimated) outage probability. Node ids enumerate the
 //! torus row-major, so a window is a contiguous run in Slurm's node list.
+//!
+//! Three route-clean searches return the **same** window:
+//! [`find_route_clean_window`] (dense reference, re-routes every closure),
+//! [`find_route_clean_window_indexed`] (slides over a precomputed
+//! [`TopoIndex`](crate::topology::TopoIndex)), and
+//! [`find_route_clean_window_implicit`] (slides with on-demand
+//! [`route_touches`](crate::topology::Topology::route_touches) queries —
+//! O(n) memory, the 100k-node path).
+//!
+//! ```
+//! use tofa::tofa::window::find_fault_free_window;
+//!
+//! let mut outage = vec![0.0; 16];
+//! outage[3] = 0.1; // node 3 is flaky: the first clean 4-run starts at 4
+//! assert_eq!(find_fault_free_window(&outage, 4), Some(vec![4, 5, 6, 7]));
+//! assert_eq!(find_fault_free_window(&outage, 13), None);
+//! ```
 
-use crate::topology::CostWorkspace;
+use crate::topology::{CostWorkspace, Topology};
 
 /// Find the first run of `len` consecutive node ids whose outage
 /// probability is zero. Returns the node ids, or `None`.
@@ -248,6 +265,144 @@ fn route_clean_window_core(
     None
 }
 
+/// Implicit-metric route-clean window search: the counterpart of
+/// [`find_route_clean_window_indexed`] for platforms where the
+/// [`TopoIndex`](crate::topology::TopoIndex) is never built. Dirty pairs
+/// are discovered on demand with
+/// [`Topology::route_touches`] (closed-form for the in-tree families)
+/// instead of precomputed transit-incidence lists, so the search allocates
+/// O(n) — never O(n²) — and still returns the **same** first valid window
+/// as the dense and indexed paths (asserted in `tests/proptests.rs`).
+pub fn find_route_clean_window_implicit(
+    topo: &dyn Topology,
+    outage: &[f64],
+    len: usize,
+    ws: &mut CostWorkspace,
+) -> Option<Vec<usize>> {
+    route_clean_window_lazy_core(topo, outage, len, None, ws)
+}
+
+/// [`find_route_clean_window_implicit`] restricted to a candidate set —
+/// the implicit counterpart of [`find_route_clean_window_masked`], with
+/// identical mask semantics (endpoints must be eligible and clean; busy
+/// transits are fine).
+pub fn find_route_clean_window_masked_implicit(
+    topo: &dyn Topology,
+    outage: &[f64],
+    len: usize,
+    eligible: &[bool],
+    ws: &mut CostWorkspace,
+) -> Option<Vec<usize>> {
+    assert_eq!(eligible.len(), topo.num_nodes());
+    route_clean_window_lazy_core(topo, outage, len, Some(eligible), ws)
+}
+
+/// Shared core of the implicit window searches: the same slide as
+/// [`route_clean_window_core`], but each pair's dirtiness is answered
+/// lazily by [`Topology::route_touches`] the moment the pair enters the
+/// window. Every in-window pair is recorded (once, on its *lower* node's
+/// partner list, when its higher node enters — the lower node is the one
+/// that exits first as windows slide right) and discharged wholesale when
+/// that node leaves, so the running dirty count is exact without any
+/// per-pair marks. Memory: the partner lists hold at most the dirty pairs
+/// of one window — O(n) overall.
+fn route_clean_window_lazy_core(
+    topo: &dyn Topology,
+    outage: &[f64],
+    len: usize,
+    eligible: Option<&[bool]>,
+    ws: &mut CostWorkspace,
+) -> Option<Vec<usize>> {
+    let n = topo.num_nodes();
+    assert_eq!(outage.len(), n);
+    if len == 0 || len > n {
+        return None;
+    }
+    ws.prepare(outage);
+    let CostWorkspace {
+        flaky,
+        flaky_nodes,
+        flaky_prefix,
+        partners,
+        partner_touched,
+        blocked_prefix,
+        ..
+    } = ws;
+    // window-membership prefix, exactly as in the indexed core
+    let prefix: &[u32] = match eligible {
+        None => flaky_prefix.as_slice(),
+        Some(elig) => {
+            blocked_prefix.clear();
+            blocked_prefix.reserve(n + 1);
+            blocked_prefix.push(0u32);
+            let mut acc = 0u32;
+            for i in 0..n {
+                if flaky[i] || !elig[i] {
+                    acc += 1;
+                }
+                blocked_prefix.push(acc);
+            }
+            blocked_prefix.as_slice()
+        }
+    };
+    let blocked_in = |lo: usize, hi: usize| prefix[hi] - prefix[lo];
+    if flaky_nodes.is_empty() {
+        // no flaky node, no dirty pair anywhere: scan membership only
+        return (0..=(n - len))
+            .find(|&s| blocked_in(s, s + len) == 0)
+            .map(|s| (s..s + len).collect());
+    }
+    let dirty_pair = |u: usize, v: usize| {
+        flaky_nodes
+            .iter()
+            .any(|&f| topo.route_touches(u, v, f as usize))
+    };
+    // reset only the partner lists the previous call populated
+    if partners.len() < n {
+        partners.resize_with(n, Vec::new);
+    }
+    for &t in partner_touched.iter() {
+        partners[t as usize].clear();
+    }
+    partner_touched.clear();
+    // seed the initial window [0, len)
+    let mut dirty: i64 = 0;
+    for w in 1..len {
+        for u in 0..w {
+            if dirty_pair(u, w) {
+                if partners[u].is_empty() {
+                    partner_touched.push(u as u32);
+                }
+                partners[u].push(w as u32);
+                dirty += 1;
+            }
+        }
+    }
+    for s in 0..=(n - len) {
+        debug_assert!(dirty >= 0, "dirty-pair count went negative at {s}");
+        if blocked_in(s, s + len) == 0 && dirty == 0 {
+            return Some((s..s + len).collect());
+        }
+        if s + len < n {
+            // node s leaves: every pair it still holds was (s, x), x > s
+            dirty -= partners[s].len() as i64;
+            partners[s].clear();
+            // node w = s + len enters: admit its pairs against [s+1, w)
+            let w = s + len;
+            for u in (s + 1)..w {
+                if dirty_pair(u, w) {
+                    if partners[u].is_empty() {
+                        partner_touched.push(u as u32);
+                    }
+                    partners[u].push(w as u32);
+                    dirty += 1;
+                }
+            }
+        }
+    }
+    None
+}
+
 /// All maximal fault-free runs as `(start, len)` — used by diagnostics and
 /// the ablation bench exploring window availability vs faulty-node count.
 pub fn fault_free_runs(outage: &[f64]) -> Vec<(usize, usize)> {
@@ -333,6 +488,61 @@ mod tests {
                 let fast = find_route_clean_window_indexed(&index, &outage, len, &mut ws);
                 assert_eq!(fast, dense, "{} case {case} len {len}", t.describe());
             }
+        }
+    }
+
+    #[test]
+    fn implicit_search_returns_the_same_window_as_indexed() {
+        use crate::topology::{Dragonfly, DragonflyParams, FatTree, TopoIndex, Torus, TorusDims};
+        let topos: Vec<Box<dyn Topology>> = vec![
+            Box::new(Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()),
+            Box::new(FatTree::new(4).unwrap()),
+            Box::new(Torus::new(TorusDims::new(4, 4, 2))),
+        ];
+        let mut rng = crate::rng::Rng::new(37);
+        let mut ws_a = CostWorkspace::new();
+        let mut ws_b = CostWorkspace::new();
+        for t in &topos {
+            let n = t.num_nodes();
+            let index = TopoIndex::build(t.as_ref());
+            for case in 0..40 {
+                let mut outage = vec![0.0; n];
+                let n_flaky = rng.below_usize(n / 2 + 1);
+                for f in rng.sample_distinct(n, n_flaky) {
+                    outage[f] = 0.02;
+                }
+                let len = rng.below_usize(n + 2); // includes 0 and > n
+                let indexed = find_route_clean_window_indexed(&index, &outage, len, &mut ws_a);
+                let implicit =
+                    find_route_clean_window_implicit(t.as_ref(), &outage, len, &mut ws_b);
+                assert_eq!(implicit, indexed, "{} case {case} len {len}", t.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn masked_implicit_search_matches_the_masked_indexed_search() {
+        use crate::topology::{TopoIndex, Torus, TorusDims};
+        let t = Torus::new(TorusDims::new(4, 4, 2));
+        let index = TopoIndex::build(&t);
+        let n = crate::topology::Topology::num_nodes(&t);
+        let mut rng = crate::rng::Rng::new(53);
+        let mut ws_a = CostWorkspace::new();
+        let mut ws_b = CostWorkspace::new();
+        for case in 0..60 {
+            let mut outage = vec![0.0; n];
+            for f in rng.sample_distinct(n, rng.below_usize(n / 3 + 1)) {
+                outage[f] = 0.02;
+            }
+            let mut eligible = vec![true; n];
+            for b in rng.sample_distinct(n, rng.below_usize(n / 2 + 1)) {
+                eligible[b] = false;
+            }
+            let len = rng.below_usize(n + 2);
+            let indexed = find_route_clean_window_masked(&index, &outage, len, &eligible, &mut ws_a);
+            let implicit =
+                find_route_clean_window_masked_implicit(&t, &outage, len, &eligible, &mut ws_b);
+            assert_eq!(implicit, indexed, "case {case} len {len}");
         }
     }
 

@@ -283,6 +283,14 @@ impl Topology for Dragonfly {
         (rack * per_group..(rack + 1) * per_group).collect()
     }
 
+    fn route_touches(&self, u: usize, v: usize, node: usize) -> bool {
+        debug_assert!(node < Dragonfly::num_nodes(self));
+        // minimal routes transit routers only (asserted in
+        // routes_match_hops_and_are_connected), so a compute node is on
+        // R(u, v) iff it is an endpoint of a non-empty route
+        u != v && (node == u || node == v)
+    }
+
     fn salt(&self) -> u64 {
         super::fnv_salt(
             "dragonfly",
@@ -364,6 +372,21 @@ mod tests {
             for v in 0..n {
                 for l in d.route(u, v) {
                     assert!(physical.contains(&(l.src, l.dst)), "{u}->{v}: {l:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_touches_matches_routed_scan() {
+        let d = Dragonfly::new(DragonflyParams::new(5, 4, 2, 1)).unwrap();
+        let n = Topology::num_nodes(&d);
+        for u in 0..n {
+            for v in 0..n {
+                let route = d.route(u, v);
+                for node in 0..n {
+                    let scanned = route.iter().any(|l| l.src == node || l.dst == node);
+                    assert_eq!(d.route_touches(u, v, node), scanned, "({u},{v}) node {node}");
                 }
             }
         }

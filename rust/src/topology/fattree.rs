@@ -209,6 +209,14 @@ impl Topology for FatTree {
     fn salt(&self) -> u64 {
         super::fnv_salt("fattree", &[self.k as u64])
     }
+
+    fn route_touches(&self, u: usize, v: usize, node: usize) -> bool {
+        debug_assert!(node < FatTree::num_nodes(self));
+        // up/down routes transit switches only (asserted in
+        // routes_match_hops_and_are_connected), so a compute node is on
+        // R(u, v) iff it is an endpoint of a non-empty route
+        u != v && (node == u || node == v)
+    }
 }
 
 #[cfg(test)]
@@ -273,6 +281,21 @@ mod tests {
             for v in (0..n).step_by(7) {
                 for l in f.route(u, v) {
                     assert!(physical.contains(&(l.src, l.dst)), "{u}->{v}: {l:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_touches_matches_routed_scan() {
+        let f = FatTree::new(4).unwrap();
+        let n = Topology::num_nodes(&f);
+        for u in 0..n {
+            for v in 0..n {
+                let route = f.route(u, v);
+                for node in 0..n {
+                    let scanned = route.iter().any(|l| l.src == node || l.dst == node);
+                    assert_eq!(f.route_touches(u, v, node), scanned, "({u},{v}) node {node}");
                 }
             }
         }

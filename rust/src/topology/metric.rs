@@ -1,0 +1,307 @@
+//! Implicit hop metrics — on-demand distances without the O(n²) wall.
+//!
+//! Every placement-side consumer used to reach distances through dense
+//! per-platform state: the [`DistanceMatrix`] (n² f32 entries) and the
+//! [`TopoIndex`] (the same matrix plus a transit-incidence CSR built by a
+//! full O(n²) route sweep). That caps platforms at a few thousand nodes —
+//! a 100k-node fabric would need ~40 GB for the hop matrix alone — even
+//! though all three in-tree topology families answer `hops(u, v)` and
+//! "does `R(u, v)` touch node `w`?" in closed form
+//! ([`Topology::hops`], [`Topology::route_touches`]).
+//!
+//! This module makes the metric *implicit*:
+//!
+//! * [`MetricMode`] selects per platform how distances are served:
+//!   `Dense` (the [`TopoIndex`] reference path), `Implicit` (closed
+//!   forms, no O(n²) state ever built), or `Auto` (dense up to
+//!   [`DENSE_NODE_LIMIT`] nodes, implicit beyond — the PR-4 pattern of
+//!   keeping the dense path as the bit-identity reference under a size
+//!   threshold).
+//! * [`HopOracle`] is the uniform façade the Eq. 1 engine, the window
+//!   search, and [`FansPlugin::select`](crate::slurm::plugins::fans) see:
+//!   `hops(u, v)` on demand, plus [`HopOracle::extract`] for the sparse
+//!   per-job views — only the candidate-set submatrix (sized by the job,
+//!   not the cluster) is ever materialized under the implicit mode.
+//!
+//! Both modes are **bit-identical** where both run: a clean entry is the
+//! exact `|R(u, v)| as f32` either way (a sum of `1.0f32` per hop is
+//! exact), asserted across all topology families and fault models in
+//! `tests/proptests.rs`.
+//!
+//! ```
+//! use tofa::topology::{MetricMode, Platform, TorusDims};
+//!
+//! let dense = Platform::paper_default(TorusDims::new(4, 4, 2));
+//! let implicit = dense.clone().with_metric(MetricMode::Implicit);
+//! assert!(dense.resolved_metric().is_dense());
+//! assert!(!implicit.resolved_metric().is_dense());
+//! // same hops, bit for bit — one from the TopoIndex, one on demand
+//! let (a, b) = (dense.hop_oracle(), implicit.hop_oracle());
+//! for u in 0..32 {
+//!     for v in 0..32 {
+//!         assert_eq!(a.hops(u, v).to_bits(), b.hops(u, v).to_bits());
+//!     }
+//! }
+//! // the implicit platform refuses to build the dense index
+//! assert!(implicit.try_topo_index().is_err());
+//! ```
+
+use super::distance::DistanceMatrix;
+use super::index::TopoIndex;
+use super::Topology;
+use crate::error::{Error, Result};
+
+/// Largest platform (in compute nodes) for which [`MetricMode::Auto`]
+/// still builds the dense [`TopoIndex`]. At this size the hop matrix is
+/// 64 MB — comfortably cached and the fastest option; beyond it the
+/// implicit path wins on memory by construction (it allocates O(n)).
+pub const DENSE_NODE_LIMIT: usize = 4096;
+
+/// How a [`Platform`](super::Platform) serves hop distances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricMode {
+    /// Dense up to [`DENSE_NODE_LIMIT`] nodes, implicit beyond.
+    #[default]
+    Auto,
+    /// Always build and use the dense [`TopoIndex`] (reference path).
+    Dense,
+    /// Never build O(n²) state; serve every query from closed forms.
+    Implicit,
+}
+
+impl MetricMode {
+    /// Parse the CLI form (`--metric=auto|dense|implicit`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(MetricMode::Auto),
+            "dense" => Ok(MetricMode::Dense),
+            "implicit" => Ok(MetricMode::Implicit),
+            other => Err(Error::Topology(format!(
+                "unknown metric mode: {other} (expected auto|dense|implicit)"
+            ))),
+        }
+    }
+
+    /// Resolve the mode for a platform of `num_nodes` compute nodes.
+    pub fn resolve(self, num_nodes: usize) -> ResolvedMetric {
+        match self {
+            MetricMode::Dense => ResolvedMetric::Dense,
+            MetricMode::Implicit => ResolvedMetric::Implicit,
+            MetricMode::Auto => {
+                if num_nodes <= DENSE_NODE_LIMIT {
+                    ResolvedMetric::Dense
+                } else {
+                    ResolvedMetric::Implicit
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for MetricMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MetricMode::Auto => "auto",
+            MetricMode::Dense => "dense",
+            MetricMode::Implicit => "implicit",
+        })
+    }
+}
+
+/// A [`MetricMode`] resolved against a concrete platform size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolvedMetric {
+    /// The dense [`TopoIndex`] path is in effect.
+    Dense,
+    /// The implicit closed-form path is in effect.
+    Implicit,
+}
+
+impl ResolvedMetric {
+    /// True for the dense [`TopoIndex`] path.
+    pub fn is_dense(self) -> bool {
+        matches!(self, ResolvedMetric::Dense)
+    }
+}
+
+/// Guard for the few implicit-mode operations that must still materialize
+/// a `k x k` matrix (the fault-weighted full-cluster fallback, the
+/// standard policies' candidate extract): a typed error instead of a
+/// multi-gigabyte allocation. Window extracts are job-sized and never hit
+/// this.
+pub fn check_materialize(k: usize) -> Result<()> {
+    if k > DENSE_NODE_LIMIT {
+        return Err(Error::Placement(format!(
+            "refusing to materialize a {k}x{k} distance matrix under the implicit metric \
+             (limit {DENSE_NODE_LIMIT} nodes); restrict the candidate set"
+        )));
+    }
+    Ok(())
+}
+
+/// The distance source placement consumers see: either a borrowed dense
+/// [`TopoIndex`] or the topology's closed forms, behind one API. Obtain
+/// one from [`Platform::hop_oracle`](super::Platform::hop_oracle).
+///
+/// Dense and implicit answers are bit-identical (the clean hop matrix
+/// stores exactly `|R(u, v)| as f32`, which equals `hops(u, v) as f32` by
+/// the [`Topology`] contract); the difference is purely memory — O(n²)
+/// once vs O(1) per query.
+#[derive(Debug, Clone, Copy)]
+pub struct HopOracle<'a> {
+    topo: &'a dyn Topology,
+    index: Option<&'a TopoIndex>,
+}
+
+impl<'a> HopOracle<'a> {
+    /// Dense oracle over a prebuilt index.
+    pub fn dense(topo: &'a dyn Topology, index: &'a TopoIndex) -> Self {
+        debug_assert_eq!(index.num_nodes(), topo.num_nodes());
+        HopOracle {
+            topo,
+            index: Some(index),
+        }
+    }
+
+    /// Implicit oracle: every query goes to the topology's closed forms.
+    pub fn implicit(topo: &'a dyn Topology) -> Self {
+        HopOracle { topo, index: None }
+    }
+
+    /// True when backed by the dense [`TopoIndex`].
+    pub fn is_dense(&self) -> bool {
+        self.index.is_some()
+    }
+
+    /// The dense index, when this oracle is dense — the incremental
+    /// engines ([`fault_aware_distance_indexed`], the indexed window
+    /// search) take it directly.
+    ///
+    /// [`fault_aware_distance_indexed`]: crate::tofa::eq1::fault_aware_distance_indexed
+    pub fn index(&self) -> Option<&'a TopoIndex> {
+        self.index
+    }
+
+    /// The underlying topology.
+    pub fn topology(&self) -> &'a dyn Topology {
+        self.topo
+    }
+
+    /// Compute-node count.
+    pub fn num_nodes(&self) -> usize {
+        self.topo.num_nodes()
+    }
+
+    /// Clean hop distance between two compute nodes, as the f32 the
+    /// Eq. 1 engine works in.
+    #[inline]
+    pub fn hops(&self, u: usize, v: usize) -> f32 {
+        match self.index {
+            Some(ix) => ix.clean_hops().get(u, v),
+            None => self.topo.hops(u, v) as f32,
+        }
+    }
+
+    /// The sparse per-job view: the clean hop submatrix over `subset`
+    /// (entry `(i, j)` is the distance between `subset[i]` and
+    /// `subset[j]`). Sized by the job's candidate set — under the
+    /// implicit mode this is the *only* matrix ever materialized.
+    pub fn extract(&self, subset: &[usize]) -> DistanceMatrix {
+        match self.index {
+            Some(ix) => ix.clean_hops().extract(subset),
+            None => {
+                let k = subset.len();
+                let mut m = DistanceMatrix::zeros(k);
+                for i in 0..k {
+                    for j in (i + 1)..k {
+                        let h = self.topo.hops(subset[i], subset[j]) as f32;
+                        m.set(i, j, h);
+                        m.set(j, i, h);
+                    }
+                }
+                m
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{Dragonfly, DragonflyParams, FatTree, Torus, TorusDims};
+
+    fn families() -> Vec<Box<dyn Topology>> {
+        vec![
+            Box::new(Torus::new(TorusDims::new(4, 4, 2))),
+            Box::new(FatTree::new(4).unwrap()),
+            Box::new(Dragonfly::new(DragonflyParams::new(3, 2, 2, 1)).unwrap()),
+        ]
+    }
+
+    #[test]
+    fn mode_parsing_and_display_round_trip() {
+        for mode in [MetricMode::Auto, MetricMode::Dense, MetricMode::Implicit] {
+            assert_eq!(MetricMode::parse(&mode.to_string()).unwrap(), mode);
+        }
+        assert!(MetricMode::parse("sparse").is_err());
+        assert_eq!(MetricMode::default(), MetricMode::Auto);
+    }
+
+    #[test]
+    fn auto_resolves_on_the_size_threshold() {
+        assert!(MetricMode::Auto.resolve(DENSE_NODE_LIMIT).is_dense());
+        assert!(!MetricMode::Auto.resolve(DENSE_NODE_LIMIT + 1).is_dense());
+        assert!(MetricMode::Dense.resolve(1_000_000).is_dense());
+        assert!(!MetricMode::Implicit.resolve(2).is_dense());
+    }
+
+    #[test]
+    fn materialize_guard_trips_beyond_the_limit() {
+        assert!(check_materialize(DENSE_NODE_LIMIT).is_ok());
+        let err = check_materialize(DENSE_NODE_LIMIT + 1).unwrap_err();
+        assert!(err.to_string().contains("implicit metric"), "{err}");
+    }
+
+    #[test]
+    fn implicit_oracle_matches_dense_bit_for_bit() {
+        for t in families() {
+            let what = t.describe();
+            let index = TopoIndex::build(t.as_ref());
+            let dense = HopOracle::dense(t.as_ref(), &index);
+            let implicit = HopOracle::implicit(t.as_ref());
+            assert!(dense.is_dense() && !implicit.is_dense());
+            let n = t.num_nodes();
+            for u in 0..n {
+                for v in 0..n {
+                    assert_eq!(
+                        dense.hops(u, v).to_bits(),
+                        implicit.hops(u, v).to_bits(),
+                        "{what} ({u},{v})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extract_agrees_across_modes_on_arbitrary_subsets() {
+        let mut rng = crate::rng::Rng::new(7);
+        for t in families() {
+            let what = t.describe();
+            let index = TopoIndex::build(t.as_ref());
+            let dense = HopOracle::dense(t.as_ref(), &index);
+            let implicit = HopOracle::implicit(t.as_ref());
+            let n = t.num_nodes();
+            for case in 0..20 {
+                let k = 1 + rng.below_usize(n);
+                let subset = rng.sample_distinct(n, k);
+                let a = dense.extract(&subset);
+                let b = implicit.extract(&subset);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{what} case {case}");
+                }
+            }
+        }
+    }
+}

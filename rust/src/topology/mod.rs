@@ -22,6 +22,7 @@ pub mod dragonfly;
 pub mod fattree;
 pub mod graph;
 pub mod index;
+pub mod metric;
 pub mod platform;
 pub mod torus;
 
@@ -30,6 +31,7 @@ pub use dragonfly::{Dragonfly, DragonflyParams};
 pub use fattree::FatTree;
 pub use graph::ArchGraph;
 pub use index::{CostWorkspace, TopoIndex};
+pub use metric::{HopOracle, MetricMode, ResolvedMetric, DENSE_NODE_LIMIT};
 pub use platform::Platform;
 pub use torus::{Link, Torus, TorusDims};
 
@@ -143,6 +145,29 @@ pub trait Topology: std::fmt::Debug + Send + Sync {
     /// platforms never collide.
     fn salt(&self) -> u64;
 
+    /// Does the fixed route `R(u, v)` touch compute node `node` as a link
+    /// endpoint? The pair endpoints count (`u` and `v` bound the first and
+    /// last link), and `u == v` has an empty route touching nothing.
+    ///
+    /// `node` must be a compute node (`node < num_nodes()`): switches and
+    /// routers never fail, so no fault-path consumer asks about them.
+    ///
+    /// This is the primitive of the implicit metric
+    /// ([`metric::HopOracle`]): the default routes and scans, but the
+    /// in-tree families override it with O(1) closed forms (equivalence
+    /// with the routed ground truth is asserted per family in
+    /// `tests/proptests.rs`).
+    fn route_touches(&self, u: usize, v: usize, node: usize) -> bool {
+        debug_assert!(node < self.num_nodes(), "route_touches asked about a switch");
+        if u == v {
+            return false;
+        }
+        if node == u || node == v {
+            return true;
+        }
+        self.route(u, v).iter().any(|l| l.src == node || l.dst == node)
+    }
+
     /// Downcast escape hatch for torus-only artifacts (the FATT topology
     /// file format stores torus coordinates).
     fn as_torus(&self) -> Option<&Torus> {
@@ -237,6 +262,11 @@ mod trait_tests {
         assert_eq!(l.num_vertices(), 6);
         assert_eq!(l.link_capacity_scale(0, 1), 1.0);
         assert!(l.as_torus().is_none());
+        // default route_touches: route-and-scan over the path graph
+        assert!(l.route_touches(1, 4, 2), "transit node");
+        assert!(l.route_touches(1, 4, 1) && l.route_touches(1, 4, 4), "endpoints");
+        assert!(!l.route_touches(1, 4, 5), "off-path node");
+        assert!(!l.route_touches(3, 3, 3), "empty route touches nothing");
     }
 
     #[test]

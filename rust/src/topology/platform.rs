@@ -10,8 +10,10 @@ use std::sync::{Arc, OnceLock};
 
 use super::distance::DistanceMatrix;
 use super::index::TopoIndex;
+use super::metric::{HopOracle, MetricMode, ResolvedMetric};
 use super::torus::{Torus, TorusDims};
 use super::Topology;
+use crate::error::{Error, Result};
 
 /// Immutable platform description shared by the placement and simulation
 /// layers. Fault *state* (which nodes are down in a given scenario) is kept
@@ -28,6 +30,10 @@ pub struct Platform {
     /// per-worker runner clones of the parallel batch engine — shares the
     /// one index, exactly like the phase cache.
     index: Arc<OnceLock<TopoIndex>>,
+    /// How distances are served: dense [`TopoIndex`] or on-demand closed
+    /// forms. Defaults to [`MetricMode::Auto`] (dense up to
+    /// [`DENSE_NODE_LIMIT`](super::metric::DENSE_NODE_LIMIT) nodes).
+    metric: MetricMode,
     /// Node compute capability in FLOPS.
     pub flops: f64,
     /// Link bandwidth in bytes/second (scaled per link by
@@ -49,6 +55,7 @@ impl Platform {
         Platform {
             topo,
             index: Arc::new(OnceLock::new()),
+            metric: MetricMode::Auto,
             flops: 6e9,
             bandwidth: 10e9 / 8.0, // 10 Gbps in bytes/s
             latency: 1e-6,
@@ -70,9 +77,52 @@ impl Platform {
         Platform {
             topo,
             index: Arc::new(OnceLock::new()),
+            metric: MetricMode::Auto,
             flops,
             bandwidth: bandwidth_bps / 8.0,
             latency: latency_s,
+        }
+    }
+
+    /// Select the [`MetricMode`] (builder style; the default is `Auto`).
+    pub fn with_metric(mut self, metric: MetricMode) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    /// The configured (unresolved) metric mode.
+    pub fn metric_mode(&self) -> MetricMode {
+        self.metric
+    }
+
+    /// The metric mode resolved against this platform's size.
+    pub fn resolved_metric(&self) -> ResolvedMetric {
+        self.metric.resolve(self.num_nodes())
+    }
+
+    /// The [`HopOracle`] placement consumers should query: dense (backed
+    /// by [`Platform::topo_index`]) or implicit, per
+    /// [`Platform::resolved_metric`].
+    pub fn hop_oracle(&self) -> HopOracle<'_> {
+        match self.resolved_metric() {
+            ResolvedMetric::Dense => HopOracle::dense(self.topo.as_ref(), self.topo_index()),
+            ResolvedMetric::Implicit => HopOracle::implicit(self.topo.as_ref()),
+        }
+    }
+
+    /// The dense [`TopoIndex`], or a typed error when the implicit metric
+    /// is in effect (the index is the O(n²) state the implicit mode exists
+    /// to avoid). Callers that can serve their query on demand should use
+    /// [`Platform::hop_oracle`] instead.
+    pub fn try_topo_index(&self) -> Result<&TopoIndex> {
+        match self.resolved_metric() {
+            ResolvedMetric::Dense => Ok(self.topo_index_dense()),
+            ResolvedMetric::Implicit => Err(Error::Topology(format!(
+                "dense TopoIndex refused: {} nodes under the implicit metric (mode {}); \
+                 use Platform::hop_oracle",
+                self.num_nodes(),
+                self.metric
+            ))),
         }
     }
 
@@ -103,7 +153,20 @@ impl Platform {
     /// The shared [`TopoIndex`] for this platform, built on first use and
     /// reused by every clone (worker threads included — `OnceLock` makes
     /// the one-time build race-free).
+    ///
+    /// # Panics
+    ///
+    /// When the implicit metric is in effect (the dense index must never
+    /// be built then) — use [`Platform::try_topo_index`] or
+    /// [`Platform::hop_oracle`] on code paths that can see implicit
+    /// platforms.
     pub fn topo_index(&self) -> &TopoIndex {
+        self.try_topo_index()
+            .expect("dense TopoIndex requested under the implicit metric mode")
+    }
+
+    /// The index build itself, sans the metric-mode guard.
+    fn topo_index_dense(&self) -> &TopoIndex {
         self.index.get_or_init(|| TopoIndex::build(self.topo.as_ref()))
     }
 
@@ -190,6 +253,23 @@ mod tests {
         // cloning shares the topology
         let clone = df.clone();
         assert_eq!(clone.num_nodes(), 12);
+    }
+
+    #[test]
+    fn metric_mode_defaults_to_auto_and_is_selectable() {
+        let p = Platform::paper_default(TorusDims::new(4, 4, 2));
+        assert_eq!(p.metric_mode(), MetricMode::Auto);
+        assert!(p.resolved_metric().is_dense(), "32 nodes resolve dense");
+        assert!(p.hop_oracle().is_dense());
+        assert!(p.try_topo_index().is_ok());
+
+        let imp = p.clone().with_metric(MetricMode::Implicit);
+        assert!(!imp.resolved_metric().is_dense());
+        assert!(!imp.hop_oracle().is_dense());
+        let err = imp.try_topo_index().unwrap_err();
+        assert!(err.to_string().contains("implicit metric"), "{err}");
+        // the oracle still answers, from closed forms
+        assert_eq!(imp.hop_oracle().hops(0, 1), 1.0);
     }
 
     #[test]

@@ -208,6 +208,42 @@ impl Torus {
         }
     }
 
+    /// Is coordinate `x` visited walking `from -> to` the shortest-wrap
+    /// way around a ring of size `n`? Ties break toward +1, exactly as
+    /// [`Torus::ring_step`] does, so the arc is the set of coordinates the
+    /// DOR route actually steps through (both endpoints included).
+    #[inline]
+    fn on_ring_arc(from: usize, to: usize, x: usize, n: usize) -> bool {
+        let (dir, hops) = Self::ring_step(from, to, n);
+        if dir >= 0 {
+            (x + n - from) % n <= hops
+        } else {
+            (from + n - x) % n <= hops
+        }
+    }
+
+    /// Closed-form membership test for the DOR route: does `R(u, v)` touch
+    /// `node` as a link endpoint? O(1), no route materialization — the
+    /// primitive of the implicit metric. Equivalent to scanning
+    /// [`Torus::route`] (asserted in tests here and in
+    /// `tests/proptests.rs`).
+    ///
+    /// The DOR route corrects X at `(., y_u, z_u)`, then Y at
+    /// `(x_v, ., z_u)`, then Z at `(x_v, y_v, .)`; segment endpoints
+    /// overlap at the turn vertices, matching the link-endpoint scan.
+    pub fn route_touches(&self, u: usize, v: usize, node: usize) -> bool {
+        debug_assert!(node < self.num_nodes());
+        if u == v {
+            return false;
+        }
+        let (ux, uy, uz) = self.coords(u);
+        let (vx, vy, vz) = self.coords(v);
+        let (nx, ny, nz) = self.coords(node);
+        (ny == uy && nz == uz && Self::on_ring_arc(ux, vx, nx, self.dims.x))
+            || (nx == vx && nz == uz && Self::on_ring_arc(uy, vy, ny, self.dims.y))
+            || (nx == vx && ny == vy && Self::on_ring_arc(uz, vz, nz, self.dims.z))
+    }
+
     /// Intermediate nodes (excluding endpoints) on the route `u -> v`.
     /// This is the registry the FATT plugin exports: which nodes serve as
     /// transit hops for a pair.
@@ -341,6 +377,10 @@ impl super::Topology for Torus {
         )
     }
 
+    fn route_touches(&self, u: usize, v: usize, node: usize) -> bool {
+        Torus::route_touches(self, u, v, node)
+    }
+
     fn as_torus(&self) -> Option<&Torus> {
         Some(self)
     }
@@ -360,6 +400,35 @@ mod tests {
         assert!(TorusDims::parse("8x8").is_err());
         assert!(TorusDims::parse("0x8x8").is_err());
         assert!(TorusDims::parse("axbxc").is_err());
+    }
+
+    #[test]
+    fn route_touches_matches_routed_scan_exhaustively() {
+        // even dims exercise the fwd == bwd tie-break, 1/2-sized dims the
+        // degenerate rings
+        for dims in [
+            TorusDims::new(4, 4, 1),
+            TorusDims::new(5, 3, 2),
+            TorusDims::new(2, 2, 2),
+            TorusDims::new(1, 1, 1),
+            TorusDims::new(6, 1, 4),
+        ] {
+            let t = Torus::new(dims);
+            let n = t.num_nodes();
+            for u in 0..n {
+                for v in 0..n {
+                    let route = t.route(u, v);
+                    for node in 0..n {
+                        let scanned = route.iter().any(|l| l.src == node || l.dst == node);
+                        assert_eq!(
+                            t.route_touches(u, v, node),
+                            scanned,
+                            "{dims} ({u},{v}) node {node}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

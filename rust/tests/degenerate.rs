@@ -1,0 +1,152 @@
+//! Degenerate-shape regression tests: the smallest legal instance of
+//! every topology family, plus whole-cluster jobs. The dense and the
+//! implicit metric must agree — or both refuse — even when every ring
+//! has length one, every window is the whole machine, and the route set
+//! is empty.
+
+use std::sync::Arc;
+
+use tofa::commgraph::CommMatrix;
+use tofa::mapping::PlacementPolicy;
+use tofa::rng::Rng;
+use tofa::slurm::plugins::fans::FansPlugin;
+use tofa::tofa::placer::{TofaPath, TofaPlacer};
+use tofa::topology::{
+    Dragonfly, DragonflyParams, FatTree, MetricMode, Platform, Topology, TorusDims,
+};
+
+/// The smallest legal platform of each family: a 1-node torus, the k=2
+/// fat-tree (two nodes under one switch), a one-host dragonfly.
+fn minimal_platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(1, 1, 1)),
+        Platform::paper_default_on(Arc::new(FatTree::new(2).unwrap())),
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(1, 1, 1, 1)).unwrap(),
+        )),
+    ]
+}
+
+fn ring_comm(rng: &mut Rng, n: usize) -> CommMatrix {
+    let mut c = CommMatrix::new(n);
+    for i in 0..n {
+        let j = (i + 1) % n;
+        if i != j {
+            c.add_sym(i, j, (rng.below(1_000) + 1) as f64);
+        }
+    }
+    c
+}
+
+#[test]
+fn minimal_shapes_have_consistent_metric_primitives() {
+    for plat in minimal_platforms() {
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let topo = plat.topology();
+        let n = plat.num_nodes();
+        let what = topo.describe();
+        let (dense, lazy) = (plat.hop_oracle(), implicit.hop_oracle());
+        for u in 0..n {
+            for v in 0..n {
+                assert_eq!(
+                    dense.hops(u, v).to_bits(),
+                    lazy.hops(u, v).to_bits(),
+                    "{what} ({u},{v})"
+                );
+                let route = topo.route(u, v);
+                for node in 0..n {
+                    let scanned = route.iter().any(|l| l.src == node || l.dst == node);
+                    assert_eq!(topo.route_touches(u, v, node), scanned, "{what}");
+                }
+            }
+        }
+        let all: Vec<usize> = (0..n).collect();
+        let (a, b) = (dense.extract(&all), lazy.extract(&all));
+        assert_eq!(a.as_slice(), b.as_slice(), "{what} whole-cluster extract");
+    }
+}
+
+#[test]
+fn whole_cluster_jobs_place_identically_on_minimal_shapes() {
+    // a job the size of the machine: the window (when clean) is the whole
+    // cluster, and a single flaky node forces the fault-weighted path —
+    // identical under both metrics
+    let mut rng = Rng::new(505);
+    let placer = TofaPlacer::default();
+    for plat in minimal_platforms() {
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        let comm = ring_comm(&mut rng, n);
+        for flaky in [None, Some(0usize)] {
+            let mut outage = vec![0.0; n];
+            if let Some(f) = flaky {
+                outage[f] = 0.1;
+            }
+            let a = placer.place(&comm, &plat, &outage).unwrap();
+            let b = placer.place(&comm, &implicit, &outage).unwrap();
+            assert_eq!(a.path, b.path, "{what} flaky {flaky:?}");
+            assert_eq!(a.assignment, b.assignment, "{what} flaky {flaky:?}");
+            // the expected Listing 1.1 path: clean -> trivial window,
+            // flaky whole-cluster -> no window left
+            match flaky {
+                None => assert_eq!(a.path, TofaPath::FaultFree, "{what}"),
+                Some(_) => assert_eq!(a.path, TofaPath::FaultWeighted, "{what}"),
+            }
+            let mut uniq = a.assignment.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), n, "{what}: whole-cluster job must cover");
+        }
+    }
+}
+
+#[test]
+fn oversized_jobs_are_rejected_under_both_metrics() {
+    // one rank more than the machine has nodes: both metrics must refuse
+    // (not panic, not place) — masked and unmasked
+    let mut rng = Rng::new(506);
+    let placer = TofaPlacer::default();
+    for plat in minimal_platforms() {
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        let comm = ring_comm(&mut rng, n + 1);
+        let outage = vec![0.0; n];
+        let free = vec![true; n];
+        let direct = placer.place_within(&comm, &plat, &outage, &free);
+        assert!(direct.is_err(), "{what} dense");
+        let lazy = placer.place_within(&comm, &implicit, &outage, &free);
+        assert!(lazy.is_err(), "{what} implicit");
+    }
+}
+
+#[test]
+fn fans_policies_agree_across_metrics_on_minimal_shapes() {
+    let mut rng = Rng::new(507);
+    let fans = FansPlugin::default();
+    let policies = [
+        PlacementPolicy::DefaultSlurm,
+        PlacementPolicy::Random,
+        PlacementPolicy::Greedy,
+        PlacementPolicy::Scotch,
+        PlacementPolicy::Tofa,
+    ];
+    for plat in minimal_platforms() {
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        let comm = ring_comm(&mut rng, n);
+        let outage = vec![0.0; n];
+        for policy in policies {
+            let seed = rng.next_u64();
+            let a = fans
+                .select(policy, &comm, &plat, &outage, None, &mut Rng::new(seed))
+                .unwrap();
+            let b = fans
+                .select(policy, &comm, &implicit, &outage, None, &mut Rng::new(seed))
+                .unwrap();
+            assert_eq!(a, b, "{what} {policy:?}");
+        }
+    }
+}

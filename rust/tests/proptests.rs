@@ -9,6 +9,7 @@ use tofa::mapping::bisect::bisect;
 use tofa::mapping::cost::{hop_bytes_cost, vertex_contributions};
 use tofa::mapping::kl::{move_delta, swap_delta};
 use tofa::mapping::recmap::{compact_subset, RecursiveMapper};
+use tofa::mapping::PlacementPolicy;
 use tofa::profiler::{expand, schedule_bytes, CollectiveKind};
 use tofa::rng::Rng;
 use tofa::sim::fault::{
@@ -16,13 +17,17 @@ use tofa::sim::fault::{
     WeibullLifetime,
 };
 use tofa::sim::network::{Flow, NetSim};
-use tofa::tofa::eq1::{fault_aware_distance, fault_aware_distance_indexed};
+use tofa::slurm::plugins::fans::FansPlugin;
+use tofa::tofa::eq1::{fault_aware_distance, fault_aware_distance_indexed, fault_aware_submatrix};
+use tofa::tofa::placer::{TofaPath, TofaPlacer};
 use tofa::tofa::window::{
-    find_fault_free_window, find_route_clean_window, find_route_clean_window_indexed,
+    find_fault_free_window, find_route_clean_window, find_route_clean_window_implicit,
+    find_route_clean_window_indexed, find_route_clean_window_masked,
+    find_route_clean_window_masked_implicit,
 };
 use tofa::topology::{
-    CostWorkspace, DistanceMatrix, Dragonfly, DragonflyParams, FatTree, Platform, TopoIndex,
-    Topology, Torus, TorusDims,
+    CostWorkspace, DistanceMatrix, Dragonfly, DragonflyParams, FatTree, MetricMode, Platform,
+    TopoIndex, Topology, Torus, TorusDims, DENSE_NODE_LIMIT,
 };
 
 fn random_comm(rng: &mut Rng, n: usize, edges: usize) -> CommMatrix {
@@ -685,6 +690,239 @@ fn prop_topo_index_incidence_covers_exactly_the_perturbable_pairs() {
             }
         }
     }
+}
+
+#[test]
+fn prop_route_touches_matches_the_routed_scan_on_every_family() {
+    // the closed-form membership primitive of the implicit metric must
+    // agree with scanning the materialized route — exhaustively, on
+    // every family (the torus tie-breaks, fat-tree/dragonfly endpoints)
+    for t in all_topologies() {
+        let n = t.num_nodes();
+        let what = t.describe();
+        for u in 0..n {
+            for v in 0..n {
+                let route = t.route(u, v);
+                let mut touched = vec![false; n];
+                for l in &route {
+                    if l.src < n {
+                        touched[l.src] = true;
+                    }
+                    if l.dst < n {
+                        touched[l.dst] = true;
+                    }
+                }
+                for (node, &want) in touched.iter().enumerate() {
+                    assert_eq!(t.route_touches(u, v, node), want, "{what}: ({u},{v}) node {node}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eq1_submatrix_is_bit_identical_to_the_dense_extract_for_all_models() {
+    // the implicit metric's candidate-sized Eq. 1 matrices must equal
+    // extracting the dense reference, bit for bit, for every topology
+    // family x fault model x subset (including the full node set)
+    let mut rng = Rng::new(404);
+    let mut ws = CostWorkspace::new();
+    for plat in engine_platforms() {
+        let topo = plat.topology();
+        let n = plat.num_nodes();
+        let what = topo.describe();
+        for case in 0..4 {
+            for (model, outage) in all_model_outages(&plat, &mut rng) {
+                let dense = fault_aware_distance(topo, &outage);
+                let mut subsets = vec![(0..n).collect::<Vec<usize>>()];
+                for _ in 0..3 {
+                    subsets.push(rng.sample_distinct(n, 1 + rng.below_usize(n)));
+                }
+                for subset in subsets {
+                    let want = dense.extract(&subset);
+                    let got = fault_aware_submatrix(topo, &outage, &subset, &mut ws);
+                    assert_eq!(want.len(), got.len());
+                    for (i, (a, b)) in want.as_slice().iter().zip(got.as_slice()).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{what} case {case} model {model} entry {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One dense-vs-lazy window comparison, plain and masked, used by the
+/// implicit-window property below.
+fn check_window_parity(
+    plat: &Platform,
+    outage: &[f64],
+    eligible: &[bool],
+    len: usize,
+    ws: &mut CostWorkspace,
+    ctx: &str,
+) {
+    let topo = plat.topology();
+    let index = plat.topo_index();
+    let indexed = find_route_clean_window_indexed(index, outage, len, ws);
+    let lazy = find_route_clean_window_implicit(topo, outage, len, ws);
+    assert_eq!(lazy, indexed, "{ctx} len {len}");
+    let m_idx = find_route_clean_window_masked(index, outage, len, eligible, ws);
+    let m_lazy = find_route_clean_window_masked_implicit(topo, outage, len, eligible, ws);
+    assert_eq!(m_lazy, m_idx, "{ctx} len {len} masked");
+}
+
+#[test]
+fn prop_window_implicit_returns_the_same_window_for_all_models() {
+    // the lazy dirty-pair search must return the same Option<Vec> as the
+    // incidence-list search — plain and masked — for every topology
+    // family x fault model x window length
+    let mut rng = Rng::new(405);
+    let mut ws = CostWorkspace::new();
+    for plat in engine_platforms() {
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        for case in 0..4 {
+            for (model, outage) in all_model_outages(&plat, &mut rng) {
+                let mut eligible = vec![true; n];
+                for b in rng.sample_distinct(n, rng.below_usize(n / 2 + 1)) {
+                    eligible[b] = false;
+                }
+                let ctx = format!("{what} case {case} model {model}");
+                for len in [1usize, 2, n / 4, n / 2, n, n + 1, 1 + rng.below_usize(n)] {
+                    check_window_parity(&plat, &outage, &eligible, len, &mut ws, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tofa_placement_is_identical_on_dense_and_implicit_platforms() {
+    // the metric is an implementation detail: TofaPlacer must return the
+    // same Listing 1.1 path and the same assignment either way, for
+    // every topology family x fault model, free-standing and masked
+    let mut rng = Rng::new(406);
+    let placer = TofaPlacer::default();
+    for plat in engine_platforms() {
+        let imp = plat.clone().with_metric(MetricMode::Implicit);
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        for case in 0..3 {
+            let ranks = 2 + rng.below_usize(n / 2);
+            let comm = random_comm(&mut rng, ranks, ranks * 2);
+            let mut free = vec![true; n];
+            for b in rng.sample_distinct(n, rng.below_usize(n - ranks + 1)) {
+                free[b] = false;
+            }
+            for (model, outage) in all_model_outages(&plat, &mut rng) {
+                let ctx = format!("{what} case {case} model {model}");
+                let a = placer.place(&comm, &plat, &outage).unwrap();
+                let b = placer.place(&comm, &imp, &outage).unwrap();
+                assert_eq!(a.path, b.path, "{ctx}");
+                assert_eq!(a.assignment, b.assignment, "{ctx}");
+                let aw = placer.place_within(&comm, &plat, &outage, &free).unwrap();
+                let bw = placer.place_within(&comm, &imp, &outage, &free).unwrap();
+                assert_eq!(aw.path, bw.path, "{ctx} masked");
+                assert_eq!(aw.assignment, bw.assignment, "{ctx} masked");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fans_select_is_identical_on_dense_and_implicit_platforms() {
+    // every FANS policy, with and without a candidate mask, must pick
+    // the same nodes on a dense and an implicit platform given the same
+    // selection seed — for every topology family x fault model
+    let mut rng = Rng::new(407);
+    let fans = FansPlugin::default();
+    let policies = [
+        PlacementPolicy::DefaultSlurm,
+        PlacementPolicy::Random,
+        PlacementPolicy::Greedy,
+        PlacementPolicy::Scotch,
+        PlacementPolicy::Tofa,
+    ];
+    for plat in engine_platforms() {
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        for case in 0..2 {
+            let ranks = 2 + rng.below_usize(n / 4);
+            let comm = random_comm(&mut rng, ranks, ranks * 2);
+            let candidates: Vec<usize> = (0..n).filter(|&i| i % 2 == 0 || i < 2 * ranks).collect();
+            for (model, outage) in all_model_outages(&plat, &mut rng) {
+                let ctx = format!("{what} case {case} model {model}");
+                for policy in policies {
+                    for cand in [None, Some(candidates.as_slice())] {
+                        let seed = rng.next_u64();
+                        let a = fans
+                            .select(policy, &comm, &plat, &outage, cand, &mut Rng::new(seed))
+                            .unwrap();
+                        let b = fans
+                            .select(policy, &comm, &implicit, &outage, cand, &mut Rng::new(seed))
+                            .unwrap();
+                        let masked = cand.is_some();
+                        assert_eq!(a, b, "{ctx} {policy:?} masked {masked}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_implicit_metric_serves_a_100k_node_platform() {
+    // the O(n^2) wall: 102400 nodes would need a ~42 GB dense matrix.
+    // Auto resolves to the implicit metric, which refuses the dense
+    // index outright and serves hop queries, the lazy window search,
+    // and a whole TOFA placement in O(n) memory.
+    let dims = TorusDims::new(64, 40, 40);
+    let plat = Platform::paper_default(dims);
+    let n = plat.num_nodes();
+    assert_eq!(n, 102_400);
+    assert!(n > DENSE_NODE_LIMIT, "platform must exceed the dense limit");
+    assert!(!plat.resolved_metric().is_dense(), "Auto must go implicit");
+    let err = plat.try_topo_index().unwrap_err();
+    assert!(err.to_string().contains("implicit"), "{err}");
+
+    // hop queries come straight from the closed forms
+    let t = Torus::new(dims);
+    let oracle = plat.hop_oracle();
+    let mut rng = Rng::new(408);
+    for _ in 0..200 {
+        let (u, v) = (rng.below_usize(n), rng.below_usize(n));
+        assert_eq!(oracle.hops(u, v), t.hops(u, v) as f32);
+    }
+
+    // a few flaky nodes in the first x-line: every window overlapping
+    // the y=0 row keeps a wrap-around route through them, so the lazy
+    // search must slide past the whole row before it finds the first
+    // route-clean window — nodes 64..128
+    let mut outage = vec![0.0; n];
+    for f in [0usize, 3, 17, 40] {
+        outage[f] = 0.05;
+    }
+    let ranks = 64;
+    let mut ws = CostWorkspace::new();
+    let w = find_route_clean_window_implicit(plat.topology(), &outage, ranks, &mut ws)
+        .expect("a route-clean window exists past the flaky x-line");
+    assert_eq!(w, (64..128).collect::<Vec<usize>>());
+
+    // and the full TOFA window path places inside it
+    let comm = random_comm(&mut rng, ranks, ranks * 2);
+    let placed = TofaPlacer::default().place(&comm, &plat, &outage).unwrap();
+    assert_eq!(placed.path, TofaPath::Window);
+    assert_eq!(placed.assignment.len(), ranks);
+    let mut uniq = placed.assignment.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), ranks, "assignment must be distinct nodes");
+    assert!(placed.assignment.iter().all(|&x| (64..128).contains(&x)));
 }
 
 #[test]
