@@ -1,0 +1,186 @@
+//! Bench for trace-driven heavy-traffic scheduler campaigns
+//! (`slurm::sched::workload` + `slurm::sched::campaign`), three scales:
+//!
+//! * a 1 000-job diurnal campaign per topology family, all four
+//!   (placement × queue) cells;
+//! * the acceptance heavyweight: a fixed-seed 10 000-job campaign on a
+//!   10 000-node torus (implicit metric — no O(n²) state), FIFO cells;
+//! * a 100 000-node `NodeLedger` microbench: per-decision churn through
+//!   the incremental free-run index, and its O(log n) queries against
+//!   the retained O(n) scan reference.
+//!
+//! Emits `BENCH_campaign.json` at the repo root with events-per-second
+//! plus p50/p95/p99 wait and slowdown per cell, for the perf CI
+//! artifact upload.
+
+use std::sync::Arc;
+
+use tofa::mapping::PlacementPolicy;
+use tofa::report::bench::{bench, section, write_bench_json, JsonValue};
+use tofa::sim::fault::FaultSpec;
+use tofa::slurm::sched::{
+    run_campaign, Arrivals, CampaignCell, CampaignWorkload, NodeLedger, SchedConfig,
+};
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
+
+const FULL_CELLS: &[(PlacementPolicy, bool)] = &[
+    (PlacementPolicy::DefaultSlurm, false),
+    (PlacementPolicy::Tofa, false),
+    (PlacementPolicy::DefaultSlurm, true),
+    (PlacementPolicy::Tofa, true),
+];
+
+fn platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(8, 8, 8)), // 512 nodes
+        Platform::paper_default_on(Arc::new(FatTree::new(8).unwrap())), // 128 nodes
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(9, 4, 4, 2)).unwrap(), // 144 nodes
+        )),
+    ]
+}
+
+/// Print one line per cell and return the cells' JSON payloads.
+fn print_cells(kind: &str, cells: &[CampaignCell]) -> Vec<JsonValue> {
+    cells
+        .iter()
+        .map(|cell| {
+            let m = &cell.metrics;
+            let queue = if cell.backfill { "backfill" } else { "fifo" };
+            println!(
+                "{:<36} done {:>5}/{:<5} wait p50/p95/p99 {:>7.3}/{:>7.3}/{:>7.3} s  \
+                 slow p50/p99 {:>5.2}/{:>6.2}  util {:>5.1}%  {:>9.0} events/s",
+                format!("{kind}/{queue}/{}", cell.placement),
+                m.completed,
+                m.total_jobs,
+                m.wait.p50,
+                m.wait.p95,
+                m.wait.p99,
+                m.slowdown.p50,
+                m.slowdown.p99,
+                100.0 * m.utilization,
+                cell.events_per_s(),
+            );
+            cell.json()
+        })
+        .collect()
+}
+
+fn main() {
+    let mut topo_payloads = Vec::new();
+
+    // 1 000-job diurnal campaigns, one per topology family
+    for plat in platforms() {
+        let kind = plat.topology().kind().to_string();
+        let n = plat.num_nodes();
+        section(&format!(
+            "campaign: 1000 jobs, diurnal arrivals, {} ({n} nodes)",
+            plat.topology().describe()
+        ));
+        let spec = CampaignWorkload {
+            jobs: 1000,
+            arrivals: Arrivals::Diurnal {
+                mean_gap_s: 0.02,
+                day_s: 10.0,
+                peak_to_trough: 4.0,
+            },
+            ..CampaignWorkload::paper_like(n)
+        };
+        let jobs = spec.generate().unwrap();
+        let fault = FaultSpec::Iid {
+            n_faulty: n / 32,
+            p_f: 0.02,
+        };
+        let config = SchedConfig {
+            seed: 42,
+            ..Default::default()
+        };
+        let cells = run_campaign(&plat, &jobs, &fault, FULL_CELLS, &config, 4).unwrap();
+        let cell_payloads = print_cells(&kind, &cells);
+        topo_payloads.push(
+            JsonValue::obj()
+                .set("topology", JsonValue::Str(kind))
+                .set("nodes", JsonValue::Int(n as u64))
+                .set("jobs", JsonValue::Int(jobs.len() as u64))
+                .set("cells", JsonValue::Arr(cell_payloads)),
+        );
+    }
+
+    // the acceptance heavyweight: 10 000 jobs on 10 000 nodes, implicit
+    // metric (the dense n^2 matrix is never built), FIFO cells
+    section("campaign: 10000 jobs on a 10000-node torus (implicit metric)");
+    let plat = Platform::paper_default(TorusDims::new(25, 20, 20));
+    assert_eq!(plat.num_nodes(), 10_000);
+    let spec = CampaignWorkload {
+        jobs: 10_000,
+        mix: vec![(32, 0.5), (64, 0.3), (128, 0.2)],
+        steps_min: 1,
+        steps_max: 2,
+        arrivals: Arrivals::Poisson { mean_gap_s: 0.005 },
+        seed: 42,
+    };
+    let jobs = spec.generate().unwrap();
+    let fault = FaultSpec::Iid {
+        n_faulty: 100,
+        p_f: 0.02,
+    };
+    let fifo_cells: &[(PlacementPolicy, bool)] = &[
+        (PlacementPolicy::DefaultSlurm, false),
+        (PlacementPolicy::Tofa, false),
+    ];
+    let config = SchedConfig {
+        seed: 42,
+        ..Default::default()
+    };
+    let cells = run_campaign(&plat, &jobs, &fault, fifo_cells, &config, 2).unwrap();
+    let heavy_payloads = print_cells("torus-10k", &cells);
+
+    // 100k-node ledger: churn + queries through the incremental index,
+    // with the O(n) scans as the reference costs
+    section("ledger: incremental free-run index vs O(n) scans, 100000 nodes");
+    let n = 100_000usize;
+    let mut ledger = NodeLedger::new(n);
+    for (job, start) in (0..n).step_by(128).enumerate() {
+        // allocate alternating 64-node blocks: ~780 fragments to index
+        let nodes: Vec<usize> = (start..start + 64).collect();
+        ledger.allocate(job as u64, &nodes).unwrap();
+    }
+    let churn_nodes: Vec<usize> = (64..128).collect();
+    let churn = bench("ledger/alloc-release-64-of-100k", 2000, || {
+        ledger.allocate(u64::MAX, &churn_nodes).unwrap();
+        ledger.release(u64::MAX)
+    });
+    let index_q = bench("ledger/fragmentation-query-index", 2000, || {
+        (ledger.largest_free_run(), ledger.free_runs())
+    });
+    let scan_q = bench("ledger/fragmentation-query-scan", 50, || {
+        (ledger.largest_free_run_scan(), ledger.free_runs_scan())
+    });
+    assert_eq!(ledger.largest_free_run(), ledger.largest_free_run_scan());
+    assert_eq!(ledger.free_runs(), ledger.free_runs_scan());
+    println!(
+        "index query {:?} vs scan {:?} per call ({:.0}x)",
+        index_q.median,
+        scan_q.median,
+        scan_q.median.as_secs_f64() / index_q.median.as_secs_f64().max(1e-12),
+    );
+
+    let payload = JsonValue::obj()
+        .set("topologies", JsonValue::Arr(topo_payloads))
+        .set(
+            "heavy_10k_jobs_10k_nodes",
+            JsonValue::obj()
+                .set("nodes", JsonValue::Int(10_000))
+                .set("jobs", JsonValue::Int(10_000))
+                .set("cells", JsonValue::Arr(heavy_payloads)),
+        )
+        .set(
+            "ledger_100k",
+            JsonValue::obj()
+                .set("nodes", JsonValue::Int(100_000))
+                .set("churn", churn.to_json())
+                .set("query_index", index_q.to_json())
+                .set("query_scan", scan_q.to_json()),
+        );
+    write_bench_json("campaign", payload).expect("write BENCH_campaign.json");
+}

@@ -20,6 +20,8 @@ pub enum Error {
     Runtime(String),
     /// Slurm-lite protocol errors.
     Slurm(String),
+    /// Workload-trace parse / generator configuration errors.
+    Workload(String),
     /// I/O or parse errors.
     Io(std::io::Error),
 }
@@ -34,6 +36,7 @@ impl fmt::Display for Error {
             Error::Fault(m) => write!(f, "fault-model error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Slurm(m) => write!(f, "slurm error: {m}"),
+            Error::Workload(m) => write!(f, "workload error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -14,11 +14,13 @@ use tofa::commgraph::heatmap;
 use tofa::error::Error;
 use tofa::mapping::{cost, place as place_policy, PlacementPolicy};
 use tofa::profiler::profile_app;
+use tofa::report::bench::{write_bench_json, JsonValue};
 use tofa::report::{fmt_secs, improvement_pct, Table};
 use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
 use tofa::sim::fault::{FaultSpec, FaultTrace};
-use tofa::slurm::sched::{run_sweep, SchedConfig, WorkloadSpec};
+use tofa::slurm::sched::workload::{self, Arrivals, CampaignWorkload, TraceConfig};
+use tofa::slurm::sched::{run_campaign, run_sweep, SchedConfig, WorkloadSpec};
 use tofa::topology::{Dragonfly, DragonflyParams, FatTree, MetricMode, Platform, TorusDims};
 
 type Result<T> = std::result::Result<T, Error>;
@@ -207,32 +209,31 @@ impl Default for SchedCliOpts {
     }
 }
 
-impl SchedCliOpts {
-    fn parse_mix(&self) -> Result<Vec<(usize, f64)>> {
-        let mk_err = |s: &str| Error::Slurm(format!("bad --mix entry: {s} (want ranks:weight)"));
-        let mix: Vec<(usize, f64)> = self
-            .mix
-            .split(',')
-            .filter(|s| !s.is_empty())
-            .map(|entry| {
-                let (r, w) = entry.split_once(':').ok_or_else(|| mk_err(entry))?;
-                let ranks: usize = r.parse().map_err(|_| mk_err(entry))?;
-                let weight: f64 = w.parse().map_err(|_| mk_err(entry))?;
-                // reject degenerate entries here, at the CLI boundary —
-                // the workload generator would otherwise assert/panic
-                if ranks == 0 || !weight.is_finite() || weight <= 0.0 {
-                    return Err(Error::Slurm(format!(
-                        "bad --mix entry: {entry} (ranks must be > 0, weight > 0)"
-                    )));
-                }
-                Ok((ranks, weight))
-            })
-            .collect::<Result<_>>()?;
-        if mix.is_empty() {
-            return Err(Error::Slurm("--mix has no entries".into()));
-        }
-        Ok(mix)
+/// Parse a `ranks:weight,...` job-size mix (shared by `repro sched` and
+/// `repro campaign`).
+fn parse_mix(mix: &str) -> Result<Vec<(usize, f64)>> {
+    let mk_err = |s: &str| Error::Slurm(format!("bad --mix entry: {s} (want ranks:weight)"));
+    let mix: Vec<(usize, f64)> = mix
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|entry| {
+            let (r, w) = entry.split_once(':').ok_or_else(|| mk_err(entry))?;
+            let ranks: usize = r.parse().map_err(|_| mk_err(entry))?;
+            let weight: f64 = w.parse().map_err(|_| mk_err(entry))?;
+            // reject degenerate entries here, at the CLI boundary —
+            // the workload generator would otherwise assert/panic
+            if ranks == 0 || !weight.is_finite() || weight <= 0.0 {
+                return Err(Error::Slurm(format!(
+                    "bad --mix entry: {entry} (ranks must be > 0, weight > 0)"
+                )));
+            }
+            Ok((ranks, weight))
+        })
+        .collect::<Result<_>>()?;
+    if mix.is_empty() {
+        return Err(Error::Slurm("--mix has no entries".into()));
     }
+    Ok(mix)
 }
 
 /// `repro sched`: push a workload of concurrent MPI jobs through the
@@ -264,7 +265,7 @@ pub fn sched(
     workload.jobs = opts.jobs;
     workload.mean_interarrival_s = opts.arrival_s;
     if !opts.mix.is_empty() {
-        workload.mix = opts.parse_mix()?;
+        workload.mix = parse_mix(&opts.mix)?;
     }
     if opts.smoke {
         workload.jobs = workload.jobs.min(12);
@@ -339,6 +340,224 @@ pub fn sched(
         wall.as_secs_f64()
     );
     t.save_csv(results)?;
+    Ok(())
+}
+
+/// `repro campaign` options (trace-driven heavy-traffic campaigns).
+#[derive(Debug, Clone)]
+pub struct CampaignCliOpts {
+    /// Jobs to generate; ignored when `--trace` is given (`--jobs`).
+    pub jobs: usize,
+    /// Arrival process: `batch` | `poisson` | `diurnal` | `flash`
+    /// (`--arrivals`).
+    pub arrivals: String,
+    /// Mean interarrival gap in simulated seconds (`--arrival`).
+    pub mean_gap_s: f64,
+    /// Diurnal cycle length in simulated seconds (`--day`).
+    pub day_s: f64,
+    /// Diurnal peak-to-trough arrival-rate ratio (`--peak-trough`).
+    pub peak_to_trough: f64,
+    /// Flash-crowd burst count (`--bursts`).
+    pub bursts: usize,
+    /// Jobs dumped per flash-crowd burst (`--burst-jobs`).
+    pub burst_jobs: usize,
+    /// Seconds each flash-crowd burst spans (`--burst-span`).
+    pub burst_span_s: f64,
+    /// Job-size mix `ranks:weight,...`; empty = platform-scaled default
+    /// (`--mix`).
+    pub mix: String,
+    /// Workload trace to replay instead of generating: `.swf` or `.tsv`
+    /// (`--trace`).
+    pub trace_path: Option<PathBuf>,
+    /// Compress (< 1) or stretch (> 1) trace arrival gaps
+    /// (`--arrival-scale`).
+    pub arrival_scale: f64,
+    /// Faulty-node count for the fault spec (`--n-faulty`).
+    pub n_faulty: usize,
+    /// Heartbeat health-epoch period, seconds; 0 = off (`--hb-period`).
+    pub hb_period_s: f64,
+    /// Restart budget per job (`--max-restarts`).
+    pub max_restarts: u32,
+    /// Write `BENCH_campaign.json` next to the CSV tables (`--emit-json`).
+    pub emit_json: bool,
+    /// Reduced-size smoke run for CI: at most 200 jobs, 2 cells
+    /// (`--smoke`).
+    pub smoke: bool,
+}
+
+impl Default for CampaignCliOpts {
+    fn default() -> Self {
+        CampaignCliOpts {
+            jobs: 2000,
+            arrivals: "poisson".to_string(),
+            mean_gap_s: 0.05,
+            day_s: 240.0,
+            peak_to_trough: 4.0,
+            bursts: 4,
+            burst_jobs: 50,
+            burst_span_s: 1.0,
+            mix: String::new(),
+            trace_path: None,
+            arrival_scale: 1.0,
+            n_faulty: 16,
+            hb_period_s: 0.0,
+            max_restarts: 100,
+            emit_json: false,
+            smoke: false,
+        }
+    }
+}
+
+impl CampaignCliOpts {
+    fn arrivals(&self) -> Result<Arrivals> {
+        match self.arrivals.as_str() {
+            "batch" => Ok(Arrivals::Batch),
+            "poisson" => Ok(Arrivals::Poisson {
+                mean_gap_s: self.mean_gap_s,
+            }),
+            "diurnal" => Ok(Arrivals::Diurnal {
+                mean_gap_s: self.mean_gap_s,
+                day_s: self.day_s,
+                peak_to_trough: self.peak_to_trough,
+            }),
+            "flash" => Ok(Arrivals::FlashCrowd {
+                mean_gap_s: self.mean_gap_s,
+                bursts: self.bursts,
+                burst_jobs: self.burst_jobs,
+                burst_span_s: self.burst_span_s,
+            }),
+            other => Err(Error::Workload(format!(
+                "unknown --arrivals: {other} (expected batch|poisson|diurnal|flash)"
+            ))),
+        }
+    }
+}
+
+/// `repro campaign`: push a day-long workload (trace replay or bursty
+/// synthetic arrivals) through the cluster scheduler per
+/// (placement x queue) cell and report queueing-theory metrics — wait and
+/// slowdown percentiles, utilization, fragmentation — next to the
+/// events-per-second throughput of each cell's event loop.
+pub fn campaign(
+    results: &Path,
+    seed: u64,
+    workers: usize,
+    topo_cli: &TopoCliOpts,
+    fault_cli: &FaultCliOpts,
+    opts: &CampaignCliOpts,
+) -> Result<()> {
+    let platform = topo_cli.platform()?;
+    let n = platform.num_nodes();
+    let mut jobs = match &opts.trace_path {
+        Some(path) => {
+            let cfg = TraceConfig::default();
+            let mut jobs = workload::load_trace(path, &cfg)?;
+            workload::rebase_arrivals(&mut jobs);
+            if opts.arrival_scale != 1.0 {
+                workload::scale_arrivals(&mut jobs, opts.arrival_scale);
+            }
+            workload::clamp_ranks(&mut jobs, n);
+            jobs
+        }
+        None => {
+            let mut spec = CampaignWorkload::paper_like(n);
+            spec.seed = seed ^ 0xca3b;
+            spec.jobs = opts.jobs;
+            spec.arrivals = opts.arrivals()?;
+            if !opts.mix.is_empty() {
+                spec.mix = parse_mix(&opts.mix)?;
+            }
+            if opts.smoke {
+                spec.jobs = spec.jobs.min(200);
+                spec.steps_max = spec.steps_min;
+            }
+            spec.generate()?
+        }
+    };
+    if opts.smoke {
+        jobs.truncate(200);
+    }
+    let n_faulty = opts.n_faulty.min(n / 2);
+    let fault = fault_cli.spec(&platform, n_faulty)?;
+    let config = SchedConfig {
+        placement: PlacementPolicy::Tofa, // overridden per cell
+        backfill: false, // overridden per cell
+        max_restarts: opts.max_restarts,
+        heartbeat_period_s: opts.hb_period_s,
+        seed,
+    };
+    let cells: &[(PlacementPolicy, bool)] = if opts.smoke {
+        &[
+            (PlacementPolicy::DefaultSlurm, false),
+            (PlacementPolicy::Tofa, true),
+        ]
+    } else {
+        &[
+            (PlacementPolicy::DefaultSlurm, false),
+            (PlacementPolicy::Tofa, false),
+            (PlacementPolicy::DefaultSlurm, true),
+            (PlacementPolicy::Tofa, true),
+        ]
+    };
+    let title = format!(
+        "Workload campaign: {} jobs, {}; {}",
+        jobs.len(),
+        platform.topology().describe(),
+        fault.describe()
+    );
+    let campaign = run_campaign(&platform, &jobs, &fault, cells, &config, workers)?;
+    let mut t = Table::new(
+        &title,
+        &[
+            "placement",
+            "queue",
+            "completed",
+            "p50 wait (s)",
+            "p95 wait (s)",
+            "p99 wait (s)",
+            "p50 slowdown",
+            "p99 slowdown",
+            "util (%)",
+            "events/s",
+        ],
+    );
+    for cell in &campaign {
+        let m = &cell.metrics;
+        t.row(vec![
+            cell.placement.to_string(),
+            if cell.backfill { "backfill" } else { "fifo" }.to_string(),
+            format!("{}/{}", m.completed, m.total_jobs),
+            fmt_secs(m.wait.p50),
+            fmt_secs(m.wait.p95),
+            fmt_secs(m.wait.p99),
+            format!("{:.2}", m.slowdown.p50),
+            format!("{:.2}", m.slowdown.p99),
+            format!("{:.1}", 100.0 * m.utilization),
+            format!("{:.0}", cell.events_per_s()),
+        ]);
+    }
+    print!("{}", t.render());
+    let base = &campaign[0].metrics;
+    let best = &campaign[campaign.len() - 1];
+    let best_queue = if best.backfill { "backfill" } else { "fifo" };
+    println!(
+        "p95 wait: default/fifo {} vs tofa/{} {} ({:.1}% improvement)",
+        fmt_secs(base.wait.p95),
+        best_queue,
+        fmt_secs(best.metrics.wait.p95),
+        improvement_pct(base.wait.p95, best.metrics.wait.p95),
+    );
+    t.save_csv(results)?;
+    if opts.emit_json {
+        let payload = JsonValue::obj()
+            .set("topology", JsonValue::Str(platform.topology().describe()))
+            .set("nodes", JsonValue::Int(n as u64))
+            .set("jobs", JsonValue::Int(jobs.len() as u64))
+            .set("fault", JsonValue::Str(fault.describe()))
+            .set("cells", JsonValue::Arr(campaign.iter().map(|c| c.json()).collect()));
+        let path = write_bench_json("campaign", payload)?;
+        println!("[campaign] wrote {}", path.display());
+    }
     Ok(())
 }
 

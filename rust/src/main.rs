@@ -23,6 +23,8 @@ COMMANDS:
   fig5b                Figure 5b: LAMMPS batches, 16 faulty nodes @ 2%
   sched                cluster-level event-driven scheduler: concurrent
                        jobs on shared allocation state (FIFO/backfill)
+  campaign             trace-driven heavy-traffic campaign: day-long job
+                       streams, wait/slowdown percentiles per cell
   all                  run every experiment in sequence
   profile              print an app's comm-graph stats + heatmap
   place                compare mapping quality across policies
@@ -73,6 +75,23 @@ SCHEDULER (sched):
   --hb-period=<s>      heartbeat health-epoch period; 0 = off (default: 0)
   --max-restarts=<n>   per-job restart budget       (default: 100)
   --smoke              reduced-size CI smoke run
+
+CAMPAIGN (campaign; also honours --jobs/--arrival/--mix/--n-faulty/
+          --hb-period/--max-restarts/--smoke above, with --jobs
+          defaulting to 2000 and --arrival to 0.05):
+  --arrivals=<p>       batch | poisson | diurnal | flash (default: poisson)
+  --day=<s>            diurnal cycle length, simulated seconds
+                       (default: 240)
+  --peak-trough=<f>    diurnal peak-to-trough arrival-rate ratio
+                       (default: 4)
+  --bursts=<n>         flash-crowd burst count      (default: 4)
+  --burst-jobs=<n>     jobs dumped per burst        (default: 50)
+  --burst-span=<s>     seconds each burst spans     (default: 1)
+  --trace=<path>       replay a workload trace (.swf or .tsv) instead of
+                       generating jobs
+  --arrival-scale=<f>  compress (<1) / stretch (>1) trace arrival gaps
+                       (default: 1)
+  --emit-json          write BENCH_campaign.json with per-cell metrics
 ";
 
 struct Opts {
@@ -85,6 +104,7 @@ struct Opts {
     topo: experiments::TopoCliOpts,
     fault: experiments::FaultCliOpts,
     sched: experiments::SchedCliOpts,
+    campaign: experiments::CampaignCliOpts,
 }
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
@@ -98,6 +118,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         topo: experiments::TopoCliOpts::default(),
         fault: experiments::FaultCliOpts::default(),
         sched: experiments::SchedCliOpts::default(),
+        campaign: experiments::CampaignCliOpts::default(),
     };
     for a in args {
         if let Some(v) = a.strip_prefix("--results=") {
@@ -138,22 +159,47 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             o.fault.trace_path = Some(PathBuf::from(v));
         } else if let Some(v) = a.strip_prefix("--jobs=") {
             o.sched.jobs = v.parse().map_err(|_| format!("bad --jobs: {v}"))?;
+            o.campaign.jobs = o.sched.jobs;
         } else if let Some(v) = a.strip_prefix("--arrival=") {
             o.sched.arrival_s = v.parse().map_err(|_| format!("bad --arrival: {v}"))?;
+            o.campaign.mean_gap_s = o.sched.arrival_s;
         } else if let Some(v) = a.strip_prefix("--policy=") {
             o.sched.policy = v.to_string();
         } else if a == "--backfill" {
             o.sched.policy = "backfill".to_string();
         } else if let Some(v) = a.strip_prefix("--mix=") {
             o.sched.mix = v.to_string();
+            o.campaign.mix = o.sched.mix.clone();
         } else if let Some(v) = a.strip_prefix("--n-faulty=") {
             o.sched.n_faulty = v.parse().map_err(|_| format!("bad --n-faulty: {v}"))?;
+            o.campaign.n_faulty = o.sched.n_faulty;
         } else if let Some(v) = a.strip_prefix("--hb-period=") {
             o.sched.hb_period_s = v.parse().map_err(|_| format!("bad --hb-period: {v}"))?;
+            o.campaign.hb_period_s = o.sched.hb_period_s;
         } else if let Some(v) = a.strip_prefix("--max-restarts=") {
             o.sched.max_restarts = v.parse().map_err(|_| format!("bad --max-restarts: {v}"))?;
+            o.campaign.max_restarts = o.sched.max_restarts;
         } else if a == "--smoke" {
             o.sched.smoke = true;
+            o.campaign.smoke = true;
+        } else if let Some(v) = a.strip_prefix("--arrivals=") {
+            o.campaign.arrivals = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--day=") {
+            o.campaign.day_s = v.parse().map_err(|_| format!("bad --day: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--peak-trough=") {
+            o.campaign.peak_to_trough = v.parse().map_err(|_| format!("bad --peak-trough: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--bursts=") {
+            o.campaign.bursts = v.parse().map_err(|_| format!("bad --bursts: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--burst-jobs=") {
+            o.campaign.burst_jobs = v.parse().map_err(|_| format!("bad --burst-jobs: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--burst-span=") {
+            o.campaign.burst_span_s = v.parse().map_err(|_| format!("bad --burst-span: {v}"))?;
+        } else if let Some(v) = a.strip_prefix("--trace=") {
+            o.campaign.trace_path = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--arrival-scale=") {
+            o.campaign.arrival_scale = v.parse().map_err(|_| format!("bad --arrival-scale: {v}"))?;
+        } else if a == "--emit-json" {
+            o.campaign.emit_json = true;
         } else {
             return Err(format!("unknown option: {a}"));
         }
@@ -219,6 +265,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             &opts.topo,
             &opts.fault,
             &opts.sched,
+        )?,
+        "campaign" => experiments::campaign(
+            r,
+            opts.seed,
+            opts.workers,
+            &opts.topo,
+            &opts.fault,
+            &opts.campaign,
         )?,
         "all" => {
             experiments::fig1(r)?;

@@ -126,6 +126,20 @@ pub fn improvement_pct(base: f64, new: f64) -> f64 {
     }
 }
 
+/// Nearest-rank percentile of an **already sorted** sample vector:
+/// the smallest element with at least `p`% of the samples at or below it
+/// (`p` in `[0, 100]`). Empty samples yield 0.0 — campaign aggregates
+/// must report zeros, not NaNs, when every job failed.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "unsorted samples");
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +159,17 @@ mod tests {
     fn improvement_math() {
         assert_eq!(improvement_pct(100.0, 69.0), 31.0);
         assert_eq!(improvement_pct(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 95.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+        assert_eq!(percentile(&[3.5], 99.0), 3.5);
+        // empty samples are 0.0, never NaN
+        assert_eq!(percentile(&[], 50.0), 0.0);
     }
 }

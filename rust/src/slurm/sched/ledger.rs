@@ -13,6 +13,28 @@
 //! fragments, clean windows disappear, and placement falls back to the
 //! Eq. 1 fault-weighted path — the candidate-set-shape effect the
 //! QAP-mapping literature observes for restricted node sets.
+//!
+//! # Incremental free-run index
+//!
+//! Campaign-scale scheduling (tens of thousands of jobs on up to 100k-node
+//! implicit-metric platforms) turned the original O(n) per-decision scans
+//! into the event loop's wall. The ledger therefore maintains a sorted
+//! free-run index — `runs: BTreeMap<start, len>` over the maximal runs of
+//! consecutive free node ids, plus a `run_lens` length multiset — updated
+//! in O(log n) per node transition (a node leaving the free set splits at
+//! most one run in two; a node entering it merges at most two runs into
+//! one). [`NodeLedger::largest_free_run`] and [`NodeLedger::free_runs`]
+//! read the index in O(log n)/O(1), and [`NodeLedger::free_nodes`] expands
+//! the runs in ascending order without touching the state vector.
+//!
+//! Per the dense-reference pattern (ARCHITECTURE.md), the original O(n)
+//! scans are retained as [`NodeLedger::largest_free_run_scan`],
+//! [`NodeLedger::free_runs_scan`], and [`NodeLedger::free_nodes_scan`]:
+//! they remain the bit-identity ground truth the index is property-tested
+//! against, and [`NodeLedger::assert_consistent`] rebuilds the index from
+//! the state vector and compares.
+
+use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 
@@ -27,23 +49,38 @@ pub enum NodeState {
     Down,
 }
 
-/// Per-node free/busy/down ledger with exclusive allocate/release.
+/// Per-node free/busy/down ledger with exclusive allocate/release and an
+/// incremental sorted free-run index (O(log n) per node transition).
 #[derive(Debug, Clone)]
 pub struct NodeLedger {
     state: Vec<NodeState>,
     free: usize,
+    busy: usize,
     /// Live allocations in allocation order: `(job id, nodes)`.
     /// A `Vec` (not a hash map) so every walk over it is deterministic.
     allocs: Vec<(u64, Vec<usize>)>,
+    /// Maximal runs of consecutive free node ids: start → length.
+    runs: BTreeMap<usize, usize>,
+    /// Multiset of run lengths: length → how many runs have it.
+    run_lens: BTreeMap<usize, usize>,
 }
 
 impl NodeLedger {
     /// All-free ledger over `num_nodes` nodes.
     pub fn new(num_nodes: usize) -> Self {
+        let mut runs = BTreeMap::new();
+        let mut run_lens = BTreeMap::new();
+        if num_nodes > 0 {
+            runs.insert(0, num_nodes);
+            run_lens.insert(num_nodes, 1);
+        }
         NodeLedger {
             state: vec![NodeState::Free; num_nodes],
             free: num_nodes,
+            busy: 0,
             allocs: Vec::new(),
+            runs,
+            run_lens,
         }
     }
 
@@ -59,12 +96,12 @@ impl NodeLedger {
 
     /// Currently busy nodes.
     pub fn num_busy(&self) -> usize {
-        self.allocs.iter().map(|(_, ns)| ns.len()).sum()
+        self.busy
     }
 
     /// Currently down nodes.
     pub fn num_down(&self) -> usize {
-        self.state.len() - self.free - self.num_busy()
+        self.state.len() - self.free - self.busy
     }
 
     /// State of one node.
@@ -78,8 +115,19 @@ impl NodeLedger {
     }
 
     /// Ascending ids of the free nodes — the candidate set FANS selects
-    /// from.
+    /// from. Expanded from the run index (output order is identical to the
+    /// retained [`NodeLedger::free_nodes_scan`] reference).
     pub fn free_nodes(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.free);
+        for (&start, &len) in &self.runs {
+            out.extend(start..start + len);
+        }
+        out
+    }
+
+    /// O(n) state-vector scan for the free set — the bit-identity
+    /// reference [`NodeLedger::free_nodes`] is property-tested against.
+    pub fn free_nodes_scan(&self) -> Vec<usize> {
         (0..self.state.len()).filter(|&n| self.is_free(n)).collect()
     }
 
@@ -117,8 +165,10 @@ impl NodeLedger {
         }
         for &n in nodes {
             self.state[n] = NodeState::Busy(job);
+            self.index_unfree(n);
         }
         self.free -= nodes.len();
+        self.busy += nodes.len();
         self.allocs.push((job, nodes.to_vec()));
         Ok(())
     }
@@ -133,8 +183,10 @@ impl NodeLedger {
         for &n in &nodes {
             debug_assert_eq!(self.state[n], NodeState::Busy(job));
             self.state[n] = NodeState::Free;
+            self.index_free(n);
         }
         self.free += nodes.len();
+        self.busy -= nodes.len();
         nodes
     }
 
@@ -148,10 +200,12 @@ impl NodeLedger {
             match (self.state[n], d) {
                 (NodeState::Free, true) => {
                     self.state[n] = NodeState::Down;
+                    self.index_unfree(n);
                     self.free -= 1;
                 }
                 (NodeState::Down, false) => {
                     self.state[n] = NodeState::Free;
+                    self.index_free(n);
                     self.free += 1;
                 }
                 _ => {}
@@ -160,8 +214,19 @@ impl NodeLedger {
     }
 
     /// Length of the longest run of consecutive free node ids (the largest
-    /// window TOFA could possibly use).
+    /// window TOFA could possibly use). O(log n) off the length multiset.
     pub fn largest_free_run(&self) -> usize {
+        self.run_lens.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Number of maximal free runs (fragmentation: more runs for the same
+    /// free count = a more shredded candidate set). O(1) off the index.
+    pub fn free_runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// O(n) scan reference for [`NodeLedger::largest_free_run`].
+    pub fn largest_free_run_scan(&self) -> usize {
         let mut best = 0usize;
         let mut run = 0usize;
         for n in 0..self.state.len() {
@@ -175,9 +240,8 @@ impl NodeLedger {
         best
     }
 
-    /// Number of maximal free runs (fragmentation: more runs for the same
-    /// free count = a more shredded candidate set).
-    pub fn free_runs(&self) -> usize {
+    /// O(n) scan reference for [`NodeLedger::free_runs`].
+    pub fn free_runs_scan(&self) -> usize {
         let mut runs = 0usize;
         let mut in_run = false;
         for n in 0..self.state.len() {
@@ -193,9 +257,73 @@ impl NodeLedger {
         runs
     }
 
+    /// Remove one occurrence of `len` from the length multiset.
+    fn lens_remove(&mut self, len: usize) {
+        match self.run_lens.get_mut(&len) {
+            Some(c) if *c > 1 => *c -= 1,
+            Some(_) => {
+                self.run_lens.remove(&len);
+            }
+            None => debug_assert!(false, "run length {len} missing from multiset"),
+        }
+    }
+
+    /// Add one occurrence of `len` to the length multiset.
+    fn lens_add(&mut self, len: usize) {
+        *self.run_lens.entry(len).or_insert(0) += 1;
+    }
+
+    /// `node` just left the free set: split the run containing it. The
+    /// caller has already flipped `state[node]` away from `Free`.
+    fn index_unfree(&mut self, node: usize) {
+        let (start, len) = self
+            .runs
+            .range(..=node)
+            .next_back()
+            .map(|(&s, &l)| (s, l))
+            .expect("node leaving the free set is not in any run");
+        debug_assert!(start <= node && node < start + len, "run index drifted");
+        self.runs.remove(&start);
+        self.lens_remove(len);
+        if node > start {
+            self.runs.insert(start, node - start);
+            self.lens_add(node - start);
+        }
+        if start + len > node + 1 {
+            self.runs.insert(node + 1, start + len - node - 1);
+            self.lens_add(start + len - node - 1);
+        }
+    }
+
+    /// `node` just entered the free set: merge with the adjacent runs (at
+    /// most one on each side). The caller has already flipped
+    /// `state[node]` to `Free`.
+    fn index_free(&mut self, node: usize) {
+        let left = self
+            .runs
+            .range(..node)
+            .next_back()
+            .map(|(&s, &l)| (s, l))
+            .filter(|&(s, l)| s + l == node);
+        let right = self.runs.get(&(node + 1)).map(|&l| (node + 1, l));
+        let start = left.map_or(node, |(s, _)| s);
+        let len = 1 + left.map_or(0, |(_, l)| l) + right.map_or(0, |(_, l)| l);
+        if let Some((ls, ll)) = left {
+            self.runs.remove(&ls);
+            self.lens_remove(ll);
+        }
+        if let Some((rs, rl)) = right {
+            self.runs.remove(&rs);
+            self.lens_remove(rl);
+        }
+        self.runs.insert(start, len);
+        self.lens_add(len);
+    }
+
     /// Internal-consistency audit (used by tests and debug assertions):
-    /// allocation lists and per-node states must agree, and the free count
-    /// must match the state vector.
+    /// allocation lists and per-node states must agree, the free/busy
+    /// counts must match the state vector, and the incremental free-run
+    /// index must equal the index rebuilt from the state vector.
     pub fn assert_consistent(&self) {
         let mut owner = vec![None::<u64>; self.state.len()];
         for (job, nodes) in &self.allocs {
@@ -215,17 +343,42 @@ impl NodeLedger {
             .filter(|&&s| s == NodeState::Free)
             .count();
         assert_eq!(free, self.free, "free count drifted");
+        let busy = self
+            .state
+            .iter()
+            .filter(|s| matches!(s, NodeState::Busy(_)))
+            .count();
+        assert_eq!(busy, self.busy, "busy count drifted");
         for (n, s) in self.state.iter().enumerate() {
             if let NodeState::Busy(j) = s {
                 assert_eq!(owner[n], Some(*j), "node {n} busy without allocation");
             }
         }
+        // Rebuild the free-run index from the state vector and compare.
+        let mut want_runs = BTreeMap::new();
+        let mut want_lens = BTreeMap::new();
+        let mut n = 0usize;
+        while n < self.state.len() {
+            if self.is_free(n) {
+                let start = n;
+                while n < self.state.len() && self.is_free(n) {
+                    n += 1;
+                }
+                want_runs.insert(start, n - start);
+                *want_lens.entry(n - start).or_insert(0usize) += 1;
+            } else {
+                n += 1;
+            }
+        }
+        assert_eq!(self.runs, want_runs, "free-run index drifted from state");
+        assert_eq!(self.run_lens, want_lens, "run-length multiset drifted");
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
     #[test]
     fn allocate_release_roundtrip() {
@@ -289,5 +442,84 @@ mod tests {
         // free: 0..3, 4..7, 8..10
         assert_eq!(l.largest_free_run(), 3);
         assert_eq!(l.free_runs(), 3);
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn index_matches_scan_references() {
+        let mut l = NodeLedger::new(12);
+        l.allocate(1, &[0, 5, 6, 11]).unwrap();
+        l.apply_health(&[
+            false, true, false, false, false, false, false, false, true, false, false, false,
+        ]);
+        assert_eq!(l.free_nodes(), l.free_nodes_scan());
+        assert_eq!(l.largest_free_run(), l.largest_free_run_scan());
+        assert_eq!(l.free_runs(), l.free_runs_scan());
+        l.assert_consistent();
+        l.release(1);
+        assert_eq!(l.free_nodes(), l.free_nodes_scan());
+        assert_eq!(l.largest_free_run(), l.largest_free_run_scan());
+        assert_eq!(l.free_runs(), l.free_runs_scan());
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn empty_and_single_node_ledgers() {
+        let l = NodeLedger::new(0);
+        assert_eq!(l.largest_free_run(), 0);
+        assert_eq!(l.free_runs(), 0);
+        assert!(l.free_nodes().is_empty());
+        l.assert_consistent();
+
+        let mut l = NodeLedger::new(1);
+        assert_eq!(l.largest_free_run(), 1);
+        l.allocate(1, &[0]).unwrap();
+        assert_eq!(l.largest_free_run(), 0);
+        assert_eq!(l.free_runs(), 0);
+        l.release(1);
+        assert_eq!(l.largest_free_run(), 1);
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn randomized_transitions_keep_index_and_scan_bit_identical() {
+        let mut rng = Rng::new(0x1ed6e4);
+        let mut l = NodeLedger::new(64);
+        let mut next_job = 0u64;
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..400 {
+            match rng.below(3) {
+                0 => {
+                    let free = l.free_nodes();
+                    if !free.is_empty() {
+                        let want = 1 + rng.below_usize(free.len().min(8));
+                        let nodes: Vec<usize> = rng
+                            .sample_distinct(free.len(), want)
+                            .into_iter()
+                            .map(|i| free[i])
+                            .collect();
+                        l.allocate(next_job, &nodes).unwrap();
+                        live.push(next_job);
+                        next_job += 1;
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.below_usize(live.len());
+                        let job = live.swap_remove(i);
+                        assert!(!l.release(job).is_empty());
+                    }
+                }
+                _ => {
+                    let down: Vec<bool> =
+                        (0..l.num_nodes()).map(|_| rng.bernoulli(0.15)).collect();
+                    l.apply_health(&down);
+                }
+            }
+            assert_eq!(l.free_nodes(), l.free_nodes_scan());
+            assert_eq!(l.largest_free_run(), l.largest_free_run_scan());
+            assert_eq!(l.free_runs(), l.free_runs_scan());
+            l.assert_consistent();
+        }
     }
 }

@@ -49,9 +49,13 @@
 //! assert_eq!(ledger.num_free(), 8);
 //! ```
 
+pub mod campaign;
 pub mod ledger;
+pub mod workload;
 
+pub use campaign::{run_campaign, CampaignCell, CampaignMetrics};
 pub use ledger::{NodeLedger, NodeState};
+pub use workload::{Arrivals, CampaignWorkload, TraceConfig};
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -253,6 +257,24 @@ pub struct BackfillAudit {
     pub shadow: f64,
 }
 
+/// One point of the cluster-occupancy timeline, sampled after the
+/// scheduling pass at each distinct event timestamp. The fragmentation
+/// fields read the ledger's incremental free-run index, so sampling is
+/// O(log n) even on 100k-node platforms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OccupancySample {
+    /// Simulated time of the sample.
+    pub t: f64,
+    /// Busy nodes.
+    pub busy: usize,
+    /// Down nodes.
+    pub down: usize,
+    /// Longest run of consecutive free node ids.
+    pub largest_free_run: usize,
+    /// Number of maximal free runs.
+    pub free_runs: usize,
+}
+
 /// Result of one scheduler run.
 #[derive(Debug, Clone)]
 pub struct SchedResult {
@@ -284,6 +306,9 @@ pub struct SchedResult {
     pub trace: Vec<TraceEvent>,
     /// Per-decision backfill audit.
     pub backfill_audit: Vec<BackfillAudit>,
+    /// Occupancy/fragmentation timeline (one sample per distinct event
+    /// timestamp, after that instant's scheduling pass).
+    pub occupancy: Vec<OccupancySample>,
 }
 
 impl SchedResult {
@@ -294,6 +319,33 @@ impl SchedResult {
             .iter()
             .map(|r| r.completion_s.unwrap_or(0.0))
             .sum()
+    }
+
+    /// Sorted queue-wait samples (jobs that launched at least once).
+    pub fn wait_samples(&self) -> Vec<f64> {
+        let mut ws: Vec<f64> = self.records.iter().filter_map(JobRecord::wait_s).collect();
+        ws.sort_by(f64::total_cmp);
+        ws
+    }
+
+    /// Sorted slowdown samples over completed jobs: turnaround
+    /// (`end - submit`) over accumulated run time (`completion_s`) — the
+    /// queueing-theory "how much longer than its own runtime did this job
+    /// spend in the system" ratio (1.0 = never waited). Jobs with a zero
+    /// accumulated runtime are skipped, so the samples are always finite.
+    pub fn slowdown_samples(&self) -> Vec<f64> {
+        let mut ss: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.state == JobState::Completed)
+            .filter_map(|r| {
+                let run = r.completion_s?;
+                let end = r.end_s?;
+                (run > 0.0).then(|| (end - r.submit_s) / run)
+            })
+            .collect();
+        ss.sort_by(f64::total_cmp);
+        ss
     }
 }
 
@@ -351,6 +403,7 @@ pub struct ClusterScheduler {
     hb_base: u64,
     trace: Vec<TraceEvent>,
     backfill_audit: Vec<BackfillAudit>,
+    occupancy: Vec<OccupancySample>,
     busy_node_s: f64,
     backfills: usize,
     completed: usize,
@@ -442,6 +495,7 @@ impl ClusterScheduler {
             hb_base,
             trace: Vec::new(),
             backfill_audit: Vec::new(),
+            occupancy: Vec::new(),
             busy_node_s: 0.0,
             backfills: 0,
             completed: 0,
@@ -485,6 +539,17 @@ impl ClusterScheduler {
                 self.handle(t, ev);
             }
             self.try_schedule(t);
+            let sample = {
+                let ledger = self.controller.ledger();
+                OccupancySample {
+                    t,
+                    busy: ledger.num_busy(),
+                    down: ledger.num_down(),
+                    largest_free_run: ledger.largest_free_run(),
+                    free_runs: ledger.free_runs(),
+                }
+            };
+            self.occupancy.push(sample);
         }
         // no events left: anything still pending can never start (e.g.
         // permanently down nodes under FIFO) — park it as Failed so no
@@ -856,6 +921,7 @@ impl ClusterScheduler {
             records,
             trace: self.trace,
             backfill_audit: self.backfill_audit,
+            occupancy: self.occupancy,
         }
     }
 }

@@ -1,0 +1,658 @@
+//! Workload-trace ingestion and bursty synthetic generators for
+//! campaign-scale scheduling.
+//!
+//! The campaign driver ([`crate::slurm::sched::campaign`]) pushes tens of
+//! thousands of jobs through the cluster scheduler. This module produces
+//! those job lists two ways:
+//!
+//! * **Trace ingestion** — [`parse_swf`] reads SWF-style (Standard
+//!   Workload Format) logs: whitespace-separated fields, `;` comments,
+//!   job id / submit / wait / runtime / processor columns. [`parse_fb`]
+//!   reads the FB-2010-like TSV shape replayed by the
+//!   `network-scheduling-simulator` exemplar (SNIPPETS.md): tab-separated
+//!   job id, submit time, inter-arrival gap, and map/shuffle/reduce byte
+//!   volumes, with ranks derived from total bytes. Both return typed
+//!   [`Error::Workload`] values for malformed, truncated, or out-of-order
+//!   lines — never panics — and [`to_swf`] serializes a job list back so
+//!   generate → serialize → parse round-trips to identical
+//!   [`SchedJobSpec`]s.
+//! * **Synthetic generation** — [`CampaignWorkload`] draws job sizes from
+//!   a weighted mix (like [`crate::slurm::sched::WorkloadSpec`]) but adds
+//!   bursty arrival processes ([`Arrivals`]): Poisson, a diurnal
+//!   day/night cycle (piecewise-linear triangular rate profile — no libm
+//!   trig, so traces are bit-identical across platforms), and
+//!   flash-crowd bursts over a Poisson baseline.
+//!
+//! ```
+//! use tofa::slurm::sched::workload::{Arrivals, CampaignWorkload};
+//!
+//! let w = CampaignWorkload {
+//!     jobs: 8,
+//!     mix: vec![(4, 0.5), (8, 0.5)],
+//!     steps_min: 1,
+//!     steps_max: 3,
+//!     arrivals: Arrivals::Poisson { mean_gap_s: 0.2 },
+//!     seed: 11,
+//! };
+//! let jobs = w.generate().unwrap();
+//! assert_eq!(jobs.len(), 8);
+//! // arrivals are sorted and sizes come from the mix
+//! assert!(jobs.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+//! assert!(jobs.iter().all(|j| j.ranks == 4 || j.ranks == 8));
+//! ```
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::slurm::sched::SchedJobSpec;
+
+/// Knobs mapping trace units (wall-clock seconds, bytes) onto the
+/// simulator's job model (LAMMPS-proxy timesteps, MPI ranks).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Wall-clock seconds of recorded runtime per simulated timestep
+    /// (SWF runtimes divide by this; [`to_swf`] multiplies back).
+    pub seconds_per_step: f64,
+    /// Upper clamp on derived timesteps (runtime outliers otherwise turn
+    /// into enormous simulated jobs).
+    pub max_steps: usize,
+    /// Bytes of recorded I/O volume per MPI rank (FB-style traces derive
+    /// ranks from map+shuffle+reduce bytes, and timesteps from shuffle
+    /// bytes, at this granularity).
+    pub bytes_per_rank: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seconds_per_step: 3600.0,
+            max_steps: 8,
+            bytes_per_rank: 1 << 30,
+        }
+    }
+}
+
+/// SWF comment leader.
+fn swf_comment(line: &str) -> bool {
+    line.trim_start().starts_with(';')
+}
+
+/// Parse one mandatory numeric field, with the line number and field name
+/// in the error.
+fn field<T: std::str::FromStr>(raw: &str, line_no: usize, what: &str) -> Result<T> {
+    raw.parse().map_err(|_| {
+        Error::Workload(format!("line {line_no}: bad {what} field {raw:?}"))
+    })
+}
+
+/// Derive timesteps from a recorded runtime.
+fn steps_of_runtime(runtime_s: f64, cfg: &TraceConfig) -> usize {
+    let steps = (runtime_s / cfg.seconds_per_step).round();
+    (steps as i64).clamp(1, cfg.max_steps.max(1) as i64) as usize
+}
+
+/// Parse an SWF-style (Standard Workload Format) trace: `;` comments,
+/// whitespace-separated fields per job — id, submit time, wait time,
+/// runtime, allocated processors (requested processors, field 8, is the
+/// fallback when the allocated count is unknown). Submit times must be
+/// non-decreasing; malformed, truncated, or out-of-order lines are typed
+/// [`Error::Workload`]s.
+pub fn parse_swf<R: Read>(r: R, cfg: &TraceConfig) -> Result<Vec<SchedJobSpec>> {
+    let mut jobs = Vec::new();
+    let mut prev_submit = f64::NEG_INFINITY;
+    for (i, line) in BufReader::new(r).lines().enumerate() {
+        let line_no = i + 1;
+        let line = line?;
+        if swf_comment(&line) || line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() < 5 {
+            return Err(Error::Workload(format!(
+                "line {line_no}: truncated SWF record ({} fields, need >= 5)",
+                fields.len()
+            )));
+        }
+        let _id: i64 = field(fields[0], line_no, "job id")?;
+        let submit: f64 = field(fields[1], line_no, "submit time")?;
+        if !submit.is_finite() || submit < 0.0 {
+            return Err(Error::Workload(format!(
+                "line {line_no}: negative or non-finite submit time {submit}"
+            )));
+        }
+        if submit < prev_submit {
+            return Err(Error::Workload(format!(
+                "line {line_no}: out-of-order submit time {submit} after {prev_submit}"
+            )));
+        }
+        prev_submit = submit;
+        let runtime: f64 = field(fields[3], line_no, "runtime")?;
+        if !runtime.is_finite() || runtime < 0.0 {
+            return Err(Error::Workload(format!(
+                "line {line_no}: unknown runtime {runtime} (refusing -1 placeholders)"
+            )));
+        }
+        let mut procs: i64 = field(fields[4], line_no, "allocated processors")?;
+        if procs <= 0 {
+            if let Some(req) = fields.get(7).copied() {
+                procs = field(req, line_no, "requested processors")?;
+            }
+        }
+        if procs <= 0 {
+            return Err(Error::Workload(format!(
+                "line {line_no}: unknown processor count (allocated and requested both <= 0)"
+            )));
+        }
+        let ranks = procs as usize;
+        jobs.push(SchedJobSpec {
+            name: format!("lammps:{ranks}"),
+            ranks,
+            steps: steps_of_runtime(runtime, cfg),
+            arrival_s: submit,
+        });
+    }
+    Ok(jobs)
+}
+
+/// Parse an FB-2010-like TSV trace (the SWIM / `network-scheduling-
+/// simulator` shape): tab-separated job id, submit time, inter-arrival
+/// gap, then map / shuffle / reduce byte volumes. Ranks are the total
+/// byte volume at [`TraceConfig::bytes_per_rank`] granularity (at least
+/// 1); timesteps grow with shuffle volume. Same error discipline as
+/// [`parse_swf`]: typed [`Error::Workload`]s, never panics.
+pub fn parse_fb<R: Read>(r: R, cfg: &TraceConfig) -> Result<Vec<SchedJobSpec>> {
+    let mut jobs = Vec::new();
+    let mut prev_submit = f64::NEG_INFINITY;
+    for (i, line) in BufReader::new(r).lines().enumerate() {
+        let line_no = i + 1;
+        let line = line?;
+        if line.trim_start().starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').map(str::trim).collect();
+        if fields.len() < 6 {
+            return Err(Error::Workload(format!(
+                "line {line_no}: truncated FB record ({} fields, need >= 6)",
+                fields.len()
+            )));
+        }
+        let id = fields[0];
+        let submit: f64 = field(fields[1], line_no, "submit time")?;
+        if !submit.is_finite() || submit < 0.0 {
+            return Err(Error::Workload(format!(
+                "line {line_no}: negative or non-finite submit time {submit}"
+            )));
+        }
+        if submit < prev_submit {
+            return Err(Error::Workload(format!(
+                "line {line_no}: out-of-order submit time {submit} after {prev_submit}"
+            )));
+        }
+        prev_submit = submit;
+        let map_b: u64 = field(fields[3], line_no, "map bytes")?;
+        let shuffle_b: u64 = field(fields[4], line_no, "shuffle bytes")?;
+        let reduce_b: u64 = field(fields[5], line_no, "reduce bytes")?;
+        let per_rank = cfg.bytes_per_rank.max(1);
+        let total = map_b as u128 + shuffle_b as u128 + reduce_b as u128;
+        let ranks = ((total / per_rank as u128) as usize).max(1);
+        let steps = (1 + (shuffle_b / per_rank) as usize).min(cfg.max_steps.max(1));
+        jobs.push(SchedJobSpec {
+            name: format!("fb:{id}"),
+            ranks,
+            steps,
+            arrival_s: submit,
+        });
+    }
+    Ok(jobs)
+}
+
+/// Serialize a job list as an SWF-style trace. [`parse_swf`] on the
+/// output (with the same `cfg`) reproduces the input exactly: arrivals
+/// are written with Rust's shortest-round-trip float formatting and
+/// timesteps invert through [`TraceConfig::seconds_per_step`].
+pub fn to_swf(jobs: &[SchedJobSpec], cfg: &TraceConfig) -> String {
+    let mut out = String::from(
+        "; SWF-style trace (fields: id submit wait runtime procs, rest -1)\n",
+    );
+    for (i, j) in jobs.iter().enumerate() {
+        let runtime = j.steps as f64 * cfg.seconds_per_step;
+        out.push_str(&format!(
+            "{} {} -1 {} {} -1 -1 {} -1 -1 1 -1 -1 -1 -1 -1 -1 -1\n",
+            i + 1,
+            j.arrival_s,
+            runtime,
+            j.ranks,
+            j.ranks,
+        ));
+    }
+    out
+}
+
+/// Load a trace by file extension: `.swf` → [`parse_swf`], `.tsv` →
+/// [`parse_fb`]; anything else is a typed error.
+pub fn load_trace(path: &Path, cfg: &TraceConfig) -> Result<Vec<SchedJobSpec>> {
+    let ext = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .unwrap_or_default()
+        .to_ascii_lowercase();
+    let file = std::fs::File::open(path)?;
+    match ext.as_str() {
+        "swf" => parse_swf(file, cfg),
+        "tsv" => parse_fb(file, cfg),
+        _ => Err(Error::Workload(format!(
+            "unknown trace extension {:?} (expected .swf or .tsv)",
+            path.display()
+        ))),
+    }
+}
+
+/// Shift arrivals so the earliest job arrives at t = 0 (traces often
+/// start mid-epoch).
+pub fn rebase_arrivals(jobs: &mut [SchedJobSpec]) {
+    let first = jobs
+        .iter()
+        .map(|j| j.arrival_s)
+        .fold(f64::INFINITY, f64::min);
+    if first.is_finite() && first > 0.0 {
+        for j in jobs.iter_mut() {
+            j.arrival_s -= first;
+        }
+    }
+}
+
+/// Multiply every arrival by `factor` — traces record wall-clock days
+/// while the simulator's job durations are O(seconds), so campaigns
+/// compress recorded time to recreate the original contention level.
+pub fn scale_arrivals(jobs: &mut [SchedJobSpec], factor: f64) {
+    assert!(factor.is_finite() && factor >= 0.0, "bad arrival scale");
+    for j in jobs.iter_mut() {
+        j.arrival_s *= factor;
+    }
+}
+
+/// Clamp rank counts to the platform size so recorded jobs bigger than
+/// the simulated machine queue instead of insta-failing as unplaceable.
+pub fn clamp_ranks(jobs: &mut [SchedJobSpec], max_ranks: usize) {
+    assert!(max_ranks > 0, "cannot clamp ranks to 0");
+    for j in jobs.iter_mut() {
+        if j.ranks > max_ranks {
+            j.ranks = max_ranks;
+        }
+    }
+}
+
+/// Arrival process of a synthetic campaign workload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrivals {
+    /// Everything at t = 0 (the paper's batch dump).
+    Batch,
+    /// Poisson process: exponential gaps with this mean.
+    Poisson {
+        /// Mean interarrival gap in simulated seconds.
+        mean_gap_s: f64,
+    },
+    /// Day/night cycle: a Poisson process at peak rate `1/mean_gap_s`,
+    /// thinned by a triangular (piecewise-linear) rate profile that dips
+    /// to `1/peak_to_trough` of the peak at the start of each day and
+    /// peaks mid-day. Triangular instead of sinusoidal so the profile
+    /// needs no libm trig and campaigns stay bit-identical everywhere.
+    Diurnal {
+        /// Mean interarrival gap at the mid-day peak.
+        mean_gap_s: f64,
+        /// Cycle length in simulated seconds.
+        day_s: f64,
+        /// Peak-to-trough rate ratio (>= 1).
+        peak_to_trough: f64,
+    },
+    /// Flash crowd: a Poisson baseline plus `bursts` dumps of
+    /// `burst_jobs` jobs, each burst spread uniformly over
+    /// `burst_span_s` starting at a random instant of the baseline span.
+    FlashCrowd {
+        /// Baseline mean interarrival gap.
+        mean_gap_s: f64,
+        /// Number of flash crowds.
+        bursts: usize,
+        /// Jobs per flash crowd (taken out of the total job budget).
+        burst_jobs: usize,
+        /// Seconds over which each crowd's arrivals spread.
+        burst_span_s: f64,
+    },
+}
+
+/// Synthetic campaign workload: job sizes from a weighted mix, timesteps
+/// uniform in `[steps_min, steps_max]`, arrivals from a bursty process.
+/// The heavier-duty sibling of [`crate::slurm::sched::WorkloadSpec`]
+/// (kept separate so the existing batch-dump API stays stable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignWorkload {
+    /// Total jobs to generate.
+    pub jobs: usize,
+    /// `(ranks, weight)` job-size mix; weights are normalized.
+    pub mix: Vec<(usize, f64)>,
+    /// Minimum timesteps per job.
+    pub steps_min: usize,
+    /// Maximum timesteps per job (inclusive).
+    pub steps_max: usize,
+    /// Arrival process.
+    pub arrivals: Arrivals,
+    /// Workload RNG seed (sizes, steps, and arrival draws).
+    pub seed: u64,
+}
+
+impl CampaignWorkload {
+    /// A heavy-traffic mix scaled to the platform: the paper's small /
+    /// medium / large split at 50/30/20 %, 500 jobs, Poisson arrivals
+    /// fast enough to keep a deep queue.
+    pub fn paper_like(num_nodes: usize) -> Self {
+        let unit = (num_nodes / 32).max(2);
+        CampaignWorkload {
+            jobs: 500,
+            mix: vec![(unit, 0.5), (unit * 2, 0.3), (unit * 4, 0.2)],
+            steps_min: 1,
+            steps_max: 3,
+            arrivals: Arrivals::Poisson { mean_gap_s: 0.05 },
+            seed: 7,
+        }
+    }
+
+    /// Materialize the job list (deterministic in `self.seed`): arrival
+    /// times first — sorted, non-decreasing — then sizes and steps drawn
+    /// per job in arrival order. Configuration problems (empty mix,
+    /// non-positive gaps, inverted step bounds) are typed
+    /// [`Error::Workload`]s.
+    pub fn generate(&self) -> Result<Vec<SchedJobSpec>> {
+        if self.mix.is_empty() {
+            return Err(Error::Workload("empty job-size mix".into()));
+        }
+        let total_w: f64 = self.mix.iter().map(|(_, w)| w).sum();
+        if !total_w.is_finite() || total_w <= 0.0 {
+            return Err(Error::Workload("job-size mix has zero total weight".into()));
+        }
+        if self.mix.iter().any(|&(r, w)| r == 0 || w < 0.0) {
+            return Err(Error::Workload(
+                "job-size mix has a zero-rank class or negative weight".into(),
+            ));
+        }
+        if self.steps_min == 0 || self.steps_min > self.steps_max {
+            return Err(Error::Workload(format!(
+                "bad step bounds [{}, {}]",
+                self.steps_min, self.steps_max
+            )));
+        }
+        let mut rng = Rng::new(self.seed);
+        let arrivals = self.arrival_times(&mut rng)?;
+        debug_assert_eq!(arrivals.len(), self.jobs);
+        Ok(arrivals
+            .into_iter()
+            .map(|t| {
+                let mut pick = rng.f64() * total_w;
+                let mut ranks = self.mix[self.mix.len() - 1].0;
+                for &(r, w) in &self.mix {
+                    if pick < w {
+                        ranks = r;
+                        break;
+                    }
+                    pick -= w;
+                }
+                let steps =
+                    self.steps_min + rng.below_usize(self.steps_max - self.steps_min + 1);
+                SchedJobSpec {
+                    name: format!("lammps:{ranks}"),
+                    ranks,
+                    steps,
+                    arrival_s: t,
+                }
+            })
+            .collect())
+    }
+
+    /// Sorted arrival instants for all `self.jobs` jobs.
+    fn arrival_times(&self, rng: &mut Rng) -> Result<Vec<f64>> {
+        let exp = |rng: &mut Rng, mean: f64| -mean * (1.0 - rng.f64()).ln();
+        let mut ts = Vec::with_capacity(self.jobs);
+        match self.arrivals {
+            Arrivals::Batch => ts.resize(self.jobs, 0.0),
+            Arrivals::Poisson { mean_gap_s } => {
+                if !mean_gap_s.is_finite() || mean_gap_s <= 0.0 {
+                    return Err(Error::Workload(format!(
+                        "Poisson mean gap must be positive, got {mean_gap_s}"
+                    )));
+                }
+                let mut t = 0.0;
+                for i in 0..self.jobs {
+                    if i > 0 {
+                        t += exp(rng, mean_gap_s);
+                    }
+                    ts.push(t);
+                }
+            }
+            Arrivals::Diurnal {
+                mean_gap_s,
+                day_s,
+                peak_to_trough,
+            } => {
+                let ok = mean_gap_s.is_finite()
+                    && mean_gap_s > 0.0
+                    && day_s.is_finite()
+                    && day_s > 0.0
+                    && peak_to_trough.is_finite()
+                    && peak_to_trough >= 1.0;
+                if !ok {
+                    return Err(Error::Workload(format!(
+                        "bad diurnal parameters (gap {mean_gap_s}, day {day_s}, \
+                         peak/trough {peak_to_trough})"
+                    )));
+                }
+                // Poisson thinning against the triangular profile:
+                // candidates at the peak rate, accepted with the profile's
+                // relative rate at that instant.
+                let mut t = 0.0;
+                while ts.len() < self.jobs {
+                    t += exp(rng, mean_gap_s);
+                    let phase = (t / day_s).fract();
+                    let tri = 1.0 - (2.0 * phase - 1.0).abs(); // 0 at day start, 1 mid-day
+                    let rate = (1.0 + (peak_to_trough - 1.0) * tri) / peak_to_trough;
+                    if rng.f64() < rate {
+                        ts.push(t);
+                    }
+                }
+                rebase_times(&mut ts);
+            }
+            Arrivals::FlashCrowd {
+                mean_gap_s,
+                bursts,
+                burst_jobs,
+                burst_span_s,
+            } => {
+                let ok = mean_gap_s.is_finite()
+                    && mean_gap_s > 0.0
+                    && burst_span_s.is_finite()
+                    && burst_span_s >= 0.0;
+                if !ok {
+                    return Err(Error::Workload(format!(
+                        "bad flash-crowd parameters (gap {mean_gap_s}, span {burst_span_s})"
+                    )));
+                }
+                let crowd = (bursts * burst_jobs).min(self.jobs);
+                let base = self.jobs - crowd;
+                let mut t = 0.0;
+                for i in 0..base {
+                    if i > 0 {
+                        t += exp(rng, mean_gap_s);
+                    }
+                    ts.push(t);
+                }
+                let span = t.max(mean_gap_s);
+                let mut left = crowd;
+                for _ in 0..bursts {
+                    if left == 0 {
+                        break;
+                    }
+                    let n = burst_jobs.min(left);
+                    left -= n;
+                    let start = rng.f64() * span;
+                    for _ in 0..n {
+                        ts.push(start + rng.f64() * burst_span_s);
+                    }
+                }
+                ts.sort_by(f64::total_cmp);
+            }
+        }
+        Ok(ts)
+    }
+}
+
+/// Shift a sorted time vector so it starts at 0.
+fn rebase_times(ts: &mut [f64]) {
+    if let Some(&first) = ts.first() {
+        if first > 0.0 {
+            for t in ts.iter_mut() {
+                *t -= first;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted(jobs: &[SchedJobSpec]) -> bool {
+        jobs.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s)
+    }
+
+    #[test]
+    fn generators_are_deterministic_and_sorted() {
+        for arrivals in [
+            Arrivals::Batch,
+            Arrivals::Poisson { mean_gap_s: 0.3 },
+            Arrivals::Diurnal {
+                mean_gap_s: 0.2,
+                day_s: 10.0,
+                peak_to_trough: 4.0,
+            },
+            Arrivals::FlashCrowd {
+                mean_gap_s: 0.3,
+                bursts: 2,
+                burst_jobs: 10,
+                burst_span_s: 0.5,
+            },
+        ] {
+            let w = CampaignWorkload {
+                jobs: 50,
+                mix: vec![(4, 0.6), (8, 0.4)],
+                steps_min: 1,
+                steps_max: 3,
+                arrivals,
+                seed: 3,
+            };
+            let a = w.generate().unwrap();
+            let b = w.generate().unwrap();
+            assert_eq!(a, b, "{:?} not deterministic", w.arrivals);
+            assert_eq!(a.len(), 50);
+            assert!(sorted(&a), "{:?} arrivals unsorted", w.arrivals);
+            assert!(a[0].arrival_s >= 0.0);
+            assert!(a
+                .iter()
+                .all(|j| (j.ranks == 4 || j.ranks == 8) && (1..=3).contains(&j.steps)));
+        }
+    }
+
+    #[test]
+    fn bad_configs_are_typed_errors() {
+        let base = CampaignWorkload {
+            jobs: 4,
+            mix: vec![(4, 1.0)],
+            steps_min: 1,
+            steps_max: 2,
+            arrivals: Arrivals::Batch,
+            seed: 1,
+        };
+        let cases = [
+            CampaignWorkload {
+                mix: vec![],
+                ..base.clone()
+            },
+            CampaignWorkload {
+                mix: vec![(4, 0.0)],
+                ..base.clone()
+            },
+            CampaignWorkload {
+                mix: vec![(0, 1.0)],
+                ..base.clone()
+            },
+            CampaignWorkload {
+                steps_min: 3,
+                steps_max: 2,
+                ..base.clone()
+            },
+            CampaignWorkload {
+                arrivals: Arrivals::Poisson { mean_gap_s: 0.0 },
+                ..base.clone()
+            },
+            CampaignWorkload {
+                arrivals: Arrivals::Diurnal {
+                    mean_gap_s: 0.1,
+                    day_s: -1.0,
+                    peak_to_trough: 2.0,
+                },
+                ..base.clone()
+            },
+        ];
+        for bad in cases {
+            match bad.generate() {
+                Err(Error::Workload(_)) => {}
+                other => panic!("expected Workload error for {bad:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn swf_round_trip_is_identity() {
+        let w = CampaignWorkload {
+            jobs: 40,
+            mix: vec![(4, 0.5), (8, 0.3), (16, 0.2)],
+            steps_min: 1,
+            steps_max: 5,
+            arrivals: Arrivals::Poisson { mean_gap_s: 0.7 },
+            seed: 99,
+        };
+        let jobs = w.generate().unwrap();
+        let cfg = TraceConfig {
+            max_steps: 5,
+            ..TraceConfig::default()
+        };
+        let text = to_swf(&jobs, &cfg);
+        let parsed = parse_swf(text.as_bytes(), &cfg).unwrap();
+        assert_eq!(jobs, parsed);
+    }
+
+    #[test]
+    fn helpers_rebase_scale_clamp() {
+        let mut jobs = vec![
+            SchedJobSpec {
+                name: "a".into(),
+                ranks: 100,
+                steps: 1,
+                arrival_s: 10.0,
+            },
+            SchedJobSpec {
+                name: "b".into(),
+                ranks: 4,
+                steps: 1,
+                arrival_s: 30.0,
+            },
+        ];
+        rebase_arrivals(&mut jobs);
+        assert_eq!(jobs[0].arrival_s, 0.0);
+        assert_eq!(jobs[1].arrival_s, 20.0);
+        scale_arrivals(&mut jobs, 0.5);
+        assert_eq!(jobs[1].arrival_s, 10.0);
+        clamp_ranks(&mut jobs, 64);
+        assert_eq!(jobs[0].ranks, 64);
+        assert_eq!(jobs[1].ranks, 4);
+    }
+}

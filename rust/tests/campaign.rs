@@ -1,0 +1,353 @@
+//! Campaign-level conservation invariants and regression locks:
+//!
+//! * every submitted job reaches a terminal state exactly once, no two
+//!   running jobs ever share a node at any trace instant, and
+//!   utilization never exceeds 1 — across every synthetic arrival
+//!   process;
+//! * the distilled [`CampaignMetrics`] are recomputed here from the raw
+//!   records/trace and must match the scheduler's own aggregates
+//!   **bit-for-bit**;
+//! * campaign results are identical for 1/2/4 workers;
+//! * empty and all-failed campaigns aggregate to 0.0 everywhere — never
+//!   NaN;
+//! * a fixed-seed 500-job campaign on the paper torus is locked on disk
+//!   (`tests/golden/campaign_smoke.txt`, self-creating on the first
+//!   toolchain-equipped run).
+
+use std::path::PathBuf;
+
+use tofa::mapping::PlacementPolicy;
+use tofa::report::percentile;
+use tofa::sim::fault::FaultSpec;
+use tofa::slurm::sched::{
+    run_campaign, Arrivals, CampaignCell, CampaignMetrics, CampaignWorkload, SchedConfig,
+    SchedJobSpec, SchedResult, TraceKind,
+};
+use tofa::topology::{Platform, TorusDims};
+
+const CELLS: &[(PlacementPolicy, bool)] = &[
+    (PlacementPolicy::DefaultSlurm, false),
+    (PlacementPolicy::Tofa, true),
+];
+
+/// Replay the event trace: no two running jobs may ever share a node, and
+/// everything that starts must end.
+fn assert_no_overlap(res: &SchedResult, num_nodes: usize) {
+    let mut held: Vec<Option<u64>> = vec![None; num_nodes];
+    let mut running = 0usize;
+    for ev in &res.trace {
+        match &ev.kind {
+            TraceKind::Start { job, nodes, .. } => {
+                running += 1;
+                assert!(!nodes.is_empty(), "job {job} started with no nodes");
+                for &n in nodes {
+                    assert!(
+                        held[n].is_none(),
+                        "t={}: node {n} held by {:?} and {job}",
+                        ev.t,
+                        held[n]
+                    );
+                    held[n] = Some(*job);
+                }
+            }
+            TraceKind::End { job, .. } => {
+                running -= 1;
+                for h in held.iter_mut() {
+                    if *h == Some(*job) {
+                        *h = None;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(running, 0, "trace left jobs running");
+}
+
+/// Conservation: every job is accounted exactly once, in the records and
+/// in the trace's terminal events.
+fn assert_conservation(res: &SchedResult) {
+    assert_eq!(res.records.len(), res.total_jobs, "records lost or duplicated");
+    let mut ids: Vec<u64> = res.records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), res.total_jobs, "a job id appears twice");
+    assert_eq!(
+        res.completed + res.failed + res.exhausted,
+        res.total_jobs,
+        "terminal states do not add up"
+    );
+    assert!(res.records.iter().all(|r| r.state.is_terminal()));
+    // trace view: one Submit per job; Completed jobs end exactly once
+    // without aborting on their last run; Failed ones emit one Fail
+    let submits = res
+        .trace
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::Submit { .. }))
+        .count();
+    assert_eq!(submits, res.total_jobs, "submit events lost");
+    let clean_ends = res
+        .trace
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::End { aborted: false, .. }))
+        .count();
+    assert_eq!(clean_ends, res.completed, "clean End events vs completed");
+    let fails = res
+        .trace
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::Fail { .. }))
+        .count();
+    assert_eq!(fails, res.failed + res.exhausted, "Fail events vs failures");
+}
+
+/// The distilled metrics must equal a from-scratch recomputation off the
+/// raw records, bit for bit.
+fn assert_metrics_recompute(cell: &CampaignCell, num_nodes: usize) {
+    let res = &cell.result;
+    let m = &cell.metrics;
+    let waits = res.wait_samples();
+    assert!(waits.windows(2).all(|w| w[0] <= w[1]), "wait samples unsorted");
+    for (p, got) in [(50.0, m.wait.p50), (95.0, m.wait.p95), (99.0, m.wait.p99)] {
+        assert_eq!(
+            percentile(&waits, p).to_bits(),
+            got.to_bits(),
+            "wait p{p} drifted from the raw records"
+        );
+    }
+    let slows = res.slowdown_samples();
+    for (p, got) in [(50.0, m.slowdown.p50), (99.0, m.slowdown.p99)] {
+        assert_eq!(
+            percentile(&slows, p).to_bits(),
+            got.to_bits(),
+            "slowdown p{p} drifted from the raw records"
+        );
+    }
+    assert!(slows.iter().all(|s| *s >= 1.0 - 1e-12), "slowdown below 1");
+    // mean wait recomputed from records == the scheduler's own aggregate
+    let mean_wait = if waits.is_empty() {
+        0.0
+    } else {
+        waits.iter().sum::<f64>() / waits.len() as f64
+    };
+    assert_eq!(mean_wait.to_bits(), res.mean_wait_s.to_bits());
+    // summed completion intervals, recomputed
+    let total: f64 = res
+        .records
+        .iter()
+        .map(|r| r.completion_s.unwrap_or(0.0))
+        .sum();
+    assert_eq!(total.to_bits(), m.total_completion_s.to_bits());
+    assert_eq!(m.events, res.trace.len());
+    assert!(m.utilization >= 0.0 && m.utilization <= 1.0 + 1e-9);
+    assert!(m.timeline.iter().all(|p| (0.0..=1.0).contains(&p.utilization)));
+    assert!(
+        m.timeline.iter().all(|p| p.largest_free_run <= num_nodes),
+        "free run longer than the machine"
+    );
+    let class_jobs: usize = m.classes.iter().map(|c| c.jobs).sum();
+    assert_eq!(class_jobs, m.total_jobs, "classes do not partition the jobs");
+}
+
+fn campaign_jobs(arrivals: Arrivals, jobs: usize, seed: u64) -> Vec<SchedJobSpec> {
+    CampaignWorkload {
+        jobs,
+        mix: vec![(8, 0.5), (16, 0.3), (32, 0.2)],
+        steps_min: 1,
+        steps_max: 3,
+        arrivals,
+        seed,
+    }
+    .generate()
+    .unwrap()
+}
+
+#[test]
+fn conservation_invariants_hold_across_arrival_processes() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let fault = FaultSpec::Iid {
+        n_faulty: 8,
+        p_f: 0.3,
+    };
+    let cfg = SchedConfig {
+        max_restarts: 20,
+        ..Default::default()
+    };
+    for arrivals in [
+        Arrivals::Batch,
+        Arrivals::Poisson { mean_gap_s: 0.02 },
+        Arrivals::Diurnal {
+            mean_gap_s: 0.02,
+            day_s: 2.0,
+            peak_to_trough: 4.0,
+        },
+        Arrivals::FlashCrowd {
+            mean_gap_s: 0.03,
+            bursts: 3,
+            burst_jobs: 20,
+            burst_span_s: 0.1,
+        },
+    ] {
+        let jobs = campaign_jobs(arrivals.clone(), 120, 5);
+        let cells = run_campaign(&plat, &jobs, &fault, CELLS, &cfg, 2).unwrap();
+        assert_eq!(cells.len(), CELLS.len());
+        for cell in &cells {
+            assert_eq!(cell.metrics.total_jobs, 120, "{arrivals:?}");
+            assert_conservation(&cell.result);
+            assert_no_overlap(&cell.result, 64);
+            assert_metrics_recompute(cell, 64);
+        }
+    }
+}
+
+#[test]
+fn campaign_results_are_identical_for_1_2_4_workers() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let jobs = campaign_jobs(Arrivals::Poisson { mean_gap_s: 0.02 }, 80, 9);
+    let fault = FaultSpec::Iid {
+        n_faulty: 8,
+        p_f: 0.2,
+    };
+    let cfg = SchedConfig {
+        max_restarts: 20,
+        ..Default::default()
+    };
+    let serial = run_campaign(&plat, &jobs, &fault, CELLS, &cfg, 1).unwrap();
+    for workers in [2usize, 4] {
+        let par = run_campaign(&plat, &jobs, &fault, CELLS, &cfg, workers).unwrap();
+        assert_eq!(par.len(), serial.len());
+        for (a, b) in serial.iter().zip(&par) {
+            // everything except wall-clock is part of the determinism
+            // contract: whole traces and distilled metrics must match
+            assert_eq!(a.result.trace, b.result.trace, "{workers} workers");
+            assert_eq!(a.metrics, b.metrics, "{workers} workers");
+        }
+    }
+}
+
+fn assert_all_zero_and_finite(m: &CampaignMetrics) {
+    for (what, v) in [
+        ("makespan", m.makespan_s),
+        ("utilization", m.utilization),
+        ("total_completion", m.total_completion_s),
+        ("wait p50", m.wait.p50),
+        ("wait p95", m.wait.p95),
+        ("wait p99", m.wait.p99),
+        ("wait mean", m.wait.mean),
+        ("wait max", m.wait.max),
+        ("slowdown p50", m.slowdown.p50),
+        ("slowdown p99", m.slowdown.p99),
+        ("slowdown mean", m.slowdown.mean),
+        ("slowdown max", m.slowdown.max),
+    ] {
+        assert!(v.is_finite(), "{what} is not finite: {v}");
+        assert_eq!(v.to_bits(), 0.0f64.to_bits(), "{what} should be 0.0, got {v}");
+    }
+    assert_eq!(m.completed, 0);
+}
+
+#[test]
+fn empty_campaign_aggregates_are_zero_not_nan() {
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+    let fault = FaultSpec::Iid {
+        n_faulty: 2,
+        p_f: 0.2,
+    };
+    let cells = run_campaign(&plat, &[], &fault, CELLS, &SchedConfig::default(), 1).unwrap();
+    for cell in &cells {
+        assert_eq!(cell.metrics.total_jobs, 0);
+        assert!(cell.metrics.classes.is_empty());
+        assert!(cell.metrics.timeline.is_empty());
+        assert_all_zero_and_finite(&cell.metrics);
+        assert_eq!(cell.result.total_completion_s().to_bits(), 0.0f64.to_bits());
+    }
+}
+
+#[test]
+fn all_failed_campaign_aggregates_are_zero_not_nan() {
+    // every job wants 4x more ranks than the machine has nodes: all are
+    // parked as Failed without ever starting
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+    let jobs: Vec<SchedJobSpec> = (0..6)
+        .map(|i| SchedJobSpec {
+            name: format!("giant{i}"),
+            ranks: 64,
+            steps: 2,
+            arrival_s: 0.0,
+        })
+        .collect();
+    let fault = FaultSpec::Iid {
+        n_faulty: 2,
+        p_f: 0.2,
+    };
+    let cells = run_campaign(&plat, &jobs, &fault, CELLS, &SchedConfig::default(), 1).unwrap();
+    for cell in &cells {
+        let m = &cell.metrics;
+        assert_eq!(m.total_jobs, 6);
+        assert_eq!(m.failed + m.exhausted, 6, "giant jobs must all fail");
+        assert_all_zero_and_finite(m);
+        assert_conservation(&cell.result);
+        assert_eq!(cell.result.total_completion_s().to_bits(), 0.0f64.to_bits());
+    }
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name)
+}
+
+/// Compare against an on-disk golden file, creating it on the first
+/// toolchain-equipped run (commit the file to freeze the values).
+fn lock_or_create(name: &str, got: &str, what: &str) {
+    let path = golden_path(name);
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(got, want, "{what} no longer match the golden lock"),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, got).unwrap();
+            eprintln!(
+                "golden file {} created on first run; commit it to lock the values",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn campaign_smoke_statistics_locked() {
+    // fixed-seed 500-job campaign on the paper torus, both cells; every
+    // deterministic aggregate serialized as exact f64 bit patterns
+    let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let spec = CampaignWorkload::paper_like(512);
+    let jobs = spec.generate().unwrap();
+    assert_eq!(jobs.len(), 500);
+    let fault = FaultSpec::Iid {
+        n_faulty: 16,
+        p_f: 0.02,
+    };
+    let cells = run_campaign(&plat, &jobs, &fault, CELLS, &SchedConfig::default(), 2).unwrap();
+    let mut got = String::new();
+    for cell in &cells {
+        let m = &cell.metrics;
+        assert_conservation(&cell.result);
+        assert_no_overlap(&cell.result, 512);
+        assert_metrics_recompute(cell, 512);
+        got.push_str(&format!(
+            "{} {} {} {} {} {} {} {} {:016x} {:016x} {:016x} {:016x} {:016x} {:016x} {:016x}\n",
+            cell.placement,
+            if cell.backfill { "backfill" } else { "fifo" },
+            m.completed,
+            m.failed,
+            m.exhausted,
+            m.total_aborts,
+            m.backfills,
+            m.events,
+            m.makespan_s.to_bits(),
+            m.utilization.to_bits(),
+            m.wait.p50.to_bits(),
+            m.wait.p95.to_bits(),
+            m.wait.p99.to_bits(),
+            m.slowdown.p50.to_bits(),
+            m.slowdown.p99.to_bits(),
+        ));
+    }
+    lock_or_create("campaign_smoke.txt", &got, "the campaign smoke statistics");
+}

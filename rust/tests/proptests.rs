@@ -18,6 +18,7 @@ use tofa::sim::fault::{
 };
 use tofa::sim::network::{Flow, NetSim};
 use tofa::slurm::plugins::fans::FansPlugin;
+use tofa::slurm::sched::NodeLedger;
 use tofa::tofa::eq1::{fault_aware_distance, fault_aware_distance_indexed, fault_aware_submatrix};
 use tofa::tofa::placer::{TofaPath, TofaPlacer};
 use tofa::tofa::window::{
@@ -949,5 +950,59 @@ fn prop_compact_subset_is_compacter_than_random() {
             pair_sum(&s),
             pair_sum(&r)
         );
+    }
+}
+
+#[test]
+fn prop_ledger_free_run_index_matches_scan_reference_bit_for_bit() {
+    // the incremental sorted free-run index (BTreeMap of runs) vs the
+    // retained O(n) scan references, under randomized allocate / release
+    // / health-epoch transitions — including machines of 1 node and
+    // sizes that do not divide into neat powers of two
+    let mut rng = Rng::new(0x1ed6e5);
+    for n in [1usize, 2, 63, 256, 1000] {
+        let mut ledger = NodeLedger::new(n);
+        let mut next_job = 0u64;
+        let mut held: Vec<u64> = Vec::new();
+        for op in 0..600 {
+            match rng.below(3) {
+                0 => {
+                    let free = ledger.free_nodes();
+                    if !free.is_empty() {
+                        let want = 1 + rng.below_usize(free.len());
+                        let picks: Vec<usize> = rng
+                            .sample_distinct(free.len(), want)
+                            .into_iter()
+                            .map(|i| free[i])
+                            .collect();
+                        ledger.allocate(next_job, &picks).unwrap();
+                        held.push(next_job);
+                        next_job += 1;
+                    }
+                }
+                1 => {
+                    if !held.is_empty() {
+                        let job = held.swap_remove(rng.below_usize(held.len()));
+                        assert!(!ledger.release(job).is_empty(), "n={n} op={op}");
+                    }
+                }
+                _ => {
+                    // a health epoch: free nodes toggle down and back up
+                    let down: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.2)).collect();
+                    ledger.apply_health(&down);
+                }
+            }
+            assert_eq!(ledger.free_nodes(), ledger.free_nodes_scan(), "n={n} op={op}");
+            assert_eq!(
+                ledger.largest_free_run(),
+                ledger.largest_free_run_scan(),
+                "n={n} op={op}"
+            );
+            assert_eq!(ledger.free_runs(), ledger.free_runs_scan(), "n={n} op={op}");
+            assert_eq!(ledger.num_free(), ledger.free_nodes().len(), "n={n} op={op}");
+            if op % 29 == 0 {
+                ledger.assert_consistent();
+            }
+        }
     }
 }

@@ -1,0 +1,180 @@
+//! Trace-parser test suite: the committed SWF / FB fixtures parse to the
+//! expected job lists, malformed / truncated / out-of-order input turns
+//! into typed [`Error::Workload`] values (never a panic), and
+//! generate → serialize → parse round-trips to identical job specs.
+
+use std::path::PathBuf;
+
+use tofa::error::Error;
+use tofa::slurm::sched::workload::{load_trace, parse_fb, parse_swf, to_swf, TraceConfig};
+use tofa::slurm::sched::{Arrivals, CampaignWorkload, SchedJobSpec};
+
+fn data_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
+}
+
+fn job(name: &str, ranks: usize, steps: usize, arrival_s: f64) -> SchedJobSpec {
+    SchedJobSpec {
+        name: name.to_string(),
+        ranks,
+        steps,
+        arrival_s,
+    }
+}
+
+#[test]
+fn swf_fixture_parses_to_expected_jobs() {
+    // default config: 3600 s per timestep, clamp to [1, 8] steps
+    let jobs = load_trace(&data_path("sample.swf"), &TraceConfig::default()).unwrap();
+    assert_eq!(
+        jobs,
+        vec![
+            job("lammps:16", 16, 1, 0.0),
+            // allocated processors are -1 -> the requested count (field 8)
+            job("lammps:32", 32, 2, 120.0),
+            // 180 s runtime rounds to 0 steps, clamped up to 1
+            job("lammps:8", 8, 1, 360.5),
+        ]
+    );
+}
+
+#[test]
+fn fb_fixture_parses_to_expected_jobs() {
+    // default config: 1 GiB per rank; steps grow with shuffle volume
+    let jobs = load_trace(&data_path("sample_fb.tsv"), &TraceConfig::default()).unwrap();
+    assert_eq!(
+        jobs,
+        vec![
+            job("fb:job0", 4, 3, 0.0),  // 4 GiB total, 2 GiB shuffle
+            job("fb:job1", 1, 1, 30.0), // 1 GiB total, no shuffle
+            job("fb:job2", 24, 5, 90.0),
+        ]
+    );
+}
+
+/// Every malformed input must surface as a typed `Error::Workload` whose
+/// message names the offending line — never a panic, never `Io`.
+fn assert_workload_error(res: Result<Vec<SchedJobSpec>, Error>, line: usize, what: &str) {
+    match res {
+        Err(Error::Workload(msg)) => assert!(
+            msg.contains(&format!("line {line}")),
+            "{what}: error does not name line {line}: {msg}"
+        ),
+        other => panic!("{what}: expected a Workload error, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_swf_lines_are_typed_errors() {
+    let cfg = TraceConfig::default();
+    let cases: &[(&str, usize, &str)] = &[
+        ("1 0 -1 100", 1, "truncated record"),
+        ("x 0 -1 100 4", 1, "non-numeric job id"),
+        ("1 -5 -1 100 4", 1, "negative submit"),
+        ("1 nan -1 100 4", 1, "non-finite submit"),
+        ("1 0 -1 -1 4", 1, "unknown runtime placeholder"),
+        ("1 0 -1 100 0", 1, "zero processors, no fallback"),
+        ("1 0 -1 100 -1 -1 -1 -1", 1, "both processor counts unknown"),
+        ("1 0 -1 100 four", 1, "non-numeric processors"),
+        ("; ok\n1 10 -1 100 4\n2 5 -1 100 4", 3, "out-of-order submit"),
+    ];
+    for &(text, line, what) in cases {
+        assert_workload_error(parse_swf(text.as_bytes(), &cfg), line, what);
+    }
+}
+
+#[test]
+fn malformed_fb_lines_are_typed_errors() {
+    let cfg = TraceConfig::default();
+    let cases: &[(&str, usize, &str)] = &[
+        ("j\t0\t0\t1\t2", 1, "truncated record"),
+        ("j\t0\t0\tx\t2\t3", 1, "non-numeric map bytes"),
+        ("j\t-1\t0\t1\t2\t3", 1, "negative submit"),
+        ("# hdr\nj\t9\t0\t1\t2\t3\nk\t3\t0\t1\t2\t3", 3, "out-of-order submit"),
+        ("j 0 0 1 2 3", 1, "space-separated, not tabs"),
+    ];
+    for &(text, line, what) in cases {
+        assert_workload_error(parse_fb(text.as_bytes(), &cfg), line, what);
+    }
+}
+
+#[test]
+fn comments_and_blank_lines_are_skipped() {
+    let cfg = TraceConfig::default();
+    let text = ";  header comment\n\n1 0 -1 3600 4\n   \n; trailing comment\n";
+    let jobs = parse_swf(text.as_bytes(), &cfg).unwrap();
+    assert_eq!(jobs, vec![job("lammps:4", 4, 1, 0.0)]);
+    // empty traces parse to empty job lists, not errors
+    assert_eq!(parse_swf("; only comments\n".as_bytes(), &cfg).unwrap(), vec![]);
+    assert_eq!(parse_fb("# only comments\n".as_bytes(), &cfg).unwrap(), vec![]);
+}
+
+#[test]
+fn unknown_trace_extension_is_a_typed_error() {
+    // the file exists (so this is not an Io error) but has no trace format
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("Cargo.toml");
+    match load_trace(&path, &TraceConfig::default()) {
+        Err(Error::Workload(msg)) => {
+            assert!(msg.contains("extension"), "unexpected message: {msg}")
+        }
+        other => panic!("expected a Workload error, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_trace_file_is_an_io_error() {
+    match load_trace(&data_path("no_such_trace.swf"), &TraceConfig::default()) {
+        Err(Error::Io(_)) => {}
+        other => panic!("expected an Io error, got {other:?}"),
+    }
+}
+
+#[test]
+fn generate_serialize_parse_round_trips_identically() {
+    // property sweep: every arrival process x several seeds; steps stay
+    // within the serializer's clamp so the round-trip is the identity
+    let cfg = TraceConfig {
+        max_steps: 6,
+        ..TraceConfig::default()
+    };
+    for seed in [1u64, 17, 4242] {
+        for arrivals in [
+            Arrivals::Batch,
+            Arrivals::Poisson { mean_gap_s: 0.4 },
+            Arrivals::Diurnal {
+                mean_gap_s: 0.3,
+                day_s: 20.0,
+                peak_to_trough: 3.0,
+            },
+            Arrivals::FlashCrowd {
+                mean_gap_s: 0.4,
+                bursts: 2,
+                burst_jobs: 8,
+                burst_span_s: 0.5,
+            },
+        ] {
+            let w = CampaignWorkload {
+                jobs: 60,
+                mix: vec![(4, 0.5), (8, 0.3), (16, 0.2)],
+                steps_min: 1,
+                steps_max: cfg.max_steps,
+                arrivals,
+                seed,
+            };
+            let jobs = w.generate().unwrap();
+            let text = to_swf(&jobs, &cfg);
+            let parsed = parse_swf(text.as_bytes(), &cfg).unwrap();
+            assert_eq!(jobs, parsed, "round trip diverged (seed {seed}, {:?})", w.arrivals);
+        }
+    }
+}
+
+#[test]
+fn fixture_round_trips_through_the_serializer() {
+    // parse -> serialize -> parse is also the identity on the committed
+    // fixture (steps already sit inside the clamp)
+    let cfg = TraceConfig::default();
+    let jobs = load_trace(&data_path("sample.swf"), &cfg).unwrap();
+    let reparsed = parse_swf(to_swf(&jobs, &cfg).as_bytes(), &cfg).unwrap();
+    assert_eq!(jobs, reparsed);
+}
