@@ -7,8 +7,10 @@
 pub mod heatmap;
 pub mod io;
 pub mod matrix;
+pub mod sparse;
 
 pub use matrix::CommMatrix;
+pub use sparse::SparseComm;
 
 /// The pair of graphs the profiling tool emits.
 #[derive(Debug, Clone)]

@@ -1,0 +1,254 @@
+//! Sparse (CSR) communication graphs for million-rank mapping.
+//!
+//! [`CommMatrix`] is dense — `n x n` f64 entries — which is the right
+//! shape for the paper's 64–256-rank jobs but caps out around a few
+//! thousand ranks (a 1M-rank matrix would be 8 TB). The multilevel
+//! mapper ([`crate::mapping::multilevel`]) instead consumes this
+//! compressed-sparse-row form: O(n + m) memory for `n` ranks and `m`
+//! communicating pairs, which is what real MPI communication graphs look
+//! like (stencils, rings, low-degree collectives).
+//!
+//! The graph is undirected but stored with both directed arcs, so
+//! `adj(v)` enumerates every neighbor of `v` exactly once; neighbor lists
+//! are sorted by target id and parallel edges are pre-summed, making
+//! every iteration order — and therefore every f64 accumulation order —
+//! deterministic.
+
+use super::CommMatrix;
+
+/// Undirected weighted communication graph in CSR form. Both directed
+/// arcs of each edge are stored; neighbor lists are sorted ascending and
+/// duplicate-free.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseComm {
+    n: usize,
+    offsets: Vec<usize>,
+    targets: Vec<u32>,
+    weights: Vec<f64>,
+}
+
+impl SparseComm {
+    /// Build from an undirected edge list. Self-loops and non-positive
+    /// weights are dropped; parallel edges are summed. `targets` are
+    /// `u32`, so `n` must fit (checked).
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Self {
+        assert!(n <= u32::MAX as usize, "vertex ids must fit u32");
+        let mut deg = vec![0usize; n];
+        for &(u, v, w) in edges {
+            if u != v && w > 0.0 {
+                deg[u] += 1;
+                deg[v] += 1;
+            }
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for d in &deg {
+            acc += d;
+            offsets.push(acc);
+        }
+        let mut cursor = offsets.clone();
+        let mut targets = vec![0u32; acc];
+        let mut weights = vec![0.0f64; acc];
+        for &(u, v, w) in edges {
+            if u != v && w > 0.0 {
+                targets[cursor[u]] = v as u32;
+                weights[cursor[u]] = w;
+                cursor[u] += 1;
+                targets[cursor[v]] = u as u32;
+                weights[cursor[v]] = w;
+                cursor[v] += 1;
+            }
+        }
+        // sort each adjacency by target and fold parallel edges; the
+        // compacted arrays are rebuilt in one pass so offsets stay exact
+        let mut ct = Vec::with_capacity(acc);
+        let mut cw = Vec::with_capacity(acc);
+        let mut co = Vec::with_capacity(n + 1);
+        co.push(0);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for v in 0..n {
+            scratch.clear();
+            for k in offsets[v]..offsets[v + 1] {
+                scratch.push((targets[k], weights[k]));
+            }
+            scratch.sort_by_key(|p| p.0);
+            for &(t, w) in scratch.iter() {
+                if ct.len() > co[v] && *ct.last().unwrap() == t {
+                    *cw.last_mut().unwrap() += w;
+                } else {
+                    ct.push(t);
+                    cw.push(w);
+                }
+            }
+            co.push(ct.len());
+        }
+        SparseComm {
+            n,
+            offsets: co,
+            targets: ct,
+            weights: cw,
+        }
+    }
+
+    /// Build from a dense [`CommMatrix`] (strictly-positive upper-triangle
+    /// entries become edges).
+    pub fn from_matrix(m: &CommMatrix) -> Self {
+        Self::from_edges(m.len(), &m.edges())
+    }
+
+    /// Rebuild a CSR graph from raw parts. Intended for algorithms (like
+    /// the multilevel coarsener) that produce already-sorted, already
+    /// duplicate-free adjacency arrays; invariants are debug-asserted.
+    pub fn from_raw(n: usize, offsets: Vec<usize>, targets: Vec<u32>, weights: Vec<f64>) -> Self {
+        debug_assert_eq!(offsets.len(), n + 1);
+        debug_assert_eq!(offsets[0], 0);
+        debug_assert_eq!(*offsets.last().unwrap(), targets.len());
+        debug_assert_eq!(targets.len(), weights.len());
+        #[cfg(debug_assertions)]
+        for v in 0..n {
+            let ts = &targets[offsets[v]..offsets[v + 1]];
+            debug_assert!(ts.windows(2).all(|p| p[0] < p[1]), "unsorted adjacency");
+            debug_assert!(ts.iter().all(|&t| (t as usize) < n && t as usize != v));
+        }
+        SparseComm {
+            n,
+            offsets,
+            targets,
+            weights,
+        }
+    }
+
+    /// Ring of `n` ranks, each talking `w` bytes to its successor.
+    pub fn ring(n: usize, w: f64) -> Self {
+        let edges: Vec<(usize, usize, f64)> = (0..n).map(|i| (i, (i + 1) % n, w)).collect();
+        Self::from_edges(n, &edges)
+    }
+
+    /// `px x py` 2-D stencil (4-neighbor, non-periodic), `w` bytes per
+    /// edge. Rank `(x, y)` is `y * px + x`.
+    pub fn stencil2d(px: usize, py: usize, w: f64) -> Self {
+        let mut edges = Vec::with_capacity(2 * px * py);
+        for y in 0..py {
+            for x in 0..px {
+                let v = y * px + x;
+                if x + 1 < px {
+                    edges.push((v, v + 1, w));
+                }
+                if y + 1 < py {
+                    edges.push((v, v + px, w));
+                }
+            }
+        }
+        Self::from_edges(px * py, &edges)
+    }
+
+    /// Vertex count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the graph has zero vertices.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Undirected edge count.
+    pub fn num_edges(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Sorted neighbor ids and matching weights of `v`.
+    #[inline]
+    pub fn adj(&self, v: usize) -> (&[u32], &[f64]) {
+        let r = self.offsets[v]..self.offsets[v + 1];
+        (&self.targets[r.clone()], &self.weights[r])
+    }
+
+    /// Total undirected communication volume (each edge counted once).
+    pub fn total_volume(&self) -> f64 {
+        self.weights.iter().sum::<f64>() / 2.0
+    }
+
+    /// Densify (tests and the coarse-solve path; `n` must be small).
+    pub fn to_matrix(&self) -> CommMatrix {
+        let mut m = CommMatrix::new(self.n);
+        for v in 0..self.n {
+            let (ts, ws) = self.adj(v);
+            for (&t, &w) in ts.iter().zip(ws) {
+                // each undirected edge visits twice (v->t and t->v)
+                m.set(v, t as usize, w);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_sorts_folds_and_symmetrizes() {
+        let g = SparseComm::from_edges(
+            4,
+            &[(0, 2, 3.0), (2, 0, 1.0), (1, 3, 2.0), (2, 2, 9.0), (0, 1, 0.0)],
+        );
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.num_edges(), 2, "self-loop and zero-weight dropped");
+        let (ts, ws) = g.adj(0);
+        assert_eq!(ts, &[2]);
+        assert_eq!(ws, &[4.0], "parallel edges summed");
+        let (ts, _) = g.adj(2);
+        assert_eq!(ts, &[0]);
+        assert_eq!(g.total_volume(), 6.0);
+    }
+
+    #[test]
+    fn round_trips_through_the_dense_matrix() {
+        let mut m = CommMatrix::new(5);
+        m.add_sym(0, 1, 10.0);
+        m.add_sym(1, 4, 2.5);
+        m.add_sym(2, 3, 7.0);
+        let g = SparseComm::from_matrix(&m);
+        assert_eq!(g.to_matrix(), m);
+        assert_eq!(g.total_volume() * 2.0, m.total());
+    }
+
+    #[test]
+    fn synthetic_generators_have_expected_shape() {
+        let r = SparseComm::ring(8, 5.0);
+        assert_eq!(r.num_edges(), 8);
+        assert!((0..8).all(|v| r.degree(v) == 2));
+        assert_eq!(r.total_volume(), 40.0);
+
+        let s = SparseComm::stencil2d(4, 3, 1.0);
+        assert_eq!(s.len(), 12);
+        // 2D grid: px*(py-1) + (px-1)*py edges
+        assert_eq!(s.num_edges(), 4 * 2 + 3 * 3);
+        let corner_deg = s.degree(0);
+        assert_eq!(corner_deg, 2);
+        assert_eq!(s.degree(5), 4, "interior vertex");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let g = SparseComm::from_edges(0, &[]);
+        assert!(g.is_empty());
+        assert_eq!(g.total_volume(), 0.0);
+        let g = SparseComm::ring(1, 3.0);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.num_edges(), 0, "ring(1) is a self-loop, dropped");
+        let g = SparseComm::ring(2, 3.0);
+        // 0->1 and 1->0 fold into one edge of weight 6
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.adj(0).1, &[6.0]);
+    }
+}

@@ -10,8 +10,9 @@ use std::sync::Arc;
 use tofa::apps::npb_dt::NpbDt;
 use tofa::apps::{lammps_proxy::LammpsProxy, ring::RingApp, stencil::Stencil2D, MpiApp};
 use tofa::batch::{run_grid, BatchConfig, BatchRunner, Parallelism};
-use tofa::commgraph::heatmap;
+use tofa::commgraph::{heatmap, SparseComm};
 use tofa::error::Error;
+use tofa::mapping::multilevel::MultilevelMapper;
 use tofa::mapping::{cost, place as place_policy, PlacementPolicy};
 use tofa::profiler::profile_app;
 use tofa::report::bench::{write_bench_json, JsonValue};
@@ -887,12 +888,35 @@ pub fn profile(app_spec: &str) -> Result<()> {
 }
 
 /// `repro place`: mapping-quality comparison across policies.
-pub fn place(app_spec: &str, topo_cli: &TopoCliOpts, seed: u64) -> Result<()> {
+/// `policy` (from `--policy=`) restricts the table to one parsed policy;
+/// `None` compares the paper's fault-unaware baselines plus the
+/// multilevel mapper.
+pub fn place(
+    app_spec: &str,
+    topo_cli: &TopoCliOpts,
+    seed: u64,
+    policy: Option<&str>,
+) -> Result<()> {
     let app = parse_app(app_spec)?;
     let platform = topo_cli.platform()?;
     let comm = profile_app(app.as_ref()).volume;
     let dist = platform.hop_matrix();
     let mut sim = Simulator::new(app.as_ref(), &platform);
+    let policies: Vec<PlacementPolicy> = match policy {
+        Some(p) => {
+            let parsed = PlacementPolicy::parse(p).ok_or_else(|| {
+                Error::Placement(format!("unknown placement policy {p:?}"))
+            })?;
+            vec![parsed]
+        }
+        None => vec![
+            PlacementPolicy::DefaultSlurm,
+            PlacementPolicy::Random,
+            PlacementPolicy::Greedy,
+            PlacementPolicy::Scotch,
+            PlacementPolicy::Multilevel,
+        ],
+    };
     let mut t = Table::new(
         &format!(
             "Placement quality: {} on {}",
@@ -901,14 +925,18 @@ pub fn place(app_spec: &str, topo_cli: &TopoCliOpts, seed: u64) -> Result<()> {
         ),
         &["policy", "hop-bytes (MB*hop)", "avg dilation", "max congestion (MB)", "metric"],
     );
-    for policy in [
-        PlacementPolicy::DefaultSlurm,
-        PlacementPolicy::Random,
-        PlacementPolicy::Greedy,
-        PlacementPolicy::Scotch,
-    ] {
+    for policy in policies {
         let mut rng = Rng::new(seed);
-        let pl = place_policy(policy, &comm, &dist, &mut rng)?;
+        let pl = if policy == PlacementPolicy::Multilevel {
+            // the sparse path — same one the scheduler uses on implicit
+            // platforms, so the CLI smoke-tests exactly that code
+            let g = SparseComm::from_matrix(&comm);
+            let oracle = platform.hop_oracle();
+            let hosts: Vec<usize> = (0..platform.num_nodes()).collect();
+            MultilevelMapper::default().map_sparse(&g, &oracle, &hosts)?
+        } else {
+            place_policy(policy, &comm, &dist, &mut rng)?
+        };
         let hb = cost::hop_bytes_cost(&comm, &dist, &pl.assignment);
         let (avg_dil, _) = cost::dilation(&comm, &dist, &pl.assignment);
         let (max_cong, _) = cost::congestion(&comm, platform.topology(), &pl.assignment);

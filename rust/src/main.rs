@@ -67,7 +67,9 @@ SCHEDULER (sched):
   --jobs=<n>           workload size                (default: 100)
   --arrival=<s>        mean interarrival gap; 0 = all jobs at t=0
                        (default: 0)
-  --policy=<p>         fifo | backfill              (default: fifo)
+  --policy=<p>         sched: fifo | backfill       (default: fifo)
+                       place: default-slurm | random | greedy | scotch |
+                       tofa | multilevel   (default: compare them all)
   --backfill           shorthand for --policy=backfill
   --mix=<r:w,...>      job-size mix, ranks:weight pairs
                        (default: n/32, n/16, n/8 at 50/30/20%)
@@ -105,6 +107,9 @@ struct Opts {
     fault: experiments::FaultCliOpts,
     sched: experiments::SchedCliOpts,
     campaign: experiments::CampaignCliOpts,
+    /// `--policy=` as seen by `place` (a placement-policy name there;
+    /// the same flag selects fifo/backfill for `sched`).
+    place_policy: Option<String>,
 }
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
@@ -119,6 +124,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         fault: experiments::FaultCliOpts::default(),
         sched: experiments::SchedCliOpts::default(),
         campaign: experiments::CampaignCliOpts::default(),
+        place_policy: None,
     };
     for a in args {
         if let Some(v) = a.strip_prefix("--results=") {
@@ -165,6 +171,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             o.campaign.mean_gap_s = o.sched.arrival_s;
         } else if let Some(v) = a.strip_prefix("--policy=") {
             o.sched.policy = v.to_string();
+            o.place_policy = Some(v.to_string());
         } else if a == "--backfill" {
             o.sched.policy = "backfill".to_string();
         } else if let Some(v) = a.strip_prefix("--mix=") {
@@ -286,7 +293,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             experiments::fig5(r, opts.seed, 16, b, i, "5b", w, t, f)?;
         }
         "profile" => experiments::profile(&opts.app)?,
-        "place" => experiments::place(&opts.app, &opts.topo, opts.seed)?,
+        "place" => {
+            experiments::place(&opts.app, &opts.topo, opts.seed, opts.place_policy.as_deref())?
+        }
         "runtime" => experiments::runtime_check()?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {

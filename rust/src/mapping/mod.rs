@@ -13,6 +13,7 @@ pub mod baselines;
 pub mod bisect;
 pub mod cost;
 pub mod kl;
+pub mod multilevel;
 pub mod recmap;
 
 use crate::commgraph::CommMatrix;
@@ -76,6 +77,9 @@ pub enum PlacementPolicy {
     Scotch,
     /// Full TOFA: topology + fault aware (Listing 1.1).
     Tofa,
+    /// Post-paper: multilevel coarsen–map–refine mapping
+    /// ([`multilevel::MultilevelMapper`]), near-linear in graph size.
+    Multilevel,
 }
 
 impl PlacementPolicy {
@@ -87,6 +91,7 @@ impl PlacementPolicy {
             "greedy" => Some(Self::Greedy),
             "scotch" => Some(Self::Scotch),
             "tofa" => Some(Self::Tofa),
+            "multilevel" | "ml" => Some(Self::Multilevel),
             _ => None,
         }
     }
@@ -101,6 +106,18 @@ impl PlacementPolicy {
             Self::Tofa,
         ]
     }
+
+    /// The paper's five plus the post-paper multilevel mapper.
+    pub fn extended() -> [PlacementPolicy; 6] {
+        [
+            Self::DefaultSlurm,
+            Self::Random,
+            Self::Greedy,
+            Self::Scotch,
+            Self::Tofa,
+            Self::Multilevel,
+        ]
+    }
 }
 
 impl std::fmt::Display for PlacementPolicy {
@@ -111,6 +128,7 @@ impl std::fmt::Display for PlacementPolicy {
             Self::Greedy => "greedy",
             Self::Scotch => "scotch",
             Self::Tofa => "tofa",
+            Self::Multilevel => "multilevel",
         };
         // f.pad honours width/alignment flags ({:<16} etc. in reports)
         f.pad(s)
@@ -135,6 +153,7 @@ pub fn place(
         PlacementPolicy::Scotch | PlacementPolicy::Tofa => {
             recmap::RecursiveMapper::default().map(comm, dist)
         }
+        PlacementPolicy::Multilevel => multilevel::MultilevelMapper::default().map(comm, dist),
     }
 }
 
@@ -160,5 +179,17 @@ mod tests {
             Some(PlacementPolicy::DefaultSlurm)
         );
         assert_eq!(PlacementPolicy::parse("bogus"), None);
+        let ml = Some(PlacementPolicy::Multilevel);
+        assert_eq!(PlacementPolicy::parse("multilevel"), ml);
+        assert_eq!(PlacementPolicy::parse("ml"), ml);
+        assert_eq!(PlacementPolicy::Multilevel.to_string(), "multilevel");
+    }
+
+    #[test]
+    fn extended_is_all_plus_multilevel() {
+        let all = PlacementPolicy::all();
+        let ext = PlacementPolicy::extended();
+        assert_eq!(&ext[..all.len()], &all[..]);
+        assert_eq!(ext[all.len()], PlacementPolicy::Multilevel);
     }
 }

@@ -1,0 +1,851 @@
+//! Multilevel coarsen–map–refine process mapping for million-rank jobs.
+//!
+//! The flat mappers in this tree ([`super::recmap`], [`super::kl`]) are
+//! the paper-era Scotch substitutes: quadratic in the rank count, which
+//! is fine for the paper's 64–256-rank jobs and hopeless for the
+//! million-rank comm graphs the roadmap targets. This module implements
+//! the multilevel lineage instead (Schulz–Träff sparse-QAP mapping,
+//! arXiv 1702.04164; Schulz–Woydt shared-memory hierarchical mapping,
+//! arXiv 2504.01726):
+//!
+//! 1. **Coarsen** the sparse communication graph ([`SparseComm`]) by
+//!    heavy-edge matching down to roughly the platform's rack/pod/group
+//!    count, with a vertex-weight cap keeping coarse vertices balanced.
+//! 2. **Map** the coarse graph with the existing [`RecursiveMapper`]
+//!    (recursive bisection + KL) over *representative hosts* — one per
+//!    equal chunk of the chosen host window — so the coarse solve sees
+//!    real topology distances while only ever materializing a `K x K`
+//!    matrix (`K` ≤ a few hundred), never `nodes x nodes`.
+//! 3. **Uncoarsen**, splitting each parent interval between its two
+//!    children and running a KL-style pairwise-swap refinement at every
+//!    level.
+//!
+//! Total cost is `O(E log N)`-ish — near-linear in graph size — and no
+//! step builds `O(ranks²)` or `O(nodes²)` state, so it composes with the
+//! implicit [`HopOracle`] metric on 100k-node platforms.
+//!
+//! # Determinism
+//!
+//! Refinement gain evaluation and matching preferences run on the PR-1
+//! scoped-thread pool (`batch::parallel::run_sharded`) *within a single
+//! placement call*, but every parallel phase is a pure function of the
+//! vertex index over state frozen at the start of the phase, with
+//! randomness drawn from static per-level/per-pass streams
+//! (`Rng::stream`); all applications of proposals happen serially in
+//! ascending vertex order. Results are therefore bit-identical for any
+//! worker count — the same contract the batch engine keeps across
+//! instances, pushed down into one placement.
+//!
+//! # Host windows and oversubscription
+//!
+//! Candidate hosts (the scheduler's free list) are taken as an ascending
+//! id list; the mapper picks the *tightest id-span window* of the needed
+//! size, which is meaningful because the [`Topology`] contract keeps
+//! consecutive node ids physically close. With `max_per_node = c > 1`,
+//! each window host contributes `c` consecutive slots, so ranks pack
+//! onto nodes (intra-node hops are zero) and the one-process-per-node
+//! invariant is asserted only when `c == 1`.
+//!
+//! [`Topology`]: crate::topology::Topology
+//! [`HopOracle`]: crate::topology::HopOracle
+//!
+//! # Example
+//!
+//! ```
+//! use tofa::commgraph::SparseComm;
+//! use tofa::mapping::multilevel::MultilevelMapper;
+//! use tofa::topology::{MetricMode, Platform, TorusDims};
+//!
+//! // 12-rank ring on a 16-node torus served by the implicit metric:
+//! // no dense distance matrix is ever built.
+//! let platform =
+//!     Platform::paper_default(TorusDims::new(4, 4, 1)).with_metric(MetricMode::Implicit);
+//! let graph = SparseComm::ring(12, 1e6);
+//! let hosts: Vec<usize> = (0..platform.num_nodes()).collect();
+//! let oracle = platform.hop_oracle();
+//! let placement = MultilevelMapper::default()
+//!     .map_sparse(&graph, &oracle, &hosts)
+//!     .unwrap();
+//! placement.validate(platform.num_nodes()).unwrap();
+//! ```
+
+use super::recmap::RecursiveMapper;
+use super::Placement;
+use crate::batch::parallel::{run_sharded, Parallelism};
+use crate::commgraph::{CommMatrix, SparseComm};
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::topology::{DistanceMatrix, HopOracle};
+
+/// Coarse-graph size the coarsening loop aims for when the platform
+/// exposes no usable rack count (dense-matrix entry points).
+pub const DEFAULT_COARSE_TARGET: usize = 128;
+/// Clamp range applied to the platform's rack/pod/group count when
+/// auto-sizing the coarse graph.
+const MIN_COARSE_TARGET: usize = 32;
+const MAX_COARSE_TARGET: usize = 512;
+/// Swap gains this close to zero are treated as noise, not improvements.
+const GAIN_EPS: f64 = 1e-9;
+
+/// One level of the coarsening hierarchy. Level 0 is the input graph;
+/// each subsequent level contracts matched pairs of the previous one.
+#[derive(Debug, Clone)]
+pub struct CoarseLevel {
+    /// The (coarsened) communication graph at this level.
+    pub graph: SparseComm,
+    /// Ranks folded into each vertex; sums to the input rank count.
+    pub vweight: Vec<u32>,
+    /// Cumulative comm volume contracted inside vertices so far. The
+    /// conservation invariant — property-tested — is
+    /// `graph.total_volume() + internal == input.total_volume()`.
+    pub internal: f64,
+    /// Previous level's vertex -> this level's vertex (empty at level 0).
+    pub map_down: Vec<u32>,
+}
+
+/// Distance source for the mapper: a dense matrix or the implicit
+/// oracle. `HopOracle` serves bit-identical values in both of its own
+/// modes, so the two arms here agree wherever both are usable.
+enum Metric<'a> {
+    Dense(&'a DistanceMatrix),
+    Oracle(&'a HopOracle<'a>),
+}
+
+impl Metric<'_> {
+    #[inline]
+    fn hops(&self, u: usize, v: usize) -> f32 {
+        match self {
+            Metric::Dense(d) => d.get(u, v),
+            Metric::Oracle(o) => o.hops(u, v),
+        }
+    }
+
+    fn extract(&self, subset: &[usize]) -> DistanceMatrix {
+        match self {
+            Metric::Dense(d) => d.extract(subset),
+            Metric::Oracle(o) => o.extract(subset),
+        }
+    }
+
+    /// Rack/pod/group count when the topology is reachable, else 0.
+    fn racks(&self) -> usize {
+        match self {
+            Metric::Dense(_) => 0,
+            Metric::Oracle(o) => o.topology().num_racks(),
+        }
+    }
+}
+
+/// Shared per-level state for refinement, bundled so helpers stay under
+/// the argument-count lint and the parallel closures capture one thing.
+struct LevelCtx<'a, F: Fn(usize) -> usize + Sync> {
+    g: &'a SparseComm,
+    vw: &'a [u32],
+    metric: &'a Metric<'a>,
+    slot_host: &'a F,
+    workers: usize,
+}
+
+/// Coarsen–map–refine mapper. See the module docs for the algorithm and
+/// the determinism contract; all fields are plain knobs.
+#[derive(Debug, Clone)]
+pub struct MultilevelMapper {
+    /// Stop coarsening at roughly this many vertices. `0` = auto: the
+    /// platform's rack count clamped to `[32, 512]` (or 128 when no
+    /// topology is reachable).
+    pub coarse_target: usize,
+    /// Refinement sweeps per level (each sweep is propose-then-apply).
+    pub refine_passes: usize,
+    /// Heaviest equal-weight comm partners tried as swap candidates.
+    pub swap_candidates: usize,
+    /// Additional random equal-weight swap candidates per vertex, drawn
+    /// from the per-pass RNG stream.
+    pub rand_candidates: usize,
+    /// Worker threads for the parallel phases. `0` = all cores; the
+    /// result is bit-identical for any value.
+    pub workers: usize,
+    /// Base RNG stream; every level/pass derives a static sub-stream.
+    pub seed: u64,
+    /// Ranks allowed per node (1 = the paper's one-process-per-node).
+    pub max_per_node: usize,
+}
+
+impl Default for MultilevelMapper {
+    fn default() -> Self {
+        MultilevelMapper {
+            coarse_target: 0,
+            refine_passes: 2,
+            swap_candidates: 6,
+            rand_candidates: 2,
+            workers: 1,
+            seed: 0x746f_6661_6d6c, // "tofaml"
+            max_per_node: 1,
+        }
+    }
+}
+
+impl MultilevelMapper {
+    /// Map onto all nodes of a dense distance matrix (the
+    /// [`super::place`] entry point, mirroring [`RecursiveMapper::map`]).
+    pub fn map(&self, comm: &CommMatrix, dist: &DistanceMatrix) -> Result<Placement> {
+        let hosts: Vec<usize> = (0..dist.len()).collect();
+        self.map_onto(comm, dist, &hosts)
+    }
+
+    /// Map onto an ascending subset of a dense matrix's nodes.
+    pub fn map_onto(
+        &self,
+        comm: &CommMatrix,
+        dist: &DistanceMatrix,
+        hosts: &[usize],
+    ) -> Result<Placement> {
+        let g = SparseComm::from_matrix(comm);
+        self.run(&g, &Metric::Dense(dist), hosts)
+    }
+
+    /// Map a sparse comm graph onto `hosts` (ascending node ids) using
+    /// the metric oracle. This is the scalable path: nothing larger than
+    /// the coarse `K x K` representative matrix is materialized, so it
+    /// works on implicit 100k-node platforms.
+    pub fn map_sparse(
+        &self,
+        g: &SparseComm,
+        oracle: &HopOracle<'_>,
+        hosts: &[usize],
+    ) -> Result<Placement> {
+        self.run(g, &Metric::Oracle(oracle), hosts)
+    }
+
+    /// Build the coarsening hierarchy (level 0 = `g`). `target == 0`
+    /// uses [`DEFAULT_COARSE_TARGET`]. Public so property tests can
+    /// check the per-level conservation invariants directly.
+    pub fn coarsen(&self, g: &SparseComm, target: usize) -> Vec<CoarseLevel> {
+        let target = match target {
+            0 => DEFAULT_COARSE_TARGET,
+            t => t,
+        };
+        let total = g.len() as u64;
+        let mut levels = vec![CoarseLevel {
+            graph: g.clone(),
+            vweight: vec![1u32; g.len()],
+            internal: 0.0,
+            map_down: Vec::new(),
+        }];
+        while levels.last().unwrap().graph.len() > target {
+            let next = self.coarsen_once(levels.last().unwrap(), total, target);
+            if next.graph.len() == levels.last().unwrap().graph.len() {
+                break; // weight caps forbid any further contraction
+            }
+            levels.push(next);
+        }
+        levels
+    }
+
+    fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            Parallelism::auto().effective()
+        } else {
+            self.workers
+        }
+    }
+
+    /// One contraction step: heavy-edge matching (parallel preference
+    /// scan, serial deterministic resolution), a forced pairing fallback
+    /// for edge-poor graphs, then the contracted CSR build.
+    fn coarsen_once(&self, prev: &CoarseLevel, total: u64, target: usize) -> CoarseLevel {
+        let g = &prev.graph;
+        let vw = &prev.vweight;
+        let n = g.len();
+        // cap combined weights at twice the average coarse vertex so the
+        // final level stays balanced; >= 2 so unit pairs always fit
+        let cap: u64 = (2 * total / target as u64).max(2);
+
+        // parallel phase: each vertex's heaviest admissible neighbor
+        // (pure function of the index; ascending scan keeps ties on the
+        // smaller id)
+        let (pref, _) = run_sharded(n, self.effective_workers(), |v| {
+            let (ts, ws) = g.adj(v);
+            let mut best = u32::MAX;
+            let mut best_w = 0.0f64;
+            for (&t, &w) in ts.iter().zip(ws) {
+                if u64::from(vw[v]) + u64::from(vw[t as usize]) > cap {
+                    continue;
+                }
+                if w > best_w {
+                    best = t;
+                    best_w = w;
+                }
+            }
+            best
+        });
+
+        // serial phase: greedy matching in ascending id order; a taken
+        // preference falls back to the heaviest still-unmatched neighbor
+        let mut mate: Vec<u32> = vec![u32::MAX; n];
+        let mut matched = 0usize;
+        for v in 0..n {
+            if mate[v] != u32::MAX {
+                continue;
+            }
+            let mut chosen = u32::MAX;
+            let p = pref[v];
+            if p != u32::MAX && mate[p as usize] == u32::MAX {
+                chosen = p;
+            } else {
+                let (ts, ws) = g.adj(v);
+                let mut best_w = 0.0f64;
+                for (&t, &w) in ts.iter().zip(ws) {
+                    if mate[t as usize] != u32::MAX
+                        || u64::from(vw[v]) + u64::from(vw[t as usize]) > cap
+                    {
+                        continue;
+                    }
+                    if w > best_w {
+                        chosen = t;
+                        best_w = w;
+                    }
+                }
+            }
+            if chosen != u32::MAX {
+                mate[v] = chosen;
+                mate[chosen as usize] = v as u32;
+                matched += 2;
+            }
+        }
+
+        // fallback: edge-poor graphs stall the matching, so pair the
+        // lightest unmatched vertices directly — guarantees progress
+        // whenever n > target (the two lightest always fit under `cap`)
+        if matched * 5 < n {
+            let mut un: Vec<u32> = Vec::new();
+            for v in 0..n as u32 {
+                if mate[v as usize] == u32::MAX {
+                    un.push(v);
+                }
+            }
+            un.sort_by_key(|&v| (vw[v as usize], v));
+            let mut i = 0;
+            while i + 1 < un.len() {
+                let (a, b) = (un[i], un[i + 1]);
+                if u64::from(vw[a as usize]) + u64::from(vw[b as usize]) > cap {
+                    break; // sorted ascending: no later pair fits either
+                }
+                mate[a as usize] = b;
+                mate[b as usize] = a;
+                i += 2;
+            }
+        }
+
+        // contract: coarse ids in ascending order of smaller member
+        let mut map_down: Vec<u32> = vec![u32::MAX; n];
+        let mut members: Vec<(u32, u32)> = Vec::with_capacity(n / 2 + 1);
+        for v in 0..n {
+            if map_down[v] != u32::MAX {
+                continue;
+            }
+            let c = members.len() as u32;
+            map_down[v] = c;
+            let m = mate[v];
+            if m != u32::MAX {
+                map_down[m as usize] = c;
+                members.push((v as u32, m));
+            } else {
+                members.push((v as u32, u32::MAX));
+            }
+        }
+        let nc = members.len();
+        let mut vweight: Vec<u32> = Vec::with_capacity(nc);
+        for &(a, b) in &members {
+            let mut w = vw[a as usize];
+            if b != u32::MAX {
+                w += vw[b as usize];
+            }
+            vweight.push(w);
+        }
+
+        // contracted CSR, built row by row with a scratch accumulator;
+        // weights are > 0, so `agg == 0.0` doubles as the touched test
+        let mut agg: Vec<f64> = vec![0.0; nc];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut offsets: Vec<usize> = Vec::with_capacity(nc + 1);
+        let mut targets: Vec<u32> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+        let mut internal2 = 0.0f64; // internal volume, double-counted
+        offsets.push(0);
+        for (c, &(a, b)) in members.iter().enumerate() {
+            for v in [a, b] {
+                if v == u32::MAX {
+                    continue;
+                }
+                let (ts, ws) = g.adj(v as usize);
+                for (&t, &w) in ts.iter().zip(ws) {
+                    let ct = map_down[t as usize];
+                    if ct as usize == c {
+                        internal2 += w;
+                        continue;
+                    }
+                    if agg[ct as usize] == 0.0 {
+                        touched.push(ct);
+                    }
+                    agg[ct as usize] += w;
+                }
+            }
+            touched.sort_unstable();
+            for &ct in &touched {
+                targets.push(ct);
+                weights.push(agg[ct as usize]);
+                agg[ct as usize] = 0.0;
+            }
+            touched.clear();
+            offsets.push(targets.len());
+        }
+        CoarseLevel {
+            graph: SparseComm::from_raw(nc, offsets, targets, weights),
+            vweight,
+            internal: prev.internal + internal2 / 2.0,
+            map_down,
+        }
+    }
+
+    fn run(&self, g: &SparseComm, metric: &Metric<'_>, hosts: &[usize]) -> Result<Placement> {
+        let n = g.len();
+        if n == 0 {
+            return Ok(Placement::new(Vec::new()));
+        }
+        let cap = self.max_per_node.max(1);
+        let need = n.div_ceil(cap);
+        if need > hosts.len() {
+            return Err(Error::Placement(format!(
+                "{n} ranks at {cap} per node cannot fit {} candidate hosts",
+                hosts.len()
+            )));
+        }
+        debug_assert!(
+            hosts.windows(2).all(|p| p[0] < p[1]),
+            "candidate hosts must be strictly ascending"
+        );
+        let window = tightest_window(hosts, need);
+        let slot_host = move |s: usize| window[s / cap];
+        self.run_in_window(g, metric, &slot_host)
+    }
+
+    fn run_in_window<F: Fn(usize) -> usize + Sync>(
+        &self,
+        g: &SparseComm,
+        metric: &Metric<'_>,
+        slot_host: &F,
+    ) -> Result<Placement> {
+        let n = g.len();
+        let auto = match metric.racks() {
+            0 => DEFAULT_COARSE_TARGET,
+            r => r.clamp(MIN_COARSE_TARGET, MAX_COARSE_TARGET),
+        };
+        let chosen = if self.coarse_target > 0 {
+            self.coarse_target
+        } else {
+            auto
+        };
+        let target = chosen.clamp(1, n);
+        let levels = self.coarsen(g, target);
+
+        // coarse solve: recmap + KL over one representative host per
+        // equal slot chunk — the only distance matrix ever materialized
+        let top = levels.last().unwrap();
+        let k = top.graph.len();
+        let reps: Vec<usize> = (0..k)
+            .map(|c| {
+                let lo = c * n / k;
+                let hi = ((c + 1) * n / k).max(lo + 1);
+                slot_host((lo + hi - 1) / 2)
+            })
+            .collect();
+        let rep_dist = metric.extract(&reps);
+        let coarse_comm = top.graph.to_matrix();
+        let local: Vec<usize> = (0..k).collect();
+        let coarse_solver = RecursiveMapper::default();
+        let sol = coarse_solver.map_onto(&coarse_comm, &rep_dist, &local)?;
+
+        // lay coarse vertices out along the window in representative
+        // order, sized by their actual rank weight
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by_key(|&c| sol.assignment[c]);
+        let mut starts: Vec<usize> = vec![0; k];
+        let mut acc = 0usize;
+        for &c in &order {
+            starts[c] = acc;
+            acc += top.vweight[c] as usize;
+        }
+        debug_assert_eq!(acc, n, "vertex weights must sum to the rank count");
+
+        let workers = self.effective_workers();
+        let top_ctx = LevelCtx {
+            g: &top.graph,
+            vw: &top.vweight,
+            metric,
+            slot_host,
+            workers,
+        };
+        self.refine_level(&top_ctx, &mut starts, levels.len() - 1);
+
+        // uncoarsen: split parent intervals between children (order
+        // chosen by estimated attraction to neighbor parents), refine
+        for li in (1..levels.len()).rev() {
+            let fine = &levels[li - 1];
+            let coarse = &levels[li];
+            let fine_n = fine.graph.len();
+            let mut child_a: Vec<u32> = vec![u32::MAX; coarse.graph.len()];
+            let mut child_b: Vec<u32> = vec![u32::MAX; coarse.graph.len()];
+            for v in 0..fine_n {
+                let c = coarse.map_down[v] as usize;
+                if child_a[c] == u32::MAX {
+                    child_a[c] = v as u32;
+                } else {
+                    child_b[c] = v as u32;
+                }
+            }
+            // attraction of placing fine vertex `v` as an interval at
+            // `start`: comm-weighted distance to every neighbor's
+            // *parent* interval center (children aren't placed yet)
+            let attract = |v: usize, start: usize, w: usize| -> f64 {
+                let my = slot_host(start + w / 2);
+                let (ts, ws) = fine.graph.adj(v);
+                let mut cost = 0.0f64;
+                for (&t, &wt) in ts.iter().zip(ws) {
+                    let pc = coarse.map_down[t as usize] as usize;
+                    let center = starts[pc] + coarse.vweight[pc] as usize / 2;
+                    cost += wt * f64::from(metric.hops(my, slot_host(center)));
+                }
+                cost
+            };
+            let mut fstarts = vec![0usize; fine_n];
+            for c in 0..coarse.graph.len() {
+                let s = starts[c];
+                let a = child_a[c] as usize;
+                if child_b[c] == u32::MAX {
+                    fstarts[a] = s;
+                    continue;
+                }
+                let b = child_b[c] as usize;
+                let wa = fine.vweight[a] as usize;
+                let wb = fine.vweight[b] as usize;
+                let ab = attract(a, s, wa) + attract(b, s + wa, wb);
+                let ba = attract(b, s, wb) + attract(a, s + wb, wa);
+                if ba < ab {
+                    fstarts[b] = s;
+                    fstarts[a] = s + wb;
+                } else {
+                    fstarts[a] = s;
+                    fstarts[b] = s + wa;
+                }
+            }
+            starts = fstarts;
+            let ctx = LevelCtx {
+                g: &fine.graph,
+                vw: &fine.vweight,
+                metric,
+                slot_host,
+                workers,
+            };
+            self.refine_level(&ctx, &mut starts, li - 1);
+        }
+
+        let assignment: Vec<usize> = starts.iter().map(|&s| slot_host(s)).collect();
+        Ok(Placement::new(assignment))
+    }
+
+    /// KL-style pairwise-swap refinement of one level. Proposals are
+    /// computed in parallel against centers frozen at pass start, then
+    /// applied serially in ascending vertex order (first-come-first-
+    /// served), so the outcome is independent of the worker count.
+    fn refine_level<F: Fn(usize) -> usize + Sync>(
+        &self,
+        ctx: &LevelCtx<'_, F>,
+        starts: &mut [usize],
+        level: usize,
+    ) {
+        let n = ctx.g.len();
+        if n < 2 {
+            return;
+        }
+        let level_seed = Rng::stream(self.seed, level as u64).next_u64();
+        for pass in 0..self.refine_passes {
+            let pass_seed = Rng::stream(level_seed, pass as u64).next_u64();
+            let host_of: Vec<usize> = (0..n)
+                .map(|v| (ctx.slot_host)(starts[v] + ctx.vw[v] as usize / 2))
+                .collect();
+            let frozen = &host_of;
+            let (proposals, _) = run_sharded(n, ctx.workers, |v| {
+                self.best_swap(ctx, frozen, pass_seed, v)
+            });
+            let mut moved = vec![false; n];
+            let mut improved = false;
+            for (v, prop) in proposals.iter().enumerate() {
+                if let Some((u, _gain)) = *prop {
+                    let u = u as usize;
+                    if moved[v] || moved[u] {
+                        continue;
+                    }
+                    starts.swap(v, u);
+                    moved[v] = true;
+                    moved[u] = true;
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    /// Best strictly-improving equal-weight swap partner for `v`, or
+    /// `None`. Pure in `(frozen state, pass_seed, v)` — safe to evaluate
+    /// on any shard.
+    fn best_swap<F: Fn(usize) -> usize + Sync>(
+        &self,
+        ctx: &LevelCtx<'_, F>,
+        host_of: &[usize],
+        pass_seed: u64,
+        v: usize,
+    ) -> Option<(u32, f64)> {
+        let n = ctx.g.len();
+        let (ts, ws) = ctx.g.adj(v);
+        let mut cands: Vec<u32> = Vec::with_capacity(self.swap_candidates + self.rand_candidates);
+        if self.swap_candidates > 0 {
+            let mut pairs: Vec<(f64, u32)> = ts
+                .iter()
+                .zip(ws)
+                .filter(|&(&t, _)| ctx.vw[t as usize] == ctx.vw[v])
+                .map(|(&t, &w)| (w, t))
+                .collect();
+            pairs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            cands.extend(pairs.iter().take(self.swap_candidates).map(|&(_, t)| t));
+        }
+        let mut rng = Rng::stream(pass_seed, v as u64);
+        for _ in 0..self.rand_candidates {
+            let r = rng.below_usize(n);
+            if r != v && ctx.vw[r] == ctx.vw[v] {
+                cands.push(r as u32);
+            }
+        }
+        let mut best = u32::MAX;
+        let mut best_gain = -GAIN_EPS;
+        for &u in &cands {
+            let d = swap_delta(ctx, host_of, v, u as usize);
+            if d < best_gain {
+                best = u;
+                best_gain = d;
+            }
+        }
+        (best != u32::MAX).then_some((best, best_gain))
+    }
+}
+
+/// Cost change of exchanging the (equal-length) intervals of `v` and
+/// `u`, evaluated against frozen interval-center hosts. The direct
+/// `v`–`u` edge keeps its distance under the exchange, so it is skipped.
+fn swap_delta<F: Fn(usize) -> usize + Sync>(
+    ctx: &LevelCtx<'_, F>,
+    host_of: &[usize],
+    v: usize,
+    u: usize,
+) -> f64 {
+    let hv = host_of[v];
+    let hu = host_of[u];
+    if hv == hu {
+        return 0.0;
+    }
+    let mut delta = 0.0f64;
+    for (a, b) in [(v, u), (u, v)] {
+        let (ha, hb) = (host_of[a], host_of[b]);
+        let (ts, ws) = ctx.g.adj(a);
+        for (&t, &w) in ts.iter().zip(ws) {
+            let t = t as usize;
+            if t == b {
+                continue;
+            }
+            let ht = host_of[t];
+            delta += w * f64::from(ctx.metric.hops(hb, ht) - ctx.metric.hops(ha, ht));
+        }
+    }
+    delta
+}
+
+/// The `w` consecutive entries of ascending `hosts` with the smallest
+/// node-id span (ties: leftmost). Locality-preserving ids make id span a
+/// metric-free proxy for physical compactness.
+fn tightest_window(hosts: &[usize], w: usize) -> &[usize] {
+    debug_assert!((1..=hosts.len()).contains(&w));
+    let mut best_i = 0;
+    let mut best_span = usize::MAX;
+    for i in 0..=hosts.len() - w {
+        let span = hosts[i + w - 1] - hosts[i];
+        if span < best_span {
+            best_span = span;
+            best_i = i;
+        }
+    }
+    &hosts[best_i..best_i + w]
+}
+
+/// Eq. 1-style hop-bytes cost over a sparse comm graph: each undirected
+/// edge contributes `weight x hops(assign[u], assign[v])` once. The
+/// sparse analogue of [`super::cost::hop_bytes_cost`]; `hops` can close
+/// over a dense matrix or a [`HopOracle`].
+pub fn hop_bytes_sparse<F: Fn(usize, usize) -> f64>(
+    g: &SparseComm,
+    assignment: &[usize],
+    hops: F,
+) -> f64 {
+    debug_assert_eq!(g.len(), assignment.len());
+    let mut total = 0.0f64;
+    for v in 0..g.len() {
+        let (ts, ws) = g.adj(v);
+        for (&t, &w) in ts.iter().zip(ws) {
+            if (t as usize) > v {
+                total += w * hops(assignment[v], assignment[t as usize]);
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{MetricMode, Platform, TorusDims};
+
+    fn torus_16() -> Platform {
+        Platform::paper_default(TorusDims::new(4, 4, 1))
+    }
+
+    #[test]
+    fn tightest_window_prefers_the_smallest_id_span() {
+        // spans: [0,1,9]=9, [1,9,10]=9, [9,10,11]=2
+        let hosts = [0, 1, 9, 10, 11];
+        assert_eq!(tightest_window(&hosts, 3), &[9, 10, 11]);
+        // ties resolve to the leftmost window
+        let hosts = [0, 1, 2, 3];
+        assert_eq!(tightest_window(&hosts, 2), &[0, 1]);
+        assert_eq!(tightest_window(&hosts, 4), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn finest_intervals_partition_the_slot_range() {
+        let g = SparseComm::stencil2d(4, 4, 10.0);
+        let platform = torus_16();
+        let hosts: Vec<usize> = (0..16).collect();
+        let oracle = platform.hop_oracle();
+        let mapper = MultilevelMapper::default();
+        let p = mapper.map_sparse(&g, &oracle, &hosts).unwrap();
+        p.validate(16).unwrap();
+        let mut nodes = p.assignment.clone();
+        nodes.sort_unstable();
+        assert_eq!(nodes, hosts, "16 ranks on 16 nodes uses every node once");
+    }
+
+    #[test]
+    fn edgeless_graphs_coarsen_via_forced_pairing() {
+        let g = SparseComm::from_edges(64, &[]);
+        let mapper = MultilevelMapper::default();
+        let levels = mapper.coarsen(&g, 8);
+        assert!(levels.last().unwrap().graph.len() <= 8);
+        for lvl in &levels {
+            assert_eq!(lvl.internal, 0.0);
+            assert_eq!(lvl.graph.total_volume(), 0.0);
+        }
+        // weights still account for every rank
+        let last = levels.last().unwrap();
+        let total: u64 = last.vweight.iter().map(|&w| u64::from(w)).sum();
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn too_few_hosts_is_a_typed_error() {
+        let g = SparseComm::ring(8, 1.0);
+        let platform = torus_16();
+        let oracle = platform.hop_oracle();
+        let mapper = MultilevelMapper::default();
+        let err = mapper.map_sparse(&g, &oracle, &[0, 1, 2]).unwrap_err();
+        assert!(err.to_string().contains("cannot fit"));
+    }
+
+    #[test]
+    fn oversubscription_packs_within_the_per_node_cap() {
+        let g = SparseComm::stencil2d(10, 5, 3.0); // 50 ranks
+        let platform = torus_16();
+        let hosts: Vec<usize> = (0..16).collect();
+        let oracle = platform.hop_oracle();
+        let mapper = MultilevelMapper {
+            max_per_node: 4,
+            ..MultilevelMapper::default()
+        };
+        let p = mapper.map_sparse(&g, &oracle, &hosts).unwrap();
+        let mut counts = vec![0usize; 16];
+        for &node in &p.assignment {
+            counts[node] += 1;
+        }
+        assert!(counts.iter().all(|&c| c <= 4));
+        assert_eq!(counts.iter().sum::<usize>(), 50);
+    }
+
+    #[test]
+    fn masked_hosts_are_respected() {
+        let g = SparseComm::ring(6, 5.0);
+        let platform = torus_16();
+        let hosts: Vec<usize> = (0..16).filter(|h| h % 2 == 0).collect();
+        let oracle = platform.hop_oracle();
+        let mapper = MultilevelMapper::default();
+        let p = mapper.map_sparse(&g, &oracle, &hosts).unwrap();
+        p.validate(16).unwrap();
+        assert!(p.assignment.iter().all(|a| a % 2 == 0));
+    }
+
+    #[test]
+    fn dense_and_implicit_metrics_place_identically() {
+        let g = SparseComm::stencil2d(5, 3, 7.0);
+        let dense = torus_16();
+        let implicit = torus_16().with_metric(MetricMode::Implicit);
+        let hosts: Vec<usize> = (0..16).collect();
+        let mapper = MultilevelMapper::default();
+        let od = dense.hop_oracle();
+        let oi = implicit.hop_oracle();
+        let pd = mapper.map_sparse(&g, &od, &hosts).unwrap();
+        let pi = mapper.map_sparse(&g, &oi, &hosts).unwrap();
+        assert_eq!(pd, pi);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_result() {
+        let g = SparseComm::stencil2d(6, 5, 2.0);
+        let platform = torus_16();
+        let hosts: Vec<usize> = (0..16).collect();
+        let oracle = platform.hop_oracle();
+        let mapper = MultilevelMapper {
+            max_per_node: 2,
+            ..MultilevelMapper::default()
+        };
+        let reference = mapper.map_sparse(&g, &oracle, &hosts).unwrap();
+        for workers in [2, 4] {
+            let m = MultilevelMapper {
+                workers,
+                ..mapper.clone()
+            };
+            assert_eq!(m.map_sparse(&g, &oracle, &hosts).unwrap(), reference);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_rank_jobs() {
+        let platform = torus_16();
+        let hosts: Vec<usize> = (0..16).collect();
+        let oracle = platform.hop_oracle();
+        let mapper = MultilevelMapper::default();
+        let empty = SparseComm::from_edges(0, &[]);
+        let p = mapper.map_sparse(&empty, &oracle, &hosts).unwrap();
+        assert!(p.assignment.is_empty());
+        let single = SparseComm::from_edges(1, &[]);
+        let p = mapper.map_sparse(&single, &oracle, &hosts).unwrap();
+        assert_eq!(p.assignment.len(), 1);
+        assert!(p.assignment[0] < 16);
+    }
+}

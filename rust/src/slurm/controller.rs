@@ -35,6 +35,9 @@ pub struct Controller {
     rng: Rng,
     /// Injected estimates (offline mode); overrides heartbeat-derived ones.
     offline_estimates: Option<Vec<f64>>,
+    /// Reused buffer for the free-node candidate list, refilled from the
+    /// ledger's lazy iterator on each scheduling attempt.
+    free_scratch: Vec<usize>,
 }
 
 impl Controller {
@@ -54,6 +57,7 @@ impl Controller {
             nodes: Vec::new(),
             rng: Rng::new(seed),
             offline_estimates: None,
+            free_scratch: Vec::new(),
         }
     }
 
@@ -133,13 +137,24 @@ impl Controller {
             Some(c) => c.clone(),
             None => crate::commgraph::CommMatrix::new(record.request.ranks),
         };
-        let free = self.ledger.free_nodes();
+        // Candidate list: when every node is free, pass None — FANS
+        // reduces a full mask to the unrestricted path anyway, so this is
+        // bit-identical and skips materializing the list entirely. The
+        // partial case refills a reused buffer from the ledger's lazy
+        // free-run iterator instead of allocating a fresh Vec per attempt.
+        let candidates = if self.ledger.num_free() == self.ledger.num_nodes() {
+            None
+        } else {
+            self.free_scratch.clear();
+            self.free_scratch.extend(self.ledger.free_nodes_iter());
+            Some(self.free_scratch.as_slice())
+        };
         let placement: Result<Placement> = self.fans.select(
             record.request.distribution,
             &comm,
             &self.platform,
             &outage,
-            Some(&free),
+            candidates,
             &mut self.rng,
         );
         let placement = placement.and_then(|p| {

@@ -17,8 +17,9 @@
 //! mode) selection is over the full platform, bit-identical to the
 //! pre-scheduler code.
 
-use crate::commgraph::CommMatrix;
+use crate::commgraph::{CommMatrix, SparseComm};
 use crate::error::Result;
+use crate::mapping::multilevel::MultilevelMapper;
 use crate::mapping::{self, Placement, PlacementPolicy};
 use crate::rng::Rng;
 use crate::tofa::placer::{TofaPlacement, TofaPlacer};
@@ -49,6 +50,12 @@ impl FansPlugin {
     ///   closed forms, per [`Platform::hop_oracle`]) is extracted to the
     ///   candidate set for the standard policies, and the TOFA
     ///   window/Eq. 1 paths run mask-aware.
+    ///
+    /// [`PlacementPolicy::Multilevel`] never extracts a candidate-sized
+    /// distance matrix: it converts `comm` to a [`SparseComm`] and runs
+    /// the coarsen–map–refine mapper directly against the hop oracle, so
+    /// it stays usable on implicit 100k-node platforms where the other
+    /// standard policies would refuse to materialize distances.
     pub fn select(
         &self,
         policy: PlacementPolicy,
@@ -68,6 +75,11 @@ impl FansPlugin {
         match candidates {
             None => match policy {
                 PlacementPolicy::Tofa => self.placer.placement(comm, platform, outage),
+                PlacementPolicy::Multilevel => {
+                    let g = SparseComm::from_matrix(comm);
+                    let hosts: Vec<usize> = (0..platform.num_nodes()).collect();
+                    MultilevelMapper::default().map_sparse(&g, &oracle, &hosts)
+                }
                 _ => match oracle.index() {
                     // borrow the platform's shared clean hop matrix instead
                     // of rebuilding an O(n^2) matrix per selection
@@ -90,6 +102,12 @@ impl FansPlugin {
                         mask[n] = true;
                     }
                     return self.placer.placement_within(comm, platform, outage, &mask);
+                }
+                if policy == PlacementPolicy::Multilevel {
+                    // sparse path: candidate host list goes straight to the
+                    // mapper, no per-selection distance extract at all
+                    let g = SparseComm::from_matrix(comm);
+                    return MultilevelMapper::default().map_sparse(&g, &oracle, free);
                 }
                 // standard policies run on the clean hop matrix restricted
                 // to the candidates, then relabel back to platform ids —
@@ -272,6 +290,48 @@ mod tests {
             )
             .unwrap();
         assert_eq!(p.assignment, vec![3, 5, 9, 10]);
+    }
+
+    #[test]
+    fn multilevel_selects_identically_dense_and_implicit_with_mask() {
+        use crate::topology::MetricMode;
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let implicit = plat.clone().with_metric(MetricMode::Implicit);
+        let outage = vec![0.0; 64];
+        let free: Vec<usize> = (0..64).step_by(2).collect();
+        let fans = FansPlugin::default();
+        let ml = PlacementPolicy::Multilevel;
+        for mask in [None, Some(free.as_slice())] {
+            let mut rng_a = Rng::new(3);
+            let mut rng_b = Rng::new(3);
+            let a = fans.select(ml, &comm, &plat, &outage, mask, &mut rng_a);
+            let b = fans.select(ml, &comm, &implicit, &outage, mask, &mut rng_b);
+            let (a, b) = (a.unwrap(), b.unwrap());
+            assert_eq!(a, b, "masked={}", mask.is_some());
+            a.validate(64).unwrap();
+            assert_eq!(a.num_ranks(), 8);
+            if let Some(f) = mask {
+                for &n in &a.assignment {
+                    assert!(f.contains(&n), "used busy node {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multilevel_fails_cleanly_when_candidates_are_too_few() {
+        let app = LammpsProxy::tiny(8, 2);
+        let comm = profile_app(&app).volume;
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let outage = vec![0.0; 64];
+        let free = vec![0usize, 1, 2];
+        let fans = FansPlugin::default();
+        let ml = PlacementPolicy::Multilevel;
+        let mut rng = Rng::new(2);
+        let r = fans.select(ml, &comm, &plat, &outage, Some(&free), &mut rng);
+        assert!(r.is_err(), "multilevel placed 8 ranks on 3 free nodes");
     }
 
     #[test]

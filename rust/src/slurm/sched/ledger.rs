@@ -117,12 +117,25 @@ impl NodeLedger {
     /// Ascending ids of the free nodes — the candidate set FANS selects
     /// from. Expanded from the run index (output order is identical to the
     /// retained [`NodeLedger::free_nodes_scan`] reference).
+    ///
+    /// This materializes a job-independent `Vec` per call; scheduler hot
+    /// paths should prefer [`NodeLedger::free_nodes_iter`] and reuse a
+    /// scratch buffer. Retained as the iterator's bit-identity reference.
     pub fn free_nodes(&self) -> Vec<usize> {
         let mut out = Vec::with_capacity(self.free);
         for (&start, &len) in &self.runs {
             out.extend(start..start + len);
         }
         out
+    }
+
+    /// Lazy ascending iterator over the free node ids, served straight
+    /// from the incremental free-run index — no allocation, O(log n) to
+    /// start, O(1) amortized per item. Yields exactly the sequence
+    /// [`NodeLedger::free_nodes`] collects (regression-tested under
+    /// random op sequences).
+    pub fn free_nodes_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.runs.iter().flat_map(|(&start, &len)| start..start + len)
     }
 
     /// O(n) state-vector scan for the free set — the bit-identity
@@ -517,6 +530,8 @@ mod tests {
                 }
             }
             assert_eq!(l.free_nodes(), l.free_nodes_scan());
+            let lazy: Vec<usize> = l.free_nodes_iter().collect();
+            assert_eq!(lazy, l.free_nodes(), "iterator must match the Vec path");
             assert_eq!(l.largest_free_run(), l.largest_free_run_scan());
             assert_eq!(l.free_runs(), l.free_runs_scan());
             l.assert_consistent();

@@ -88,9 +88,28 @@ fn field<T: std::str::FromStr>(raw: &str, line_no: usize, what: &str) -> Result<
 }
 
 /// Derive timesteps from a recorded runtime.
-fn steps_of_runtime(runtime_s: f64, cfg: &TraceConfig) -> usize {
+///
+/// The runtime must be finite and non-negative: SWF logs use `-1` for
+/// "unknown", and a NaN would otherwise round-trip through the clamp as a
+/// silent 1-step job (NaN comparisons are all false, so `clamp` passes
+/// the garbage through its lower bound). Both are typed
+/// [`Error::Workload`]s naming the offending line, as is a degenerate
+/// `seconds_per_step` that turns a finite runtime into a non-finite step
+/// count.
+fn steps_of_runtime(runtime_s: f64, cfg: &TraceConfig, line_no: usize) -> Result<usize> {
+    if !runtime_s.is_finite() || runtime_s < 0.0 {
+        return Err(Error::Workload(format!(
+            "line {line_no}: unknown runtime {runtime_s} (refusing -1 placeholders)"
+        )));
+    }
     let steps = (runtime_s / cfg.seconds_per_step).round();
-    (steps as i64).clamp(1, cfg.max_steps.max(1) as i64) as usize
+    if !steps.is_finite() {
+        return Err(Error::Workload(format!(
+            "line {line_no}: runtime {runtime_s} at {} s/step gives a non-finite step count",
+            cfg.seconds_per_step
+        )));
+    }
+    Ok((steps as i64).clamp(1, cfg.max_steps.max(1) as i64) as usize)
 }
 
 /// Parse an SWF-style (Standard Workload Format) trace: `;` comments,
@@ -129,11 +148,6 @@ pub fn parse_swf<R: Read>(r: R, cfg: &TraceConfig) -> Result<Vec<SchedJobSpec>> 
         }
         prev_submit = submit;
         let runtime: f64 = field(fields[3], line_no, "runtime")?;
-        if !runtime.is_finite() || runtime < 0.0 {
-            return Err(Error::Workload(format!(
-                "line {line_no}: unknown runtime {runtime} (refusing -1 placeholders)"
-            )));
-        }
         let mut procs: i64 = field(fields[4], line_no, "allocated processors")?;
         if procs <= 0 {
             if let Some(req) = fields.get(7).copied() {
@@ -149,7 +163,7 @@ pub fn parse_swf<R: Read>(r: R, cfg: &TraceConfig) -> Result<Vec<SchedJobSpec>> 
         jobs.push(SchedJobSpec {
             name: format!("lammps:{ranks}"),
             ranks,
-            steps: steps_of_runtime(runtime, cfg),
+            steps: steps_of_runtime(runtime, cfg, line_no)?,
             arrival_s: submit,
         });
     }

@@ -1,0 +1,219 @@
+//! Property suite for the multilevel coarsen–map–refine mapper:
+//! per-level conservation invariants of the coarsening hierarchy, valid
+//! placements across every topology family (full and masked host lists),
+//! quality floor against random placement on the Eq. 1 cost, worker-count
+//! bit-identity under the implicit metric, and the 100k-node scaling path
+//! (with the million-rank acceptance run behind `--ignored`).
+
+use std::sync::Arc;
+
+use tofa::commgraph::SparseComm;
+use tofa::mapping::baselines;
+use tofa::mapping::multilevel::{hop_bytes_sparse, MultilevelMapper};
+use tofa::rng::Rng;
+use tofa::topology::{Dragonfly, DragonflyParams, FatTree, MetricMode, Platform, TorusDims};
+
+fn random_graph(rng: &mut Rng, n: usize, edges: usize) -> SparseComm {
+    let mut es = Vec::with_capacity(edges);
+    for _ in 0..edges {
+        let u = rng.below_usize(n);
+        let v = rng.below_usize(n);
+        if u != v {
+            es.push((u, v, (rng.below(1_000_000) + 1) as f64));
+        }
+    }
+    SparseComm::from_edges(n, &es)
+}
+
+/// One platform per topology family, all small enough for dense checks.
+fn family_platforms() -> Vec<Platform> {
+    vec![
+        Platform::paper_default(TorusDims::new(4, 4, 4)),
+        Platform::paper_default_on(Arc::new(FatTree::new(8).unwrap())),
+        Platform::paper_default_on(Arc::new(
+            Dragonfly::new(DragonflyParams::new(9, 4, 4, 2)).unwrap(),
+        )),
+    ]
+}
+
+#[test]
+fn prop_coarsening_conserves_volume_weights_and_mapping() {
+    // every level of the hierarchy must keep the books straight: edge
+    // volume moves to `internal` (never vanishes), vertex weights keep
+    // summing to the rank count, map_down stays a total function onto the
+    // coarser vertex set, and the hierarchy strictly shrinks
+    let mapper = MultilevelMapper::default();
+    let mut rng = Rng::new(0x51c);
+    for case in 0..40 {
+        let n = 2 + rng.below_usize(600);
+        let g = random_graph(&mut rng, n, n * (1 + rng.below_usize(4)));
+        let target = 1 + rng.below_usize(64);
+        let base = g.total_volume();
+        let levels = mapper.coarsen(&g, target);
+        assert!(!levels.is_empty());
+        assert_eq!(levels[0].graph.len(), n, "level 0 is the input");
+        for (li, lvl) in levels.iter().enumerate() {
+            let ctx = format!("case {case} (n {n}, target {target}) level {li}");
+            let here = lvl.graph.total_volume() + lvl.internal;
+            assert!(
+                (here - base).abs() <= 1e-6 * base.max(1.0),
+                "{ctx}: volume not conserved ({here} vs {base})"
+            );
+            let ranks: u64 = lvl.vweight.iter().map(|&w| u64::from(w)).sum();
+            assert_eq!(ranks, n as u64, "{ctx}: rank weight lost");
+            if li > 0 {
+                let prev = &levels[li - 1];
+                assert!(lvl.graph.len() < prev.graph.len(), "{ctx}: no shrink");
+                assert_eq!(lvl.map_down.len(), prev.graph.len(), "{ctx}");
+                let nc = lvl.graph.len() as u32;
+                assert!(lvl.map_down.iter().all(|&c| c < nc), "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_multilevel_placements_are_valid_on_every_family() {
+    let mut rng = Rng::new(0x51d);
+    let mapper = MultilevelMapper::default();
+    for plat in family_platforms() {
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        let oracle = plat.hop_oracle();
+        let all: Vec<usize> = (0..n).collect();
+        let evens: Vec<usize> = (0..n).step_by(2).collect();
+        for case in 0..4 {
+            let ranks = 2 + rng.below_usize(n / 3);
+            let g = random_graph(&mut rng, ranks, ranks * 2);
+            for hosts in [&all, &evens] {
+                let ctx = format!("{what} case {case} ({ranks} ranks)");
+                let p = mapper.map_sparse(&g, &oracle, hosts).unwrap();
+                p.validate(n).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                assert!(
+                    p.assignment.iter().all(|a| hosts.binary_search(a).is_ok()),
+                    "{ctx}: node outside the candidate list"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_multilevel_never_loses_to_random_on_eq1_cost() {
+    // quality floor on the paper's hop-bytes objective: the mapper must
+    // beat the mean of a random-placement ensemble on structured graphs
+    let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let oracle = plat.hop_oracle();
+    let hosts: Vec<usize> = (0..512).collect();
+    let mapper = MultilevelMapper::default();
+    let mut rng = Rng::new(0x51e);
+    let graphs = [
+        SparseComm::stencil2d(16, 16, 1e6),
+        SparseComm::ring(300, 1e6),
+        random_graph(&mut rng, 400, 1200),
+    ];
+    for (gi, g) in graphs.iter().enumerate() {
+        let cost = |a: &[usize]| hop_bytes_sparse(g, a, |u, v| f64::from(oracle.hops(u, v)));
+        let p = mapper.map_sparse(g, &oracle, &hosts).unwrap();
+        p.validate(512).unwrap();
+        let ml = cost(&p.assignment);
+        let mut sum = 0.0;
+        let trials = 20;
+        for _ in 0..trials {
+            let r = baselines::random_placement(g.len(), 512, &mut rng).unwrap();
+            sum += cost(&r.assignment);
+        }
+        let mean = sum / f64::from(trials);
+        assert!(
+            ml <= mean,
+            "graph {gi}: multilevel {ml} worse than random mean {mean}"
+        );
+    }
+}
+
+#[test]
+fn prop_worker_counts_are_bit_identical_on_every_family_implicit() {
+    let mut rng = Rng::new(0x51f);
+    for plat in family_platforms() {
+        let plat = plat.with_metric(MetricMode::Implicit);
+        let n = plat.num_nodes();
+        let what = plat.topology().describe();
+        let oracle = plat.hop_oracle();
+        let hosts: Vec<usize> = (0..n).collect();
+        let ranks = n / 2;
+        let g = random_graph(&mut rng, ranks, ranks * 3);
+        let run = |workers: usize| {
+            let mapper = MultilevelMapper {
+                workers,
+                ..MultilevelMapper::default()
+            };
+            mapper.map_sparse(&g, &oracle, &hosts).unwrap()
+        };
+        let serial = run(1);
+        serial.validate(n).unwrap();
+        for workers in [2usize, 4] {
+            assert_eq!(run(workers), serial, "{what} diverged at {workers} workers");
+        }
+    }
+}
+
+#[test]
+fn multilevel_scales_to_the_100k_node_torus_without_dense_state() {
+    // 102 400 nodes is far past the dense-matrix wall (a dense distance
+    // matrix would be ~42 GB); the sparse path must place a 4096-rank
+    // stencil through the implicit oracle in ordinary test time
+    let plat = Platform::paper_default(TorusDims::new(64, 40, 40));
+    let n = plat.num_nodes();
+    assert_eq!(n, 102_400);
+    assert!(!plat.resolved_metric().is_dense(), "Auto must go implicit");
+    let oracle = plat.hop_oracle();
+    let hosts: Vec<usize> = (0..n).collect();
+    let g = SparseComm::stencil2d(64, 64, 1e6);
+    let mapper = MultilevelMapper {
+        coarse_target: 128,
+        ..MultilevelMapper::default()
+    };
+    let p = mapper.map_sparse(&g, &oracle, &hosts).unwrap();
+    p.validate(n).unwrap();
+    // and it must use the topology: beat block placement on the cost
+    let cost = |a: &[usize]| hop_bytes_sparse(&g, a, |u, v| f64::from(oracle.hops(u, v)));
+    let block = baselines::block_placement(g.len(), n).unwrap();
+    assert!(
+        cost(&p.assignment) <= cost(&block.assignment),
+        "multilevel lost to naive block placement on a stencil"
+    );
+}
+
+#[test]
+#[ignore = "million-rank acceptance run; minutes of CPU — perf job only"]
+fn million_rank_acceptance_is_bit_identical_for_any_worker_count() {
+    // the ISSUE acceptance bar: 2^20 ranks onto the 102 400-node torus
+    // (10.24 ranks per node, so a per-node cap of 11), implicit metric,
+    // no O(n^2) state, bit-identical for 1 / 2 / 4 workers
+    let plat = Platform::paper_default(TorusDims::new(64, 40, 40));
+    let n = plat.num_nodes();
+    let oracle = plat.hop_oracle();
+    let hosts: Vec<usize> = (0..n).collect();
+    let ranks = 1 << 20;
+    let cap = ranks / n + 1; // 11
+    let g = SparseComm::stencil2d(1024, 1024, 1e6);
+    assert_eq!(g.len(), ranks);
+    let run = |workers: usize| {
+        let mapper = MultilevelMapper {
+            workers,
+            max_per_node: cap,
+            ..MultilevelMapper::default()
+        };
+        mapper.map_sparse(&g, &oracle, &hosts).unwrap()
+    };
+    let serial = run(1);
+    let mut counts = vec![0u32; n];
+    for &node in &serial.assignment {
+        counts[node] += 1;
+    }
+    assert!(counts.iter().all(|&c| c as usize <= cap), "per-node cap broken");
+    assert_eq!(counts.iter().map(|&c| c as usize).sum::<usize>(), ranks);
+    for workers in [2usize, 4] {
+        assert_eq!(run(workers), serial, "diverged at {workers} workers");
+    }
+}

@@ -847,6 +847,7 @@ fn prop_fans_select_is_identical_on_dense_and_implicit_platforms() {
         PlacementPolicy::Greedy,
         PlacementPolicy::Scotch,
         PlacementPolicy::Tofa,
+        PlacementPolicy::Multilevel,
     ];
     for plat in engine_platforms() {
         let implicit = plat.clone().with_metric(MetricMode::Implicit);
@@ -993,6 +994,8 @@ fn prop_ledger_free_run_index_matches_scan_reference_bit_for_bit() {
                 }
             }
             assert_eq!(ledger.free_nodes(), ledger.free_nodes_scan(), "n={n} op={op}");
+            let lazy: Vec<usize> = ledger.free_nodes_iter().collect();
+            assert_eq!(lazy, ledger.free_nodes(), "iter n={n} op={op}");
             assert_eq!(
                 ledger.largest_free_run(),
                 ledger.largest_free_run_scan(),

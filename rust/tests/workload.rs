@@ -73,6 +73,9 @@ fn malformed_swf_lines_are_typed_errors() {
         ("1 -5 -1 100 4", 1, "negative submit"),
         ("1 nan -1 100 4", 1, "non-finite submit"),
         ("1 0 -1 -1 4", 1, "unknown runtime placeholder"),
+        ("1 0 -1 nan 4", 1, "NaN runtime"),
+        ("1 0 -1 inf 4", 1, "infinite runtime"),
+        ("1 0 -1 -0.5 4", 1, "negative fractional runtime"),
         ("1 0 -1 100 0", 1, "zero processors, no fallback"),
         ("1 0 -1 100 -1 -1 -1 -1", 1, "both processor counts unknown"),
         ("1 0 -1 100 four", 1, "non-numeric processors"),
@@ -96,6 +99,17 @@ fn malformed_fb_lines_are_typed_errors() {
     for &(text, line, what) in cases {
         assert_workload_error(parse_fb(text.as_bytes(), &cfg), line, what);
     }
+}
+
+#[test]
+fn degenerate_step_config_is_a_typed_error() {
+    // seconds_per_step = 0 turns any positive runtime into an infinite
+    // step count; that must surface as a typed error, not saturate
+    let cfg = TraceConfig {
+        seconds_per_step: 0.0,
+        ..TraceConfig::default()
+    };
+    assert_workload_error(parse_swf("1 0 -1 100 4".as_bytes(), &cfg), 1, "zero s/step");
 }
 
 #[test]
