@@ -1,0 +1,151 @@
+//! Recovery-policy sweep: the same 400-job campaign on the paper's
+//! 8x8x8 torus under every fault model x recovery policy cell
+//! (abort-resubmit, checkpoint/restart, ULFM-style shrink-and-continue).
+//!
+//! The headline metric is **lost node-seconds** — capacity held without
+//! useful progress (rolled-back intervals, checkpoint writes, shrink
+//! degradation). Under the correlated-rack and trace fault models the
+//! bench asserts both recovery policies waste strictly less than
+//! abort-resubmit; the aggregates land in `BENCH_recovery.json` at the
+//! repo root for the perf CI artifact upload.
+
+use std::sync::Arc;
+
+use tofa::mapping::PlacementPolicy;
+use tofa::report::bench::{section, write_bench_json, JsonValue};
+use tofa::sim::fault::{FaultSpec, FaultTrace};
+use tofa::slurm::sched::{run_campaign, Arrivals, CampaignWorkload, RecoveryPolicy, SchedConfig};
+use tofa::topology::{Platform, TorusDims};
+
+const CELLS: &[(PlacementPolicy, bool)] = &[
+    (PlacementPolicy::DefaultSlurm, false),
+    (PlacementPolicy::Tofa, true),
+];
+
+/// All four fault models, sized to the platform. The trace staggers
+/// 1-second outages over a quarter of the machine so multi-node failures
+/// land mid-run — the case shrink-and-continue exists for.
+fn fault_models(n: usize) -> Vec<FaultSpec> {
+    let mut trace_text = format!("nodes {n}\n");
+    for (i, node) in (0..n).step_by(4).enumerate() {
+        let start = 0.01 * (i % 100) as f64;
+        trace_text.push_str(&format!("{node} {start} {}\n", start + 1.0));
+    }
+    vec![
+        FaultSpec::Iid {
+            n_faulty: n / 8,
+            p_f: 0.3,
+        },
+        FaultSpec::CorrelatedRacks {
+            domains: 8,
+            p_domain: 0.5,
+        },
+        FaultSpec::Weibull {
+            n_faulty: n / 8,
+            shape: 0.7,
+            p_horizon: 0.3,
+            horizon_s: 0.5,
+        },
+        FaultSpec::Trace {
+            trace: Arc::new(FaultTrace::parse(trace_text.as_bytes()).unwrap()),
+        },
+    ]
+}
+
+fn main() {
+    let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let n = plat.num_nodes();
+    let spec = CampaignWorkload {
+        jobs: 400,
+        arrivals: Arrivals::Poisson { mean_gap_s: 0.01 },
+        ..CampaignWorkload::paper_like(n)
+    };
+    let jobs = spec.generate().unwrap();
+    let policies = [
+        RecoveryPolicy::AbortResubmit,
+        RecoveryPolicy::CheckpointRestart { interval_s: 0.5 },
+        RecoveryPolicy::ShrinkContinue,
+    ];
+    let mut model_payloads = Vec::new();
+    for fault in fault_models(n) {
+        let name = fault.model_name();
+        section(&format!(
+            "recovery: {} jobs, {} cells, fault model {name}",
+            jobs.len(),
+            CELLS.len()
+        ));
+        let mut lost = Vec::new();
+        let mut policy_payloads = Vec::new();
+        for recovery in policies {
+            let config = SchedConfig {
+                max_restarts: 5,
+                recovery,
+                ckpt_cost_s: 0.002,
+                seed: 42,
+                ..Default::default()
+            };
+            let cells = run_campaign(&plat, &jobs, &fault, CELLS, &config, 4).unwrap();
+            let total_lost: f64 = cells.iter().map(|c| c.metrics.lost_node_s).sum();
+            let completed: usize = cells.iter().map(|c| c.metrics.completed).sum();
+            let aborts: usize = cells.iter().map(|c| c.metrics.total_aborts).sum();
+            let ckpts: u64 = cells.iter().map(|c| c.metrics.ckpts).sum();
+            let shrinks: u64 = cells.iter().map(|c| c.metrics.shrinks).sum();
+            let fallbacks: u64 = cells.iter().map(|c| c.metrics.shrink_fallbacks).sum();
+            let wall: f64 = cells.iter().map(|c| c.wall.as_secs_f64()).sum();
+            println!(
+                "{:<28} lost {:>10.1} node-s  done {:>4}  aborts {:>4}  \
+                 ckpts {:>5}  shrinks {:>4} (+{} fallback)  wall {:.3} s",
+                format!("{name}/{recovery}"),
+                total_lost,
+                completed,
+                aborts,
+                ckpts,
+                shrinks,
+                fallbacks,
+                wall,
+            );
+            lost.push(total_lost);
+            policy_payloads.push(
+                JsonValue::obj()
+                    .set("recovery", JsonValue::Str(recovery.to_string()))
+                    .set("lost_node_s", JsonValue::Num(total_lost))
+                    .set("completed", JsonValue::Int(completed as u64))
+                    .set("total_aborts", JsonValue::Int(aborts as u64))
+                    .set("ckpts", JsonValue::Int(ckpts))
+                    .set("shrinks", JsonValue::Int(shrinks))
+                    .set("shrink_fallbacks", JsonValue::Int(fallbacks))
+                    .set("cells", JsonValue::Arr(cells.iter().map(|c| c.json()).collect())),
+            );
+        }
+        // the acceptance property: under multi-node (rack / trace)
+        // outages, paying for checkpoints or shrinking beats rerunning
+        // whole jobs from scratch
+        if matches!(
+            fault,
+            FaultSpec::CorrelatedRacks { .. } | FaultSpec::Trace { .. }
+        ) {
+            assert!(
+                lost[1] < lost[0],
+                "{name}: checkpointing lost {} node-s vs abort {}",
+                lost[1],
+                lost[0]
+            );
+            assert!(
+                lost[2] < lost[0],
+                "{name}: shrink lost {} node-s vs abort {}",
+                lost[2],
+                lost[0]
+            );
+        }
+        model_payloads.push(
+            JsonValue::obj()
+                .set("fault", JsonValue::Str(name.to_string()))
+                .set("policies", JsonValue::Arr(policy_payloads)),
+        );
+    }
+    let payload = JsonValue::obj()
+        .set("nodes", JsonValue::Int(n as u64))
+        .set("jobs", JsonValue::Int(jobs.len() as u64))
+        .set("models", JsonValue::Arr(model_payloads));
+    write_bench_json("recovery", payload).expect("write BENCH_recovery.json");
+}

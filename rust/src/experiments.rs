@@ -21,7 +21,7 @@ use tofa::rng::Rng;
 use tofa::sim::executor::Simulator;
 use tofa::sim::fault::{FaultSpec, FaultTrace};
 use tofa::slurm::sched::workload::{self, Arrivals, CampaignWorkload, TraceConfig};
-use tofa::slurm::sched::{run_campaign, run_sweep, SchedConfig, WorkloadSpec};
+use tofa::slurm::sched::{run_campaign, run_sweep, RecoveryPolicy, SchedConfig, WorkloadSpec};
 use tofa::topology::{Dragonfly, DragonflyParams, FatTree, MetricMode, Platform, TorusDims};
 
 type Result<T> = std::result::Result<T, Error>;
@@ -191,6 +191,11 @@ pub struct SchedCliOpts {
     pub hb_period_s: f64,
     /// Restart budget per job (`--max-restarts`).
     pub max_restarts: u32,
+    /// In-job recovery policy: `abort` | `ckpt:<interval>` | `shrink`
+    /// (`--recovery`).
+    pub recovery: String,
+    /// Wall-clock cost of one checkpoint write (`--ckpt-cost`).
+    pub ckpt_cost_s: f64,
     /// Reduced-size smoke run for CI (`--smoke`).
     pub smoke: bool,
 }
@@ -205,6 +210,8 @@ impl Default for SchedCliOpts {
             n_faulty: 16,
             hb_period_s: 0.0,
             max_restarts: 100,
+            recovery: "abort".to_string(),
+            ckpt_cost_s: 0.05,
             smoke: false,
         }
     }
@@ -274,11 +281,14 @@ pub fn sched(
     }
     let n_faulty = opts.n_faulty.min(n / 2);
     let fault = fault_cli.spec(&platform, n_faulty)?;
+    let recovery = RecoveryPolicy::parse(&opts.recovery)?;
     let config = SchedConfig {
         placement: PlacementPolicy::Tofa, // overridden per cell
         backfill,
         max_restarts: opts.max_restarts,
         heartbeat_period_s: opts.hb_period_s,
+        recovery,
+        ckpt_cost_s: opts.ckpt_cost_s,
         seed,
     };
     let cells = [
@@ -287,9 +297,10 @@ pub fn sched(
     ];
     let policy_name = if backfill { "backfill" } else { "fifo" };
     let title = format!(
-        "Cluster scheduler: {} jobs, {} queue, {}; {}",
+        "Cluster scheduler: {} jobs, {} queue, {} recovery, {}; {}",
         workload.jobs,
         policy_name,
+        recovery,
         platform.topology().describe(),
         fault.describe()
     );
@@ -308,6 +319,9 @@ pub fn sched(
             "exhausted",
             "failed",
             "backfills",
+            "lost node-s",
+            "ckpts",
+            "shrinks",
         ],
     );
     for cell in &sweep {
@@ -322,6 +336,9 @@ pub fn sched(
             r.exhausted.to_string(),
             r.failed.to_string(),
             r.backfills.to_string(),
+            format!("{:.1}", r.lost_node_s),
+            r.ckpts.to_string(),
+            r.shrinks.to_string(),
         ]);
     }
     print!("{}", t.render());
@@ -379,6 +396,11 @@ pub struct CampaignCliOpts {
     pub hb_period_s: f64,
     /// Restart budget per job (`--max-restarts`).
     pub max_restarts: u32,
+    /// In-job recovery policy: `abort` | `ckpt:<interval>` | `shrink`
+    /// (`--recovery`).
+    pub recovery: String,
+    /// Wall-clock cost of one checkpoint write (`--ckpt-cost`).
+    pub ckpt_cost_s: f64,
     /// Write `BENCH_campaign.json` next to the CSV tables (`--emit-json`).
     pub emit_json: bool,
     /// Reduced-size smoke run for CI: at most 200 jobs, 2 cells
@@ -403,6 +425,8 @@ impl Default for CampaignCliOpts {
             n_faulty: 16,
             hb_period_s: 0.0,
             max_restarts: 100,
+            recovery: "abort".to_string(),
+            ckpt_cost_s: 0.05,
             emit_json: false,
             smoke: false,
         }
@@ -480,11 +504,14 @@ pub fn campaign(
     }
     let n_faulty = opts.n_faulty.min(n / 2);
     let fault = fault_cli.spec(&platform, n_faulty)?;
+    let recovery = RecoveryPolicy::parse(&opts.recovery)?;
     let config = SchedConfig {
         placement: PlacementPolicy::Tofa, // overridden per cell
         backfill: false, // overridden per cell
         max_restarts: opts.max_restarts,
         heartbeat_period_s: opts.hb_period_s,
+        recovery,
+        ckpt_cost_s: opts.ckpt_cost_s,
         seed,
     };
     let cells: &[(PlacementPolicy, bool)] = if opts.smoke {
@@ -501,8 +528,9 @@ pub fn campaign(
         ]
     };
     let title = format!(
-        "Workload campaign: {} jobs, {}; {}",
+        "Workload campaign: {} jobs, {} recovery, {}; {}",
         jobs.len(),
+        recovery,
         platform.topology().describe(),
         fault.describe()
     );
@@ -555,6 +583,7 @@ pub fn campaign(
             .set("nodes", JsonValue::Int(n as u64))
             .set("jobs", JsonValue::Int(jobs.len() as u64))
             .set("fault", JsonValue::Str(fault.describe()))
+            .set("recovery", JsonValue::Str(recovery.to_string()))
             .set("cells", JsonValue::Arr(campaign.iter().map(|c| c.json()).collect()));
         let path = write_bench_json("campaign", payload)?;
         println!("[campaign] wrote {}", path.display());

@@ -76,11 +76,15 @@ SCHEDULER (sched):
   --n-faulty=<n>       faulty nodes for the fault model (default: 16)
   --hb-period=<s>      heartbeat health-epoch period; 0 = off (default: 0)
   --max-restarts=<n>   per-job restart budget       (default: 100)
+  --recovery=<p>       in-job recovery policy: abort | ckpt:<interval> |
+                       shrink                       (default: abort)
+  --ckpt-cost=<s>      checkpoint write cost, simulated seconds
+                       (default: 0.05)
   --smoke              reduced-size CI smoke run
 
 CAMPAIGN (campaign; also honours --jobs/--arrival/--mix/--n-faulty/
-          --hb-period/--max-restarts/--smoke above, with --jobs
-          defaulting to 2000 and --arrival to 0.05):
+          --hb-period/--max-restarts/--recovery/--ckpt-cost/--smoke
+          above, with --jobs defaulting to 2000 and --arrival to 0.05):
   --arrivals=<p>       batch | poisson | diurnal | flash (default: poisson)
   --day=<s>            diurnal cycle length, simulated seconds
                        (default: 240)
@@ -186,6 +190,12 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
         } else if let Some(v) = a.strip_prefix("--max-restarts=") {
             o.sched.max_restarts = v.parse().map_err(|_| format!("bad --max-restarts: {v}"))?;
             o.campaign.max_restarts = o.sched.max_restarts;
+        } else if let Some(v) = a.strip_prefix("--recovery=") {
+            o.sched.recovery = v.to_string();
+            o.campaign.recovery = o.sched.recovery.clone();
+        } else if let Some(v) = a.strip_prefix("--ckpt-cost=") {
+            o.sched.ckpt_cost_s = v.parse().map_err(|_| format!("bad --ckpt-cost: {v}"))?;
+            o.campaign.ckpt_cost_s = o.sched.ckpt_cost_s;
         } else if a == "--smoke" {
             o.sched.smoke = true;
             o.campaign.smoke = true;

@@ -191,8 +191,26 @@ impl Simulator {
 pub struct JobProfile {
     /// Fault-free completion time.
     pub success_s: f64,
+    /// Application timesteps behind `success_s` (completed-steps
+    /// accounting for partial-progress re-runs under recovery policies).
+    pub steps: usize,
     /// `touched[node]` = some rank lives there or some route crosses it.
     pub touched: Vec<bool>,
+}
+
+/// One partial-progress run resolved against a down-state: the remaining
+/// work at launch, whether the run aborts, and — unlike the all-or-nothing
+/// [`JobProfile::resolve`] — *when* within the remaining work the failure
+/// lands (recovery policies bill lost work from this instant).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartialRun {
+    /// Fault-free seconds of work remaining at launch.
+    pub remaining_s: f64,
+    /// True if the run aborts before finishing.
+    pub aborted: bool,
+    /// In-run failure time (seconds of useful work completed before the
+    /// abort), `None` for clean runs.
+    pub failure_s: Option<f64>,
 }
 
 impl JobProfile {
@@ -213,6 +231,38 @@ impl JobProfile {
         match self.outcome(down) {
             JobOutcome::Completed { seconds } => (seconds, false),
             JobOutcome::Aborted { .. } => (self.success_s, true),
+        }
+    }
+
+    /// Application timesteps already completed at `progress` (durable
+    /// fraction of the job in `[0, 1]`).
+    pub fn steps_done(&self, progress: f64) -> usize {
+        ((progress.clamp(0.0, 1.0) * self.steps as f64).floor() as usize).min(self.steps)
+    }
+
+    /// Fault-free seconds of work remaining at `progress`.
+    pub fn remaining_s(&self, progress: f64) -> f64 {
+        self.success_s * (1.0 - progress.clamp(0.0, 1.0))
+    }
+
+    /// Resolve a partial-progress run: the job launches with `progress`
+    /// of its work durably done and `u` (a uniform draw in `[0, 1)` from
+    /// the caller's recovery stream) locating the failure instant within
+    /// the remaining work when the down-set intersects the touched set.
+    /// Pure in `(down, progress, u)`.
+    pub fn resolve_partial(&self, down: &[bool], progress: f64, u: f64) -> PartialRun {
+        let remaining_s = self.remaining_s(progress);
+        match self.outcome(down) {
+            JobOutcome::Completed { .. } => PartialRun {
+                remaining_s,
+                aborted: false,
+                failure_s: None,
+            },
+            JobOutcome::Aborted { .. } => PartialRun {
+                remaining_s,
+                aborted: true,
+                failure_s: Some(u * remaining_s),
+            },
         }
     }
 
@@ -265,6 +315,7 @@ impl Simulator {
         }
         JobProfile {
             success_s: self.success_time(assignment),
+            steps: self.timesteps,
             touched,
         }
     }
@@ -459,6 +510,36 @@ mod tests {
         assert!(aborted, "down rank host must abort");
         // an aborted run still holds the allocation for one interval
         assert_eq!(d.to_bits(), profile.success_s.to_bits());
+    }
+
+    #[test]
+    fn partial_runs_report_failure_time_and_remaining_work() {
+        let app = LammpsProxy::tiny(4, 8);
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 1));
+        let p = block_placement(4, 16).unwrap();
+        let mut sim = Simulator::new(&app, &plat);
+        let profile = sim.prepare(&p.assignment);
+        assert_eq!(profile.steps, 8);
+        assert_eq!(profile.steps_done(0.0), 0);
+        assert_eq!(profile.steps_done(0.5), 4);
+        assert_eq!(profile.steps_done(1.0), 8);
+        assert_eq!(
+            profile.remaining_s(0.0).to_bits(),
+            profile.success_s.to_bits()
+        );
+        assert!((profile.remaining_s(0.75) - 0.25 * profile.success_s).abs() < 1e-12);
+        let clean = vec![false; 16];
+        let run = profile.resolve_partial(&clean, 0.5, 0.3);
+        assert!(!run.aborted && run.failure_s.is_none());
+        assert!((run.remaining_s - 0.5 * profile.success_s).abs() < 1e-12);
+        let mut down = clean;
+        down[p.assignment[1]] = true;
+        let run = profile.resolve_partial(&down, 0.5, 0.3);
+        assert!(run.aborted);
+        // the failure lands at u x remaining, strictly inside the run
+        let f = run.failure_s.unwrap();
+        assert!((f - 0.3 * run.remaining_s).abs() < 1e-12);
+        assert!(f < run.remaining_s);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use super::plugins::fault_ctld::FaultCtldPlugin;
 use super::plugins::node_state::NodeStatePlugin;
 use super::queue::JobQueue;
 use super::sched::NodeLedger;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::mapping::Placement;
 use crate::rng::Rng;
 use crate::slurm::heartbeat::OutagePolicy;
@@ -175,6 +175,74 @@ impl Controller {
                 Some(Err(e))
             }
         }
+    }
+
+    /// ULFM-style shrink-replace for a *running* job: the ranks hosted on
+    /// `lost_hosts` are re-placed onto currently-free nodes via the same
+    /// candidate-mask FANS selection path as a fresh launch, the ledger
+    /// marks the lost hosts `Down` and grows the allocation by the
+    /// replacements, and the record's assignment is patched in place.
+    /// Returns `(lost rank indices, replacement hosts)` — `replacements[i]`
+    /// is the new host of rank `lost_ranks[i]`. On error nothing changes
+    /// (the caller falls back to abort → resubmit).
+    pub fn shrink_replace(
+        &mut self,
+        record: &mut JobRecord,
+        lost_hosts: &[usize],
+    ) -> Result<(Vec<usize>, Vec<usize>)> {
+        let assignment = record
+            .assignment
+            .as_ref()
+            .ok_or_else(|| Error::Slurm("shrink-replace without an assignment".into()))?;
+        let lost_ranks: Vec<usize> = assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, host)| lost_hosts.contains(host))
+            .map(|(r, _)| r)
+            .collect();
+        let k = lost_ranks.len();
+        if k == 0 {
+            return Err(Error::Slurm("shrink-replace with no lost ranks".into()));
+        }
+        if self.ledger.num_free() < k {
+            return Err(Error::Slurm(format!(
+                "shrink-replace needs {k} free nodes, {} available",
+                self.ledger.num_free()
+            )));
+        }
+        // the lost ranks' comm load as a k x k submatrix of the job's
+        // comm graph: FANS re-places exactly that load on the free set
+        let sub = match &record.request.comm_graph {
+            Some(c) => {
+                let mut m = crate::commgraph::CommMatrix::new(k);
+                for (i, &ri) in lost_ranks.iter().enumerate() {
+                    for (j, &rj) in lost_ranks.iter().enumerate() {
+                        m.set(i, j, c.get(ri, rj));
+                    }
+                }
+                m
+            }
+            None => crate::commgraph::CommMatrix::new(k),
+        };
+        let outage = self.outage_estimates();
+        self.free_scratch.clear();
+        self.free_scratch.extend(self.ledger.free_nodes_iter());
+        let placement = self.fans.select(
+            record.request.distribution,
+            &sub,
+            &self.platform,
+            &outage,
+            Some(self.free_scratch.as_slice()),
+            &mut self.rng,
+        )?;
+        self.ledger.fail_nodes(record.id, lost_hosts)?;
+        self.ledger
+            .extend_allocation(record.id, &placement.assignment)?;
+        let assignment = record.assignment.as_mut().expect("checked above");
+        for (i, &r) in lost_ranks.iter().enumerate() {
+            assignment[r] = placement.assignment[i];
+        }
+        Ok((lost_ranks, placement.assignment))
     }
 
     /// Mark a job finished: release its ledger allocation and retire the
@@ -373,6 +441,38 @@ mod tests {
         assert!(rec.error.as_deref().unwrap().contains("ranks"), "{rec:?}");
         // the failed attempt must not leak ledger state
         assert_eq!(ctl.ledger().num_free(), 8);
+    }
+
+    #[test]
+    fn shrink_replace_repairs_a_running_job_in_place() {
+        let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+        let mut ctl = Controller::new(plat, 8);
+        ctl.submit(request(6, PlacementPolicy::DefaultSlurm));
+        let mut rec = ctl.schedule_next().unwrap().unwrap();
+        let before = rec.assignment.clone().unwrap();
+        assert_eq!(before, vec![0, 1, 2, 3, 4, 5]);
+        // lose two of the six hosts mid-run
+        let (lost_ranks, repl) = ctl.shrink_replace(&mut rec, &[1, 4]).unwrap();
+        assert_eq!(lost_ranks, vec![1, 4]);
+        assert_eq!(repl.len(), 2);
+        let after = rec.assignment.clone().unwrap();
+        // survivors kept their nodes, lost ranks moved to the replacements
+        for r in [0usize, 2, 3, 5] {
+            assert_eq!(after[r], before[r], "survivor rank {r} moved");
+        }
+        assert_eq!(after[1], repl[0]);
+        assert_eq!(after[4], repl[1]);
+        for &n in &repl {
+            assert!(!before.contains(&n), "replacement {n} was already held");
+            assert_eq!(ctl.ledger().state_of(n), crate::slurm::sched::NodeState::Busy(rec.id));
+        }
+        assert_eq!(ctl.ledger().state_of(1), crate::slurm::sched::NodeState::Down);
+        assert_eq!(ctl.ledger().state_of(4), crate::slurm::sched::NodeState::Down);
+        ctl.ledger().assert_consistent();
+        // a host set disjoint from the allocation is a typed error and
+        // leaves everything unchanged
+        assert!(ctl.shrink_replace(&mut rec, &[60]).is_err());
+        ctl.ledger().assert_consistent();
     }
 
     #[test]

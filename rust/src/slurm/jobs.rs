@@ -63,6 +63,23 @@ pub struct JobRecord {
     pub end_s: Option<f64>,
     /// Why the job failed, for `Failed` records.
     pub error: Option<String>,
+    /// Durable fraction of the job's work completed (survives abort →
+    /// resubmit under checkpoint/restart; stays 0 under abort-resubmit).
+    pub progress: f64,
+    /// Useful-work seconds credited across all attempts (work that
+    /// counted toward completion, excluding rolled-back intervals and
+    /// checkpoint write costs).
+    pub useful_s: f64,
+    /// Node-seconds held without useful progress (rollback intervals,
+    /// checkpoint writes, shrink degradation overhead).
+    pub lost_node_s: f64,
+    /// Checkpoints this job committed.
+    pub ckpts: u32,
+    /// Shrink-replace recoveries this job performed.
+    pub shrinks: u32,
+    /// Per-job fault-stream draws consumed (the attempt index of the
+    /// next `Rng::stream` draw; equals `aborts` under abort-resubmit).
+    pub fault_draws: u32,
 }
 
 impl JobRecord {
@@ -79,6 +96,12 @@ impl JobRecord {
             start_s: None,
             end_s: None,
             error: None,
+            progress: 0.0,
+            useful_s: 0.0,
+            lost_node_s: 0.0,
+            ckpts: 0,
+            shrinks: 0,
+            fault_draws: 0,
         }
     }
 
@@ -109,6 +132,10 @@ mod tests {
         assert_eq!(r.submit_s, 0.0);
         assert!(r.start_s.is_none() && r.end_s.is_none() && r.error.is_none());
         assert!(r.wait_s().is_none());
+        assert_eq!(r.progress, 0.0);
+        assert_eq!(r.useful_s, 0.0);
+        assert_eq!(r.lost_node_s, 0.0);
+        assert_eq!((r.ckpts, r.shrinks, r.fault_draws), (0, 0, 0));
     }
 
     #[test]

@@ -203,6 +203,71 @@ impl NodeLedger {
         nodes
     }
 
+    /// Partial failure under a running job (shrink-and-continue): each of
+    /// `nodes` must be `Busy(job)`; they transition to `Down` and leave
+    /// the job's allocation. Both states are non-free, so the free-run
+    /// index is untouched. Errors leave the ledger unchanged.
+    pub fn fail_nodes(&mut self, job: u64, nodes: &[usize]) -> Result<()> {
+        let Some(pos) = self.allocs.iter().position(|(j, _)| *j == job) else {
+            return Err(Error::Slurm(format!("job {job} holds no allocation")));
+        };
+        for (i, &n) in nodes.iter().enumerate() {
+            if self.state.get(n) != Some(&NodeState::Busy(job)) {
+                return Err(Error::Slurm(format!(
+                    "node {n} is not held by job {job}"
+                )));
+            }
+            if nodes[..i].contains(&n) {
+                return Err(Error::Slurm(format!(
+                    "job {job} failure lists node {n} twice"
+                )));
+            }
+        }
+        for &n in nodes {
+            self.state[n] = NodeState::Down;
+        }
+        self.allocs[pos].1.retain(|n| !nodes.contains(n));
+        self.busy -= nodes.len();
+        Ok(())
+    }
+
+    /// Grow a live allocation (shrink-and-continue replacements): each of
+    /// `nodes` must be `Free` and `job` must already hold an allocation.
+    /// Errors leave the ledger unchanged.
+    pub fn extend_allocation(&mut self, job: u64, nodes: &[usize]) -> Result<()> {
+        let Some(pos) = self.allocs.iter().position(|(j, _)| *j == job) else {
+            return Err(Error::Slurm(format!("job {job} holds no allocation")));
+        };
+        for (i, &n) in nodes.iter().enumerate() {
+            match self.state.get(n) {
+                Some(NodeState::Free) => {}
+                Some(s) => {
+                    return Err(Error::Slurm(format!(
+                        "job {job} extension overlaps node {n} ({s:?})"
+                    )))
+                }
+                None => {
+                    return Err(Error::Slurm(format!(
+                        "job {job} extension references node {n} beyond the platform"
+                    )))
+                }
+            }
+            if nodes[..i].contains(&n) {
+                return Err(Error::Slurm(format!(
+                    "job {job} extension lists node {n} twice"
+                )));
+            }
+        }
+        for &n in nodes {
+            self.state[n] = NodeState::Busy(job);
+            self.index_unfree(n);
+        }
+        self.free -= nodes.len();
+        self.busy += nodes.len();
+        self.allocs[pos].1.extend_from_slice(nodes);
+        Ok(())
+    }
+
     /// Apply a health epoch: free nodes flagged in `down` go `Down`, down
     /// nodes no longer flagged return to `Free`. Busy nodes are left
     /// untouched — a failure under a running job surfaces as that job's
@@ -427,6 +492,55 @@ mod tests {
         // duplicate node within one request
         assert!(l.allocate(4, &[0, 0]).is_err());
         assert_eq!(l.num_free(), 2);
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn partial_failure_and_extension_keep_the_ledger_consistent() {
+        let mut l = NodeLedger::new(8);
+        l.allocate(1, &[0, 1, 2, 3]).unwrap();
+        // lose nodes 1 and 3 under the running job
+        l.fail_nodes(1, &[1, 3]).unwrap();
+        assert_eq!(l.state_of(1), NodeState::Down);
+        assert_eq!(l.state_of(3), NodeState::Down);
+        assert_eq!(l.num_busy(), 2);
+        assert_eq!(l.num_down(), 2);
+        assert_eq!(l.num_free(), 4);
+        l.assert_consistent();
+        // replace them with free nodes 5 and 6
+        l.extend_allocation(1, &[5, 6]).unwrap();
+        assert_eq!(l.state_of(5), NodeState::Busy(1));
+        assert_eq!(l.num_busy(), 4);
+        assert_eq!(l.num_free(), 2);
+        let (_, held) = l
+            .running_jobs()
+            .next()
+            .map(|(j, ns)| (j, ns.to_vec()))
+            .unwrap();
+        assert_eq!(held, vec![0, 2, 5, 6]);
+        l.assert_consistent();
+        // releasing frees exactly the surviving + replacement nodes
+        assert_eq!(l.release(1), vec![0, 2, 5, 6]);
+        assert_eq!(l.num_down(), 2);
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn partial_failure_and_extension_reject_bad_inputs() {
+        let mut l = NodeLedger::new(6);
+        l.allocate(1, &[0, 1]).unwrap();
+        // node not held by the job
+        assert!(l.fail_nodes(1, &[2]).is_err());
+        // unknown job
+        assert!(l.fail_nodes(9, &[0]).is_err());
+        assert!(l.extend_allocation(9, &[2]).is_err());
+        // extension onto a busy node / out of range / duplicate
+        assert!(l.extend_allocation(1, &[0]).is_err());
+        assert!(l.extend_allocation(1, &[9]).is_err());
+        assert!(l.extend_allocation(1, &[2, 2]).is_err());
+        // failed calls left no partial state behind
+        assert_eq!(l.num_busy(), 2);
+        assert_eq!(l.num_free(), 4);
         l.assert_consistent();
     }
 

@@ -51,10 +51,12 @@
 
 pub mod campaign;
 pub mod ledger;
+pub mod recovery;
 pub mod workload;
 
 pub use campaign::{run_campaign, CampaignCell, CampaignMetrics};
 pub use ledger::{NodeLedger, NodeState};
+pub use recovery::{shrink_degradation, RecoveryPolicy};
 pub use workload::{Arrivals, CampaignWorkload, TraceConfig};
 
 use std::cmp::Reverse;
@@ -64,7 +66,7 @@ use std::sync::Arc;
 use crate::apps::lammps_proxy::LammpsProxy;
 use crate::batch::parallel::run_sharded;
 use crate::commgraph::CommMatrix;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::mapping::PlacementPolicy;
 use crate::profiler::profile_app;
 use crate::rng::Rng;
@@ -173,6 +175,13 @@ pub struct SchedConfig {
     /// Each epoch samples a down-state from the fault scenario and flips
     /// non-busy ledger nodes free <-> down accordingly.
     pub heartbeat_period_s: f64,
+    /// What a failed run does next: abort → resubmit (default, the
+    /// paper's model, bit-identical to the pre-recovery scheduler),
+    /// checkpoint/restart, or ULFM-style shrink-and-continue.
+    pub recovery: RecoveryPolicy,
+    /// Wall-clock cost of one checkpoint write (only read under
+    /// [`RecoveryPolicy::CheckpointRestart`]).
+    pub ckpt_cost_s: f64,
     /// Base seed (placement RNG + per-(job, attempt) fault streams).
     pub seed: u64,
 }
@@ -184,8 +193,27 @@ impl Default for SchedConfig {
             backfill: false,
             max_restarts: 100,
             heartbeat_period_s: 0.0,
+            recovery: RecoveryPolicy::AbortResubmit,
+            ckpt_cost_s: 0.05,
             seed: 42,
         }
+    }
+}
+
+impl SchedConfig {
+    /// Validate the recovery/scheduler knobs: degenerate checkpoint
+    /// intervals/costs and non-finite heartbeat periods are typed
+    /// [`Error::Workload`]s naming the offending field. Called by
+    /// [`run_sweep`] and [`run_campaign`] before any cell runs.
+    pub fn validate(&self) -> Result<()> {
+        self.recovery.validate(self.ckpt_cost_s)?;
+        if !self.heartbeat_period_s.is_finite() || self.heartbeat_period_s < 0.0 {
+            return Err(Error::Workload(format!(
+                "heartbeat_period_s must be finite and >= 0, got {}",
+                self.heartbeat_period_s
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -236,6 +264,23 @@ pub enum TraceKind {
         epoch: u64,
         /// Nodes the epoch sampled as down.
         down: usize,
+    },
+    /// Checkpoint `k` of the current run committed (checkpoint/restart).
+    Ckpt {
+        /// Job id.
+        job: u64,
+        /// Checkpoint index within the run (1-based).
+        k: u32,
+    },
+    /// ULFM-style shrink-replace: the ranks hosted on `lost` moved to
+    /// `repl`; survivors kept their nodes and the job continues degraded.
+    Shrink {
+        /// Job id.
+        job: u64,
+        /// Hosts lost to the failure (now `Down` in the ledger).
+        lost: Vec<usize>,
+        /// Replacement hosts (newly added to the allocation).
+        repl: Vec<usize>,
     },
 }
 
@@ -297,6 +342,18 @@ pub struct SchedResult {
     pub total_aborts: usize,
     /// Committed backfill decisions.
     pub backfills: usize,
+    /// Node-seconds held without useful progress: rollback intervals,
+    /// checkpoint write costs, shrink degradation overhead, and work
+    /// revoked by shrink fallbacks.
+    pub lost_node_s: f64,
+    /// Checkpoints committed (checkpoint/restart).
+    pub ckpts: u64,
+    /// Successful shrink-replace recoveries (shrink-and-continue).
+    pub shrinks: u64,
+    /// Shrink failures that fell back to abort → resubmit (no surviving
+    /// rank lost a host, no free replacements, or the per-run replace
+    /// budget ran out).
+    pub shrink_fallbacks: u64,
     /// Jobs submitted.
     pub total_jobs: usize,
     /// Terminal job records (`squeue`-style accounting: every submitted
@@ -359,6 +416,12 @@ enum Event {
     Arrival { spec: u32 },
     JobEnd { job: u64, aborted: bool },
     Heartbeat { epoch: u64 },
+    /// Checkpoint `k` of run `attempt` commits (checkpoint/restart only).
+    Checkpoint { job: u64, attempt: u32, k: u32 },
+    /// The current shrink segment of run `attempt` hits its failure
+    /// instant: re-place the lost ranks and continue, or fall back to
+    /// abort → resubmit (shrink-and-continue only).
+    ShrinkReplace { job: u64, attempt: u32 },
 }
 
 /// One application class of the workload (distinct `(ranks, steps)`), with
@@ -370,10 +433,85 @@ struct AppClass {
     sim: Simulator,
 }
 
+/// Checkpoint/restart state of one run (fixed at plan time).
+struct CkptRun {
+    /// `record.fault_draws` at launch (staleness guard for events).
+    attempt: u32,
+    /// `record.progress` at launch.
+    base_progress: f64,
+    /// Progress fraction one checkpoint commits (`interval_s / success_s`).
+    ck_frac: f64,
+    /// Useful-work seconds between checkpoint writes.
+    interval_s: f64,
+    /// Wall-clock cost of one checkpoint write.
+    cost_s: f64,
+    /// Fault-free seconds of work remaining at launch.
+    work_s: f64,
+    /// Checkpoints this run will commit (`kmax` clean, `j` on abort).
+    committed: u32,
+}
+
+/// Shrink-and-continue state of the *current segment* of one run.
+struct ShrinkRun {
+    /// `record.fault_draws` for this segment's fault draw.
+    attempt: u32,
+    /// True if this segment ends in a `ShrinkReplace` event (a failure);
+    /// false if it runs clean to `JobEnd`.
+    fails: bool,
+    /// Fraction of the whole job durably done at segment start.
+    frac_done: f64,
+    /// Collective-cost degradation factor in force this segment.
+    degrade: f64,
+    /// Fault-free seconds of work this segment covers.
+    seg_work: f64,
+    /// Failure location within the segment (uniform draw; failing
+    /// segments complete `seg_u * seg_work` useful seconds first).
+    seg_u: f64,
+    /// Hosts the failing draw takes down (empty for clean segments or
+    /// transit-only failures — the latter force a fallback).
+    lost_hosts: Vec<usize>,
+    /// Useful seconds committed by earlier segments of this run (revoked
+    /// if the run falls back to abort → resubmit).
+    work_credited: f64,
+    /// Shrink-replaces performed this run (bounded by `max_restarts`).
+    replaces: u32,
+}
+
+/// What the in-flight run does on failure (per-run recovery state).
+enum RunRecovery {
+    /// Abort → resubmit: the run holds one full interval and ends.
+    Abort,
+    /// Checkpoint/restart state.
+    Ckpt(CkptRun),
+    /// Shrink-and-continue segment state.
+    Shrink(Box<ShrinkRun>),
+}
+
+/// A fully-resolved run (or first shrink segment): wall-clock duration,
+/// terminal abort flag, and the recovery state to carry on the running
+/// job. Pure in `(job, fault_draws, assignment, progress)`, so backfill
+/// can probe and roll back without consuming randomness.
+struct RunPlan {
+    duration: f64,
+    aborted: bool,
+    attempt: u32,
+    rec: RunRecovery,
+}
+
+impl RunPlan {
+    /// True if the run can outlive `duration` (a failing shrink segment
+    /// continues after its `ShrinkReplace` event), which disqualifies it
+    /// from conservative backfill.
+    fn extends_past_end(&self) -> bool {
+        matches!(&self.rec, RunRecovery::Shrink(s) if s.fails)
+    }
+}
+
 struct RunningJob {
     record: JobRecord,
     end_s: f64,
     duration: f64,
+    rec: RunRecovery,
 }
 
 /// The event-driven cluster scheduler.
@@ -401,6 +539,10 @@ pub struct ClusterScheduler {
     next_heartbeat_s: f64,
     stream_base: u64,
     hb_base: u64,
+    /// Stream base for recovery-time draws (checkpoint/shrink failure
+    /// locations); a separate base so the fault streams stay untouched
+    /// and `AbortResubmit` remains bit-identical.
+    recovery_base: u64,
     trace: Vec<TraceEvent>,
     backfill_audit: Vec<BackfillAudit>,
     occupancy: Vec<OccupancySample>,
@@ -410,6 +552,10 @@ pub struct ClusterScheduler {
     failed: usize,
     exhausted: usize,
     total_aborts: usize,
+    lost_node_s: f64,
+    ckpts: u64,
+    shrinks: u64,
+    shrink_fallbacks: u64,
     now: f64,
 }
 
@@ -475,6 +621,11 @@ impl ClusterScheduler {
         let mut seed_rng = Rng::new(config.seed ^ 0x5eed_5c4e_d011);
         let stream_base = seed_rng.next_u64();
         let hb_base = seed_rng.next_u64();
+        // a third draw off the same local seeding RNG: safe — the first
+        // two draws (and every downstream stream) are unchanged, so the
+        // AbortResubmit path stays bit-identical to the pre-recovery
+        // scheduler
+        let recovery_base = seed_rng.next_u64();
         let mut sched = ClusterScheduler {
             platform: platform.clone(),
             controller,
@@ -493,6 +644,7 @@ impl ClusterScheduler {
             next_heartbeat_s: f64::INFINITY,
             stream_base,
             hb_base,
+            recovery_base,
             trace: Vec::new(),
             backfill_audit: Vec::new(),
             occupancy: Vec::new(),
@@ -502,6 +654,10 @@ impl ClusterScheduler {
             failed: 0,
             exhausted: 0,
             total_aborts: 0,
+            lost_node_s: 0.0,
+            ckpts: 0,
+            shrinks: 0,
+            shrink_fallbacks: 0,
             now: 0.0,
         };
         for i in 0..sched.specs.len() {
@@ -572,10 +728,11 @@ impl ClusterScheduler {
         match ev {
             Event::Arrival { spec } => {
                 let s = &self.specs[spec as usize];
+                let ranks = s.ranks;
                 let class = self.class_of_spec[spec as usize];
                 let request = JobRequest {
                     name: s.name.clone(),
-                    ranks: s.ranks,
+                    ranks,
                     distribution: self.config.placement,
                     comm_graph: Some(self.classes[class].comm.clone()),
                 };
@@ -588,6 +745,30 @@ impl ClusterScheduler {
                     t,
                     kind: TraceKind::Submit { job: id },
                 });
+                // reject jobs no platform state could ever host right at
+                // submit time with a typed error (they used to churn in
+                // the queue until the starvation drain parked them with a
+                // generic failure)
+                let num_nodes = self.platform.num_nodes();
+                if ranks > num_nodes {
+                    let pos = self.controller.pending_len() - 1;
+                    let mut record = self.controller.take_pending(pos).expect("just submitted");
+                    debug_assert_eq!(record.id, id);
+                    record.error = Some(
+                        Error::Workload(format!(
+                            "job {id} requests {ranks} ranks but the platform hosts \
+                             {num_nodes} nodes"
+                        ))
+                        .to_string(),
+                    );
+                    record.end_s = Some(t);
+                    self.controller.complete(record, JobState::Failed);
+                    self.failed += 1;
+                    self.trace.push(TraceEvent {
+                        t,
+                        kind: TraceKind::Fail { job: id },
+                    });
+                }
             }
             Event::JobEnd { job, aborted } => {
                 let pos = self
@@ -600,6 +781,30 @@ impl ClusterScheduler {
                 let nodes = record.assignment.as_ref().map_or(0, Vec::len);
                 self.busy_node_s += rj.duration * nodes as f64;
                 self.acc_completion[job as usize] += rj.duration;
+                // useful/lost split of this run's wall clock: rolled-back
+                // intervals, checkpoint writes, and shrink degradation all
+                // count as lost node-seconds
+                let (useful_run, lost_run) = match &rj.rec {
+                    RunRecovery::Abort => {
+                        if aborted {
+                            (0.0, rj.duration)
+                        } else {
+                            (rj.duration, 0.0)
+                        }
+                    }
+                    RunRecovery::Ckpt(c) => {
+                        if aborted {
+                            let u = c.committed as f64 * c.interval_s;
+                            (u, rj.duration - u)
+                        } else {
+                            (c.work_s, rj.duration - c.work_s)
+                        }
+                    }
+                    RunRecovery::Shrink(s) => (s.seg_work, rj.duration - s.seg_work),
+                };
+                record.useful_s += useful_run;
+                record.lost_node_s += lost_run * nodes as f64;
+                self.lost_node_s += lost_run * nodes as f64;
                 self.trace.push(TraceEvent {
                     t,
                     kind: TraceKind::End { job, aborted },
@@ -632,6 +837,159 @@ impl ClusterScheduler {
                         // re-queues like a fresh arrival (original
                         // submit_s and abort count are kept)
                         self.controller.resubmit(record);
+                    }
+                }
+            }
+            Event::Checkpoint { job, attempt, k } => {
+                // commit durable progress for a still-running attempt; a
+                // stale event (the attempt it belonged to already ended)
+                // is a no-op thanks to the attempt guard
+                if let Some(rj) = self.running.iter_mut().find(|r| r.record.id == job) {
+                    if let RunRecovery::Ckpt(c) = &rj.rec {
+                        if c.attempt == attempt {
+                            rj.record.progress = (c.base_progress + k as f64 * c.ck_frac).min(1.0);
+                            rj.record.ckpts += 1;
+                            self.ckpts += 1;
+                            self.trace.push(TraceEvent {
+                                t,
+                                kind: TraceKind::Ckpt { job, k },
+                            });
+                        }
+                    }
+                }
+            }
+            Event::ShrinkReplace { job, attempt } => {
+                let pos = self
+                    .running
+                    .iter()
+                    .position(|r| r.record.id == job)
+                    .expect("ShrinkReplace for a job that is not running");
+                let rj = self.running.remove(pos);
+                let mut record = rj.record;
+                let RunRecovery::Shrink(mut sr) = rj.rec else {
+                    unreachable!("ShrinkReplace for a non-shrink run");
+                };
+                debug_assert_eq!(sr.attempt, attempt);
+                let nodes = record.assignment.as_ref().map_or(0, Vec::len);
+                self.busy_node_s += rj.duration * nodes as f64;
+                self.acc_completion[job as usize] += rj.duration;
+                let seg_done = sr.seg_u * sr.seg_work;
+                // survivors keep their nodes; the lost ranks' load moves to
+                // free nodes. Fall back to abort → resubmit when the draw
+                // took down no held host (transit-only failure), the
+                // replace budget is spent, or no placement exists.
+                let can_replace =
+                    !sr.lost_hosts.is_empty() && sr.replaces < self.config.max_restarts;
+                let replaced = if can_replace {
+                    self.controller.shrink_replace(&mut record, &sr.lost_hosts).ok()
+                } else {
+                    None
+                };
+                match replaced {
+                    Some((lost_ranks, repl)) => {
+                        let lost_seg = rj.duration - seg_done;
+                        record.useful_s += seg_done;
+                        record.lost_node_s += lost_seg * nodes as f64;
+                        self.lost_node_s += lost_seg * nodes as f64;
+                        sr.work_credited += seg_done;
+                        sr.frac_done += sr.seg_u * (1.0 - sr.frac_done);
+                        sr.degrade *= shrink_degradation(nodes, &lost_ranks);
+                        sr.replaces += 1;
+                        record.shrinks += 1;
+                        self.shrinks += 1;
+                        self.trace.push(TraceEvent {
+                            t,
+                            kind: TraceKind::Shrink {
+                                job,
+                                lost: sr.lost_hosts.clone(),
+                                repl,
+                            },
+                        });
+                        // plan the remainder on the patched assignment as a
+                        // fresh segment with its own fault + recovery draws
+                        let class = self.class_of_job[job as usize];
+                        let assignment = record.assignment.clone().expect("running without nodes");
+                        let next_attempt = record.fault_draws;
+                        record.fault_draws = next_attempt + 1;
+                        let profile = self.classes[class].sim.prepare(&assignment);
+                        let mut ctx = profile.fault_ctx(job);
+                        ctx.attempt = next_attempt;
+                        let mut rng = Rng::stream(
+                            self.stream_base ^ job.wrapping_mul(0x9E3779B97F4A7C15),
+                            next_attempt as u64,
+                        );
+                        let down = self.scenario.sample_down(&ctx, &mut rng);
+                        let u = self.recovery_u(job, next_attempt);
+                        let pr = profile.resolve_partial(&down, sr.frac_done, u);
+                        sr.attempt = next_attempt;
+                        sr.seg_work = pr.remaining_s;
+                        sr.seg_u = u;
+                        sr.fails = pr.aborted;
+                        let duration;
+                        if pr.aborted {
+                            sr.lost_hosts = assignment
+                                .iter()
+                                .copied()
+                                .filter(|&n| down[n])
+                                .collect();
+                            duration = u * sr.seg_work * sr.degrade;
+                            self.push_event(
+                                t + duration,
+                                Event::ShrinkReplace {
+                                    job,
+                                    attempt: next_attempt,
+                                },
+                            );
+                        } else {
+                            sr.lost_hosts = Vec::new();
+                            duration = sr.seg_work * sr.degrade;
+                            self.push_event(
+                                t + duration,
+                                Event::JobEnd {
+                                    job,
+                                    aborted: false,
+                                },
+                            );
+                        }
+                        self.running.push(RunningJob {
+                            record,
+                            end_s: t + duration,
+                            duration,
+                            rec: RunRecovery::Shrink(sr),
+                        });
+                    }
+                    None => {
+                        // fallback: revoke every useful second this run had
+                        // credited and abort → resubmit with the standard
+                        // restart budget semantics
+                        self.shrink_fallbacks += 1;
+                        record.useful_s -= sr.work_credited;
+                        let revoked = (sr.work_credited + rj.duration) * nodes as f64;
+                        record.lost_node_s += revoked;
+                        self.lost_node_s += revoked;
+                        self.trace.push(TraceEvent {
+                            t,
+                            kind: TraceKind::End { job, aborted: true },
+                        });
+                        record.aborts += 1;
+                        self.total_aborts += 1;
+                        if record.aborts >= self.config.max_restarts {
+                            record.error = Some(format!(
+                                "exhausted restart budget after {} aborts",
+                                record.aborts
+                            ));
+                            let acc = self.acc_completion[job as usize];
+                            let aborts = record.aborts;
+                            self.controller
+                                .complete_with(record, JobState::Failed, acc, aborts, t);
+                            self.exhausted += 1;
+                            self.trace.push(TraceEvent {
+                                t,
+                                kind: TraceKind::Fail { job },
+                            });
+                        } else {
+                            self.controller.resubmit(record);
+                        }
                     }
                 }
             }
@@ -777,17 +1135,18 @@ impl ClusterScheduler {
                 Some(Ok(record)) => {
                     let class = self.class_of_job[record.id as usize];
                     let assignment = record.assignment.clone().expect("running without nodes");
-                    let (duration, aborted) =
-                        self.resolve_run(record.id, record.aborts, class, &assignment);
-                    if now + duration <= shadow + 1e-12 {
+                    let plan = self.plan_run(&record, class, &assignment);
+                    if !plan.extends_past_end() && now + plan.duration <= shadow + 1e-12 {
                         // guaranteed to be gone before the head can start
+                        // (failing shrink segments are excluded outright —
+                        // they keep their nodes past the planned end)
                         self.backfill_audit.push(BackfillAudit {
                             job: record.id,
                             head: head_id,
                             t: now,
                             shadow,
                         });
-                        self.launch(record, now, duration, aborted, true);
+                        self.launch(record, now, plan, true);
                         // the candidate list shifted left; rescan at pos
                     } else {
                         // would overrun the shadow: roll the allocation
@@ -810,26 +1169,37 @@ impl ClusterScheduler {
         }
     }
 
-    /// Resolve and launch a freshly-scheduled head job.
+    /// Plan and launch a freshly-scheduled head job.
     fn launch_scheduled(&mut self, record: JobRecord, now: f64, backfilled: bool) {
         let class = self.class_of_job[record.id as usize];
         let assignment = record.assignment.clone().expect("running without nodes");
-        let (duration, aborted) = self.resolve_run(record.id, record.aborts, class, &assignment);
-        self.launch(record, now, duration, aborted, backfilled);
+        let plan = self.plan_run(&record, class, &assignment);
+        self.launch(record, now, plan, backfilled);
     }
 
-    /// Exact duration + abort flag for run `attempt` of `job` under
-    /// `assignment`: one `prepare()` (phase-cache backed) plus one
-    /// down-state draw from the per-(job, attempt) RNG stream. Pure in
-    /// `(job, attempt, assignment)`, so event interleaving cannot change
-    /// outcomes.
-    fn resolve_run(
-        &mut self,
-        job: u64,
-        attempt: u32,
-        class: usize,
-        assignment: &[usize],
-    ) -> (f64, bool) {
+    /// First uniform draw of the per-(job, attempt) recovery stream — the
+    /// failure location within a run. Independent of the fault stream, so
+    /// abort-resubmit runs consume exactly the draws they always did, and
+    /// idempotent per attempt, so a backfill probe and its later commit
+    /// see the same value.
+    fn recovery_u(&self, job: u64, attempt: u32) -> f64 {
+        let mut rng = Rng::stream(
+            self.recovery_base ^ job.wrapping_mul(0x9E3779B97F4A7C15),
+            attempt as u64,
+        );
+        rng.f64()
+    }
+
+    /// Plan run `record.fault_draws` of a job under `assignment`: one
+    /// `prepare()` (phase-cache backed) plus one down-state draw from the
+    /// per-(job, attempt) fault stream — and, for the recovery policies,
+    /// one uniform draw from the independent recovery stream locating the
+    /// failure within the run. Pure in `(record, assignment)`, so event
+    /// interleaving cannot change outcomes and a backfill probe can be
+    /// rolled back safely.
+    fn plan_run(&mut self, record: &JobRecord, class: usize, assignment: &[usize]) -> RunPlan {
+        let job = record.id;
+        let attempt = record.fault_draws;
         let profile = self.classes[class].sim.prepare(assignment);
         let mut ctx = profile.fault_ctx(job);
         ctx.attempt = attempt;
@@ -838,22 +1208,92 @@ impl ClusterScheduler {
             attempt as u64,
         );
         let down = self.scenario.sample_down(&ctx, &mut rng);
-        profile.resolve(&down)
+        match self.config.recovery {
+            RecoveryPolicy::AbortResubmit => {
+                let (duration, aborted) = profile.resolve(&down);
+                RunPlan {
+                    duration,
+                    aborted,
+                    attempt,
+                    rec: RunRecovery::Abort,
+                }
+            }
+            RecoveryPolicy::CheckpointRestart { interval_s } => {
+                let cost_s = self.config.ckpt_cost_s;
+                let base_progress = record.progress;
+                let work_s = profile.remaining_s(base_progress);
+                // checkpoints that fit strictly inside the remaining work
+                // (one landing exactly at completion would be pure waste)
+                let kmax = ((work_s / interval_s) - 1e-9).floor().max(0.0) as u32;
+                let ck_frac = interval_s / profile.success_s;
+                let u = self.recovery_u(job, attempt);
+                let pr = profile.resolve_partial(&down, base_progress, u);
+                let (duration, committed, aborted) = if pr.aborted {
+                    let f = pr.failure_s.expect("aborted run without failure time");
+                    let j = ((f / interval_s).floor() as u32).min(kmax);
+                    (f + j as f64 * cost_s, j, true)
+                } else {
+                    (work_s + kmax as f64 * cost_s, kmax, false)
+                };
+                RunPlan {
+                    duration,
+                    aborted,
+                    attempt,
+                    rec: RunRecovery::Ckpt(CkptRun {
+                        attempt,
+                        base_progress,
+                        ck_frac,
+                        interval_s,
+                        cost_s,
+                        work_s,
+                        committed,
+                    }),
+                }
+            }
+            RecoveryPolicy::ShrinkContinue => {
+                let base = record.progress;
+                let seg_work = profile.remaining_s(base);
+                let u = self.recovery_u(job, attempt);
+                let pr = profile.resolve_partial(&down, base, u);
+                let fails = pr.aborted;
+                let duration = if fails {
+                    pr.failure_s.expect("aborted run without failure time")
+                } else {
+                    seg_work
+                };
+                let lost_hosts: Vec<usize> = if fails {
+                    assignment.iter().copied().filter(|&n| down[n]).collect()
+                } else {
+                    Vec::new()
+                };
+                RunPlan {
+                    duration,
+                    aborted: fails,
+                    attempt,
+                    rec: RunRecovery::Shrink(Box::new(ShrinkRun {
+                        attempt,
+                        fails,
+                        frac_done: base,
+                        degrade: 1.0,
+                        seg_work,
+                        seg_u: u,
+                        lost_hosts,
+                        work_credited: 0.0,
+                        replaces: 0,
+                    })),
+                }
+            }
+        }
     }
 
-    fn launch(
-        &mut self,
-        mut record: JobRecord,
-        now: f64,
-        duration: f64,
-        aborted: bool,
-        backfilled: bool,
-    ) {
+    fn launch(&mut self, mut record: JobRecord, now: f64, plan: RunPlan, backfilled: bool) {
         let nodes = record.assignment.clone().expect("running without nodes");
         if record.start_s.is_none() {
             record.start_s = Some(now);
         }
-        let end = now + duration;
+        // the launch commits this attempt's fault + recovery draws
+        record.fault_draws = plan.attempt + 1;
+        let end = now + plan.duration;
         self.trace.push(TraceEvent {
             t: now,
             kind: TraceKind::Start {
@@ -865,17 +1305,64 @@ impl ClusterScheduler {
         if backfilled {
             self.backfills += 1;
         }
-        self.push_event(
-            end,
-            Event::JobEnd {
-                job: record.id,
-                aborted,
-            },
-        );
+        match &plan.rec {
+            RunRecovery::Abort => {
+                self.push_event(
+                    end,
+                    Event::JobEnd {
+                        job: record.id,
+                        aborted: plan.aborted,
+                    },
+                );
+            }
+            RunRecovery::Ckpt(c) => {
+                // checkpoint k commits after k work intervals and k write
+                // costs; a tie with the run's end resolves checkpoint-first
+                // because the Checkpoint events are pushed (sequenced)
+                // before the JobEnd
+                for k in 1..=c.committed {
+                    self.push_event(
+                        now + k as f64 * (c.interval_s + c.cost_s),
+                        Event::Checkpoint {
+                            job: record.id,
+                            attempt: plan.attempt,
+                            k,
+                        },
+                    );
+                }
+                self.push_event(
+                    end,
+                    Event::JobEnd {
+                        job: record.id,
+                        aborted: plan.aborted,
+                    },
+                );
+            }
+            RunRecovery::Shrink(s) => {
+                if s.fails {
+                    self.push_event(
+                        end,
+                        Event::ShrinkReplace {
+                            job: record.id,
+                            attempt: plan.attempt,
+                        },
+                    );
+                } else {
+                    self.push_event(
+                        end,
+                        Event::JobEnd {
+                            job: record.id,
+                            aborted: false,
+                        },
+                    );
+                }
+            }
+        }
         self.running.push(RunningJob {
             record,
             end_s: end,
-            duration,
+            duration: plan.duration,
+            rec: plan.rec,
         });
     }
 
@@ -917,6 +1404,10 @@ impl ClusterScheduler {
             exhausted: self.exhausted,
             total_aborts: self.total_aborts,
             backfills: self.backfills,
+            lost_node_s: self.lost_node_s,
+            ckpts: self.ckpts,
+            shrinks: self.shrinks,
+            shrink_fallbacks: self.shrink_fallbacks,
             total_jobs: self.specs.len(),
             records,
             trace: self.trace,
@@ -950,6 +1441,7 @@ pub fn run_sweep(
     config: &SchedConfig,
     workers: usize,
 ) -> Result<Vec<SchedCell>> {
+    config.validate()?;
     let workers = if workers == 0 {
         std::thread::available_parallelism()
             .map(|n| n.get())
@@ -1104,6 +1596,16 @@ mod tests {
             .records
             .iter()
             .all(|r| r.state == JobState::Failed && r.error.is_some()));
+        // rejected right at submit, with a typed workload error naming
+        // the request and the platform — never queued, never starved
+        for r in &res.records {
+            let err = r.error.as_deref().unwrap();
+            assert!(err.contains("workload error"), "untyped error: {err}");
+            assert!(err.contains("16 ranks"), "error lacks the request: {err}");
+            assert!(err.contains("8 nodes"), "error lacks the platform: {err}");
+            assert!(r.start_s.is_none(), "rejected job somehow launched");
+            assert_eq!(r.end_s, Some(0.0), "rejected at submit time");
+        }
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! In-job recovery policies for the cluster scheduler.
+//!
+//! The paper's failure model is all-or-nothing: a node outage aborts the
+//! job and the scheduler resubmits it from scratch
+//! ([`RecoveryPolicy::AbortResubmit`], the golden-locked default). This
+//! module adds the two execution-level alternatives the resilience
+//! literature pits against fault-aware *placement*:
+//!
+//! * [`RecoveryPolicy::CheckpointRestart`] — the job writes a checkpoint
+//!   every `interval_s` seconds of useful progress (paying a configurable
+//!   write cost per checkpoint); on failure it resubmits with only the
+//!   since-last-checkpoint work remaining, so an abort costs at most one
+//!   checkpoint interval of lost work instead of the whole run.
+//! * [`RecoveryPolicy::ShrinkContinue`] — ULFM-style: on failure the
+//!   surviving ranks keep their nodes, the lost ranks' communication load
+//!   is re-placed onto free nodes via the candidate-mask
+//!   [`crate::slurm::plugins::fans::FansPlugin::select`] path mid-job, and
+//!   the job continues at a degraded collective cost derived from the
+//!   [`crate::profiler::collectives`] schedules.
+//!
+//! Everything is deterministic: recovery-time draws come from a dedicated
+//! `Rng::stream` base (see [`crate::slurm::sched::ClusterScheduler`]), and
+//! the degradation factor below is a pure function of the communicator
+//! size and the replaced ranks.
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+use crate::profiler::collectives::{expand, schedule_bytes, CollectiveKind};
+
+/// Collective-cost penalty at full replacement: a job whose ranks were all
+/// re-placed mid-run pays `1 + SHRINK_PENALTY` on its remaining work. The
+/// per-failure factor scales with the replaced ranks' share of the
+/// allreduce schedule traffic (see [`shrink_degradation`]).
+pub const SHRINK_PENALTY: f64 = 0.5;
+
+/// Per-job recovery policy: what the scheduler does when a run aborts.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum RecoveryPolicy {
+    /// Abort → resubmit from scratch (the paper's model; bit-identical to
+    /// the pre-recovery scheduler).
+    #[default]
+    AbortResubmit,
+    /// Periodic checkpoints every `interval_s` seconds of progress; a
+    /// failed run resumes from the last committed checkpoint.
+    CheckpointRestart {
+        /// Useful-work seconds between checkpoint writes.
+        interval_s: f64,
+    },
+    /// ULFM-style shrink-and-continue: survivors keep their nodes, lost
+    /// ranks are re-placed on free nodes, the job continues degraded.
+    ShrinkContinue,
+}
+
+impl fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecoveryPolicy::AbortResubmit => write!(f, "abort"),
+            RecoveryPolicy::CheckpointRestart { interval_s } => {
+                write!(f, "ckpt:{interval_s}")
+            }
+            RecoveryPolicy::ShrinkContinue => write!(f, "shrink"),
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Parse a `--recovery=` CLI value: `abort`, `ckpt:<interval_s>`, or
+    /// `shrink`. Degenerate checkpoint intervals (zero, negative, NaN,
+    /// infinite) are typed [`Error::Workload`]s naming the field.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "abort" => Ok(RecoveryPolicy::AbortResubmit),
+            "shrink" => Ok(RecoveryPolicy::ShrinkContinue),
+            _ => {
+                let Some(iv) = s.strip_prefix("ckpt:") else {
+                    return Err(Error::Workload(format!(
+                        "recovery policy '{s}' is not abort, ckpt:<interval>, or shrink"
+                    )));
+                };
+                let interval_s: f64 = iv.parse().map_err(|_| {
+                    Error::Workload(format!(
+                        "checkpoint interval_s '{iv}' is not a number"
+                    ))
+                })?;
+                let policy = RecoveryPolicy::CheckpointRestart { interval_s };
+                policy.validate(0.0)?;
+                Ok(policy)
+            }
+        }
+    }
+
+    /// Validate the policy together with the scheduler's checkpoint write
+    /// cost: the interval must be finite and positive, the cost finite and
+    /// non-negative. Errors are typed [`Error::Workload`]s naming the
+    /// offending field.
+    pub fn validate(&self, ckpt_cost_s: f64) -> Result<()> {
+        if let RecoveryPolicy::CheckpointRestart { interval_s } = self {
+            if !interval_s.is_finite() || *interval_s <= 0.0 {
+                return Err(Error::Workload(format!(
+                    "checkpoint interval_s must be finite and > 0, got {interval_s}"
+                )));
+            }
+            if !ckpt_cost_s.is_finite() || ckpt_cost_s < 0.0 {
+                return Err(Error::Workload(format!(
+                    "checkpoint ckpt_cost_s must be finite and >= 0, got {ckpt_cost_s}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// True for the golden-locked default (no new events, no extra RNG
+    /// draws — the pre-recovery scheduler bit-for-bit).
+    pub fn is_abort(&self) -> bool {
+        matches!(self, RecoveryPolicy::AbortResubmit)
+    }
+}
+
+/// Collective-cost degradation factor after a shrink-replace: surviving
+/// ranks now reach the replacements over colder paths, modeled as
+/// `1 + SHRINK_PENALTY * share`, where `share` is the replaced ranks'
+/// fraction of the recursive-doubling allreduce schedule traffic for an
+/// `n`-rank communicator. Pure in `(n, replaced)` — no RNG — and
+/// monotone: replacing more ranks degrades at least as much.
+pub fn shrink_degradation(n: usize, replaced: &[usize]) -> f64 {
+    if n <= 1 || replaced.is_empty() {
+        return 1.0;
+    }
+    let rounds = expand(CollectiveKind::Allreduce, n, 1.0);
+    let total = schedule_bytes(&rounds);
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let mut hit = vec![false; n];
+    for &r in replaced {
+        if r < n {
+            hit[r] = true;
+        }
+    }
+    let touched: f64 = rounds
+        .iter()
+        .flat_map(|r| r.iter())
+        .filter(|m| hit[m.src] || hit[m.dst])
+        .map(|m| m.bytes)
+        .sum();
+    1.0 + SHRINK_PENALTY * (touched / total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_all_three_policies() {
+        assert_eq!(
+            RecoveryPolicy::parse("abort").unwrap(),
+            RecoveryPolicy::AbortResubmit
+        );
+        assert_eq!(
+            RecoveryPolicy::parse("shrink").unwrap(),
+            RecoveryPolicy::ShrinkContinue
+        );
+        assert_eq!(
+            RecoveryPolicy::parse("ckpt:0.5").unwrap(),
+            RecoveryPolicy::CheckpointRestart { interval_s: 0.5 }
+        );
+        for p in ["abort", "shrink", "ckpt:0.25"] {
+            let policy = RecoveryPolicy::parse(p).unwrap();
+            assert_eq!(policy.to_string(), p);
+        }
+    }
+
+    #[test]
+    fn degenerate_recovery_configs_are_typed_errors() {
+        for bad in ["ckpt:0", "ckpt:-1", "ckpt:NaN", "ckpt:inf", "ckpt:x", "ulfm", ""] {
+            let err = RecoveryPolicy::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("workload error"), "{bad}: {err}");
+        }
+        // the interval error names the field
+        let err = RecoveryPolicy::parse("ckpt:0").unwrap_err().to_string();
+        assert!(err.contains("interval_s"), "{err}");
+        // negative / NaN checkpoint cost is rejected by validate
+        let p = RecoveryPolicy::CheckpointRestart { interval_s: 1.0 };
+        for bad_cost in [-0.5, f64::NAN, f64::INFINITY] {
+            let err = p.validate(bad_cost).unwrap_err().to_string();
+            assert!(err.contains("ckpt_cost_s"), "{err}");
+        }
+        p.validate(0.0).unwrap();
+        RecoveryPolicy::AbortResubmit.validate(f64::NAN).unwrap();
+    }
+
+    #[test]
+    fn degradation_is_bounded_and_monotone() {
+        assert_eq!(shrink_degradation(1, &[0]), 1.0);
+        assert_eq!(shrink_degradation(8, &[]), 1.0);
+        let one = shrink_degradation(8, &[3]);
+        let two = shrink_degradation(8, &[3, 5]);
+        let all = shrink_degradation(8, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(one > 1.0);
+        assert!(two >= one, "{two} < {one}");
+        assert!((all - (1.0 + SHRINK_PENALTY)).abs() < 1e-12, "{all}");
+        assert!(one <= 1.0 + SHRINK_PENALTY + 1e-12);
+        // deterministic
+        assert_eq!(one.to_bits(), shrink_degradation(8, &[3]).to_bits());
+    }
+}

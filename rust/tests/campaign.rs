@@ -20,8 +20,8 @@ use tofa::mapping::PlacementPolicy;
 use tofa::report::percentile;
 use tofa::sim::fault::FaultSpec;
 use tofa::slurm::sched::{
-    run_campaign, Arrivals, CampaignCell, CampaignMetrics, CampaignWorkload, SchedConfig,
-    SchedJobSpec, SchedResult, TraceKind,
+    run_campaign, Arrivals, CampaignCell, CampaignMetrics, CampaignWorkload, RecoveryPolicy,
+    SchedConfig, SchedJobSpec, SchedResult, TraceKind,
 };
 use tofa::topology::{Platform, TorusDims};
 
@@ -56,6 +56,28 @@ fn assert_no_overlap(res: &SchedResult, num_nodes: usize) {
                     if *h == Some(*job) {
                         *h = None;
                     }
+                }
+            }
+            TraceKind::Shrink { job, lost, repl } => {
+                // shrink re-places mid-run: lost hosts must belong to the
+                // job, replacements must be unheld
+                for &n in lost {
+                    assert_eq!(
+                        held[n],
+                        Some(*job),
+                        "t={}: shrink lost node {n} was not held by {job}",
+                        ev.t
+                    );
+                    held[n] = None;
+                }
+                for &n in repl {
+                    assert!(
+                        held[n].is_none(),
+                        "t={}: replacement node {n} already held by {:?}",
+                        ev.t,
+                        held[n]
+                    );
+                    held[n] = Some(*job);
                 }
             }
             _ => {}
@@ -238,11 +260,17 @@ fn assert_all_zero_and_finite(m: &CampaignMetrics) {
         ("slowdown p99", m.slowdown.p99),
         ("slowdown mean", m.slowdown.mean),
         ("slowdown max", m.slowdown.max),
+        ("lost node-s", m.lost_node_s),
     ] {
         assert!(v.is_finite(), "{what} is not finite: {v}");
         assert_eq!(v.to_bits(), 0.0f64.to_bits(), "{what} should be 0.0, got {v}");
     }
     assert_eq!(m.completed, 0);
+    assert_eq!(
+        (m.ckpts, m.shrinks, m.shrink_fallbacks),
+        (0, 0, 0),
+        "recovery counters should be 0 on a no-progress campaign"
+    );
 }
 
 #[test]
@@ -350,4 +378,126 @@ fn campaign_smoke_statistics_locked() {
         ));
     }
     lock_or_create("campaign_smoke.txt", &got, "the campaign smoke statistics");
+}
+
+/// Serialize the recovery-relevant aggregates of one campaign, exact f64
+/// bit patterns included.
+fn recovery_summary(cells: &[CampaignCell]) -> String {
+    let mut got = String::new();
+    for cell in cells {
+        let m = &cell.metrics;
+        got.push_str(&format!(
+            "{} {} {} {} {} {} {} {} {} {:016x} {:016x}\n",
+            cell.placement,
+            if cell.backfill { "backfill" } else { "fifo" },
+            m.completed,
+            m.failed,
+            m.exhausted,
+            m.total_aborts,
+            m.ckpts,
+            m.shrinks,
+            m.shrink_fallbacks,
+            m.makespan_s.to_bits(),
+            m.lost_node_s.to_bits(),
+        ));
+    }
+    got
+}
+
+#[test]
+fn campaign_recovery_statistics_locked_and_abort_matches_default() {
+    // the 500-job paper-torus campaign again, this time under an
+    // *explicit* abort-resubmit recovery config: it must be bit-identical
+    // to the default config (abort-resubmit reproduces the pre-recovery
+    // scheduler exactly), and its recovery aggregates are golden-locked
+    let plat = Platform::paper_default(TorusDims::new(8, 8, 8));
+    let jobs = CampaignWorkload::paper_like(512).generate().unwrap();
+    let fault = FaultSpec::Iid {
+        n_faulty: 16,
+        p_f: 0.02,
+    };
+    let explicit = SchedConfig {
+        recovery: RecoveryPolicy::AbortResubmit,
+        ..Default::default()
+    };
+    let cells = run_campaign(&plat, &jobs, &fault, CELLS, &explicit, 2).unwrap();
+    let default_cells =
+        run_campaign(&plat, &jobs, &fault, CELLS, &SchedConfig::default(), 2).unwrap();
+    for (a, b) in cells.iter().zip(&default_cells) {
+        assert_eq!(a.result.trace, b.result.trace, "explicit abort drifted from default");
+        assert_eq!(a.metrics, b.metrics, "explicit abort drifted from default");
+    }
+    for cell in &cells {
+        assert_eq!(cell.metrics.ckpts, 0, "abort-resubmit committed checkpoints");
+        assert_eq!(cell.metrics.shrinks, 0, "abort-resubmit performed shrinks");
+        assert_conservation(&cell.result);
+    }
+    lock_or_create(
+        "campaign_recovery.txt",
+        &recovery_summary(&cells),
+        "the recovery campaign statistics",
+    );
+}
+
+#[test]
+fn checkpoint_and_shrink_campaigns_conserve_and_reduce_lost_work() {
+    // checkpoint/restart and shrink-and-continue both keep every
+    // conservation invariant, and each policy's machinery actually fires
+    // under a fault model aggressive enough to abort runs
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let jobs = campaign_jobs(Arrivals::Poisson { mean_gap_s: 0.02 }, 100, 13);
+    let fault = FaultSpec::CorrelatedRacks {
+        domains: 2,
+        p_domain: 0.4,
+    };
+    let mut lost = Vec::new();
+    for recovery in [
+        RecoveryPolicy::AbortResubmit,
+        RecoveryPolicy::CheckpointRestart { interval_s: 0.2 },
+        RecoveryPolicy::ShrinkContinue,
+    ] {
+        let cfg = SchedConfig {
+            max_restarts: 10,
+            recovery,
+            ckpt_cost_s: 0.01,
+            ..Default::default()
+        };
+        let cells = run_campaign(&plat, &jobs, &fault, CELLS, &cfg, 2).unwrap();
+        for cell in &cells {
+            assert_conservation(&cell.result);
+            assert_no_overlap(&cell.result, 64);
+            assert_metrics_recompute(cell, 64);
+            assert!(
+                cell.metrics.lost_node_s.is_finite() && cell.metrics.lost_node_s >= 0.0,
+                "{recovery}: lost node-s {}",
+                cell.metrics.lost_node_s
+            );
+        }
+        lost.push(cells.iter().map(|c| c.metrics.lost_node_s).sum::<f64>());
+        let progress: u64 = cells
+            .iter()
+            .map(|c| match recovery {
+                RecoveryPolicy::AbortResubmit => u64::from(c.metrics.total_aborts > 0),
+                RecoveryPolicy::CheckpointRestart { .. } => c.metrics.ckpts,
+                RecoveryPolicy::ShrinkContinue => {
+                    c.metrics.shrinks + c.metrics.shrink_fallbacks
+                }
+            })
+            .sum();
+        assert!(progress > 0, "{recovery}: recovery machinery never fired");
+    }
+    // both recovery policies waste fewer node-seconds than abort-resubmit
+    // under correlated rack outages
+    assert!(
+        lost[1] < lost[0],
+        "checkpointing lost {} node-s vs abort {}",
+        lost[1],
+        lost[0]
+    );
+    assert!(
+        lost[2] < lost[0],
+        "shrink lost {} node-s vs abort {}",
+        lost[2],
+        lost[0]
+    );
 }

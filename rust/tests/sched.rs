@@ -11,7 +11,8 @@ use tofa::rng::Rng;
 use tofa::sim::fault::{FaultScenario, FaultSpec, FaultTrace};
 use tofa::slurm::jobs::JobState;
 use tofa::slurm::sched::{
-    run_sweep, ClusterScheduler, SchedConfig, SchedJobSpec, SchedResult, TraceKind, WorkloadSpec,
+    run_sweep, ClusterScheduler, RecoveryPolicy, SchedConfig, SchedJobSpec, SchedResult,
+    TraceKind, WorkloadSpec,
 };
 use tofa::topology::{Dragonfly, DragonflyParams, FatTree, Platform, TorusDims};
 
@@ -84,6 +85,29 @@ fn assert_no_overlap(res: &SchedResult, num_nodes: usize) -> usize {
                     if *h == Some(*job) {
                         *h = None;
                     }
+                }
+            }
+            TraceKind::Shrink { job, lost, repl } => {
+                // mid-run re-place: the lost hosts must have been held by
+                // this very job, and the replacements must be unheld —
+                // shrink can never double-allocate a node
+                for &n in lost {
+                    assert_eq!(
+                        held[n],
+                        Some(*job),
+                        "t={}: shrink lost node {n} was not held by {job}",
+                        ev.t
+                    );
+                    held[n] = None;
+                }
+                for &n in repl {
+                    assert!(
+                        held[n].is_none(),
+                        "t={}: replacement node {n} already held by {:?}",
+                        ev.t,
+                        held[n]
+                    );
+                    held[n] = Some(*job);
                 }
             }
             _ => {}
@@ -332,4 +356,161 @@ fn every_sched_record_reaches_a_terminal_state_with_outcome() {
     }
     let aborts_on_records: u32 = res.records.iter().map(|r| r.aborts).sum();
     assert_eq!(aborts_on_records as usize, res.total_aborts);
+}
+
+/// The three in-job recovery policies, with knobs sized so faults and
+/// recoveries actually fire in the small CI workloads.
+fn all_recovery_policies() -> [RecoveryPolicy; 3] {
+    [
+        RecoveryPolicy::AbortResubmit,
+        RecoveryPolicy::CheckpointRestart { interval_s: 0.2 },
+        RecoveryPolicy::ShrinkContinue,
+    ]
+}
+
+#[test]
+fn recovery_policies_conserve_jobs_and_reconcile_lost_node_seconds() {
+    // under every (fault model x recovery policy) cell: each job reaches
+    // a terminal state exactly once, no node is ever double-allocated
+    // (including across shrink re-places), and the lost-node-seconds
+    // ledger reconciles both per record and in aggregate
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let n = plat.num_nodes();
+    let w = WorkloadSpec {
+        jobs: 10,
+        mean_interarrival_s: 0.02,
+        mix: vec![(8, 0.6), (16, 0.4)],
+        steps: 2,
+        seed: 23,
+    };
+    let cells = [
+        (PlacementPolicy::Tofa, false),
+        (PlacementPolicy::DefaultSlurm, true),
+    ];
+    for fault in all_fault_specs(&plat) {
+        let name = fault.model_name();
+        for recovery in all_recovery_policies() {
+            let cfg = SchedConfig {
+                max_restarts: 10,
+                recovery,
+                ckpt_cost_s: 0.01,
+                ..Default::default()
+            };
+            let sweep = run_sweep(&plat, &w, &fault, &cells, &cfg, 2).unwrap();
+            for cell in &sweep {
+                let r = &cell.result;
+                assert_eq!(r.records.len(), r.total_jobs, "{name}/{recovery}: jobs lost");
+                assert_eq!(
+                    r.completed + r.failed + r.exhausted,
+                    r.total_jobs,
+                    "{name}/{recovery}: terminal states do not add up"
+                );
+                assert!(
+                    r.records.iter().all(|rec| rec.state.is_terminal()),
+                    "{name}/{recovery}: non-terminal record"
+                );
+                assert_no_overlap(r, n);
+                let mut sum = 0.0;
+                for rec in &r.records {
+                    assert!(
+                        rec.useful_s >= -1e-9 && rec.lost_node_s >= -1e-9,
+                        "{name}/{recovery}: job {} has negative accounting ({} useful, {} lost)",
+                        rec.id,
+                        rec.useful_s,
+                        rec.lost_node_s
+                    );
+                    // everything a job held beyond its useful seconds is
+                    // lost node-seconds: (completion - useful) x ranks
+                    if let Some(total) = rec.completion_s {
+                        let expect = (total - rec.useful_s) * rec.request.ranks as f64;
+                        assert!(
+                            (rec.lost_node_s - expect).abs() <= 1e-6 * (1.0 + expect.abs()),
+                            "{name}/{recovery}: job {} lost {} node-s, expected {}",
+                            rec.id,
+                            rec.lost_node_s,
+                            expect
+                        );
+                    }
+                    sum += rec.lost_node_s;
+                }
+                assert!(
+                    (sum - r.lost_node_s).abs() <= 1e-6 * (1.0 + r.lost_node_s.abs()),
+                    "{name}/{recovery}: record sum {} vs scheduler total {}",
+                    sum,
+                    r.lost_node_s
+                );
+                // counters only move under the policy that produces them
+                match recovery {
+                    RecoveryPolicy::AbortResubmit => {
+                        assert_eq!(
+                            (r.ckpts, r.shrinks),
+                            (0, 0),
+                            "{name}: abort made progress events"
+                        );
+                        assert_eq!(r.lost_node_s == 0.0, r.total_aborts == 0, "{name}");
+                    }
+                    RecoveryPolicy::CheckpointRestart { .. } => {
+                        assert_eq!(r.shrinks, 0, "{name}: ckpt performed shrinks");
+                    }
+                    RecoveryPolicy::ShrinkContinue => {
+                        assert_eq!(r.ckpts, 0, "{name}: shrink committed checkpoints");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn recovery_traces_identical_for_1_2_4_workers() {
+    // determinism contract per (fault model x recovery policy): whole
+    // event traces and the lost-work aggregate must be bit-identical for
+    // any worker count (the correlated and trace models exercise the
+    // multi-node outages shrink recovers from)
+    let plat = Platform::paper_default(TorusDims::new(4, 4, 4));
+    let w = WorkloadSpec {
+        jobs: 8,
+        mean_interarrival_s: 0.0,
+        mix: vec![(8, 0.7), (16, 0.3)],
+        steps: 2,
+        seed: 31,
+    };
+    let cells = [
+        (PlacementPolicy::DefaultSlurm, false),
+        (PlacementPolicy::Tofa, true),
+    ];
+    let faults = all_fault_specs(&plat);
+    for fault in [&faults[1], &faults[3]] {
+        let name = fault.model_name();
+        for recovery in all_recovery_policies() {
+            let cfg = SchedConfig {
+                max_restarts: 10,
+                recovery,
+                ckpt_cost_s: 0.01,
+                ..Default::default()
+            };
+            let run = |workers| run_sweep(&plat, &w, fault, &cells, &cfg, workers).unwrap();
+            let serial = run(1);
+            for workers in [2usize, 4] {
+                let par = run(workers);
+                assert_eq!(par.len(), serial.len(), "{name}/{recovery}");
+                for (a, b) in serial.iter().zip(&par) {
+                    assert_eq!(
+                        a.result.trace, b.result.trace,
+                        "{name}/{recovery} @ {workers} workers"
+                    );
+                    assert_eq!(
+                        a.result.lost_node_s.to_bits(),
+                        b.result.lost_node_s.to_bits(),
+                        "{name}/{recovery} @ {workers} workers"
+                    );
+                    assert_eq!(
+                        (a.result.ckpts, a.result.shrinks, a.result.shrink_fallbacks),
+                        (b.result.ckpts, b.result.shrinks, b.result.shrink_fallbacks),
+                        "{name}/{recovery} @ {workers} workers"
+                    );
+                }
+            }
+        }
+    }
 }

@@ -7,7 +7,7 @@ use std::path::PathBuf;
 
 use tofa::error::Error;
 use tofa::slurm::sched::workload::{load_trace, parse_fb, parse_swf, to_swf, TraceConfig};
-use tofa::slurm::sched::{Arrivals, CampaignWorkload, SchedJobSpec};
+use tofa::slurm::sched::{Arrivals, CampaignWorkload, RecoveryPolicy, SchedConfig, SchedJobSpec};
 
 fn data_path(name: &str) -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
@@ -191,4 +191,108 @@ fn fixture_round_trips_through_the_serializer() {
     let jobs = load_trace(&data_path("sample.swf"), &cfg).unwrap();
     let reparsed = parse_swf(to_swf(&jobs, &cfg).as_bytes(), &cfg).unwrap();
     assert_eq!(jobs, reparsed);
+}
+
+/// Assert a `Workload` error whose message names the offending field.
+fn assert_names_field(res: Result<(), Error>, field: &str, what: &str) {
+    match res {
+        Err(Error::Workload(msg)) => assert!(
+            msg.contains(field),
+            "{what}: error does not name {field}: {msg}"
+        ),
+        other => panic!("{what}: expected a Workload error, got {other:?}"),
+    }
+}
+
+#[test]
+fn recovery_policy_cli_values_parse_or_name_the_field() {
+    assert_eq!(
+        RecoveryPolicy::parse("abort").unwrap(),
+        RecoveryPolicy::AbortResubmit
+    );
+    assert_eq!(
+        RecoveryPolicy::parse("shrink").unwrap(),
+        RecoveryPolicy::ShrinkContinue
+    );
+    assert_eq!(
+        RecoveryPolicy::parse("ckpt:2.5").unwrap(),
+        RecoveryPolicy::CheckpointRestart { interval_s: 2.5 }
+    );
+    // degenerate values are typed errors naming the offending field,
+    // never panics and never a silently-clamped policy
+    let cases: &[(&str, &str, &str)] = &[
+        ("", "recovery policy", "empty value"),
+        ("ulfm", "recovery policy", "unknown policy"),
+        ("ckpt", "recovery policy", "missing interval separator"),
+        ("ckpt:", "interval_s", "empty interval"),
+        ("ckpt:five", "interval_s", "non-numeric interval"),
+        ("ckpt:0", "interval_s", "zero interval"),
+        ("ckpt:-1", "interval_s", "negative interval"),
+        ("ckpt:nan", "interval_s", "NaN interval"),
+        ("ckpt:inf", "interval_s", "infinite interval"),
+    ];
+    for &(value, field, what) in cases {
+        assert_names_field(RecoveryPolicy::parse(value).map(|_| ()), field, what);
+    }
+}
+
+#[test]
+fn degenerate_sched_config_knobs_are_typed_errors() {
+    let ckpt = |interval_s| RecoveryPolicy::CheckpointRestart { interval_s };
+    let bad = vec![
+        (
+            SchedConfig {
+                recovery: ckpt(1.0),
+                ckpt_cost_s: -0.5,
+                ..Default::default()
+            },
+            "ckpt_cost_s",
+            "negative checkpoint cost",
+        ),
+        (
+            SchedConfig {
+                recovery: ckpt(1.0),
+                ckpt_cost_s: f64::NAN,
+                ..Default::default()
+            },
+            "ckpt_cost_s",
+            "NaN checkpoint cost",
+        ),
+        (
+            SchedConfig {
+                recovery: ckpt(f64::INFINITY),
+                ..Default::default()
+            },
+            "interval_s",
+            "infinite interval",
+        ),
+        (
+            SchedConfig {
+                heartbeat_period_s: f64::NAN,
+                ..Default::default()
+            },
+            "heartbeat_period_s",
+            "NaN heartbeat period",
+        ),
+        (
+            SchedConfig {
+                heartbeat_period_s: -1.0,
+                ..Default::default()
+            },
+            "heartbeat_period_s",
+            "negative heartbeat period",
+        ),
+    ];
+    for (cfg, field, what) in bad {
+        assert_names_field(cfg.validate(), field, what);
+    }
+    // the default config is valid, and the checkpoint-cost knob is only
+    // read (hence only validated) under checkpoint/restart
+    SchedConfig::default().validate().unwrap();
+    SchedConfig {
+        ckpt_cost_s: -1.0,
+        ..Default::default()
+    }
+    .validate()
+    .unwrap();
 }
