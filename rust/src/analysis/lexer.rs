@@ -1,0 +1,525 @@
+//! A lightweight Rust token scanner for the determinism lint pass.
+//!
+//! This is deliberately **not** a full Rust lexer (no `syn`, no proc-macro
+//! machinery — the crate is zero-dep by design). It produces exactly the
+//! token stream the lints in [`crate::analysis::lints`] need: identifiers,
+//! integer/float literals, multi-char operators, and punctuation, with
+//! comments and string/char literals recognised and set aside so their
+//! *contents* can never produce false lint matches. Comments are collected
+//! separately (with line numbers) because two of the lint mechanisms —
+//! `// detlint: allow(...)` suppressions and `// invariant:` panic
+//! justifications — live in comments.
+//!
+//! ```
+//! use tofa::analysis::lexer::{lex, TokKind};
+//! let out = lex("let x = m.len(); // detlint: allow(float-discipline, demo)");
+//! assert_eq!(out.toks[1].text, "x");
+//! assert!(matches!(out.toks[0].kind, TokKind::Ident));
+//! assert!(out.comments[0].text.contains("detlint: allow"));
+//! ```
+
+/// Token classification. `Str`/`Char` keep their raw text but lints treat
+/// them as opaque, so a string mentioning `unwrap` can never trip a lint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`let`, `HashMap`, `unwrap`, ...).
+    Ident,
+    /// Integer literal (`42`, `0x5eed_5c4e_d011`, `7u64`).
+    Int,
+    /// Float literal (`0.02`, `1e9`, `2.5f32`).
+    Float,
+    /// String literal of any flavour (`"x"`, `r#"x"#`, `b"x"`).
+    Str,
+    /// Char literal (`'a'`, `'\n'`).
+    Char,
+    /// Lifetime or loop label (`'a`, `'outer`).
+    Lifetime,
+    /// Operator or punctuation; multi-char operators (`==`, `::`, `..=`)
+    /// are single tokens so lints can match them directly.
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line `//...` or block `/*...*/`), anchored at the line it
+/// starts on. The text excludes the comment markers.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// The lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Multi-char operators, longest first so maximal munch works.
+const OPS: &[&str] = &[
+    "..=", "...", "<<=", ">>=", "==", "!=", "<=", ">=", "&&", "||", "::", "->", "=>", "..", "+=",
+    "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.src.get(self.pos).copied();
+        if let Some(c) = b {
+            self.pos += 1;
+            if c == b'\n' {
+                self.line += 1;
+            }
+        }
+        b
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.src[self.pos..].starts_with(s.as_bytes())
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex `src` into tokens and comments. Unterminated strings/comments are
+/// tolerated (the rest of the file becomes that literal/comment): the
+/// linter must degrade gracefully on any input rather than panic.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { src: src.as_bytes(), pos: 0, line: 1 };
+    let mut out = Lexed::default();
+    while let Some(c) = cur.peek(0) {
+        // whitespace
+        if c.is_ascii_whitespace() {
+            cur.bump();
+            continue;
+        }
+        // line comment (also doc comments /// and //!)
+        if c == b'/' && cur.peek(1) == Some(b'/') {
+            let line = cur.line;
+            cur.bump();
+            cur.bump();
+            let start = cur.pos;
+            while let Some(n) = cur.peek(0) {
+                if n == b'\n' {
+                    break;
+                }
+                cur.bump();
+            }
+            out.comments.push(Comment {
+                line,
+                text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+            });
+            continue;
+        }
+        // block comment, nesting-aware
+        if c == b'/' && cur.peek(1) == Some(b'*') {
+            let line = cur.line;
+            cur.bump();
+            cur.bump();
+            let start = cur.pos;
+            let mut depth = 1usize;
+            let mut end = cur.pos;
+            while let Some(n) = cur.peek(0) {
+                if n == b'/' && cur.peek(1) == Some(b'*') {
+                    depth += 1;
+                    cur.bump();
+                    cur.bump();
+                } else if n == b'*' && cur.peek(1) == Some(b'/') {
+                    depth -= 1;
+                    end = cur.pos;
+                    cur.bump();
+                    cur.bump();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    cur.bump();
+                }
+                end = cur.pos;
+            }
+            out.comments.push(Comment {
+                line,
+                text: String::from_utf8_lossy(&cur.src[start..end]).into_owned(),
+            });
+            continue;
+        }
+        // raw / byte strings: r"..", r#".."#, b"..", br#".."#
+        if (c == b'r' || c == b'b') && raw_string_ahead(&cur) {
+            lex_raw_or_byte_string(&mut cur, &mut out);
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let line = cur.line;
+            let start = cur.pos;
+            while cur.peek(0).is_some_and(is_ident_char) {
+                cur.bump();
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+                line,
+            });
+            continue;
+        }
+        // number literal
+        if c.is_ascii_digit() {
+            lex_number(&mut cur, &mut out);
+            continue;
+        }
+        // plain string
+        if c == b'"' {
+            let line = cur.line;
+            let start = cur.pos;
+            cur.bump();
+            while let Some(n) = cur.peek(0) {
+                if n == b'\\' {
+                    cur.bump();
+                    cur.bump();
+                } else if n == b'"' {
+                    cur.bump();
+                    break;
+                } else {
+                    cur.bump();
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+                line,
+            });
+            continue;
+        }
+        // char literal vs lifetime/label
+        if c == b'\'' {
+            lex_quote(&mut cur, &mut out);
+            continue;
+        }
+        // multi-char operators, maximal munch
+        if let Some(op) = OPS.iter().find(|op| cur.starts_with(op)) {
+            let line = cur.line;
+            for _ in 0..op.len() {
+                cur.bump();
+            }
+            out.toks.push(Tok { kind: TokKind::Punct, text: (*op).to_string(), line });
+            continue;
+        }
+        // single-char punctuation
+        let line = cur.line;
+        cur.bump();
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: (c as char).to_string(),
+            line,
+        });
+    }
+    out
+}
+
+/// Does the cursor sit on a raw/byte string opener (`r"`, `r#"`, `b"`,
+/// `br"`, `br#"`)? Called only when the current byte is `r` or `b`.
+fn raw_string_ahead(cur: &Cursor<'_>) -> bool {
+    let mut i = 1;
+    if cur.peek(0) == Some(b'b') && cur.peek(1) == Some(b'r') {
+        i = 2;
+    } else if cur.peek(0) == Some(b'b') {
+        // plain byte string b"..."
+        return cur.peek(1) == Some(b'"');
+    }
+    // r or br: allow hashes then a quote
+    let mut j = i;
+    while cur.peek(j) == Some(b'#') {
+        j += 1;
+    }
+    // `r` alone (i==1) with no hash and no quote is just an ident like `r`
+    cur.peek(j) == Some(b'"') && (j > i || i == 2 || cur.peek(0) == Some(b'r'))
+}
+
+fn lex_raw_or_byte_string(cur: &mut Cursor<'_>, out: &mut Lexed) {
+    let line = cur.line;
+    let start = cur.pos;
+    // consume prefix letters
+    while cur.peek(0).is_some_and(|c| c == b'r' || c == b'b') {
+        cur.bump();
+    }
+    let mut hashes = 0usize;
+    while cur.peek(0) == Some(b'#') {
+        hashes += 1;
+        cur.bump();
+    }
+    let raw = hashes > 0 || cur.src[start] == b'r' || cur.src.get(start + 1) == Some(&b'r');
+    cur.bump(); // opening quote
+    loop {
+        match cur.peek(0) {
+            None => break,
+            Some(b'\\') if !raw => {
+                cur.bump();
+                cur.bump();
+            }
+            Some(b'"') => {
+                cur.bump();
+                // need `hashes` trailing #s to close a raw string
+                let mut k = 0;
+                while k < hashes && cur.peek(0) == Some(b'#') {
+                    cur.bump();
+                    k += 1;
+                }
+                if k == hashes {
+                    break;
+                }
+            }
+            Some(_) => {
+                cur.bump();
+            }
+        }
+    }
+    out.toks.push(Tok {
+        kind: TokKind::Str,
+        text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+        line,
+    });
+}
+
+fn lex_number(cur: &mut Cursor<'_>, out: &mut Lexed) {
+    let line = cur.line;
+    let start = cur.pos;
+    let mut is_float = false;
+    if cur.starts_with("0x") || cur.starts_with("0o") || cur.starts_with("0b") {
+        cur.bump();
+        cur.bump();
+        while cur.peek(0).is_some_and(|c| c.is_ascii_alphanumeric() || c == b'_') {
+            cur.bump();
+        }
+    } else {
+        while cur.peek(0).is_some_and(|c| c.is_ascii_digit() || c == b'_') {
+            cur.bump();
+        }
+        // fractional part: a `.` NOT followed by another `.` (range) or an
+        // identifier start (method call / tuple field)
+        if cur.peek(0) == Some(b'.')
+            && cur.peek(1) != Some(b'.')
+            && !cur.peek(1).is_some_and(is_ident_start)
+        {
+            is_float = true;
+            cur.bump();
+            while cur.peek(0).is_some_and(|c| c.is_ascii_digit() || c == b'_') {
+                cur.bump();
+            }
+        }
+        // exponent
+        if cur.peek(0).is_some_and(|c| c == b'e' || c == b'E') {
+            let sign = usize::from(matches!(cur.peek(1), Some(b'+') | Some(b'-')));
+            if cur.peek(1 + sign).is_some_and(|c| c.is_ascii_digit()) {
+                is_float = true;
+                cur.bump();
+                if sign == 1 {
+                    cur.bump();
+                }
+                while cur.peek(0).is_some_and(|c| c.is_ascii_digit() || c == b'_') {
+                    cur.bump();
+                }
+            }
+        }
+        // type suffix (f64 marks a float even without `.`)
+        if cur.peek(0) == Some(b'f') {
+            is_float = true;
+        }
+        while cur.peek(0).is_some_and(is_ident_char) {
+            cur.bump();
+        }
+    }
+    out.toks.push(Tok {
+        kind: if is_float { TokKind::Float } else { TokKind::Int },
+        text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+        line,
+    });
+}
+
+fn lex_quote(cur: &mut Cursor<'_>, out: &mut Lexed) {
+    let line = cur.line;
+    let start = cur.pos;
+    cur.bump(); // the opening '
+    match cur.peek(0) {
+        // escape: definitely a char literal
+        Some(b'\\') => {
+            cur.bump();
+            while let Some(n) = cur.peek(0) {
+                cur.bump();
+                if n == b'\'' {
+                    break;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Char,
+                text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+                line,
+            });
+        }
+        // 'x' char vs 'ident lifetime
+        Some(c) if is_ident_start(c) => {
+            if cur.peek(1) == Some(b'\'') {
+                cur.bump();
+                cur.bump();
+                out.toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+                    line,
+                });
+            } else {
+                while cur.peek(0).is_some_and(is_ident_char) {
+                    cur.bump();
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+                    line,
+                });
+            }
+        }
+        // 'c' where c is punctuation: a char literal like '(' or ' '
+        Some(_) => {
+            cur.bump();
+            if cur.peek(0) == Some(b'\'') {
+                cur.bump();
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Char,
+                text: String::from_utf8_lossy(&cur.src[start..cur.pos]).into_owned(),
+                line,
+            });
+        }
+        None => out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: "'".to_string(),
+            line,
+        }),
+    }
+}
+
+/// Parse a Rust integer literal's value (`0x5eed`, `1_000`, `7u64`).
+pub fn int_value(text: &str) -> Option<u128> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let (digits, radix) = if let Some(h) = t.strip_prefix("0x") {
+        (h, 16)
+    } else if let Some(o) = t.strip_prefix("0o") {
+        (o, 8)
+    } else if let Some(b) = t.strip_prefix("0b") {
+        (b, 2)
+    } else {
+        (t.as_str(), 10)
+    };
+    // strip a type suffix (u8..u128, usize, i8..); hex digits are consumed
+    // greedily above, so only non-digit-led suffixes remain
+    let end = digits
+        .find(|c: char| !c.is_digit(radix))
+        .unwrap_or(digits.len());
+    if end == 0 {
+        return None;
+    }
+    u128::from_str_radix(&digits[..end], radix).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let out = lex("a /* b */ \"c == d\" // e\nf");
+        let idents: Vec<&str> = out
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["a", "f"]);
+        assert_eq!(out.comments.len(), 2);
+        assert_eq!(out.toks.last().map(|t| t.line), Some(2));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let out = lex("/* a /* b */ c */ x");
+        assert_eq!(out.toks.len(), 1);
+        assert_eq!(out.toks[0].text, "x");
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes() {
+        let out = lex(r####"let s = r#"a " b"# ; y"####);
+        let last = out.toks.last().map(|t| t.text.clone());
+        assert_eq!(last.as_deref(), Some("y"));
+        assert!(out.toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let ks = kinds("'a 'x' '\\n' 'outer");
+        assert_eq!(ks[0].0, TokKind::Lifetime);
+        assert_eq!(ks[1].0, TokKind::Char);
+        assert_eq!(ks[2].0, TokKind::Char);
+        assert_eq!(ks[3].0, TokKind::Lifetime);
+    }
+
+    #[test]
+    fn numbers_classify() {
+        let ks = kinds("1 2.5 0x5eed 1e9 3usize 4.0f64 1..3 v.0");
+        assert_eq!(ks[0].0, TokKind::Int);
+        assert_eq!(ks[1].0, TokKind::Float);
+        assert_eq!(ks[2].0, TokKind::Int);
+        assert_eq!(ks[3].0, TokKind::Float);
+        assert_eq!(ks[4].0, TokKind::Int);
+        assert_eq!(ks[5].0, TokKind::Float);
+        // 1..3 must lex as Int, Punct(..), Int — not floats
+        let range: Vec<&str> = ks[6..9].iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(range, ["1", "..", "3"]);
+        // v.0 is a tuple field access, not a float
+        assert_eq!(ks[10].1, ".");
+        assert_eq!(ks[11].0, TokKind::Int);
+    }
+
+    #[test]
+    fn multichar_ops_are_single_tokens() {
+        let ks = kinds("a == b != c :: d ..= e");
+        let ops: Vec<&str> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Punct)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(ops, ["==", "!=", "::", "..="]);
+    }
+
+    #[test]
+    fn int_values_parse() {
+        assert_eq!(int_value("0x5eed_5c4e_d011"), Some(0x5eed_5c4e_d011));
+        assert_eq!(int_value("1_000"), Some(1000));
+        assert_eq!(int_value("7u64"), Some(7));
+        assert_eq!(int_value("0b101"), Some(5));
+    }
+}

@@ -1,0 +1,724 @@
+//! The determinism lints themselves. Each lint is a function over a
+//! prepared [`FileCtx`] (or the whole file set, for cross-file rules)
+//! that appends [`Diagnostic`]s; allow-comment suppression and sorting
+//! happen once, in [`super::analyze`].
+//!
+//! These are token-pattern heuristics, not type-checked analyses — they
+//! are tuned to the conventions this codebase actually uses (see the
+//! table in the [`super`] docs) and err on the side of asking for an
+//! explicit `detlint: allow` with a reason when a site is intentional.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{int_value, TokKind};
+use super::{Diagnostic, FileCtx, FileRole, Lint};
+
+fn diag(lint: Lint, ctx: &FileCtx, line: u32, msg: String) -> Diagnostic {
+    Diagnostic { lint, path: ctx.path.clone(), line, msg }
+}
+
+/// Index of the `}` matching the `{` at `open` (or end-of-file for
+/// unbalanced input — the linter degrades gracefully, never panics).
+fn match_brace(ctx: &FileCtx, open: usize) -> usize {
+    let mut depth = 0isize;
+    let mut i = open;
+    while let Some(t) = ctx.at(i) {
+        if t.kind == TokKind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+        }
+        i += 1;
+    }
+    ctx.toks.len()
+}
+
+// ---------------------------------------------------------------- rng-stream-registry
+
+/// The crate's stream-base registry: every `const NAME: u64 = <int>;`
+/// declared inside a `mod streams { ... }` block of a `Src` file.
+pub(crate) struct Registry {
+    consts: BTreeMap<String, u128>,
+}
+
+impl Registry {
+    pub(crate) fn contains(&self, name: &str) -> bool {
+        self.consts.contains_key(name)
+    }
+
+    /// Collect registry rows, flagging two names that share one value —
+    /// that would correlate two "registered" streams, the exact failure
+    /// the registry exists to prevent.
+    pub(crate) fn extract(ctxs: &[FileCtx], diags: &mut Vec<Diagnostic>) -> Registry {
+        let mut consts: BTreeMap<String, u128> = BTreeMap::new();
+        let mut by_value: BTreeMap<u128, String> = BTreeMap::new();
+        for ctx in ctxs {
+            if ctx.role != FileRole::Src {
+                continue;
+            }
+            let mut i = 0;
+            while i < ctx.toks.len() {
+                if ctx.is_ident(i, "mod")
+                    && ctx.is_ident(i + 1, "streams")
+                    && ctx.is_punct(i + 2, "{")
+                {
+                    let end = match_brace(ctx, i + 2);
+                    scan_registry_consts(ctx, i + 3, end, &mut consts, &mut by_value, diags);
+                    i = end;
+                }
+                i += 1;
+            }
+        }
+        Registry { consts }
+    }
+}
+
+fn scan_registry_consts(
+    ctx: &FileCtx,
+    from: usize,
+    to: usize,
+    consts: &mut BTreeMap<String, u128>,
+    by_value: &mut BTreeMap<u128, String>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut j = from;
+    while j < to {
+        let shape = ctx.is_ident(j, "const")
+            && ctx.at(j + 1).is_some_and(|t| t.kind == TokKind::Ident)
+            && ctx.is_punct(j + 2, ":")
+            && ctx.is_ident(j + 3, "u64")
+            && ctx.is_punct(j + 4, "=")
+            && ctx.at(j + 5).is_some_and(|t| t.kind == TokKind::Int)
+            && ctx.is_punct(j + 6, ";");
+        if !shape {
+            j += 1;
+            continue;
+        }
+        let (Some(name), Some(val)) = (ctx.at(j + 1), ctx.at(j + 5)) else {
+            j += 1;
+            continue;
+        };
+        if let Some(v) = int_value(&val.text) {
+            if let Some(prev) = by_value.get(&v) {
+                if prev != &name.text {
+                    diags.push(diag(
+                        Lint::RngStreamRegistry,
+                        ctx,
+                        name.line,
+                        format!(
+                            "stream const `{}` duplicates the value of `{prev}`; registered \
+                             bases must be unique",
+                            name.text
+                        ),
+                    ));
+                }
+            } else {
+                by_value.insert(v, name.text.clone());
+            }
+            consts.insert(name.text.clone(), v);
+        }
+        j += 7;
+    }
+}
+
+enum BaseKind {
+    RawLiteral(String),
+    Named(String),
+    Dynamic,
+}
+
+fn classify_base(ctx: &FileCtx, arg: &[usize]) -> BaseKind {
+    if arg.len() == 1 {
+        if let Some(t) = arg.first().and_then(|&k| ctx.at(k)) {
+            if t.kind == TokKind::Int {
+                return BaseKind::RawLiteral(t.text.clone());
+            }
+        }
+    }
+    // a pure path (`streams::FOO_BASE`) ending in a SCREAMING_CASE ident
+    let pure_path = !arg.is_empty()
+        && arg.iter().all(|&k| {
+            ctx.at(k).is_some_and(|t| {
+                t.kind == TokKind::Ident || (t.kind == TokKind::Punct && t.text == "::")
+            })
+        });
+    if pure_path {
+        if let Some(last) = arg.last().and_then(|&k| ctx.at(k)) {
+            if last.kind == TokKind::Ident && is_screaming(&last.text) {
+                return BaseKind::Named(last.text.clone());
+            }
+        }
+    }
+    BaseKind::Dynamic
+}
+
+fn is_screaming(name: &str) -> bool {
+    name.chars().any(|c| c.is_ascii_uppercase())
+        && name.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Lint 1: every literal or named-const base handed to `Rng::stream`
+/// must come from the `rng::streams` registry. Computed (runtime) bases
+/// are out of scope — those are derived from registered draws already.
+pub(crate) fn rng_stream_registry(ctx: &FileCtx, reg: &Registry, diags: &mut Vec<Diagnostic>) {
+    if ctx.role == FileRole::Test {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        let call = ctx.is_ident(i, "Rng")
+            && ctx.is_punct(i + 1, "::")
+            && ctx.is_ident(i + 2, "stream")
+            && ctx.is_punct(i + 3, "(");
+        if !call || ctx.is_test(i) {
+            continue;
+        }
+        let Some(site) = ctx.at(i + 2) else { continue };
+        // the first argument: tokens up to `,` or `)` at nesting depth 0
+        let mut arg = Vec::new();
+        let mut depth = 0usize;
+        let mut j = i + 4;
+        while let Some(t) = ctx.at(j) {
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" if depth == 0 => break,
+                    ")" | "]" | "}" => depth -= 1,
+                    "," if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            arg.push(j);
+            j += 1;
+        }
+        match classify_base(ctx, &arg) {
+            BaseKind::RawLiteral(text) => diags.push(diag(
+                Lint::RngStreamRegistry,
+                ctx,
+                site.line,
+                format!(
+                    "raw literal stream base `{text}`; declare a named const in the \
+                     rng::streams registry"
+                ),
+            )),
+            BaseKind::Named(name) => {
+                if !reg.contains(&name) {
+                    diags.push(diag(
+                        Lint::RngStreamRegistry,
+                        ctx,
+                        site.line,
+                        format!(
+                            "stream base `{name}` is not declared in the rng::streams registry"
+                        ),
+                    ));
+                }
+            }
+            BaseKind::Dynamic => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------- hash-iter-determinism
+
+const HASH_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "into_iter",
+    "drain",
+    "retain",
+];
+
+/// Lint 2: no iteration over `HashMap`/`HashSet` outside test code.
+/// Hash containers are fine as lookup tables (`get`/`insert`/`contains`);
+/// the moment their order is observed, determinism is host-dependent.
+pub(crate) fn hash_iter_determinism(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    if ctx.role == FileRole::Test {
+        return;
+    }
+    let n = ctx.toks.len();
+    // pass 1: names bound or typed as hash containers
+    let mut hashed: BTreeSet<&str> = BTreeSet::new();
+    for i in 0..n {
+        let Some(t) = ctx.at(i) else { continue };
+        if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        // `name: [&] [mut] ['a] HashMap<..>` — params, fields, annotated lets
+        let mut k = i;
+        while k > 0
+            && (ctx.is_punct(k - 1, "&")
+                || ctx.is_ident(k - 1, "mut")
+                || ctx.at(k - 1).is_some_and(|p| p.kind == TokKind::Lifetime))
+        {
+            k -= 1;
+        }
+        if k >= 2 && ctx.is_punct(k - 1, ":") {
+            if let Some(name) = ctx.at(k - 2) {
+                if name.kind == TokKind::Ident {
+                    hashed.insert(&name.text);
+                }
+            }
+        }
+    }
+    // `let [mut] name = ... HashMap/HashSet ... ;`
+    for i in 0..n {
+        if !ctx.is_ident(i, "let") {
+            continue;
+        }
+        let mut j = i + 1;
+        if ctx.is_ident(j, "mut") {
+            j += 1;
+        }
+        let Some(name) = ctx.at(j) else { continue };
+        if name.kind != TokKind::Ident {
+            continue;
+        }
+        let mut depth = 0isize;
+        let mut k = j + 1;
+        let mut mentions_hash = false;
+        while let Some(t) = ctx.at(k) {
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" if depth == 0 => break,
+                    ")" | "]" | "}" => depth -= 1,
+                    ";" if depth == 0 => break,
+                    _ => {}
+                }
+            } else if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+                mentions_hash = true;
+            }
+            k += 1;
+        }
+        if mentions_hash {
+            hashed.insert(&name.text);
+        }
+    }
+    // pass 2: order-observing uses of those names
+    for i in 0..n {
+        if ctx.is_test(i) {
+            continue;
+        }
+        let Some(t) = ctx.at(i) else { continue };
+        if t.kind == TokKind::Ident
+            && hashed.contains(t.text.as_str())
+            && ctx.is_punct(i + 1, ".")
+            && ctx.is_punct(i + 3, "(")
+        {
+            if let Some(m) = ctx.at(i + 2) {
+                if m.kind == TokKind::Ident && HASH_ITER_METHODS.contains(&m.text.as_str()) {
+                    diags.push(diag(
+                        Lint::HashIterDeterminism,
+                        ctx,
+                        t.line,
+                        format!(
+                            "`{}.{}()` observes hash order on a deterministic path; use \
+                             BTreeMap/BTreeSet or sort the keys first",
+                            t.text, m.text
+                        ),
+                    ));
+                    continue;
+                }
+            }
+        }
+        // `for pat in [&] [mut] name { .. }`
+        if ctx.is_ident(i, "in") && (i.saturating_sub(12)..i).any(|k| ctx.is_ident(k, "for")) {
+            let mut j = i + 1;
+            while ctx.is_punct(j, "&") || ctx.is_ident(j, "mut") {
+                j += 1;
+            }
+            if let Some(name) = ctx.at(j) {
+                if name.kind == TokKind::Ident
+                    && hashed.contains(name.text.as_str())
+                    && ctx.is_punct(j + 1, "{")
+                {
+                    diags.push(diag(
+                        Lint::HashIterDeterminism,
+                        ctx,
+                        name.line,
+                        format!(
+                            "`for .. in {}` iterates a hash-ordered container on a \
+                             deterministic path; use BTreeMap/BTreeSet or sort first",
+                            name.text
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- float-discipline
+
+const INT_CAST_TARGETS: &[&str] = &["u64", "i64", "u32", "i32", "usize", "isize"];
+const FLOAT_CONSTS: &[&str] = &["NAN", "INFINITY", "NEG_INFINITY"];
+
+/// Lint 3: float hygiene on deterministic paths — no `==`/`!=` against
+/// float literals or `f64::NAN`-style consts (bit-identity goes through
+/// `to_bits()`), no float→int `as` casts of time-like values (event
+/// ordering must be total), and no `/ xs.len() as f64` without an
+/// emptiness guard (NaN minted into a metric poisons every downstream
+/// aggregate silently).
+pub(crate) fn float_discipline(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    if ctx.role == FileRole::Test {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        if ctx.is_test(i) {
+            continue;
+        }
+        let Some(t) = ctx.at(i) else { continue };
+        // (a) float equality
+        if t.kind == TokKind::Punct && (t.text == "==" || t.text == "!=") {
+            let floaty = |j: usize| {
+                ctx.at(j).is_some_and(|s| {
+                    s.kind == TokKind::Float
+                        || (s.kind == TokKind::Ident && FLOAT_CONSTS.contains(&s.text.as_str()))
+                })
+            };
+            let float_path = ctx
+                .at(i + 1)
+                .is_some_and(|s| s.kind == TokKind::Ident && (s.text == "f64" || s.text == "f32"))
+                && ctx.is_punct(i + 2, "::");
+            if (i > 0 && floaty(i - 1)) || floaty(i + 1) || float_path {
+                diags.push(diag(
+                    Lint::FloatDiscipline,
+                    ctx,
+                    t.line,
+                    format!(
+                        "`{}` against a float; compare bit patterns via to_bits() or use an \
+                         explicit tolerance",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        // (b) float -> int `as` cast of a time-like value
+        let int_cast = ctx.at(i + 1).is_some_and(|s| {
+            s.kind == TokKind::Ident && INT_CAST_TARGETS.contains(&s.text.as_str())
+        });
+        if t.kind == TokKind::Ident && t.text == "as" && int_cast && i > 0 {
+            if let Some(prev) = ctx.at(i - 1) {
+                let time_like = prev.kind == TokKind::Ident && {
+                    let x = prev.text.as_str();
+                    x.ends_with("_s")
+                        || x.ends_with("_secs")
+                        || x.ends_with("_sec")
+                        || x == "now"
+                        || x == "dt"
+                };
+                if prev.kind == TokKind::Float || time_like {
+                    diags.push(diag(
+                        Lint::FloatDiscipline,
+                        ctx,
+                        t.line,
+                        format!(
+                            "float-to-int `as` cast of `{}`; event ordering must go through \
+                             to_bits() or an explicit, documented rounding",
+                            prev.text
+                        ),
+                    ));
+                }
+            }
+        }
+        // (c) unguarded `/ xs.len() as f64`
+        if t.kind == TokKind::Punct && t.text == "/" {
+            let mut j = i + 1;
+            if ctx.is_punct(j, "(") {
+                j += 1;
+            }
+            let mut hops = 0;
+            while hops < 6
+                && !ctx.is_ident(j, "len")
+                && ctx.at(j).is_some_and(|s| s.kind == TokKind::Ident)
+                && ctx.is_punct(j + 1, ".")
+            {
+                j += 2;
+                hops += 1;
+            }
+            if ctx.is_ident(j, "len") && ctx.is_punct(j + 1, "(") && ctx.is_punct(j + 2, ")") {
+                let mut k = j + 3;
+                if ctx.is_punct(k, ")") {
+                    k += 1;
+                }
+                let cast = ctx.is_ident(k, "as")
+                    && (ctx.is_ident(k + 1, "f64") || ctx.is_ident(k + 1, "f32"));
+                let guarded = (i.saturating_sub(100)..i).any(|g| {
+                    ctx.is_ident(g, "is_empty")
+                        || (ctx.is_ident(g, "max")
+                            && ctx.is_punct(g + 1, "(")
+                            && ctx.at(g + 2).is_some_and(|s| s.kind == TokKind::Int))
+                });
+                if cast && !guarded {
+                    diags.push(diag(
+                        Lint::FloatDiscipline,
+                        ctx,
+                        t.line,
+                        "division by `.len() as f64` without an emptiness guard can mint NaN \
+                         into metrics; check is_empty() or clamp with `.max(1)`"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- panic-policy
+
+const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Lint 4: `unwrap`/`expect`/`panic!`-family calls in `rust/src`
+/// non-test code must either become typed `Error`s or carry an adjacent
+/// `// invariant:` comment stating why the failure is impossible.
+pub(crate) fn panic_policy(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    if ctx.role != FileRole::Src {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        if ctx.is_test(i) {
+            continue;
+        }
+        let Some(t) = ctx.at(i) else { continue };
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let method = i > 0
+            && ctx.is_punct(i - 1, ".")
+            && PANIC_METHODS.contains(&t.text.as_str())
+            && ctx.is_punct(i + 1, "(");
+        let mac = PANIC_MACROS.contains(&t.text.as_str()) && ctx.is_punct(i + 1, "!");
+        if !(method || mac) {
+            continue;
+        }
+        if ctx.invariant_justified(t.line) {
+            continue;
+        }
+        let what = if mac { format!("{}!", t.text) } else { format!(".{}()", t.text) };
+        diags.push(diag(
+            Lint::PanicPolicy,
+            ctx,
+            t.line,
+            format!(
+                "`{what}` on a library path; return a typed Error or add an adjacent \
+                 `// invariant:` comment stating why it cannot fire"
+            ),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------- dense-reference-pairing
+
+fn oracle_name(name: &str) -> bool {
+    if name.starts_with("is_") || name.starts_with("has_") {
+        return false;
+    }
+    name.ends_with("_reference") || name.ends_with("_scan") || name.ends_with("_dense")
+}
+
+/// Lint 5 (cross-file): every `*_reference`/`*_scan`/`*_dense` function
+/// defined in `Src` non-test code must be named by at least one test or
+/// bench. These functions exist as bit-identity oracles for optimized
+/// paths; an unexercised oracle rots silently.
+pub(crate) fn dense_reference_pairing(ctxs: &[FileCtx], diags: &mut Vec<Diagnostic>) {
+    let mut defs: Vec<(&FileCtx, usize)> = Vec::new();
+    for ctx in ctxs {
+        if ctx.role != FileRole::Src {
+            continue;
+        }
+        for i in 0..ctx.toks.len() {
+            if !ctx.is_ident(i, "fn") || ctx.is_test(i + 1) {
+                continue;
+            }
+            let Some(name) = ctx.at(i + 1) else { continue };
+            if name.kind == TokKind::Ident && oracle_name(&name.text) {
+                defs.push((ctx, i + 1));
+            }
+        }
+    }
+    if defs.is_empty() {
+        return;
+    }
+    let mut referenced: BTreeSet<&str> = BTreeSet::new();
+    for ctx in ctxs {
+        for i in 0..ctx.toks.len() {
+            let Some(t) = ctx.at(i) else { continue };
+            if t.kind != TokKind::Ident || !oracle_name(&t.text) {
+                continue;
+            }
+            let in_test_ctx =
+                matches!(ctx.role, FileRole::Test | FileRole::Bench) || ctx.is_test(i);
+            let is_def = i > 0 && ctx.is_ident(i - 1, "fn");
+            if in_test_ctx && !is_def {
+                referenced.insert(&t.text);
+            }
+        }
+    }
+    for (ctx, idx) in defs {
+        let Some(name) = ctx.at(idx) else { continue };
+        if referenced.contains(name.text.as_str()) {
+            continue;
+        }
+        diags.push(diag(
+            Lint::DenseReferencePairing,
+            ctx,
+            name.line,
+            format!(
+                "reference implementation `{}` is not exercised by any test or bench; \
+                 bit-identity oracles must stay paired with a consumer",
+                name.text
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::{analyze, FileRole, Lint, SourceFile};
+    use std::path::PathBuf;
+
+    fn file(role: FileRole, text: &str) -> SourceFile {
+        SourceFile { path: PathBuf::from("t.rs"), role, text: text.to_string() }
+    }
+
+    fn lints_of(files: &[SourceFile]) -> Vec<(Lint, u32)> {
+        analyze(files).into_iter().map(|d| (d.lint, d.line)).collect()
+    }
+
+    #[test]
+    fn rng_raw_literal_and_unregistered_const_flagged() {
+        let src = "mod streams { pub const A_BASE: u64 = 7; }\n\
+                   fn f(i: u64) { let _ = Rng::stream(0x99, i); }\n\
+                   fn g(i: u64) { let _ = Rng::stream(OTHER_BASE, i); }\n\
+                   fn h(i: u64) { let _ = Rng::stream(streams::A_BASE, i); }\n\
+                   fn k(b: u64, i: u64) { let _ = Rng::stream(b, i); }";
+        let got = lints_of(&[file(FileRole::Src, src)]);
+        assert_eq!(got, [(Lint::RngStreamRegistry, 2), (Lint::RngStreamRegistry, 3)]);
+    }
+
+    #[test]
+    fn rng_duplicate_registry_values_flagged() {
+        let src = "mod streams {\n\
+                   pub const A_BASE: u64 = 7;\n\
+                   pub const B_BASE: u64 = 0x7;\n\
+                   }";
+        let got = lints_of(&[file(FileRole::Src, src)]);
+        assert_eq!(got, [(Lint::RngStreamRegistry, 3)]);
+    }
+
+    #[test]
+    fn hash_iteration_flagged_lookup_clean() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u64, u64>) -> u64 {\n\
+                   let mut s = 0;\n\
+                   for (_k, v) in m.iter() { s += v; }\n\
+                   s + m.get(&0).copied().unwrap_or(0)\n\
+                   }";
+        let got = lints_of(&[file(FileRole::Bench, src)]);
+        assert_eq!(got, [(Lint::HashIterDeterminism, 4)]);
+    }
+
+    #[test]
+    fn hash_for_loop_over_binding_flagged() {
+        let src = "fn f() {\n\
+                   let mut set = std::collections::HashSet::new();\n\
+                   set.insert(1u64);\n\
+                   for x in &set { let _ = x; }\n\
+                   }";
+        let got = lints_of(&[file(FileRole::Src, src)]);
+        assert_eq!(got, [(Lint::HashIterDeterminism, 4)]);
+    }
+
+    #[test]
+    fn btree_iteration_is_clean() {
+        let src = "use std::collections::BTreeMap;\n\
+                   fn f(m: &BTreeMap<u64, u64>) -> u64 { m.values().sum() }";
+        assert!(lints_of(&[file(FileRole::Src, src)]).is_empty());
+    }
+
+    #[test]
+    fn float_equality_flagged() {
+        let src = "fn f(x: f64) -> bool { x == 0.5 }\n\
+                   fn g(x: f64) -> bool { x != f64::NAN }\n\
+                   fn h(x: f64, y: f64) -> bool { x.to_bits() == y.to_bits() }";
+        let got = lints_of(&[file(FileRole::Src, src)]);
+        assert_eq!(got, [(Lint::FloatDiscipline, 1), (Lint::FloatDiscipline, 2)]);
+    }
+
+    #[test]
+    fn unguarded_len_division_flagged_guarded_clean() {
+        let bad = "fn mean(xs: &[f64]) -> f64 { xs.iter().sum::<f64>() / xs.len() as f64 }";
+        let got = lints_of(&[file(FileRole::Src, bad)]);
+        assert_eq!(got, [(Lint::FloatDiscipline, 1)]);
+        let good = "fn mean(xs: &[f64]) -> f64 {\n\
+                    if xs.is_empty() { return 0.0; }\n\
+                    xs.iter().sum::<f64>() / xs.len() as f64\n\
+                    }";
+        assert!(lints_of(&[file(FileRole::Src, good)]).is_empty());
+    }
+
+    #[test]
+    fn time_like_float_cast_flagged() {
+        let src = "fn f(arrival_s: f64) -> u64 { arrival_s as u64 }";
+        let got = lints_of(&[file(FileRole::Src, src)]);
+        assert_eq!(got, [(Lint::FloatDiscipline, 1)]);
+    }
+
+    #[test]
+    fn panic_needs_invariant_justification() {
+        let bad = "fn f(v: &[u64]) -> u64 { *v.first().unwrap() }";
+        let got = lints_of(&[file(FileRole::Src, bad)]);
+        assert_eq!(got, [(Lint::PanicPolicy, 1)]);
+        let good = "fn f(v: &[u64]) -> u64 {\n\
+                    // invariant: callers pass non-empty slices (checked in new())\n\
+                    *v.first().unwrap()\n\
+                    }";
+        assert!(lints_of(&[file(FileRole::Src, good)]).is_empty());
+    }
+
+    #[test]
+    fn panic_policy_is_src_only() {
+        let src = "fn f(v: &[u64]) -> u64 { *v.first().unwrap() }";
+        assert!(lints_of(&[file(FileRole::Bench, src)]).is_empty());
+        assert!(lints_of(&[file(FileRole::Example, src)]).is_empty());
+    }
+
+    #[test]
+    fn unpaired_oracle_flagged_paired_clean() {
+        let bad = "pub fn cost_reference(x: u64) -> u64 { x }";
+        let got = lints_of(&[file(FileRole::Src, bad)]);
+        assert_eq!(got, [(Lint::DenseReferencePairing, 1)]);
+        let good = "pub fn cost_reference(x: u64) -> u64 { x }\n\
+                    #[cfg(test)]\n\
+                    mod tests {\n\
+                    #[test]\n\
+                    fn t() { assert_eq!(super::cost_reference(1), 1); }\n\
+                    }";
+        assert!(lints_of(&[file(FileRole::Src, good)]).is_empty());
+    }
+
+    #[test]
+    fn oracle_referenced_from_separate_test_file_is_clean() {
+        let src = file(FileRole::Src, "pub fn cost_reference(x: u64) -> u64 { x }");
+        let mut test = file(FileRole::Test, "fn t() { let _ = cost_reference(1); }");
+        test.path = PathBuf::from("tests.rs");
+        assert!(lints_of(&[src, test]).is_empty());
+    }
+
+    #[test]
+    fn predicate_suffixes_are_not_oracles() {
+        let src = "pub fn is_dense(x: u64) -> bool { x > 0 }\n\
+                   pub fn has_scan(x: u64) -> bool { x > 0 }";
+        assert!(lints_of(&[file(FileRole::Src, src)]).is_empty());
+    }
+}

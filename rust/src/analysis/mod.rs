@@ -1,0 +1,643 @@
+//! `detlint` — the project's determinism & invariant static-analysis pass.
+//!
+//! Every headline number in this reproduction rests on hand-maintained
+//! conventions: `Rng::stream` bases must never collide, deterministic
+//! paths must never iterate a hash map, float bit-identity must go through
+//! `to_bits`, library panics must be documented invariants, and every
+//! dense/reference implementation must stay paired with a test that proves
+//! the optimized path bit-identical. None of that is checked by `rustc` or
+//! clippy — so this module checks it. It is a project-specific lint pass:
+//! a lightweight token scanner ([`lexer`]) plus a small engine that walks
+//! `rust/src`, `rust/tests`, `benches/`, and `examples/` and reports typed
+//! `file:line` diagnostics. Zero dependencies, like the rest of the crate.
+//!
+//! Run it as `repro lint` (the required `detlint` CI job) or call
+//! [`analyze_tree`] directly. Suppress a finding with an in-source
+//! comment naming the lint *and* a reason:
+//!
+//! ```text
+//! // detlint: allow(float-discipline, exact-zero sentinel for "no traffic")
+//! ```
+//!
+//! The lints (see [`Lint`] and [`lints`] for the precise rules):
+//!
+//! | lint | invariant it guards |
+//! |------|---------------------|
+//! | `rng-stream-registry` | every literal/const `Rng::stream` base is declared (and unique) in `rng::streams::STREAM_BASES` |
+//! | `hash-iter-determinism` | no iteration over `HashMap`/`HashSet` on deterministic paths |
+//! | `float-discipline` | no `==`/`!=` against float literals, no float→int `as` casts of time-like values, no unguarded `/ len()` aggregates |
+//! | `panic-policy` | `unwrap`/`expect`/`panic!` in `rust/src` non-test code carries a `// invariant:` justification |
+//! | `dense-reference-pairing` | every `*_reference`/`*_scan`/`*_dense` fn is exercised by a test or bench |
+//! | `allow-syntax` | suppression comments are well-formed (known lint, non-empty reason) |
+//!
+//! ```
+//! use tofa::analysis::{analyze, FileRole, SourceFile};
+//! let f = SourceFile {
+//!     path: "demo.rs".into(),
+//!     role: FileRole::Src,
+//!     text: "fn f(v: &[f64]) -> bool { v[0] == 0.5 }".to_string(),
+//! };
+//! let diags = analyze(&[f]);
+//! assert_eq!(diags.len(), 1);
+//! assert_eq!(diags[0].lint.name(), "float-discipline");
+//! ```
+
+pub mod lexer;
+pub mod lints;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::report::bench::JsonValue;
+use lexer::{lex, Comment, Tok, TokKind};
+
+/// The determinism lints. `allow-syntax` is the engine's own hygiene
+/// check: a malformed suppression comment would otherwise silently
+/// suppress nothing (or the wrong thing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lint {
+    RngStreamRegistry,
+    HashIterDeterminism,
+    FloatDiscipline,
+    PanicPolicy,
+    DenseReferencePairing,
+    AllowSyntax,
+}
+
+impl Lint {
+    /// The kebab-case name used in diagnostics and allow comments.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::RngStreamRegistry => "rng-stream-registry",
+            Lint::HashIterDeterminism => "hash-iter-determinism",
+            Lint::FloatDiscipline => "float-discipline",
+            Lint::PanicPolicy => "panic-policy",
+            Lint::DenseReferencePairing => "dense-reference-pairing",
+            Lint::AllowSyntax => "allow-syntax",
+        }
+    }
+
+    /// All lints, in reporting order.
+    pub fn all() -> [Lint; 6] {
+        [
+            Lint::RngStreamRegistry,
+            Lint::HashIterDeterminism,
+            Lint::FloatDiscipline,
+            Lint::PanicPolicy,
+            Lint::DenseReferencePairing,
+            Lint::AllowSyntax,
+        ]
+    }
+
+    /// Parse a lint name as written in an allow comment.
+    pub fn parse(name: &str) -> Option<Lint> {
+        Lint::all().into_iter().find(|l| l.name() == name)
+    }
+}
+
+impl fmt::Display for Lint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What kind of code a file holds — decides which lints apply where.
+/// `Test` code is exempt from most rules (tests may iterate hash maps,
+/// unwrap freely, and pin literal stream bases); `Bench` and `Example`
+/// code runs on deterministic paths and is held to `Src` rules except for
+/// the panic policy (a bench aborting loudly is fine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileRole {
+    Src,
+    Test,
+    Bench,
+    Example,
+}
+
+impl FileRole {
+    fn parse(s: &str) -> Option<FileRole> {
+        match s {
+            "src" => Some(FileRole::Src),
+            "test" => Some(FileRole::Test),
+            "bench" => Some(FileRole::Bench),
+            "example" => Some(FileRole::Example),
+            _ => None,
+        }
+    }
+}
+
+/// One source file queued for analysis.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub path: PathBuf,
+    pub role: FileRole,
+    pub text: String,
+}
+
+/// One lint finding at a `file:line`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub lint: Lint,
+    pub path: PathBuf,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path.display(),
+            self.line,
+            self.lint.name(),
+            self.msg
+        )
+    }
+}
+
+/// A prepared (lexed + annotated) file, shared by all lints.
+pub(crate) struct FileCtx {
+    pub path: PathBuf,
+    pub role: FileRole,
+    pub toks: Vec<Tok>,
+    /// Per-token: inside a `#[cfg(test)]` item.
+    pub test_mask: Vec<bool>,
+    /// Lines that carry at least one non-comment token.
+    pub token_lines: BTreeSet<u32>,
+    /// Line -> concatenated comment text for that line.
+    pub comment_text: BTreeMap<u32, String>,
+    /// Line -> lint names suppressed by a well-formed allow comment.
+    pub allows: BTreeMap<u32, Vec<&'static str>>,
+}
+
+impl FileCtx {
+    /// Token at `i`, if in range.
+    pub fn at(&self, i: usize) -> Option<&Tok> {
+        self.toks.get(i)
+    }
+
+    /// Is token `i` the given punctuation/operator?
+    pub fn is_punct(&self, i: usize, p: &str) -> bool {
+        self.at(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == p)
+    }
+
+    /// Is token `i` the given identifier?
+    pub fn is_ident(&self, i: usize, name: &str) -> bool {
+        self.at(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == name)
+    }
+
+    /// Non-test at token index (whole file for `Test` roles).
+    pub fn is_test(&self, i: usize) -> bool {
+        self.role == FileRole::Test || self.test_mask.get(i).copied().unwrap_or(false)
+    }
+
+    /// Does the comment block justify a panic at `line`? True when a
+    /// comment containing `invariant:` sits on the same line or in the
+    /// contiguous comment-only block directly above it.
+    pub fn invariant_justified(&self, line: u32) -> bool {
+        if self.comment_has(line, "invariant:") {
+            return true;
+        }
+        let mut l = line.saturating_sub(1);
+        while l > 0 && self.comment_text.contains_key(&l) && !self.token_lines.contains(&l) {
+            if self.comment_has(l, "invariant:") {
+                return true;
+            }
+            l -= 1;
+        }
+        false
+    }
+
+    fn comment_has(&self, line: u32, needle: &str) -> bool {
+        self.comment_text.get(&line).is_some_and(|t| t.contains(needle))
+    }
+}
+
+/// Marker comment that pins a fixture file's role regardless of its path:
+/// `// detlint-fixture: role=src`. Committed lint fixtures live under
+/// `rust/tests/data/lint/` (a path that would otherwise classify as test
+/// code and exempt them from everything).
+const ROLE_MARKER: &str = "detlint-fixture: role=";
+
+fn prepare(file: &SourceFile, diags: &mut Vec<Diagnostic>) -> FileCtx {
+    let lexer::Lexed { toks, comments } = lex(&file.text);
+    let mut role = file.role;
+    let mut token_lines = BTreeSet::new();
+    for t in &toks {
+        token_lines.insert(t.line);
+    }
+    let mut comment_text: BTreeMap<u32, String> = BTreeMap::new();
+    let mut allows: BTreeMap<u32, Vec<&'static str>> = BTreeMap::new();
+    for c in &comments {
+        if let Some(rest) = c.text.trim().strip_prefix(ROLE_MARKER) {
+            if let Some(r) = FileRole::parse(rest.trim()) {
+                role = r;
+            }
+        }
+        parse_allows(c, &file.path, &mut allows, diags);
+        comment_text
+            .entry(c.line)
+            .and_modify(|t| {
+                t.push(' ');
+                t.push_str(&c.text);
+            })
+            .or_insert_with(|| c.text.clone());
+    }
+    let test_mask = cfg_test_mask(&toks);
+    FileCtx {
+        path: file.path.clone(),
+        role,
+        toks,
+        test_mask,
+        token_lines,
+        comment_text,
+        allows,
+    }
+}
+
+/// Parse every `detlint: allow(<lint>, <reason>)` occurrence in a comment.
+/// Malformed allows (unknown lint, missing reason, unclosed paren) become
+/// `allow-syntax` diagnostics — a suppression that silently fails to
+/// suppress is worse than none.
+fn parse_allows(
+    c: &Comment,
+    path: &Path,
+    allows: &mut BTreeMap<u32, Vec<&'static str>>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    const KEY: &str = "detlint: allow(";
+    let mut rest = c.text.as_str();
+    while let Some(pos) = rest.find(KEY) {
+        let inner = &rest[pos + KEY.len()..];
+        let Some(close) = inner.find(')') else {
+            diags.push(Diagnostic {
+                lint: Lint::AllowSyntax,
+                path: path.to_path_buf(),
+                line: c.line,
+                msg: "unclosed `detlint: allow(`".to_string(),
+            });
+            return;
+        };
+        let body = &inner[..close];
+        match body.split_once(',') {
+            Some((name, reason)) if !reason.trim().is_empty() => match Lint::parse(name.trim()) {
+                Some(lint) => allows.entry(c.line).or_default().push(lint.name()),
+                None => diags.push(Diagnostic {
+                    lint: Lint::AllowSyntax,
+                    path: path.to_path_buf(),
+                    line: c.line,
+                    msg: format!("unknown lint `{}` in allow comment", name.trim()),
+                }),
+            },
+            _ => diags.push(Diagnostic {
+                lint: Lint::AllowSyntax,
+                path: path.to_path_buf(),
+                line: c.line,
+                msg: format!("allow comment needs a reason: `allow({body}, <why>)`"),
+            }),
+        }
+        rest = &inner[close..];
+    }
+}
+
+/// Mark every token inside a `#[cfg(test)]` item (attribute through the
+/// item's closing brace or trailing semicolon).
+fn cfg_test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let is = |i: usize, p: &str| -> bool {
+        toks.get(i).is_some_and(|t| {
+            (t.kind == TokKind::Punct || t.kind == TokKind::Ident) && t.text == p
+        })
+    };
+    let mut i = 0;
+    while i < toks.len() {
+        let attr = is(i, "#")
+            && is(i + 1, "[")
+            && is(i + 2, "cfg")
+            && is(i + 3, "(")
+            && is(i + 4, "test")
+            && is(i + 5, ")")
+            && is(i + 6, "]");
+        if !attr {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + 7;
+        // skip any further attributes on the same item
+        while is(j, "#") && is(j + 1, "[") {
+            let mut depth = 0usize;
+            let mut k = j + 1;
+            while k < toks.len() {
+                if is(k, "[") {
+                    depth += 1;
+                } else if is(k, "]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            j = k + 1;
+        }
+        // first `{` (item body) or `;` (braceless item) at bracket depth 0
+        let mut depth = 0isize;
+        let mut body = None;
+        let mut k = j;
+        while k < toks.len() {
+            if is(k, "(") || is(k, "[") {
+                depth += 1;
+            } else if is(k, ")") || is(k, "]") {
+                depth -= 1;
+            } else if depth == 0 && is(k, "{") {
+                body = Some(k);
+                break;
+            } else if depth == 0 && is(k, ";") {
+                break;
+            }
+            k += 1;
+        }
+        let end = match body {
+            Some(open) => {
+                let mut braces = 0isize;
+                let mut m = open;
+                while m < toks.len() {
+                    if is(m, "{") {
+                        braces += 1;
+                    } else if is(m, "}") {
+                        braces -= 1;
+                        if braces == 0 {
+                            break;
+                        }
+                    }
+                    m += 1;
+                }
+                m
+            }
+            None => k,
+        };
+        for slot in mask.iter_mut().take((end + 1).min(toks.len())).skip(start) {
+            *slot = true;
+        }
+        i = j.max(i + 7);
+    }
+    mask
+}
+
+/// Analyze an explicit file set. This is the engine entry the tests use;
+/// [`analyze_tree`] wraps it with the repo's directory layout. Returned
+/// diagnostics are sorted by `(path, line, lint)` and already filtered
+/// through allow-comment suppression.
+pub fn analyze(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let ctxs: Vec<FileCtx> = files.iter().map(|f| prepare(f, &mut diags)).collect();
+    let registry = lints::Registry::extract(&ctxs, &mut diags);
+    for ctx in &ctxs {
+        lints::rng_stream_registry(ctx, &registry, &mut diags);
+        lints::hash_iter_determinism(ctx, &mut diags);
+        lints::float_discipline(ctx, &mut diags);
+        lints::panic_policy(ctx, &mut diags);
+    }
+    lints::dense_reference_pairing(&ctxs, &mut diags);
+    // allow-comment suppression: same line or the line directly above
+    let suppressed = |d: &Diagnostic| -> bool {
+        if d.lint == Lint::AllowSyntax {
+            return false;
+        }
+        ctxs.iter().filter(|c| c.path == d.path).any(|c| {
+            [d.line, d.line.saturating_sub(1)]
+                .iter()
+                .any(|l| c.allows.get(l).is_some_and(|v| v.contains(&d.lint.name())))
+        })
+    };
+    diags.retain(|d| !suppressed(d));
+    diags.sort_by(|a, b| {
+        (&a.path, a.line, a.lint.name()).cmp(&(&b.path, b.line, b.lint.name()))
+    });
+    diags
+}
+
+/// The directories `analyze_tree` walks, with the role their files get.
+/// `rust/tests/data` is excluded: committed lint fixtures are violating
+/// on purpose.
+const TREE: &[(&str, FileRole)] = &[
+    ("rust/src", FileRole::Src),
+    ("rust/tests", FileRole::Test),
+    ("benches", FileRole::Bench),
+    ("examples", FileRole::Example),
+];
+
+/// Walk the repo layout under `root` and analyze every `.rs` file.
+pub fn analyze_tree(root: &Path) -> Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    for (dir, role) in TREE {
+        let base = root.join(dir);
+        if base.is_dir() {
+            collect_rs(&base, *role, &mut files)?;
+        }
+    }
+    // report repo-relative paths so diagnostics are stable across machines
+    for f in &mut files {
+        if let Ok(rel) = f.path.strip_prefix(root) {
+            f.path = rel.to_path_buf();
+        }
+    }
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(analyze(&files))
+}
+
+fn collect_rs(dir: &Path, role: FileRole, out: &mut Vec<SourceFile>) -> Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            // fixtures under tests/data are violating on purpose
+            if path.file_name().is_some_and(|n| n == "data") {
+                continue;
+            }
+            collect_rs(&path, role, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let text = std::fs::read_to_string(&path)?;
+            out.push(SourceFile { path, role, text });
+        }
+    }
+    Ok(())
+}
+
+/// Load one explicit path (file or directory) with a role inferred from
+/// its path segments, overridable by a `detlint-fixture: role=` marker.
+fn load_path(path: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    if path.is_dir() {
+        let role = infer_role(path);
+        return collect_rs(path, role, out);
+    }
+    let text = std::fs::read_to_string(path)?;
+    out.push(SourceFile { path: path.to_path_buf(), role: infer_role(path), text });
+    Ok(())
+}
+
+fn infer_role(path: &Path) -> FileRole {
+    let has = |seg: &str| path.iter().any(|c| c == seg);
+    if has("benches") {
+        FileRole::Bench
+    } else if has("examples") {
+        FileRole::Example
+    } else if has("tests") {
+        FileRole::Test
+    } else {
+        FileRole::Src
+    }
+}
+
+/// `repro lint [--format=json] [--root=<dir>] [paths...]` — returns the
+/// process exit code: 0 clean, 1 diagnostics reported, 2 bad usage / IO.
+pub fn run_cli(args: &[String]) -> i32 {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for a in args {
+        if a == "--format=json" {
+            json = true;
+        } else if a == "--format=text" {
+            json = false;
+        } else if let Some(v) = a.strip_prefix("--root=") {
+            root = Some(PathBuf::from(v));
+        } else if a.starts_with("--") {
+            eprintln!("error: unknown lint option: {a}");
+            return 2;
+        } else {
+            paths.push(PathBuf::from(a));
+        }
+    }
+    let analyzed = if paths.is_empty() {
+        let root = root.unwrap_or_else(crate::report::bench::repo_root);
+        analyze_tree(&root)
+    } else {
+        let mut files = Vec::new();
+        let mut io = None;
+        for p in &paths {
+            if let Err(e) = load_path(p, &mut files) {
+                io = Some((p.clone(), e));
+                break;
+            }
+        }
+        match io {
+            Some((p, e)) => {
+                eprintln!("error: {}: {e}", p.display());
+                return 2;
+            }
+            None => Ok(analyze(&files)),
+        }
+    };
+    let diags = match analyzed {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    if json {
+        println!("{}", to_json(&diags).render());
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+        for d in &diags {
+            *counts.entry(d.lint.name()).or_default() += 1;
+        }
+        if diags.is_empty() {
+            println!("detlint: clean");
+        } else {
+            let by_lint: Vec<String> =
+                counts.iter().map(|(l, n)| format!("{l}: {n}")).collect();
+            println!("detlint: {} finding(s) ({})", diags.len(), by_lint.join(", "));
+        }
+    }
+    i32::from(!diags.is_empty())
+}
+
+/// Diagnostics as a machine-readable document (the `--format=json` shape,
+/// consumed by the CI annotation step).
+pub fn to_json(diags: &[Diagnostic]) -> JsonValue {
+    let items: Vec<JsonValue> = diags
+        .iter()
+        .map(|d| {
+            JsonValue::obj()
+                .set("lint", JsonValue::Str(d.lint.name().to_string()))
+                .set("path", JsonValue::Str(d.path.display().to_string()))
+                .set("line", JsonValue::Int(u64::from(d.line)))
+                .set("message", JsonValue::Str(d.msg.clone()))
+        })
+        .collect();
+    JsonValue::obj()
+        .set("findings", JsonValue::Int(diags.len() as u64))
+        .set("diagnostics", JsonValue::Arr(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(text: &str) -> SourceFile {
+        SourceFile { path: PathBuf::from("t.rs"), role: FileRole::Src, text: text.to_string() }
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let f = src("fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests { fn b() { y.unwrap(); } }");
+        let diags = analyze(&[f]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 1);
+    }
+
+    #[test]
+    fn allow_comment_suppresses_same_and_next_line() {
+        let above = src(
+            "// detlint: allow(panic-policy, demo reason)\nfn a() { x.unwrap(); }",
+        );
+        assert!(analyze(&[above]).is_empty());
+        let trailing =
+            src("fn a() { x.unwrap(); } // detlint: allow(panic-policy, demo reason)");
+        assert!(analyze(&[trailing]).is_empty());
+    }
+
+    #[test]
+    fn malformed_allow_is_reported() {
+        let missing_reason = src("// detlint: allow(panic-policy)\nfn a() {}");
+        let d = analyze(&[missing_reason]);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].lint, Lint::AllowSyntax);
+        let unknown = src("// detlint: allow(not-a-lint, reason)\nfn a() {}");
+        let d = analyze(&[unknown]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].msg.contains("not-a-lint"));
+    }
+
+    #[test]
+    fn fixture_role_marker_overrides_path_role() {
+        let f = SourceFile {
+            path: PathBuf::from("rust/tests/data/lint/x.rs"),
+            role: FileRole::Test,
+            text: "// detlint-fixture: role=src\nfn a() { x.unwrap(); }".to_string(),
+        };
+        let diags = analyze(&[f]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].lint, Lint::PanicPolicy);
+    }
+
+    #[test]
+    fn diagnostics_are_sorted_and_stable() {
+        let f = src("fn a() { x.unwrap(); y.unwrap(); }\nfn b() { panic!(\"x\"); }");
+        let diags = analyze(&[f]);
+        let lines: Vec<u32> = diags.iter().map(|d| d.line).collect();
+        let mut sorted = lines.clone();
+        sorted.sort_unstable();
+        assert_eq!(lines, sorted);
+    }
+}

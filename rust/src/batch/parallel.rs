@@ -128,6 +128,8 @@ where
             })
             .collect();
         for handle in handles {
+            // invariant: a worker panic is already fatal; join only
+            // propagates it onto the coordinating thread
             let (w, lo, vals, wall) = handle.join().expect("batch worker panicked");
             timings.push(ShardTiming {
                 shard: w,
@@ -141,6 +143,8 @@ where
     });
     let out = results
         .into_iter()
+        // invariant: the shard ranges [lo, lo + len) partition 0..n
+        // exactly, so every slot was filled above
         .map(|r| r.expect("shard left a hole"))
         .collect();
     (out, timings)

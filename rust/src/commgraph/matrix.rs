@@ -109,6 +109,7 @@ impl CommMatrix {
     /// NPB-DT-like irregular ones low — quantifies the Figure 1 contrast.
     pub fn diagonal_mass(&self, k: usize) -> f64 {
         let total = self.total();
+        // detlint: allow(float-discipline, exact 0.0 guard against division, not a comparison)
         if total == 0.0 {
             return 0.0;
         }

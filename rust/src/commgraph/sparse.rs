@@ -74,11 +74,13 @@ impl SparseComm {
             }
             scratch.sort_by_key(|p| p.0);
             for &(t, w) in scratch.iter() {
-                if ct.len() > co[v] && *ct.last().unwrap() == t {
-                    *cw.last_mut().unwrap() += w;
-                } else {
-                    ct.push(t);
-                    cw.push(w);
+                let merged = ct.len() > co[v] && ct.last() == Some(&t);
+                match cw.last_mut() {
+                    Some(w0) if merged => *w0 += w,
+                    _ => {
+                        ct.push(t);
+                        cw.push(w);
+                    }
                 }
             }
             co.push(ct.len());
@@ -103,6 +105,8 @@ impl SparseComm {
     pub fn from_raw(n: usize, offsets: Vec<usize>, targets: Vec<u32>, weights: Vec<f64>) -> Self {
         debug_assert_eq!(offsets.len(), n + 1);
         debug_assert_eq!(offsets[0], 0);
+        // invariant: offsets.len() == n + 1 >= 1 (asserted above), so a
+        // last element always exists
         debug_assert_eq!(*offsets.last().unwrap(), targets.len());
         debug_assert_eq!(targets.len(), weights.len());
         #[cfg(debug_assertions)]

@@ -478,6 +478,7 @@ pub fn campaign(
             let cfg = TraceConfig::default();
             let mut jobs = workload::load_trace(path, &cfg)?;
             workload::rebase_arrivals(&mut jobs);
+            // detlint: allow(float-discipline, 1.0 is the CLI default sentinel meaning "no scaling")
             if opts.arrival_scale != 1.0 {
                 workload::scale_arrivals(&mut jobs, opts.arrival_scale);
             }
@@ -674,6 +675,7 @@ pub fn fig3a(results: &Path, seed: u64) -> Result<()> {
     let scotch = rows
         .iter()
         .find(|(p, _)| *p == PlacementPolicy::Scotch)
+        // invariant: Scotch is in the `policies` list built right above
         .unwrap()
         .1;
     let mut t = Table::new(
@@ -775,6 +777,7 @@ fn batch_experiment(
         .as_torus()
         .is_some_and(|t| t.dims() == TorusDims::new(8, 8, 8));
     let paper_regime =
+        // detlint: allow(float-discipline, 0.02 is the paper's exact literal regime tag)
         paper_topology && matches!(&fault, FaultSpec::Iid { p_f, .. } if *p_f == 0.02);
     let title = if paper_regime {
         format!("{base_title} ({n_faulty} faulty @ 2%)")

@@ -74,6 +74,7 @@
 // clearly with explicit indices; keep clippy's style nit quiet crate-wide.
 #![allow(clippy::needless_range_loop)]
 
+pub mod analysis;
 pub mod apps;
 pub mod batch;
 pub mod commgraph;

@@ -29,6 +29,10 @@ COMMANDS:
   profile              print an app's comm-graph stats + heatmap
   place                compare mapping quality across policies
   runtime              PJRT artifact smoke check + cross-validation
+  lint                 detlint: determinism & invariant static analysis
+                       over rust/src, rust/tests, benches/, examples/
+                       (lint [--format=json] [--root=<dir>] [paths...];
+                       exits 1 on findings, see ARCHITECTURE.md)
   help                 this text
 
 OPTIONS:
@@ -230,6 +234,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
+    // `lint` takes its own argument set (bare paths allowed), so dispatch
+    // it before the experiment-option parser gets a chance to reject them.
+    if cmd == "lint" {
+        std::process::exit(tofa::analysis::run_cli(&args[1..]));
+    }
     let opts = match parse_opts(&args[1..]) {
         Ok(o) => o,
         Err(e) => {

@@ -62,6 +62,8 @@ pub fn greedy_placement(comm: &CommMatrix, dist: &DistanceMatrix) -> Result<Plac
                     .total_cmp(&dist.get(anchor, b))
                     .then(a.cmp(&b))
             })
+            // invariant: the n <= m capacity check above guarantees at
+            // least one free node whenever a rank is still unplaced
             .expect("free node available by capacity check")
     };
 
@@ -70,6 +72,8 @@ pub fn greedy_placement(comm: &CommMatrix, dist: &DistanceMatrix) -> Result<Plac
             (false, false) => {}
             (true, true) => {
                 // place i on the first free node, j as close as possible
+                // invariant: n <= m (checked on entry) leaves a free node
+                // for every unplaced rank
                 let a = (0..m).find(|&v| !node_used[v]).unwrap();
                 node_used[a] = true;
                 assign[i] = a;
@@ -92,6 +96,8 @@ pub fn greedy_placement(comm: &CommMatrix, dist: &DistanceMatrix) -> Result<Plac
     // isolated ranks (no traffic): fill sequentially
     for a in assign.iter_mut() {
         if *a == usize::MAX {
+            // invariant: n <= m (checked on entry) leaves a free node
+            // for every unplaced rank
             let v = (0..m).find(|&v| !node_used[v]).unwrap();
             node_used[v] = true;
             *a = v;
@@ -165,5 +171,21 @@ mod tests {
         let c = CommMatrix::new(4);
         let p = greedy_placement(&c, &d).unwrap();
         p.validate(8).unwrap();
+    }
+
+    #[test]
+    fn oversized_requests_return_typed_errors_not_panics() {
+        // regression guard for the panic-policy pass: every baseline must
+        // reject ranks > nodes with Error::Placement up front — the
+        // in-body unwrap/expect calls rely on that capacity invariant
+        assert!(matches!(block_placement(11, 10), Err(Error::Placement(_))));
+        assert!(matches!(block_placement_avail(3, &[1, 2]), Err(Error::Placement(_))));
+        let mut rng = Rng::new(1);
+        assert!(matches!(random_placement(9, 8, &mut rng), Err(Error::Placement(_))));
+        let t = Torus::new(TorusDims::new(2, 2, 2));
+        let d = crate::topology::DistanceMatrix::from_torus_hops(&t);
+        let mut c = CommMatrix::new(9);
+        c.add_sym(0, 8, 5.0);
+        assert!(matches!(greedy_placement(&c, &d), Err(Error::Placement(_))));
     }
 }

@@ -36,11 +36,6 @@ pub fn bisect(comm: &CommMatrix, verts: &[usize], target0: usize) -> Bisection {
     // --- greedy graph growing ---------------------------------------
     // Seed part0 with the heaviest-degree vertex, then repeatedly absorb
     // the outside vertex with the largest connection into part0.
-    let local_of: std::collections::HashMap<usize, usize> = verts
-        .iter()
-        .enumerate()
-        .map(|(i, &v)| (v, i))
-        .collect();
     let weight_between = |a: usize, b: usize| comm.get(verts[a], verts[b]);
 
     let seed = (0..n)
@@ -49,6 +44,8 @@ pub fn bisect(comm: &CommMatrix, verts: &[usize], target0: usize) -> Bisection {
             let wb: f64 = (0..n).map(|j| weight_between(b, j)).sum();
             wa.total_cmp(&wb)
         })
+        // invariant: 0 < target0 < n (early return above), so n >= 1 and
+        // the range is non-empty
         .unwrap();
 
     let mut in0 = vec![false; n];
@@ -59,6 +56,8 @@ pub fn bisect(comm: &CommMatrix, verts: &[usize], target0: usize) -> Bisection {
         let next = (0..n)
             .filter(|&i| !in0[i])
             .max_by(|&a, &b| gain_to0[a].total_cmp(&gain_to0[b]))
+            // invariant: size0 < target0 < n, so at least one vertex is
+            // still outside part0
             .unwrap();
         in0[next] = true;
         size0 += 1;
@@ -68,7 +67,6 @@ pub fn bisect(comm: &CommMatrix, verts: &[usize], target0: usize) -> Bisection {
             }
         }
     }
-    let _ = local_of; // kept for debug builds / future sparse path
 
     // --- KL swap refinement ------------------------------------------
     // external - internal connectivity per vertex; a swap (u in 0, v in 1)

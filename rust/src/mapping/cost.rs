@@ -53,6 +53,7 @@ pub fn dilation(comm: &CommMatrix, dist: &DistanceMatrix, assign: &[usize]) -> (
         weight += w;
         max_d = max_d.max(d);
     }
+    // detlint: allow(float-discipline, exact 0.0 guard against division, not a comparison)
     if weight == 0.0 {
         (0.0, 0.0)
     } else {

@@ -231,9 +231,15 @@ impl MultilevelMapper {
             internal: 0.0,
             map_down: Vec::new(),
         }];
-        while levels.last().unwrap().graph.len() > target {
-            let next = self.coarsen_once(levels.last().unwrap(), total, target);
-            if next.graph.len() == levels.last().unwrap().graph.len() {
+        loop {
+            // invariant: `levels` is seeded with level 0 above and only
+            // ever grows, so a last element always exists
+            let last = levels.last().unwrap();
+            if last.graph.len() <= target {
+                break;
+            }
+            let next = self.coarsen_once(last, total, target);
+            if next.graph.len() == last.graph.len() {
                 break; // weight caps forbid any further contraction
             }
             levels.push(next);
@@ -384,6 +390,7 @@ impl MultilevelMapper {
                         internal2 += w;
                         continue;
                     }
+                    // detlint: allow(float-discipline, exact 0.0 sentinel: slots reset after drain)
                     if agg[ct as usize] == 0.0 {
                         touched.push(ct);
                     }
@@ -450,6 +457,7 @@ impl MultilevelMapper {
 
         // coarse solve: recmap + KL over one representative host per
         // equal slot chunk — the only distance matrix ever materialized
+        // invariant: coarsen() always returns at least level 0
         let top = levels.last().unwrap();
         let k = top.graph.len();
         let reps: Vec<usize> = (0..k)

@@ -91,6 +91,9 @@ impl RecursiveMapper {
     ) {
         match (verts.len(), hosts.len()) {
             (0, _) => {}
+            // invariant: recursion splits guests proportionally to host
+            // capacities (t0 <= h0.len(), nv - t0 <= h1.len()), so a
+            // non-empty guest part always receives a non-empty host part
             (_, 0) => unreachable!("capacity invariant violated"),
             (_, 1) => {
                 debug_assert_eq!(verts.len(), 1);
@@ -107,6 +110,7 @@ impl RecursiveMapper {
                         let db: f32 = hosts.iter().map(|&h| dist.get(b, h)).sum();
                         da.total_cmp(&db)
                     })
+                    // invariant: this match arm requires hosts.len() >= 2
                     .unwrap();
                 assignment[verts[0]] = best;
             }
@@ -143,9 +147,8 @@ pub fn compact_subset(dist: &DistanceMatrix, hosts: &[usize], k: usize) -> Vec<u
             let db: f32 = hosts.iter().map(|&h| dist.get(b, h)).sum();
             da.total_cmp(&db).then(a.cmp(&b))
         })
+        // invariant: k < hosts.len() here and k >= 0, so hosts is non-empty
         .unwrap();
-    let mut in_region: std::collections::HashSet<usize> = std::collections::HashSet::new();
-    in_region.insert(seed);
     let mut region = vec![seed];
     // total distance from each free host to the region
     let mut to_region: Vec<(usize, f32)> = hosts
@@ -158,9 +161,10 @@ pub fn compact_subset(dist: &DistanceMatrix, hosts: &[usize], k: usize) -> Vec<u
             .iter()
             .enumerate()
             .min_by(|(_, (ha, da)), (_, (hb, db))| da.total_cmp(db).then(ha.cmp(hb)))
+            // invariant: region.len() < k <= hosts.len(), so at least one
+            // free host remains in to_region
             .unwrap();
         let (h, _) = to_region.swap_remove(idx);
-        in_region.insert(h);
         for (f, d) in to_region.iter_mut() {
             *d += dist.get(*f, h);
         }

@@ -63,6 +63,8 @@ pub fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> Measure
         median,
         mean,
         min: times[0],
+        // invariant: the sampling loop above runs samples.max(1) >= 1
+        // iterations, so `times` is never empty
         max: *times.last().unwrap(),
         samples: times.len(),
     };
@@ -104,6 +106,9 @@ impl JsonValue {
     pub fn set(mut self, key: &str, value: JsonValue) -> Self {
         match &mut self {
             JsonValue::Obj(pairs) => pairs.push((key.to_string(), value)),
+            // invariant: `set` is only chained onto `JsonValue::obj()`;
+            // a non-object receiver is a compile-site builder bug, not a
+            // runtime condition
             _ => panic!("JsonValue::set on a non-object"),
         }
         self
@@ -183,12 +188,12 @@ impl Measurement {
 
 /// Repository root: the parent of this crate's manifest directory (the
 /// workspace layout is fixed — `rust/` inside the repo). Bench JSON
-/// trajectory files land here so CI can glob `BENCH_*.json`.
+/// trajectory files land here so CI can glob `BENCH_*.json`. Falls back
+/// to the manifest directory itself in the degenerate case where it has
+/// no parent (a crate checked out at a filesystem root).
 pub fn repo_root() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .expect("crate manifest dir has no parent")
-        .to_path_buf()
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).to_path_buf()
 }
 
 /// Write a bench trajectory file `BENCH_<name>.json` at the repo root and

@@ -119,6 +119,7 @@ pub fn fmt_secs(s: f64) -> String {
 
 /// Percentage improvement of `new` over `base` (positive = better/lower).
 pub fn improvement_pct(base: f64, new: f64) -> f64 {
+    // detlint: allow(float-discipline, exact 0.0 guard against division, not a comparison)
     if base == 0.0 {
         0.0
     } else {

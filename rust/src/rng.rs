@@ -121,6 +121,78 @@ impl Rng {
     }
 }
 
+/// Central registry of every named RNG stream base in the crate.
+///
+/// `Rng::stream(base, index)` keeps parallel work bit-identical, but only
+/// if no two consumers ever share a `base`. PR 9 added a third base by
+/// convention alone; a silent collision would correlate draws without
+/// failing a single test. So the bases live here — one table, one salt,
+/// one derivation function — and the `rng-stream-registry` detlint rule
+/// (see `tofa::analysis`) rejects any literal or const base that is not
+/// declared in this module.
+pub mod streams {
+    use super::Rng;
+
+    /// Salt folded into the scheduler's seed before drawing stream bases,
+    /// so scheduler streams can never collide with an unsalted consumer
+    /// of the same user seed.
+    pub const SCHED_SALT: u64 = 0x5eed_5c4e_d011;
+
+    /// Draw index of the per-job placement/runtime stream base.
+    pub const SCHED_JOB_DRAW: u64 = 0;
+    /// Draw index of the heartbeat health-epoch stream base.
+    pub const SCHED_HEARTBEAT_DRAW: u64 = 1;
+    /// Draw index of the in-job recovery (checkpoint/shrink) stream base.
+    pub const SCHED_RECOVERY_DRAW: u64 = 2;
+
+    /// One registered stream base: where it comes from and who consumes it.
+    #[derive(Debug, Clone, Copy)]
+    pub struct StreamBase {
+        /// Registry name (matches the `*_DRAW` const).
+        pub name: &'static str,
+        /// Sequential draw index off the salted seeding RNG.
+        pub draw: u64,
+        /// The code path that forks per-item streams off this base.
+        pub consumer: &'static str,
+    }
+
+    /// Every stream base in the crate, one row per draw. Extend this
+    /// table (and add a `*_DRAW` const) when introducing a new stream;
+    /// never reuse a draw index — bit-compatibility of recorded runs
+    /// depends on the existing order.
+    pub const STREAM_BASES: &[StreamBase] = &[
+        StreamBase {
+            name: "SCHED_JOB_DRAW",
+            draw: SCHED_JOB_DRAW,
+            consumer: "slurm::sched job placement + runtime jitter (Rng::stream per job id)",
+        },
+        StreamBase {
+            name: "SCHED_HEARTBEAT_DRAW",
+            draw: SCHED_HEARTBEAT_DRAW,
+            consumer: "slurm::sched heartbeat health epochs (Rng::stream per epoch)",
+        },
+        StreamBase {
+            name: "SCHED_RECOVERY_DRAW",
+            draw: SCHED_RECOVERY_DRAW,
+            consumer: "slurm::sched in-job recovery decisions (Rng::stream per job id)",
+        },
+    ];
+
+    /// Derive the registered scheduler stream base for `draw` from the
+    /// user seed: the `(draw + 1)`-th sequential `next_u64` off
+    /// `Rng::new(seed ^ SCHED_SALT)`. This is exactly the historical
+    /// inline derivation (three sequential draws), so every recorded
+    /// trace stays bit-identical.
+    pub fn sched_base(seed: u64, draw: u64) -> u64 {
+        let mut r = Rng::new(seed ^ SCHED_SALT);
+        let mut v = r.next_u64();
+        for _ in 0..draw {
+            v = r.next_u64();
+        }
+        v
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +269,42 @@ mod tests {
         let (xa, xb, xc) = (a.next_u64(), b.next_u64(), c.next_u64());
         assert_eq!(xa, xb);
         assert_ne!(xa, xc);
+    }
+
+    #[test]
+    fn registry_covers_every_draw_exactly_once() {
+        let mut draws: Vec<u64> = streams::STREAM_BASES.iter().map(|b| b.draw).collect();
+        draws.sort_unstable();
+        let expected: Vec<u64> = (0..streams::STREAM_BASES.len() as u64).collect();
+        assert_eq!(draws, expected, "draw indices must be 0..n with no gaps or reuse");
+        assert_eq!(streams::STREAM_BASES.len(), 3);
+    }
+
+    #[test]
+    fn sched_bases_match_historical_sequential_draws() {
+        // the pre-registry scheduler drew three sequential values off
+        // Rng::new(seed ^ SALT); bit-compatibility of recorded traces
+        // depends on sched_base reproducing exactly that
+        for seed in [0u64, 1, 42, 0xdead_beef] {
+            let mut r = Rng::new(seed ^ streams::SCHED_SALT);
+            let (a, b, c) = (r.next_u64(), r.next_u64(), r.next_u64());
+            assert_eq!(streams::sched_base(seed, streams::SCHED_JOB_DRAW), a);
+            assert_eq!(streams::sched_base(seed, streams::SCHED_HEARTBEAT_DRAW), b);
+            assert_eq!(streams::sched_base(seed, streams::SCHED_RECOVERY_DRAW), c);
+        }
+    }
+
+    #[test]
+    fn sched_bases_are_pairwise_distinct_at_runtime() {
+        for seed in [0u64, 7, 42, 1234, u64::MAX] {
+            let bases: Vec<u64> = streams::STREAM_BASES
+                .iter()
+                .map(|b| streams::sched_base(seed, b.draw))
+                .collect();
+            let mut uniq = bases.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), bases.len(), "stream bases collide for seed {seed}");
+        }
     }
 }

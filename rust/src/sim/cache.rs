@@ -57,13 +57,19 @@ impl PhaseCache {
     }
 
     /// Cached duration for `key`, if any (`NaN` = memoized abort).
+    ///
+    /// A poisoned shard (a panic on another worker while its lock was
+    /// held) is recovered rather than propagated: cached values are pure
+    /// functions of the key, so the map's contents are valid regardless
+    /// of where the panicking thread stopped — worst case a partial
+    /// insert is simply recomputed.
     #[inline]
     pub fn get(&self, key: u64) -> Option<f64> {
         self.lookups.fetch_add(1, Ordering::Relaxed);
         let got = self
             .shard(key)
             .read()
-            .expect("phase cache poisoned")
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
             .get(&key)
             .copied();
         if got.is_some() {
@@ -73,12 +79,13 @@ impl PhaseCache {
     }
 
     /// Store the duration for `key`. Last writer wins; all writers of a
-    /// given key store the same value (see module docs).
+    /// given key store the same value (see module docs). Poisoned shards
+    /// are recovered, as in [`Self::get`].
     #[inline]
     pub fn insert(&self, key: u64, duration: f64) {
         self.shard(key)
             .write()
-            .expect("phase cache poisoned")
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
             .insert(key, duration);
     }
 
@@ -86,7 +93,7 @@ impl PhaseCache {
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.read().expect("phase cache poisoned").len())
+            .map(|s| s.read().unwrap_or_else(|poisoned| poisoned.into_inner()).len())
             .sum()
     }
 
@@ -118,7 +125,7 @@ impl PhaseCache {
     /// Drop all entries and reset the counters.
     pub fn clear(&self) {
         for s in &self.shards {
-            s.write().expect("phase cache poisoned").clear();
+            s.write().unwrap_or_else(|poisoned| poisoned.into_inner()).clear();
         }
         self.lookups.store(0, Ordering::Relaxed);
         self.hits.store(0, Ordering::Relaxed);

@@ -160,6 +160,7 @@ impl Simulator {
         let down = vec![false; self.platform.num_nodes()];
         match self.run(assignment, &down) {
             JobOutcome::Completed { seconds } => seconds,
+            // invariant: `down` is all-false, so run() can never abort
             JobOutcome::Aborted { .. } => unreachable!("no faults, no abort"),
         }
     }

@@ -238,6 +238,8 @@ impl Controller {
         self.ledger.fail_nodes(record.id, lost_hosts)?;
         self.ledger
             .extend_allocation(record.id, &placement.assignment)?;
+        // invariant: callers reach this path only for running jobs, which
+        // always carry an assignment (checked at the top of this fn)
         let assignment = record.assignment.as_mut().expect("checked above");
         for (i, &r) in lost_ranks.iter().enumerate() {
             assignment[r] = placement.assignment[i];

@@ -176,6 +176,7 @@ impl FattPlugin {
         (0..self.num_racks())
             .map(|r| {
                 let members = self.topo.rack_members(r);
+                // detlint: allow(float-discipline, racks are non-empty by Topology construction)
                 members.iter().map(|&n| outage[n]).sum::<f64>() / members.len() as f64
             })
             .collect()

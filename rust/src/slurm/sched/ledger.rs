@@ -359,6 +359,8 @@ impl NodeLedger {
             .range(..=node)
             .next_back()
             .map(|(&s, &l)| (s, l))
+            // invariant: the caller verified state[node] was Free, and
+            // every free node belongs to exactly one indexed run
             .expect("node leaving the free set is not in any run");
         debug_assert!(start <= node && node < start + len, "run index drifted");
         self.runs.remove(&start);
@@ -409,6 +411,8 @@ impl NodeLedger {
                 assert!(
                     owner[n].is_none(),
                     "node {n} allocated to jobs {} and {job}",
+                    // invariant: the message only renders when the
+                    // is_none() check failed, so the value is present
                     owner[n].unwrap()
                 );
                 owner[n] = Some(*job);

@@ -124,8 +124,11 @@ impl TofaPlacer {
         }
 
         // one workspace for both engines: the flaky view of `outage` is
-        // built once here instead of once per callee
-        let mut ws = self.ws.lock().expect("TOFA cost workspace poisoned");
+        // built once here instead of once per callee. A poisoned lock is
+        // recovered: the workspace is pure scratch, fully rebuilt by each
+        // user, so a panic mid-fill on another thread leaves nothing to
+        // protect against.
+        let mut ws = self.ws.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
 
         // Prefer a window whose route closure is flaky-free (zero abort
         // guarantee); fall back to any endpoint-clean window.
@@ -196,7 +199,8 @@ impl TofaPlacer {
             )));
         }
         let clean = outage.iter().all(|&p| p <= 0.0);
-        let mut ws = self.ws.lock().expect("TOFA cost workspace poisoned");
+        // poisoned-lock recovery: scratch workspace, see place()
+        let mut ws = self.ws.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         let window = match oracle.index() {
             Some(index) => find_route_clean_window_masked(index, outage, n, free, &mut ws),
             None => find_route_clean_window_masked_implicit(topo, outage, n, free, &mut ws),

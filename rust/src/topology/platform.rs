@@ -162,10 +162,13 @@ impl Platform {
     /// platforms.
     pub fn topo_index(&self) -> &TopoIndex {
         self.try_topo_index()
+            // invariant: documented panic contract above -- callers that
+            // can see implicit platforms must use try_topo_index()
             .expect("dense TopoIndex requested under the implicit metric mode")
     }
 
     /// The index build itself, sans the metric-mode guard.
+    // detlint: allow(dense-reference-pairing, `_dense` here names the index mode, not an oracle)
     fn topo_index_dense(&self) -> &TopoIndex {
         self.index.get_or_init(|| TopoIndex::build(self.topo.as_ref()))
     }

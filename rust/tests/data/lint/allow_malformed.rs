@@ -1,0 +1,10 @@
+// detlint-fixture: role=src
+//! Violating fixture: allow comments that do not parse suppress nothing
+//! and are themselves reported.
+// detlint: allow(float-discipline)
+pub fn a(x: f64) -> bool {
+    x == 0.5
+}
+
+// detlint: allow(no-such-lint, because)
+pub fn b() {}

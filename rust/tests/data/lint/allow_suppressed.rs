@@ -1,0 +1,11 @@
+// detlint-fixture: role=src
+//! Clean fixture: deliberate float equalities with reasoned allows,
+//! one on the line above and one trailing on the same line.
+pub fn is_unset(x: f64) -> bool {
+    // detlint: allow(float-discipline, 0.0 is a sentinel set by literal assignment)
+    x == 0.0
+}
+
+pub fn is_default(x: f64) -> bool {
+    x == 1.0 // detlint: allow(float-discipline, 1.0 default written verbatim upstream)
+}

@@ -1,0 +1,12 @@
+// detlint-fixture: role=src
+//! Clean fixture: bit-pattern comparison and a guarded mean.
+pub fn same(x: f64, y: f64) -> bool {
+    x.to_bits() == y.to_bits()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

@@ -1,0 +1,14 @@
+// detlint-fixture: role=src
+//! Violating fixture: float equality, a time-like float-to-int cast,
+//! and an unguarded mean division.
+pub fn same(x: f64) -> bool {
+    x == 0.25
+}
+
+pub fn order_key(arrival_s: f64) -> u64 {
+    arrival_s as u64
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

@@ -1,0 +1,16 @@
+// detlint-fixture: role=src
+//! Clean fixture: hash containers as pure lookup tables; anything that
+//! observes order goes through a BTreeMap.
+use std::collections::{BTreeMap, HashMap};
+
+pub fn lookup(table: &HashMap<u64, u64>, k: u64) -> u64 {
+    table.get(&k).copied().unwrap_or(0)
+}
+
+pub fn ordered_sum(ordered: &BTreeMap<u64, u64>) -> u64 {
+    let mut total = 0;
+    for (_k, v) in ordered.iter() {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,21 @@
+// detlint-fixture: role=src
+//! Violating fixture: hash-ordered iteration on a deterministic path.
+use std::collections::{HashMap, HashSet};
+
+pub fn sum_values(m: &HashMap<u64, u64>) -> u64 {
+    let mut total = 0;
+    for (_k, v) in m.iter() {
+        total += v;
+    }
+    total
+}
+
+pub fn collect_set() -> u64 {
+    let mut seen = HashSet::new();
+    seen.insert(3u64);
+    let mut total = 0;
+    for x in &seen {
+        total += x;
+    }
+    total
+}

@@ -1,0 +1,13 @@
+// detlint-fixture: role=src
+//! Clean fixture: the oracle is exercised by its test.
+pub fn cost_reference(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn oracle_matches() {
+        assert_eq!(super::cost_reference(&[1.0, 2.0]), 3.0);
+    }
+}

@@ -1,0 +1,5 @@
+// detlint-fixture: role=src
+//! Violating fixture: a bit-identity oracle with no test consumer.
+pub fn cost_reference(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}

@@ -1,0 +1,17 @@
+// detlint-fixture: role=src
+//! Clean fixture: every panic site carries an invariant justification
+//! or lives in test code.
+pub fn first(xs: &[u64]) -> u64 {
+    // invariant: callers hand a non-empty slice (checked upstream)
+    *xs.first().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn first_reads_the_head() {
+        assert_eq!(super::first(&[3]), 3);
+        let v: Vec<u64> = vec![1];
+        let _ = v.first().unwrap();
+    }
+}

@@ -1,0 +1,11 @@
+// detlint-fixture: role=src
+//! Violating fixture: unjustified panic sites on a library path.
+pub fn first(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}
+
+pub fn checked(flag: bool) {
+    if !flag {
+        panic!("flag must be set");
+    }
+}

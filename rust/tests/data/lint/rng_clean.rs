@@ -1,0 +1,14 @@
+// detlint-fixture: role=src
+//! Clean fixture: bases come from the registry or are runtime-derived.
+pub mod streams {
+    pub const ALPHA_BASE: u64 = 1;
+    pub const BRAVO_BASE: u64 = 2;
+}
+
+pub fn draw_named(i: u64) -> u64 {
+    Rng::stream(streams::ALPHA_BASE, i)
+}
+
+pub fn draw_dynamic(base: u64, i: u64) -> u64 {
+    Rng::stream(base.wrapping_add(1), i)
+}

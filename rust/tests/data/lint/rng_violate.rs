@@ -1,0 +1,17 @@
+// detlint-fixture: role=src
+//! Violating fixture: a duplicate registry value, a raw literal base,
+//! and a named base missing from the registry.
+pub mod streams {
+    pub const ALPHA_BASE: u64 = 7;
+    pub const BRAVO_BASE: u64 = 0x7;
+}
+
+pub const ROGUE_BASE: u64 = 99;
+
+pub fn draw_raw(i: u64) -> u64 {
+    Rng::stream(0xbeef, i)
+}
+
+pub fn draw_unregistered(i: u64) -> u64 {
+    Rng::stream(ROGUE_BASE, i)
+}

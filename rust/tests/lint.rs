@@ -1,0 +1,207 @@
+//! End-to-end suite for `repro lint` (the detlint pass).
+//!
+//! The committed fixtures under `tests/data/lint/` pin each lint's exact
+//! `file:line` diagnostics and the allow-comment suppression semantics;
+//! the CLI tests pin the exit-code contract (0 clean / 1 findings /
+//! 2 usage or IO error); and `repo_sources_scan_clean` is the gate that
+//! keeps the repo's own sources lint-free — the same check CI runs.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use tofa::analysis::{analyze, analyze_tree, FileRole, Lint, SourceFile};
+use tofa::report::bench::repo_root;
+
+fn fixture_path(name: &str) -> PathBuf {
+    repo_root().join("rust/tests/data/lint").join(name)
+}
+
+/// Analyze one fixture in isolation. The role starts as `Test` — what the
+/// `rust/tests` path implies — so the fixture's `detlint-fixture: role=`
+/// marker must do the overriding, exactly as it does in CLI runs.
+fn scan(name: &str) -> Vec<(Lint, u32)> {
+    let path = fixture_path(name);
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!("fixture {name} unreadable: {e}");
+    });
+    let file = SourceFile { path, role: FileRole::Test, text };
+    analyze(&[file]).into_iter().map(|d| (d.lint, d.line)).collect()
+}
+
+#[test]
+fn rng_stream_registry_fixture_pair() {
+    assert_eq!(
+        scan("rng_violate.rs"),
+        vec![
+            (Lint::RngStreamRegistry, 6),  // BRAVO_BASE duplicates ALPHA_BASE
+            (Lint::RngStreamRegistry, 12), // raw literal 0xbeef
+            (Lint::RngStreamRegistry, 16), // ROGUE_BASE not in the registry
+        ]
+    );
+    assert!(scan("rng_clean.rs").is_empty());
+}
+
+#[test]
+fn hash_iter_determinism_fixture_pair() {
+    assert_eq!(
+        scan("hash_violate.rs"),
+        vec![
+            (Lint::HashIterDeterminism, 7),  // m.iter() on a HashMap param
+            (Lint::HashIterDeterminism, 17), // for .. in &seen (HashSet let)
+        ]
+    );
+    assert!(scan("hash_clean.rs").is_empty());
+}
+
+#[test]
+fn float_discipline_fixture_pair() {
+    assert_eq!(
+        scan("float_violate.rs"),
+        vec![
+            (Lint::FloatDiscipline, 5),  // x == 0.25
+            (Lint::FloatDiscipline, 9),  // arrival_s as u64
+            (Lint::FloatDiscipline, 13), // unguarded / xs.len() as f64
+        ]
+    );
+    assert!(scan("float_clean.rs").is_empty());
+}
+
+#[test]
+fn panic_policy_fixture_pair() {
+    assert_eq!(
+        scan("panic_violate.rs"),
+        vec![
+            (Lint::PanicPolicy, 4), // .unwrap() without an invariant comment
+            (Lint::PanicPolicy, 9), // bare panic!
+        ]
+    );
+    assert!(scan("panic_clean.rs").is_empty());
+}
+
+#[test]
+fn dense_reference_pairing_fixture_pair() {
+    assert_eq!(scan("pairing_violate.rs"), vec![(Lint::DenseReferencePairing, 3)]);
+    assert!(scan("pairing_clean.rs").is_empty());
+}
+
+#[test]
+fn allow_comments_suppress_and_malformed_ones_report() {
+    assert!(scan("allow_suppressed.rs").is_empty());
+    assert_eq!(
+        scan("allow_malformed.rs"),
+        vec![
+            (Lint::AllowSyntax, 4),     // allow without a reason
+            (Lint::FloatDiscipline, 6), // ...so the == stays reported
+            (Lint::AllowSyntax, 9),     // unknown lint name
+        ]
+    );
+}
+
+#[test]
+fn diagnostics_render_as_clickable_file_line() {
+    let path = fixture_path("panic_violate.rs");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let file = SourceFile { path, role: FileRole::Test, text };
+    let diags = analyze(&[file]);
+    let rendered = diags[0].to_string();
+    assert!(
+        rendered.contains("panic_violate.rs:4: [panic-policy]"),
+        "unexpected rendering: {rendered}"
+    );
+}
+
+/// The acceptance gate: the repo's own `rust/src`, `rust/tests`,
+/// `benches/`, and `examples/` must be lint-clean (fixtures under
+/// `tests/data` are excluded by the tree walk).
+#[test]
+fn repo_sources_scan_clean() {
+    let diags = analyze_tree(&repo_root()).expect("tree walk failed");
+    assert!(
+        diags.is_empty(),
+        "the repo's own sources must pass detlint:\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+// ---------------------------------------------------------------- CLI contract
+
+fn repro_lint(args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("lint")
+        .args(args)
+        .output()
+        .expect("failed to spawn repro");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn cli_exits_one_per_violating_fixture() {
+    for (fixture, lint) in [
+        ("rng_violate.rs", "rng-stream-registry"),
+        ("hash_violate.rs", "hash-iter-determinism"),
+        ("float_violate.rs", "float-discipline"),
+        ("panic_violate.rs", "panic-policy"),
+        ("pairing_violate.rs", "dense-reference-pairing"),
+        ("allow_malformed.rs", "allow-syntax"),
+    ] {
+        let p = fixture_path(fixture);
+        let (code, stdout, stderr) = repro_lint(&[p.to_str().unwrap()]);
+        assert_eq!(code, 1, "{fixture} must exit 1\nstdout:\n{stdout}\nstderr:\n{stderr}");
+        assert!(stdout.contains(&format!("[{lint}]")), "{fixture} stdout:\n{stdout}");
+    }
+}
+
+#[test]
+fn cli_reports_exact_file_line_diagnostics() {
+    let p = fixture_path("float_violate.rs");
+    let (code, stdout, _) = repro_lint(&[p.to_str().unwrap()]);
+    assert_eq!(code, 1);
+    for line in [5, 9, 13] {
+        assert!(
+            stdout.contains(&format!("float_violate.rs:{line}: [float-discipline]")),
+            "missing line {line} in:\n{stdout}"
+        );
+    }
+    assert!(stdout.contains("detlint: 3 finding(s) (float-discipline: 3)"), "{stdout}");
+}
+
+#[test]
+fn cli_exits_zero_on_clean_fixture() {
+    let p = fixture_path("float_clean.rs");
+    let (code, stdout, _) = repro_lint(&[p.to_str().unwrap()]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("detlint: clean"), "{stdout}");
+}
+
+#[test]
+fn cli_json_format_is_machine_readable() {
+    let p = fixture_path("panic_violate.rs");
+    let (code, stdout, _) = repro_lint(&["--format=json", p.to_str().unwrap()]);
+    assert_eq!(code, 1);
+    assert!(stdout.contains("\"findings\":2"), "{stdout}");
+    assert!(stdout.contains("\"lint\":\"panic-policy\""), "{stdout}");
+    assert!(stdout.contains("\"line\":4"), "{stdout}");
+}
+
+#[test]
+fn cli_usage_and_io_errors_exit_two() {
+    let (code, _, stderr) = repro_lint(&["--bogus"]);
+    assert_eq!(code, 2, "unknown option: {stderr}");
+    assert!(stderr.contains("unknown lint option"), "{stderr}");
+    let (code, _, stderr) = repro_lint(&["/no/such/detlint/fixture.rs"]);
+    assert_eq!(code, 2, "missing path: {stderr}");
+}
+
+/// The default invocation (what the CI job runs) over the whole repo.
+#[test]
+fn cli_whole_tree_run_is_clean() {
+    let root = repo_root();
+    let arg = format!("--root={}", root.display());
+    let (code, stdout, stderr) = repro_lint(&[&arg]);
+    assert_eq!(code, 0, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("detlint: clean"), "{stdout}");
+}
